@@ -1,0 +1,84 @@
+"""Shared benchmark harness.
+
+Each figure-benchmark trains a small model with several aggregation methods
+(the paper's comparisons) on synthetic data and reports loss-vs-bits /
+loss-vs-iteration telemetry.  Scaled to the CPU container via
+REPRO_BENCH_STEPS / REPRO_BENCH_SCALE env vars; the qualitative ordering of
+methods is the reproduction target (the paper's hardware runs BERT/ResNet
+on GPUs — see DESIGN.md §Assumptions)."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.data import LMTask, lm_batches
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train import Trainer
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+BENCH_STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "30"))
+BENCH_WORKERS = int(os.environ.get("REPRO_BENCH_WORKERS", "4"))
+
+
+def small_lm_config(layers=2, d_model=128, vocab=256) -> ModelConfig:
+    return ModelConfig(
+        name=f"bench-lm-{layers}x{d_model}",
+        family="dense", cite="bench",
+        num_layers=layers, d_model=d_model, num_heads=4, num_kv_heads=2,
+        head_dim=32, d_ff=4 * d_model, vocab_size=vocab,
+        pattern=(LayerSpec("attn"),))
+
+
+def run_methods(methods: dict[str, dict], *, steps=None, workers=None,
+                lr=0.05, seq=32, batch_per_worker=4, seed=0,
+                cfg: ModelConfig | None = None) -> dict:
+    """Train one fresh model per method; return per-method histories.
+
+    methods: {label: kwargs for Trainer (must include 'method')}."""
+    steps = steps or BENCH_STEPS
+    workers = workers or BENCH_WORKERS
+    cfg = cfg or small_lm_config()
+    model = build_model(cfg)
+    task = LMTask(vocab=cfg.vocab_size, seq=seq)
+
+    out = {}
+    for label, kw in methods.items():
+        params = model.init(jax.random.PRNGKey(seed))
+
+        def loss_fn(p, batch):
+            return model.loss(p, batch, remat=False)[0]
+
+        t0 = time.time()
+        trainer = Trainer(loss_fn, params, num_workers=workers,
+                          optimizer=sgd(lr), **kw)
+        data = lm_batches(task, workers, batch_per_worker, seed=seed)
+        hist = trainer.fit(data, steps=steps, seed=seed + 1)
+        out[label] = {
+            "loss": hist.loss, "bits": hist.bits,
+            "final_loss": hist.loss[-1],
+            "mean_tail_loss": float(jnp.mean(jnp.asarray(hist.loss[-5:]))),
+            "total_gbits": hist.bits[-1] / 1e9,
+            "wall_s": round(time.time() - t0, 1),
+            "dim": trainer.dim,
+        }
+    return out
+
+
+def save_and_print(name: str, results: dict, derived: str = "") -> None:
+    RESULTS.mkdir(exist_ok=True, parents=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(results, indent=1))
+    for label, r in results.items():
+        if isinstance(r, dict) and "mean_tail_loss" in r:
+            print(f"{name}/{label},{r['wall_s'] * 1e6 / max(len(r['loss']), 1):.0f},"
+                  f"tail_loss={r['mean_tail_loss']:.4f};gbits={r['total_gbits']:.4f}")
+    if derived:
+        print(f"{name},0,{derived}")

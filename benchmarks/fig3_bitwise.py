@@ -1,0 +1,22 @@
+"""Figure 3 (CIFAR/ResNet18 stand-in): bit-wise compression — fixed-point
+MLMC (Alg. 2, Lemma 3.3 probabilities) vs biased 2-bit fixed-point
+quantization vs unbiased 2-bit QSGD vs uncompressed SGD."""
+
+from benchmarks.common import run_methods, save_and_print
+
+
+def main(tag="fig3_bitwise") -> dict:
+    res = run_methods({
+        "mlmc_fixed_point": dict(method="mlmc_fixed"),
+        "fixed_2bit": dict(method="fixed2"),
+        "qsgd_2bit": dict(method="qsgd", qsgd_levels=2),
+        "sgd_uncompressed": dict(method="dense"),
+    })
+    derived = (f"mlmc_gbits={res['mlmc_fixed_point']['total_gbits']:.4f};"
+               f"dense_gbits={res['sgd_uncompressed']['total_gbits']:.4f}")
+    save_and_print(tag, res, derived)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Figure 6 (BERT/SST-2 RTN stand-in, App. G.2): Adaptive MLMC-RTN vs plain
+RTN at l ∈ {2,4,8} vs uncompressed SGD."""
+
+from benchmarks.common import run_methods, save_and_print
+
+
+def main(tag="fig6_rtn") -> dict:
+    res = run_methods({
+        "mlmc_rtn_adaptive": dict(method="mlmc_rtn"),
+        "rtn_l2": dict(method="rtn", rtn_level=2),
+        "rtn_l4": dict(method="rtn", rtn_level=4),
+        "rtn_l8": dict(method="rtn", rtn_level=8),
+        "sgd_uncompressed": dict(method="dense"),
+    })
+    derived = (f"mlmc_gbits={res['mlmc_rtn_adaptive']['total_gbits']:.4f};"
+               f"rtn8_gbits={res['rtn_l8']['total_gbits']:.4f}")
+    save_and_print(tag, res, derived)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Pallas kernel micro-bench: us/call for each compression kernel at
+gradient-scale sizes.  On this CPU container the kernels execute via
+interpret=True (upper bound); the same code compiles natively on TPU."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_and_print
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(tag="kernel_bench") -> dict:
+    d = 1 << 22  # 4M-element gradient bucket
+    v = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    scale = jnp.max(jnp.abs(v))
+    res = {}
+    res["bitplane_residual"] = _time(
+        lambda: ops.bitplane_residual(v, scale, 7))
+    res["ternary_bitplane"] = _time(
+        lambda: ops.ternary_bitplane(v, scale, 7))
+    res["rtn_quantize"] = _time(lambda: ops.rtn_quantize(v, scale, 4))
+    res["exp_histogram"] = _time(lambda: ops.exp_histogram(v))
+    res["band_select"] = _time(
+        lambda: ops.band_select(v, jnp.float32(0.1), jnp.float32(1.0)))
+    sv = jnp.sort(jnp.abs(v))[::-1].reshape(-1, 128)
+    res["segment_sumsq"] = _time(lambda: ops.segment_sumsq(sv))
+    # the jnp baseline it replaces (sort-based selection)
+    res["argsort_baseline"] = _time(
+        lambda: jnp.argsort(-jnp.abs(v)))
+    for k, us in res.items():
+        print(f"kernel/{k},{us:.0f},d={d}")
+    save_and_print(tag, {k: {"us_per_call": u} for k, u in res.items()},
+                   derived=f"d={d};interpret_mode=True")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Roofline table: aggregates the dry-run JSONs (benchmarks/results/) into
+the per-(arch x shape x mesh) three-term roofline report of EXPERIMENTS.md
+§Roofline.  Run `python -m repro.launch.dryrun` first to (re)generate."""
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).parent / "results"
+
+
+def load_records(method: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob("dryrun_*.json")):
+        r = json.loads(f.read_text())
+        if method and r.get("method") != method:
+            continue
+        recs.append(r)
+    return recs
+
+
+def format_table(recs: list[dict], mesh: str = "pod16x16") -> str:
+    lines = [
+        "| arch | shape | bottleneck | t_comp(ms) | t_mem(ms) | t_coll(ms) "
+        "| useful | coll_bytes |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - "
+                         f"| - | - |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - "
+                         f"| - | - |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['bottleneck']} "
+            f"| {rf['t_compute_s']*1e3:.2f} | {rf['t_memory_s']*1e3:.2f} "
+            f"| {rf['t_collective_s']*1e3:.3f} "
+            f"| {rf['useful_fraction']:.2f} | {rf['coll_bytes']:.2e} |")
+    return "\n".join(lines)
+
+
+def main(tag="roofline_table") -> None:
+    recs = load_records()
+    n_ok = sum(1 for r in recs if r["status"] == "ok")
+    n_skip = sum(1 for r in recs if r["status"] == "skipped")
+    n_err = len(recs) - n_ok - n_skip
+    print(format_table(recs))
+    print(f"roofline_table,0,ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

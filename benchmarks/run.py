@@ -1,0 +1,48 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig1 fig3  # subset
+Budget via REPRO_BENCH_STEPS (default 40) / REPRO_BENCH_WORKERS (4)."""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_communication_efficiency,
+        fig2_iteration_efficiency,
+        fig3_bitwise,
+        fig4_cifar_sparsification,
+        fig6_rtn,
+        kernel_bench,
+        parallelization_scaling,
+        roofline_table,
+        variance_table,
+    )
+
+    benches = {
+        "variance_table": variance_table.main,        # Lemmas 3.3/3.4/3.6
+        "fig1": fig1_communication_efficiency.main,   # Fig. 1
+        "fig2": fig2_iteration_efficiency.main,       # Fig. 2
+        "fig3": fig3_bitwise.main,                    # Fig. 3
+        "fig4": fig4_cifar_sparsification.main,       # Figs. 4-5 (App. G.1)
+        "fig6": fig6_rtn.main,                        # Fig. 6 (App. G.2)
+        "parallelization": parallelization_scaling.main,  # Thm 4.1 / §4
+        "kernels": kernel_bench.main,                 # Pallas hot-spots
+        "roofline": roofline_table.main,              # §Roofline aggregate
+    }
+    picks = sys.argv[1:] or list(benches)
+    print("name,us_per_call,derived")
+    for name in picks:
+        t0 = time.time()
+        try:
+            benches[name]()
+        except Exception as e:  # keep the suite going; report the failure
+            print(f"{name},0,ERROR={type(e).__name__}:{e}")
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Compare every aggregation method on one task — the paper's Figure-1
+experiment in miniature, printed as a table.
+
+    PYTHONPATH=src python examples/compare_compressors.py --steps 40
+"""
+
+import argparse
+
+import jax
+
+from repro.data import LMTask, lm_batches
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train import Trainer
+from benchmarks.common import small_lm_config
+
+METHODS = ["dense", "mlmc_topk", "mlmc_topk_static", "mlmc_fixed",
+           "mlmc_rtn", "topk", "randk", "qsgd", "ef21", "ef21_sgdm"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--k-fraction", type=float, default=0.02)
+    args = ap.parse_args()
+
+    cfg = small_lm_config()
+    model = build_model(cfg)
+    task = LMTask(vocab=cfg.vocab_size, seq=32)
+
+    print(f"{'method':20s} {'final_loss':>10s} {'Gbits':>10s} {'vs dense':>9s}")
+    dense_bits = None
+    for method in METHODS:
+        params = model.init(jax.random.PRNGKey(0))
+        tr = Trainer(lambda p, b: model.loss(p, b, remat=False)[0], params,
+                     num_workers=args.workers, method=method,
+                     optimizer=sgd(0.05), k_fraction=args.k_fraction)
+        data = lm_batches(task, args.workers, 4)
+        hist = tr.fit(data, steps=args.steps)
+        gb = hist.bits[-1] / 1e9
+        if method == "dense":
+            dense_bits = gb
+        ratio = f"{dense_bits / gb:7.0f}x" if dense_bits else "-"
+        print(f"{method:20s} {hist.loss[-1]:10.4f} {gb:10.4f} {ratio:>9s}")
+
+
+if __name__ == "__main__":
+    main()

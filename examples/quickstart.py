@@ -1,0 +1,44 @@
+"""Quickstart: the MLMC compression block in 40 lines.
+
+Takes a gradient-like vector, builds the multilevel s-Top-k family, draws
+MLMC estimates with the adaptive (Lemma 3.4) level distribution, and shows
+(1) unbiasedness, (2) the tiny per-step payload, (3) the variance win over
+Rand-k at the same budget.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RandK, STopKMultilevel, adaptive_probs, mlmc_estimate
+from repro.core.bits import dense_bits, topk_mlmc_bits
+
+d, s = 8192, 64
+key = jax.random.PRNGKey(0)
+# a deep-learning-like gradient: exponentially decaying sorted magnitudes
+v = jax.random.normal(key, (d,)) * jnp.exp(-0.002 * jnp.arange(d))
+
+comp = STopKMultilevel(d=d, s=s)
+probs = adaptive_probs(comp, v)
+print(f"levels L = {comp.num_levels}; adaptive p_1..4 = {probs[:4]}")
+
+keys = jax.random.split(jax.random.PRNGKey(1), 2000)
+estimates = jax.vmap(
+    lambda k: mlmc_estimate(comp, v, k, adaptive=True).estimate)(keys)
+
+rel_bias = float(jnp.linalg.norm(estimates.mean(0) - v) / jnp.linalg.norm(v))
+mlmc_mse = float(jnp.mean(jnp.sum((estimates - v) ** 2, -1)))
+
+randk = RandK(s)  # same per-step budget: s entries
+rk = jax.vmap(lambda k: randk.compress(v, rng=k))(keys)
+randk_mse = float(jnp.mean(jnp.sum((rk - v) ** 2, -1)))
+
+print(f"unbiasedness: |E[g~] - v|/|v| = {rel_bias:.4f}  (-> 0 with samples)")
+print(f"payload: {topk_mlmc_bits(d, s)/1e3:.2f} kbit/step vs "
+      f"{dense_bits(d)/1e3:.1f} kbit uncompressed "
+      f"({dense_bits(d)/topk_mlmc_bits(d, s):.0f}x)")
+print(f"MSE at equal budget: MLMC {mlmc_mse:.3f} vs Rand-k {randk_mse:.3f} "
+      f"({randk_mse/mlmc_mse:.1f}x lower)")
+assert rel_bias < 0.1 and mlmc_mse < randk_mse
+print("OK")

@@ -1,0 +1,60 @@
+"""Batched serving demo: prefill a batch of prompts through a reduced
+assigned architecture, then greedy-decode continuations through the cache
+machinery (KV ring buffers / SSM state / MLA latents — pick any family).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mamba2-370m
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-27b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import build_model
+from repro.serve import Engine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["vision"] = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.num_vision_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["source"] = 0.1 * jax.random.normal(
+            key, (args.batch, cfg.encoder.max_source_len,
+                  cfg.encoder.d_model))
+
+    engine = Engine(model, params)
+    t0 = time.time()
+    out = engine.generate(batch, max_new_tokens=args.new_tokens)
+    dt = time.time() - t0
+    toks = out.tokens
+    print(f"arch={cfg.name} ({cfg.family}), batch={args.batch}, "
+          f"prompt={args.prompt_len}, generated={toks.shape[1]} tokens")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq[{b}]: {list(map(int, toks[b]))}")
+    print(f"{args.batch * toks.shape[1] / dt:.1f} tok/s "
+          f"(CPU, reduced config)")
+    assert toks.shape == (args.batch, args.new_tokens)
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.vocab_size)))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

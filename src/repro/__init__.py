@@ -1,0 +1,12 @@
+"""repro — Multilevel Monte Carlo gradient compression for distributed
+training on TPU pods, in JAX.
+
+Reproduction of: Zukerman, Hamoud & Levy, "Beyond Communication Overhead:
+A Multilevel Monte Carlo Approach for Mitigating Compression Bias in
+Distributed Learning", ICML 2025 — plus a production-grade multi-pod
+training/serving substrate (10-architecture model zoo, manual TP/EP/FSDP
+shard_map runtime, compressed gradient collectives, Pallas compression
+kernels, roofline tooling).
+"""
+
+__version__ = "1.0.0"

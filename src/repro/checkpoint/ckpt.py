@@ -1,0 +1,65 @@
+"""Minimal checkpointing: pytree <-> .npz with path-keyed arrays + a JSON
+metadata sidecar (step, transmitted bits, config name).  No external deps."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "|"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, "key"):
+            parts.append(str(e.key))
+        elif hasattr(e, "idx"):
+            parts.append(str(e.idx))
+        elif hasattr(e, "name"):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return _SEP.join(parts)
+
+
+def save(path: str | pathlib.Path, tree: PyTree,
+         metadata: dict | None = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # np.savez can't serialize ml_dtypes (bf16/f8): widen to f32
+            # (exact for bf16); `restore` casts back to the template dtype
+            arr = np.asarray(leaf, np.float32)
+        flat[_path_str(p)] = arr
+    np.savez(path.with_suffix(".npz"), **flat)
+    meta = dict(metadata or {})
+    path.with_suffix(".json").write_text(json.dumps(meta, indent=1))
+
+
+def restore(path: str | pathlib.Path, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of `like` (shape/dtype template)."""
+    path = pathlib.Path(path)
+    data = np.load(path.with_suffix(".npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = _path_str(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    meta_file = path.with_suffix(".json")
+    meta = json.loads(meta_file.read_text()) if meta_file.exists() else {}
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

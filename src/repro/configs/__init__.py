@@ -1,0 +1,62 @@
+"""Config registry: the 10 assigned architectures + the paper-scale config.
+
+``get_config(name)`` accepts the assignment ids (e.g. ``mixtral-8x22b``).
+"""
+
+from repro.configs.base import (
+    DECODE_32K,
+    INPUT_SHAPES,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    EncoderConfig,
+    InputShape,
+    LayerSpec,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RGLRUConfig,
+    SSMConfig,
+    reduce_for_smoke,
+)
+from repro.configs.chatglm3_6b import CONFIG as CHATGLM3_6B
+from repro.configs.deepseek_v3_671b import CONFIG as DEEPSEEK_V3_671B
+from repro.configs.gemma3_27b import CONFIG as GEMMA3_27B
+from repro.configs.internvl2_76b import CONFIG as INTERNVL2_76B
+from repro.configs.mamba2_370m import CONFIG as MAMBA2_370M
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.paper_scale import CONFIG as PAPER_SCALE
+from repro.configs.qwen25_3b import CONFIG as QWEN25_3B
+from repro.configs.qwen3_4b import CONFIG as QWEN3_4B
+from repro.configs.recurrentgemma_2b import CONFIG as RECURRENTGEMMA_2B
+from repro.configs.seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+
+ASSIGNED = (
+    MIXTRAL_8X22B,
+    MAMBA2_370M,
+    DEEPSEEK_V3_671B,
+    GEMMA3_27B,
+    RECURRENTGEMMA_2B,
+    INTERNVL2_76B,
+    QWEN25_3B,
+    QWEN3_4B,
+    CHATGLM3_6B,
+    SEAMLESS_M4T_LARGE_V2,
+)
+
+REGISTRY = {c.name: c for c in ASSIGNED + (PAPER_SCALE,)}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = [
+    "ASSIGNED", "DECODE_32K", "EncoderConfig", "INPUT_SHAPES", "InputShape",
+    "LONG_500K", "LayerSpec", "MLAConfig", "ModelConfig", "MoEConfig",
+    "PREFILL_32K", "REGISTRY", "RGLRUConfig", "SHAPES_BY_NAME", "SSMConfig",
+    "TRAIN_4K", "get_config", "reduce_for_smoke",
+]

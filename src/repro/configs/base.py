@@ -1,0 +1,251 @@
+"""Model configuration schema + input shapes.
+
+Every assigned architecture is described by one `ModelConfig`; layer structure
+is a repeating `pattern` of (mixer, mlp) kinds with optional non-repeating
+`prefix` layers, so heterogeneous stacks (gemma3 5:1 local:global,
+recurrentgemma 1 attn : 2 recurrent, deepseek 3 dense + 58 MoE) lower to one
+`lax.scan` over the repeated pattern plus a short unrolled prefix — keeping
+HLO size O(pattern) instead of O(layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+MixerKind = Literal["attn", "swa", "mla", "ssd", "rglru"]
+MlpKind = Literal["dense", "moe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: MixerKind
+    mlp: MlpKind = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 8           # routed experts
+    top_k: int = 2
+    num_shared: int = 0            # shared (always-on) experts, deepseek-style
+    d_ff_expert: int = 0           # 0 -> use cfg.d_ff
+    router_noise: float = 0.0
+    capacity_factor: float = 1.25  # used by the capacity-dropping variant
+    aux_loss_weight: float = 0.01  # load-balance loss
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256               # SSD chunk length
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0             # 0 -> d_model
+    d_conv: int = 4
+    c: float = 8.0                 # the RG-LRU `c` exponent scale
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Auxiliary encoder for enc-dec (audio) and the VLM vision stub."""
+    num_layers: int = 24
+    d_model: int = 1024
+    num_heads: int = 16
+    d_ff: int = 8192
+    max_source_len: int = 1024     # frames / patches fed by the stub frontend
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+    cite: str                      # source paper / model card
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # --- layer structure ---
+    pattern: tuple[LayerSpec, ...] = (LayerSpec("attn"),)
+    prefix: tuple[LayerSpec, ...] = ()      # unrolled leading layers
+    # --- attention details ---
+    rope_theta: float = 10_000.0
+    rope_style: Literal["full", "half", "none"] = "full"  # half = chatglm 2d
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    swa_window: int = 4096
+    softcap: float = 0.0           # gemma-style logit soft-capping (0 = off)
+    # --- sub-configs ---
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    mla: MLAConfig | None = None
+    encoder: EncoderConfig | None = None   # audio enc-dec
+    # --- multimodal stubs ---
+    num_vision_tokens: int = 0     # VLM: prepended patch embeddings
+    # --- extras ---
+    mtp_depth: int = 0             # deepseek multi-token-prediction layers
+    tie_embeddings: bool = False
+    # --- training / numerics ---
+    param_dtype: str = "float32"
+    activ_dtype: str = "float32"
+    # --- distribution ---
+    fsdp: bool = False             # shard stacked layer weights over `data`
+    # --- long-context eligibility (sub-quadratic / SWA decode) ---
+    supports_long_context: bool = False
+
+    # ------------------------------------------------------------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def num_repeats(self) -> int:
+        body = self.num_layers - len(self.prefix)
+        if body % len(self.pattern):
+            raise ValueError(
+                f"{self.name}: {body} body layers not divisible by pattern "
+                f"of length {len(self.pattern)}; adjust prefix")
+        return body // len(self.pattern)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "audio"
+
+    def layer_sequence(self) -> tuple[LayerSpec, ...]:
+        return self.prefix + self.pattern * self.num_repeats
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for 6ND math."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd, h, kv = self.hd, self.num_heads, self.num_kv_heads
+        total = v * d * (1 if self.tie_embeddings else 2)
+        for spec in self.layer_sequence():
+            if spec.mixer in ("attn", "swa"):
+                total += d * (h * hd) * 2 + d * (kv * hd) * 2
+            elif spec.mixer == "mla":
+                m = self.mla
+                total += (d * m.q_lora_rank
+                          + m.q_lora_rank * h * (m.nope_head_dim + m.rope_head_dim)
+                          + d * (m.kv_lora_rank + m.rope_head_dim)
+                          + m.kv_lora_rank * h * (m.nope_head_dim + m.v_head_dim)
+                          + h * m.v_head_dim * d)
+            elif spec.mixer == "ssd":
+                s = self.ssm
+                din = s.expand * d
+                total += d * (2 * din + 2 * s.n_groups * s.d_state
+                              + din // s.head_dim) + din * d
+            elif spec.mixer == "rglru":
+                w = self.rglru.lru_width or d
+                total += d * w * 2 + w * d + 2 * w
+            if spec.mlp == "dense":
+                total += 3 * d * f
+            else:
+                fe = self.moe.d_ff_expert or f
+                n_e = self.moe.num_experts + self.moe.num_shared
+                total += 3 * d * fe * n_e + d * self.moe.num_experts
+            total += 2 * d  # norms
+        if self.encoder is not None:
+            e = self.encoder
+            total += e.num_layers * (4 * e.d_model**2 + 3 * e.d_model * e.d_ff)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE top-k) for 6*N_active*D FLOPs."""
+        if self.moe is None:
+            return self.param_count()
+        fe = self.moe.d_ff_expert or self.d_ff
+        d = self.d_model
+        n_moe_layers = sum(1 for s in self.layer_sequence() if s.mlp == "moe")
+        inactive = (self.moe.num_experts - self.moe.top_k) * 3 * d * fe
+        return self.param_count() - n_moe_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Shrink a config to smoke-test size (<=2 pattern repeats, d_model<=256,
+    <=4 experts, tiny vocab) while preserving the structural family."""
+    d_model = min(cfg.d_model, 256)
+    heads = max(2, min(cfg.num_heads, 4))
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    hd = max(8, d_model // heads)
+    changes: dict = dict(
+        num_layers=len(cfg.prefix) + len(cfg.pattern),
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=hd,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        swa_window=min(cfg.swa_window, 16),
+        num_vision_tokens=min(cfg.num_vision_tokens, 8),
+        fsdp=False,
+        param_dtype="float32",
+        activ_dtype="float32",
+    )
+    if cfg.moe:
+        fe = cfg.moe.d_ff_expert or cfg.d_ff
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(cfg.moe.num_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            num_shared=min(cfg.moe.num_shared, 1),
+            d_ff_expert=min(fe, 128) if cfg.moe.d_ff_expert else 0,
+            # effectively dropless at smoke scale so decode-vs-forward
+            # consistency isn't polluted by capacity drops
+            capacity_factor=float(min(cfg.moe.num_experts, 4)))
+    if cfg.ssm:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=min(cfg.ssm.d_state, 16), head_dim=16, chunk=8)
+    if cfg.rglru:
+        changes["rglru"] = dataclasses.replace(cfg.rglru, lru_width=d_model)
+    if cfg.mla:
+        changes["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=32,
+                                   rope_head_dim=8, nope_head_dim=16,
+                                   v_head_dim=16)
+    if cfg.encoder:
+        changes["encoder"] = EncoderConfig(num_layers=1, d_model=d_model,
+                                           num_heads=heads, d_ff=256,
+                                           max_source_len=16)
+    if cfg.mtp_depth:
+        changes["mtp_depth"] = 1
+    return dataclasses.replace(cfg, **changes)

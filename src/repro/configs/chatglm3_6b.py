@@ -1,0 +1,22 @@
+"""chatglm3-6b — [dense] 2d-RoPE (half-dim rotary), GQA. [arXiv:2406.12793]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    cite="arXiv:2406.12793",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    pattern=(LayerSpec("attn"),),
+    rope_style="half",     # ChatGLM rotates only half of each head dim
+    qkv_bias=True,
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    supports_long_context=False,  # full attention
+)

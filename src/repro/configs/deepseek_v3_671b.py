@@ -1,0 +1,28 @@
+"""deepseek-v3-671b — [moe] MLA, 1 shared + 256 routed top-8, MTP. [arXiv:2412.19437]"""
+
+from repro.configs.base import LayerSpec, MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    cite="arXiv:2412.19437",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,     # MLA: logical kv heads = heads (latent-compressed)
+    head_dim=128,
+    d_ff=18432,           # dense-layer FFN width (first 3 layers)
+    vocab_size=129280,
+    prefix=(LayerSpec("mla", "dense"),) * 3,
+    pattern=(LayerSpec("mla", "moe"),),
+    rope_theta=10_000.0,
+    moe=MoEConfig(num_experts=256, top_k=8, num_shared=1, d_ff_expert=2048),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+    mtp_depth=1,
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    fsdp=True,
+    supports_long_context=False,  # full attention (MLA shrinks cache, but
+                                  # long-ctx slots are reserved for SWA/SSM)
+)

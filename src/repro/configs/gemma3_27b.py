@@ -1,0 +1,27 @@
+"""gemma3-27b — [dense] 5:1 local:global attention, 128k ctx. [hf:google/gemma-3-1b-pt]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    cite="hf:google/gemma-3-1b-pt",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    # 62 = 2 swa prefix + 10 x (5 swa + 1 global)
+    prefix=(LayerSpec("swa"),) * 2,
+    pattern=(LayerSpec("swa"),) * 5 + (LayerSpec("attn"),),
+    swa_window=1024,
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    softcap=0.0,
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    fsdp=True,
+    supports_long_context=True,   # SWA-dominant; global layers decode O(S)
+)

@@ -1,0 +1,28 @@
+"""internvl2-76b — [vlm] InternViT + LLaMA3-70B-class LM backbone. [arXiv:2404.16821]
+
+Per the assignment carve-out, the vision tower is a STUB: `input_specs()`
+feeds precomputed, already-projected patch embeddings of shape
+(batch, num_vision_tokens, d_model); this config is the language decoder
+that consumes them."""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    cite="arXiv:2404.16821",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    pattern=(LayerSpec("attn"),),
+    rope_theta=500_000.0,
+    num_vision_tokens=256,
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    fsdp=True,
+    supports_long_context=False,  # full attention
+)

@@ -1,0 +1,22 @@
+"""mamba2-370m — [ssm] attention-free SSD (state-space duality). [arXiv:2405.21060]"""
+
+from repro.configs.base import LayerSpec, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    cite="arXiv:2405.21060",
+    num_layers=48,
+    d_model=1024,
+    num_heads=1,        # attention-free; SSD heads derive from ssm config
+    num_kv_heads=1,
+    head_dim=64,
+    d_ff=0,             # no MLP blocks — Mamba2 blocks only
+    vocab_size=50280,
+    pattern=(LayerSpec("ssd"),),
+    rope_style="none",
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, d_conv=4, chunk=256),
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    supports_long_context=True,   # O(1) recurrent state per token
+)

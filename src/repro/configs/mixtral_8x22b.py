@@ -1,0 +1,24 @@
+"""mixtral-8x22b — [moe] 8 experts top-2, GQA, SWA. [arXiv:2401.04088]"""
+
+from repro.configs.base import LayerSpec, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    cite="arXiv:2401.04088",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=32768,
+    pattern=(LayerSpec("swa", "moe"),),
+    swa_window=4096,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=8, top_k=2),
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    fsdp=True,
+    supports_long_context=True,   # SWA decode: bounded window cache
+)

@@ -1,0 +1,26 @@
+"""paper-scale — the paper's own experimental regime (§5).
+
+The paper finetunes BERT-base (~110M params) on GLUE SST-2 and trains
+ResNet18 (~11M) on CIFAR-10.  This config is a ~110M-parameter decoder
+transformer used by the end-to-end example and the figure-reproduction
+benchmarks as the stand-in workload for "a ~100M model trained with
+MLMC-compressed distributed SGD"."""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-scale",
+    family="dense",
+    cite="Zukerman et al., ICML 2025 §5 (BERT-base-scale stand-in)",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=32768,
+    pattern=(LayerSpec("attn"),),
+    param_dtype="float32",
+    activ_dtype="float32",
+    supports_long_context=False,
+)

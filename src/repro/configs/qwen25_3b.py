@@ -1,0 +1,22 @@
+"""qwen2.5-3b — [dense] GQA with QKV bias. [hf:Qwen/Qwen2.5-0.5B]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b",
+    family="dense",
+    cite="hf:Qwen/Qwen2.5-0.5B",
+    num_layers=36,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=151936,
+    pattern=(LayerSpec("attn"),),
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    supports_long_context=False,  # full attention
+)

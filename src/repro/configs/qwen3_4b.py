@@ -1,0 +1,22 @@
+"""qwen3-4b — [dense] qk_norm, GQA. [hf:Qwen/Qwen3-8B]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    cite="hf:Qwen/Qwen3-8B",
+    num_layers=36,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab_size=151936,
+    pattern=(LayerSpec("attn"),),
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    supports_long_context=False,  # full attention
+)

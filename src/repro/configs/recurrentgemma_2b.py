@@ -1,0 +1,24 @@
+"""recurrentgemma-2b — [hybrid] RG-LRU + local attn, 1 attn : 2 recurrent. [arXiv:2402.19427]"""
+
+from repro.configs.base import LayerSpec, ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    cite="arXiv:2402.19427",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,       # MQA
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    # 26 = 2 recurrent prefix + 8 x (recurrent, recurrent, local-attn)
+    prefix=(LayerSpec("rglru"),) * 2,
+    pattern=(LayerSpec("rglru"), LayerSpec("rglru"), LayerSpec("swa")),
+    swa_window=2048,
+    rglru=RGLRUConfig(lru_width=2560, d_conv=4),
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    supports_long_context=True,   # recurrent state + windowed attention
+)

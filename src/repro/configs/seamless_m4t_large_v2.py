@@ -1,0 +1,28 @@
+"""seamless-m4t-large-v2 — [audio] enc-dec, multimodal. [arXiv:2308.11596]
+
+Per the assignment carve-out, the mel-spectrogram + conformer feature
+frontend is a STUB: `input_specs()` feeds precomputed frame embeddings
+(batch, source_len, d_model) to the transformer encoder; this config is the
+encoder-decoder transformer backbone."""
+
+from repro.configs.base import EncoderConfig, LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    cite="arXiv:2308.11596",
+    num_layers=24,         # decoder layers; encoder below
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,       # full MHA
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    pattern=(LayerSpec("attn"),),
+    rope_style="none",     # learned positions in the original; we use rope-free
+    encoder=EncoderConfig(num_layers=24, d_model=1024, num_heads=16,
+                          d_ff=8192, max_source_len=1024),
+    param_dtype="bfloat16",
+    activ_dtype="bfloat16",
+    supports_long_context=False,  # full attention enc-dec
+)

@@ -1,0 +1,51 @@
+"""repro.core — the paper's contribution: MLMC gradient compression.
+
+Public surface:
+  * multilevel compressors: STopKMultilevel, FixedPointMultilevel,
+    FloatingPointMultilevel, RTNMultilevel           (Def. 3.1 families)
+  * the MLMC block: mlmc_estimate                    (Eq. 6, Alg. 2)
+  * adaptive probabilities: adaptive_probs           (Lemma 3.4, Alg. 3)
+  * baselines: TopK, RandK, QSGD, RTNCompressor, FixedPointCompressor,
+    EF21 (incl. EF21-SGDM via beta < 1)
+  * aggregation registry: make_aggregator
+  * bit accounting: repro.core.bits
+"""
+
+from repro.core.adaptive import (
+    adaptive_probs,
+    optimal_compression_variance,
+    optimal_second_moment,
+)
+from repro.core.aggregators import ALL_AGGREGATORS, Aggregator, make_aggregator
+from repro.core.bitwise import (
+    FixedPointCompressor,
+    FixedPointMultilevel,
+    FloatingPointMultilevel,
+)
+from repro.core.error_feedback import EF21, EF21State
+from repro.core.mlmc import (
+    mlmc_compression_variance,
+    mlmc_estimate,
+    mlmc_second_moment,
+)
+from repro.core.qsgd import QSGD
+from repro.core.randk import RandK
+from repro.core.rtn import RTNCompressor, RTNMultilevel, rtn_quantize
+from repro.core.topk import STopKMultilevel, TopK, magnitude_ranks, topk_mask
+from repro.core.types import (
+    Compressor,
+    MLMCEstimate,
+    MultilevelCompressor,
+    categorical,
+)
+
+__all__ = [
+    "ALL_AGGREGATORS", "Aggregator", "Compressor", "EF21", "EF21State",
+    "FixedPointCompressor", "FixedPointMultilevel", "FloatingPointMultilevel",
+    "MLMCEstimate", "MultilevelCompressor", "QSGD", "RTNCompressor",
+    "RTNMultilevel", "RandK", "STopKMultilevel", "TopK", "adaptive_probs",
+    "categorical", "magnitude_ranks", "make_aggregator",
+    "mlmc_compression_variance", "mlmc_estimate", "mlmc_second_moment",
+    "optimal_compression_variance", "optimal_second_moment", "rtn_quantize",
+    "topk_mask",
+]

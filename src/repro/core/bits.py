@@ -1,0 +1,90 @@
+"""Communication-cost accounting (bits on the wire), per the paper's own
+formulas, plus the realized-on-TPU byte counts used by the roofline analysis.
+
+The paper counts an idealized point-to-point wire format:
+
+* uncompressed fp64 vector: ``64 d``                                  (§3.1)
+* fixed-point MLMC:  ``2 d + 64 + ceil(log2(63))``                    (§3.1)
+* floating-point MLMC: ``13 d + log2(52)``                            (App. B)
+* Top-k MLMC residual: one entry;  s-Top-k: one length-s segment      (§3.2)
+
+On a TPU mesh there is no parameter server; "worker→server" traffic becomes
+the per-chip bytes of the gradient collective.  `realized_*` helpers mirror
+what `repro.sharding.collectives` actually lowers to, and are cross-checked
+against the HLO parse in `repro.launch.roofline`.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def dense_bits(d: int, word_bits: int = 32) -> float:
+    """Alg. 1 baseline: one uncompressed gradient."""
+    return float(word_bits) * d
+
+
+def fixed_point_mlmc_bits(d: int, num_levels: int = 63, header_bits: int = 64) -> float:
+    """§3.1: 2 bits/entry + max-entry header + level index."""
+    return 2.0 * d + header_bits + math.ceil(math.log2(num_levels))
+
+
+def floating_point_mlmc_bits(d: int, num_levels: int = 52) -> float:
+    """App. B: 13 bits/entry (sign + 11-bit exponent + 1 mantissa bit)."""
+    return 13.0 * d + math.log2(num_levels)
+
+
+def topk_mlmc_bits(d: int, s: int = 1, value_bits: int = 32,
+                   index_bits: int | None = None) -> float:
+    """§3.2: one length-s segment — s values + s positions + level index.
+
+    The paper counts "s numbers"; we additionally account the positions
+    (``index_bits`` defaults to ceil(log2 d)) to keep the ledger honest."""
+    if index_bits is None:
+        index_bits = math.ceil(math.log2(max(d, 2)))
+    num_levels = math.ceil(d / s)
+    return s * (value_bits + index_bits) + math.ceil(math.log2(num_levels))
+
+
+def topk_bits(k: int, d: int, value_bits: int = 32) -> float:
+    """Biased Top-k: k values + k indices."""
+    return k * (value_bits + math.ceil(math.log2(max(d, 2))))
+
+
+def randk_bits(k: int, d: int, value_bits: int = 32) -> float:
+    return topk_bits(k, d, value_bits)
+
+
+def qsgd_bits(d: int, s: int = 2) -> float:
+    return d * (1 + math.ceil(math.log2(s + 1))) + 32
+
+
+def rtn_bits(d: int, level: int) -> float:
+    return float(level) * d + 32
+
+
+def compression_ratio(method_bits: float, d: int, word_bits: int = 32) -> float:
+    return dense_bits(d, word_bits) / max(method_bits, 1.0)
+
+
+# --- realized TPU collective payloads (per data-parallel step, per chip) ----
+
+
+def realized_dense_allreduce_bytes(d: int, dtype_bytes: int = 4) -> float:
+    """Ring all-reduce moves ~2x the shard bytes per chip; we report the
+    operand size (what the HLO parser counts) for consistency."""
+    return float(d) * dtype_bytes
+
+
+def realized_mlmc_topk_allgather_bytes(k: int, workers: int,
+                                       value_bytes: int = 4,
+                                       index_bytes: int = 4) -> float:
+    """all_gather of (values, indices) of the k-entry residual across M
+    workers: each chip contributes k entries and receives M*k."""
+    return float(k) * workers * (value_bytes + index_bytes)
+
+
+def realized_mlmc_fixedpoint_psum_bytes(d: int) -> float:
+    """int8 psum of the ternary bit-plane residual: 1 byte/entry operand
+    (vs 4 for f32) — exact for <= 127 workers."""
+    return float(d)

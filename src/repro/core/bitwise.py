@@ -1,0 +1,186 @@
+"""Bit-wise multilevel compressors: fixed-point (§3.1) and floating-point (App. B).
+
+Fixed point
+-----------
+After normalizing by the max magnitude (which is transmitted alongside), each
+entry ``|e| <= 1`` is viewed as a binary fraction ``sum_j b_j 2^{-j}``
+(Eq. 7).  ``C^l`` truncates that sum to the first ``l`` bits.  The level-l
+MLMC residual is the single bit-plane ``sign(e) * b_l * 2^{-l}`` — two bits of
+information per entry, which is the paper's headline ×32 communication saving
+(2d + 64 + log2(L) bits/step vs 64d uncompressed).
+
+Lemma 3.3: the variance-optimal level distribution is ``p_l ∝ 2^{-l}``.
+
+Floating point
+--------------
+Each entry keeps its own exponent (via frexp); ``C^l`` truncates the mantissa
+to ``l`` fractional bits.  The residual is one mantissa bit scaled by the
+per-entry exponent: ~13 bits/entry wire cost in the paper's fp64 accounting
+(sign + 11-bit exponent + 1 mantissa bit).  Lemma B.1 gives the same
+``p_l ∝ 2^{-l}`` optimum.
+
+Precision note (documented deviation): the paper works with 64-bit words
+(L = 63 / 52).  This framework computes in float32, whose 24-bit significand
+makes bit-planes beyond ~24 identically zero, so the default ladders are
+L = 24 (fixed) / 23 (float).  ``C^L = id`` is enforced *exactly* by defining
+the top level as the identity and its residual as ``v - C^{L-1}(v)`` — the
+telescoping sum, and hence Lemma 3.2's unbiasedness, remains exact.  The
+paper's 64-bit wire accounting is preserved in :mod:`repro.core.bits`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, Compressor, MultilevelCompressor, PRNGKey
+
+_EPS = 1e-30
+
+
+def _ldexp(x: Array, e: Array) -> Array:
+    """x * 2**e with traced integer e (jnp.ldexp handles this)."""
+    return jnp.ldexp(x, e)
+
+
+# ---------------------------------------------------------------------------
+# Fixed point
+# ---------------------------------------------------------------------------
+
+
+def _fixed_scale(v: Array) -> Array:
+    """Normalizing scale (the transmitted max-magnitude header)."""
+    return jnp.maximum(jnp.max(jnp.abs(v)), _EPS)
+
+
+# largest float32 strictly below 1.0 — clamping here keeps the integer part
+# of the fixed-point representation at zero even for the max-magnitude entry
+_BELOW_ONE = 1.0 - 2.0 ** -24
+
+
+def _fixed_trunc(scaled_abs: Array, l: Array) -> Array:
+    """floor(x * 2^l) / 2^l for x in [0, 1], jit-safe in traced l."""
+    x = jnp.minimum(scaled_abs, _BELOW_ONE)
+    return _ldexp(jnp.floor(_ldexp(x, l)), -l)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointMultilevel(MultilevelCompressor):
+    """Multilevel fixed-point truncation; level l keeps bits 1..l (Eq. 7)."""
+
+    num_bits: int = 24  # L; paper uses 63 (64-bit words), f32 supports ~24
+
+    @property
+    def num_levels(self) -> int:
+        return self.num_bits
+
+    def compress(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        scale = _fixed_scale(v)
+        trunc = scale * jnp.sign(v) * _fixed_trunc(jnp.abs(v) / scale, l)
+        # top level is the exact identity (Def. 3.1)
+        return jnp.where(l >= self.num_levels, v, jnp.where(l <= 0, 0.0, trunc))
+
+    def residual(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        scale = _fixed_scale(v)
+        x = jnp.minimum(jnp.abs(v) / scale, _BELOW_ONE)
+        bit = jnp.mod(jnp.floor(_ldexp(x, l)), 2.0)           # b_l ∈ {0,1}
+        plane = scale * jnp.sign(v) * _ldexp(bit, -l)         # sign·b_l·2^-l
+        top = v - self.compress(v, self.num_levels - 1)
+        return jnp.where(l >= self.num_levels, top, plane)
+
+    def residual_norms(self, v: Array) -> Array:
+        ls = jnp.arange(1, self.num_levels + 1, dtype=jnp.int32)
+        return jax.vmap(lambda l: jnp.linalg.norm(self.residual(v, l)))(ls)
+
+    def static_probs(self) -> Array:
+        """Lemma 3.3: p_l = 2^{-l} / (1 - 2^{-L})."""
+        L = self.num_levels
+        l = jnp.arange(1, L + 1, dtype=jnp.float32)
+        return (2.0 ** -l) / (1.0 - 2.0 ** -float(L))
+
+    def residual_bits(self, d: int) -> float:
+        # one information bit + one sign bit per entry (§3.1)
+        return 2.0 * d
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointCompressor(Compressor):
+    """Biased F-bit fixed-point truncation baseline (the paper's
+    '2-bit quantization' baseline in Fig. 3 is ``F=2``)."""
+
+    f_bits: int
+
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        del rng
+        return FixedPointMultilevel(num_bits=max(self.f_bits, 2) + 1).compress(
+            v, self.f_bits
+        )
+
+    def bits(self, d: int) -> float:
+        return (self.f_bits + 1.0) * d + 32  # bits + sign, plus scale header
+
+
+# ---------------------------------------------------------------------------
+# Floating point
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatingPointMultilevel(MultilevelCompressor):
+    """Multilevel floating-point mantissa truncation (App. B).
+
+    frexp gives ``v = m * 2^E`` with ``m in [0.5, 1)``; level l keeps the
+    leading bit plus ``l`` fractional mantissa bits.
+    """
+
+    num_bits: int = 23  # paper: 52 (fp64 mantissa); f32 mantissa = 23
+
+    @property
+    def num_levels(self) -> int:
+        return self.num_bits
+
+    def _mantissa_exp(self, v: Array) -> tuple[Array, Array]:
+        m, e = jnp.frexp(jnp.where(v == 0.0, 1.0, v))
+        m = jnp.where(v == 0.0, 0.0, m)
+        return m, e
+
+    def base(self, v: Array) -> Array:
+        """``C^0(v) = sign(v) * 2^{E(v)}`` — the always-transmitted
+        sign+exponent leading term (App. B; part of the 13 bits/entry)."""
+        m, e = self._mantissa_exp(v)
+        return _ldexp(jnp.sign(m) * 0.5, e)
+
+    def compress(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        m, e = self._mantissa_exp(v)
+        # truncate |m| in [0.5, 1) to 1 leading + l fractional bits; at l = 0
+        # this is exactly the base() leading term sign * 2^E
+        tm = jnp.sign(m) * _ldexp(jnp.floor(_ldexp(jnp.abs(m), l + 1)), -(l + 1))
+        trunc = _ldexp(tm, e)
+        return jnp.where(l >= self.num_levels, v, trunc)
+
+    def residual(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        m, e = self._mantissa_exp(v)
+        bit = jnp.mod(jnp.floor(_ldexp(jnp.abs(m), l + 1)), 2.0)  # m_l ∈ {0,1}
+        plane = _ldexp(jnp.sign(m) * bit, e - (l + 1))
+        top = v - self.compress(v, self.num_levels - 1)
+        return jnp.where(l >= self.num_levels, top, plane)
+
+    def residual_norms(self, v: Array) -> Array:
+        ls = jnp.arange(1, self.num_levels + 1, dtype=jnp.int32)
+        return jax.vmap(lambda l: jnp.linalg.norm(self.residual(v, l)))(ls)
+
+    def static_probs(self) -> Array:
+        """Lemma B.1: p_l = 2^{-l} / (1 - 2^{-L})."""
+        L = self.num_levels
+        l = jnp.arange(1, L + 1, dtype=jnp.float32)
+        return (2.0 ** -l) / (1.0 - 2.0 ** -float(L))
+
+    def residual_bits(self, d: int) -> float:
+        # sign + exponent + 1 mantissa bit per entry; fp64 accounting -> 13d
+        return 13.0 * d

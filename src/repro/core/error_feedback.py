@@ -1,0 +1,66 @@
+"""Error-feedback baselines: EF21 (Richtárik et al., 2021) and EF21-SGDM
+(Fatkhullin et al., 2023) — the biased-compression state of the art the paper
+compares against (§1.1, §4, Figs. 1–5).
+
+EF21 (per worker i, compressor C):
+    c_i^t = C(grad_i^t - g_i^t)        # compress the *innovation*
+    g_i^{t+1} = g_i^t + c_i^t          # worker-side state
+    g^{t+1}  = g^t + mean_i(c_i^t)     # server-side aggregate
+    x^{t+1}  = x^t - eta * g^{t+1}
+
+EF21-SGDM adds a client-side momentum estimate of the gradient:
+    v_i^t = (1 - beta) * v_i^{t-1} + beta * grad_i^t
+and feeds v_i^t (instead of grad_i^t) into the EF21 innovation.
+
+These operate on *stacked worker gradients* of shape (M, d) so the same code
+serves the in-process M-worker simulation used by the CPU benchmarks and the
+per-shard path inside shard_map (M = 1 local worker per data shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, Compressor
+
+
+class EF21State(NamedTuple):
+    g_workers: Array   # (M, d) worker-side compressed-gradient states g_i
+    g_server: Array    # (d,) server aggregate g
+    momentum: Array    # (M, d) momentum buffers v_i (zeros when beta == 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class EF21:
+    """EF21 / EF21-SGDM step.  ``beta = 1`` recovers plain EF21."""
+
+    compressor: Compressor
+    beta: float = 1.0  # momentum coefficient (EF21-SGDM uses beta < 1)
+
+    def init(self, num_workers: int, dim: int) -> EF21State:
+        z = jnp.zeros((num_workers, dim), jnp.float32)
+        return EF21State(g_workers=z, g_server=jnp.zeros((dim,), jnp.float32),
+                         momentum=z)
+
+    def step(self, state: EF21State, worker_grads: Array) -> tuple[Array, EF21State, Array]:
+        """Returns (descent direction g^{t+1}, new state, bits transmitted)."""
+        if self.beta < 1.0:
+            mom = (1.0 - self.beta) * state.momentum + self.beta * worker_grads
+            target = mom
+        else:
+            mom = state.momentum
+            target = worker_grads
+
+        innovations = target - state.g_workers                  # (M, d)
+        c = jax.vmap(lambda u: self.compressor.compress(u))(innovations)
+        g_workers = state.g_workers + c
+        g_server = state.g_server + jnp.mean(c, axis=0)
+
+        m = worker_grads.shape[0]
+        bits = jnp.asarray(m * self.compressor.bits(worker_grads.shape[1]),
+                           jnp.float32)
+        return g_server, EF21State(g_workers, g_server, mom), bits

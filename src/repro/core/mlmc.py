@@ -1,0 +1,103 @@
+"""The MLMC estimator — the paper's core contribution (Eq. 5/6, Alg. 2/3).
+
+Given a multilevel compressor ``C^0 = 0, ..., C^L = id`` and non-zero level
+probabilities ``p``, the estimator of one stochastic gradient ``v`` is
+
+    g~ = C^0(v) + (1/p_l) * (C^l(v) - C^{l-1}(v)),   l ~ p        (Eq. 6)
+
+which is conditionally unbiased for ANY valid ``p`` (Lemma 3.2).  Alg. 2 uses
+a static ``p`` (e.g. Lemma 3.3's ``p_l ∝ 2^{-l}`` for bit-wise compressors);
+Alg. 3 recomputes the Lemma-3.4 optimum ``p_l ∝ Delta_l`` per sample.
+
+This module is deliberately tiny and pure — it is the plug-and-play "MLMC
+block" of §3: (stochastic gradient, multilevel compressor, level
+distribution) -> unbiased estimate.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import adaptive_probs
+from repro.core.types import (
+    Array,
+    MLMCEstimate,
+    MultilevelCompressor,
+    PRNGKey,
+    categorical,
+)
+
+#: header cost: sampled level index + 32-bit scale header (paper: 64-bit max
+#: entry + ceil(log2(L)) bits; we account a 32-bit header + level index).
+def header_bits(num_levels: int) -> float:
+    return 32.0 + math.ceil(math.log2(max(num_levels, 2)))
+
+
+def mlmc_estimate(
+    compressor: MultilevelCompressor,
+    v: Array,
+    rng: PRNGKey,
+    *,
+    probs: Array | None = None,
+    adaptive: bool = False,
+) -> MLMCEstimate:
+    """One MLMC compression of a flat vector ``v`` (Alg. 2 inner block).
+
+    Args:
+      compressor: the multilevel family ``C^l``.
+      v: flat float vector (the stochastic gradient of one worker).
+      rng: PRNG key for the level draw.
+      probs: optional explicit level distribution (length L).  Ignored when
+        ``adaptive=True``.
+      adaptive: use the per-sample Lemma-3.4 optimum (Alg. 3).
+    """
+    if adaptive:
+        probs = adaptive_probs(compressor, v)
+    elif probs is None:
+        probs = compressor.static_probs()
+    probs = probs / jnp.sum(probs)
+
+    idx = categorical(rng, probs)            # 0-based level index
+    level = idx + 1                          # paper levels are 1-based
+    p_l = jnp.maximum(probs[idx], 1e-30)
+
+    residual = compressor.residual(v, level)
+    # Eq. 6: g~ = C^0(v) + residual / p_l   (C^0 is zero for all families
+    # except floating-point, whose sign+exponent term is always transmitted)
+    estimate = compressor.base(v) + residual / p_l
+
+    bits = jnp.asarray(
+        compressor.residual_bits(v.shape[0]) + header_bits(compressor.num_levels),
+        jnp.float32,
+    )
+    return MLMCEstimate(
+        estimate=estimate, level=level, prob=p_l, payload_bits=bits, residual=residual
+    )
+
+
+def mlmc_second_moment(
+    compressor: MultilevelCompressor, v: Array, probs: Array | None = None
+) -> Array:
+    """Closed-form ``E||g~||^2 = sum_l Delta_l^2 / p_l`` (App. D, Eq. 48).
+
+    Used by the variance benchmarks/tests to check Lemmas 3.3/3.4/3.6 without
+    Monte-Carlo noise.  Valid for zero-``base()`` families (Top-k/s-Top-k,
+    fixed-point, RTN); the floating-point family's deterministic sign+exponent
+    term shifts the mean, see App. B Eq. 29-33 for its variance.
+    """
+    deltas = compressor.residual_norms(v)
+    if probs is None:
+        probs = compressor.static_probs()
+    probs = probs / jnp.sum(probs)
+    return jnp.sum(deltas**2 / jnp.maximum(probs, 1e-30))
+
+
+def mlmc_compression_variance(
+    compressor: MultilevelCompressor, v: Array, probs: Array | None = None
+) -> Array:
+    """``sigma_comp^2 = E||g~||^2 - ||v||^2`` (Eq. 55; unbiasedness makes the
+    mean of g~ equal v, so this is the excess second moment)."""
+    return mlmc_second_moment(compressor, v, probs) - jnp.sum(v * v)

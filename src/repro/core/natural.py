@@ -1,0 +1,53 @@
+"""Natural compression (Horváth et al., 2022) and SignSGD (Bernstein et al.,
+2018) — two further baselines from the paper's related-work section (§1.1).
+
+* Natural compression rounds each value to one of its two neighbouring
+  powers of two, with probabilities making it UNBIASED (ω = 1/8); the wire
+  format is sign + 8-bit exponent ≈ 9 bits/entry.
+* SignSGD transmits sign(v) scaled by mean|v| — BIASED (the canonical
+  1-bit baseline; needs error feedback, works with our EF21 wrapper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, Compressor, PRNGKey
+
+_EPS = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class NaturalCompression(Compressor):
+    unbiased: bool = dataclasses.field(default=True, init=False)
+
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        if rng is None:
+            raise ValueError("natural compression is stochastic; rng needed")
+        m, e = jnp.frexp(jnp.where(v == 0.0, 1.0, v))   # v = m 2^e, |m|∈[.5,1)
+        lo = jnp.ldexp(jnp.sign(m) * 0.5, e)            # 2^(e-1) neighbour
+        hi = jnp.ldexp(jnp.sign(m) * 1.0, e)            # 2^e neighbour
+        # unbiasedness: P(hi) = (|v| - |lo|) / (|hi| - |lo|) = 2|m| - 1
+        p_hi = 2.0 * jnp.abs(m) - 1.0
+        take_hi = jax.random.bernoulli(rng, jnp.clip(p_hi, 0.0, 1.0))
+        out = jnp.where(take_hi, hi, lo)
+        return jnp.where(v == 0.0, 0.0, out)
+
+    def bits(self, d: int) -> float:
+        return 9.0 * d  # sign + 8-bit exponent
+
+
+@dataclasses.dataclass(frozen=True)
+class SignSGD(Compressor):
+    unbiased: bool = dataclasses.field(default=False, init=False)
+
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        del rng
+        scale = jnp.mean(jnp.abs(v))
+        return jnp.sign(v) * scale
+
+    def bits(self, d: int) -> float:
+        return float(d) + 32  # 1 bit/entry + the scale header

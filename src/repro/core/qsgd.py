@@ -1,0 +1,42 @@
+"""QSGD (Alistarh et al., 2017): unbiased stochastic quantization baseline.
+
+``C(v)_i = ||v||_2 * sign(v_i) * xi_i / s`` where ``xi_i`` randomly rounds
+``s |v_i| / ||v||_2`` to a neighbouring integer so that the estimator is
+unbiased.  Used by the paper as the unbiased bit-wise baseline in Fig. 3
+("2-bit QSGD" = s = 2 quantization levels + sign).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, Compressor, PRNGKey
+
+_EPS = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD(Compressor):
+    #: number of quantization levels s (2-bit QSGD -> s = 2)
+    s: int = 2
+    unbiased: bool = dataclasses.field(default=True, init=False)
+
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        if rng is None:
+            raise ValueError("QSGD is stochastic; an rng key is required")
+        norm = jnp.maximum(jnp.linalg.norm(v), _EPS)
+        x = jnp.abs(v) / norm * self.s             # in [0, s]
+        lo = jnp.floor(x)
+        p_up = x - lo                               # P(round up) — unbiased
+        up = jax.random.bernoulli(rng, p_up)
+        xi = lo + up.astype(v.dtype)
+        return norm * jnp.sign(v) * xi / self.s
+
+    def bits(self, d: int) -> float:
+        import math
+
+        # sign + level index per entry, plus the 32-bit norm header
+        return d * (1 + math.ceil(math.log2(self.s + 1))) + 32

@@ -1,0 +1,38 @@
+"""Rand-k: the canonical *unbiased* sparsifier baseline (§1, §2.2).
+
+Keeps k uniformly-random coordinates scaled by d/k, so ``E[C(v)] = v`` with
+variance coefficient ``omega = d/k - 1`` (Eq. 3).  The paper's experiments use
+it as the unbiased strawman that MLMC-Top-k dominates (Lemma 3.6:
+O(d/s) vs O(1/(r s)) variance under exponentially-decaying gradients).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, Compressor, PRNGKey
+
+
+@dataclasses.dataclass(frozen=True)
+class RandK(Compressor):
+    k: int
+    unbiased: bool = dataclasses.field(default=True, init=False)
+
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        if rng is None:
+            raise ValueError("Rand-k is stochastic; an rng key is required")
+        d = v.shape[0]
+        # choose k of d without replacement via a random permutation prefix
+        perm = jax.random.permutation(rng, d)
+        mask = jnp.zeros((d,), bool).at[perm[: self.k]].set(True)
+        return jnp.where(mask, v * (d / self.k), 0.0)
+
+    def bits(self, d: int) -> float:
+        del d
+        return float(self.k) * (32 + 32)
+
+    def omega(self, d: int) -> float:
+        return d / self.k - 1.0

@@ -1,0 +1,86 @@
+"""Round-to-Nearest (RTN) multilevel compressor (App. G.2, Eq. 125).
+
+``C^l_RTN(v) = delta_l * clip(round(v / delta_l), -m_l, m_l)`` where the grid
+spacing ``delta_l = 2c / (2^l - 1)`` covers ``[-c, c]`` with ``2^l - 1`` cells
+and ``m_l = floor((2^l - 1) / 2)`` integer slots on each side.  We take
+``c`` to be the per-tensor max magnitude (transmitted as a header).
+
+RTN is the paper's example of a *structured* compressor with **no importance
+-sampling interpretation** (§3.2): the residual ``C^l - C^{l-1}`` has no
+sparse closed form, so it is computed as an explicit difference and the
+adaptive Lemma-3.4 distribution is obtained from the L residual norms.
+L is small (default 8), so this is cheap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, Compressor, MultilevelCompressor, PRNGKey
+
+_EPS = 1e-30
+
+
+def rtn_quantize(v: Array, l: Array | int, c: Array) -> Array:
+    """One RTN quantization at level l with clip scale c (jit-safe traced l)."""
+    l = jnp.asarray(l, jnp.float32)
+    cells = 2.0 ** l - 1.0
+    delta = 2.0 * c / jnp.maximum(cells, 1.0)
+    m = jnp.floor(cells / 2.0)
+    q = jnp.clip(jnp.round(v / jnp.maximum(delta, _EPS)), -m, m)
+    return delta * q
+
+
+@dataclasses.dataclass(frozen=True)
+class RTNMultilevel(MultilevelCompressor):
+    """Multilevel RTN; level l uses a 2^l-point grid; top level = identity."""
+
+    num_bits: int = 8  # L; level L is the exact identity per Def. 3.1
+
+    @property
+    def num_levels(self) -> int:
+        return self.num_bits
+
+    def _scale(self, v: Array) -> Array:
+        return jnp.maximum(jnp.max(jnp.abs(v)), _EPS)
+
+    def compress(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        q = rtn_quantize(v, l, self._scale(v))
+        return jnp.where(l >= self.num_levels, v, jnp.where(l <= 0, 0.0, q))
+
+    def residual(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        return self.compress(v, l) - self.compress(v, l - 1)
+
+    def residual_norms(self, v: Array) -> Array:
+        ls = jnp.arange(1, self.num_levels + 1, dtype=jnp.int32)
+        return jax.vmap(lambda l: jnp.linalg.norm(self.residual(v, l)))(ls)
+
+    def static_probs(self) -> Array:
+        # RTN error roughly halves per extra bit -> geometric p_l ∝ 2^{-l}
+        L = self.num_levels
+        l = jnp.arange(1, L + 1, dtype=jnp.float32)
+        return (2.0 ** -l) / (1.0 - 2.0 ** -float(L))
+
+    def residual_bits(self, d: int) -> float:
+        # residual lives on the level-l grid: <= 2 bits/entry of new info
+        # (one refinement bit + sign), mirroring the fixed-point accounting
+        return 2.0 * d
+
+
+@dataclasses.dataclass(frozen=True)
+class RTNCompressor(Compressor):
+    """Biased plain-RTN baseline at a fixed level (Fig. 6 comparisons)."""
+
+    level: int
+
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        del rng
+        return rtn_quantize(v, self.level, jnp.maximum(jnp.max(jnp.abs(v)), _EPS))
+
+    def bits(self, d: int) -> float:
+        return float(self.level) * d + 32

@@ -1,0 +1,128 @@
+"""Top-k and s-segmented Top-k compressors (paper §2.2, §3.2).
+
+The paper's ``s-Top-k`` sorts the vector by magnitude, divides the *sorted*
+vector into segments of length ``s``, and keeps the ``k`` segments with the
+largest norm (App. E: "retains the k non-overlapping segments of length s
+with the largest norms of the sorted stochastic gradient vector").  Because
+the vector is sorted first, ``s``-Top-``k`` coincides with plain
+Top-``(k*s)`` — the segment structure matters for the *multilevel residual*:
+the level-``l`` residual ``C^l(v) - C^{l-1}(v)`` is exactly the magnitude
+ranks ``[(l-1)s, ls)``, i.e. ONE length-``s`` segment, which is what makes the
+MLMC wire payload tiny (§3.2).
+
+Plain Top-k is the ``s = 1`` special case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array, Compressor, MultilevelCompressor, PRNGKey
+
+_INDEX_BITS = 32  # we account indices at 32 bits; `bits.py` also offers log2(d)
+
+
+def magnitude_ranks(v: Array) -> Array:
+    """Rank of each entry by descending |value| (rank 0 = largest)."""
+    order = jnp.argsort(-jnp.abs(v))            # positions sorted by magnitude
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(v.shape[0]))
+    return ranks
+
+
+def topk_mask(v: Array, k: Array | int) -> Array:
+    """Boolean mask of the k largest-|.| entries (jit-safe in traced k)."""
+    return magnitude_ranks(v) < k
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Biased Top-k baseline: keep the k largest-magnitude entries (Eq. 9)."""
+
+    k: int
+    unbiased: bool = dataclasses.field(default=False, init=False)
+
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        del rng  # deterministic
+        return jnp.where(topk_mask(v, self.k), v, 0.0)
+
+    def bits(self, d: int) -> float:
+        del d
+        return float(self.k) * (32 + _INDEX_BITS)
+
+    def alpha(self, d: int) -> float:
+        """Worst-case energy retention coefficient: alpha = k/d (Eq. 4/9)."""
+        return self.k / d
+
+
+@dataclasses.dataclass(frozen=True)
+class STopKMultilevel(MultilevelCompressor):
+    """Multilevel (s-)Top-k family: ``C^l`` keeps the top ``l*s`` entries.
+
+    L = ceil(d / s) so that ``C^L = id`` (Def. 3.1).  The level-l residual is
+    the single segment of magnitude-ranks ``[(l-1)s, ls)``.
+    """
+
+    d: int
+    s: int = 1
+    #: decay ratio of the fallback static level distribution (geometric);
+    #: Alg. 3 replaces this with the adaptive Lemma-3.4 optimum.
+    static_ratio: float = 0.75
+
+    def __post_init__(self):
+        if self.d <= 0 or self.s <= 0:
+            raise ValueError(f"need d>0, s>0; got d={self.d}, s={self.s}")
+
+    @property
+    def num_levels(self) -> int:
+        return math.ceil(self.d / self.s)
+
+    # -- Def. 3.1 interface -------------------------------------------------
+
+    def compress(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        return jnp.where(magnitude_ranks(v) < l * self.s, v, 0.0)
+
+    def residual(self, v: Array, l: Array | int) -> Array:
+        l = jnp.asarray(l, jnp.int32)
+        ranks = magnitude_ranks(v)
+        seg = (ranks >= (l - 1) * self.s) & (ranks < l * self.s)
+        return jnp.where(seg, v, 0.0)
+
+    def residual_norms(self, v: Array) -> Array:
+        """Delta_l = sqrt(sum of |v|^2 over magnitude ranks [(l-1)s, ls))."""
+        L = self.num_levels
+        sq = jnp.sort(jnp.abs(v))[::-1] ** 2
+        pad = L * self.s - self.d
+        sq = jnp.pad(sq, (0, pad))
+        return jnp.sqrt(jnp.sum(sq.reshape(L, self.s), axis=-1))
+
+    def static_probs(self) -> Array:
+        L = self.num_levels
+        p = self.static_ratio ** jnp.arange(L, dtype=jnp.float32)
+        return p / jnp.sum(p)
+
+    def residual_bits(self, d: int) -> float:
+        del d
+        # one segment: s values + s (32-bit) positions in the original vector
+        return float(self.s) * (32 + _INDEX_BITS)
+
+    # -- extras --------------------------------------------------------------
+
+    def alphas(self, v: Array) -> Array:
+        """Adaptive energy coefficients alpha^l_{t,i} of Eq. (10), all levels.
+
+        ``alpha_l = ||C^l(v)||^2 / ||v||^2`` (so Lemma 3.4's reduction
+        ``p_l ∝ sqrt(alpha_l - alpha_{l-1})`` holds — tested)."""
+        deltas_sq = self.residual_norms(v) ** 2
+        total = jnp.sum(deltas_sq)
+        return jnp.cumsum(deltas_sq) / jnp.maximum(total, 1e-30)
+
+
+def stopk_for(v_size: int, k_fraction: float, s: int = 1) -> STopKMultilevel:
+    """Convenience: multilevel family sized for a tensor of ``v_size``."""
+    del k_fraction  # the MLMC family always spans the full ladder
+    return STopKMultilevel(d=v_size, s=s)

@@ -1,0 +1,62 @@
+"""Pytree plumbing: apply flat-vector compressors to gradient pytrees.
+
+Two modes, mirroring real deployments:
+
+* ``concat``  — ravel the whole gradient pytree into one flat vector (the
+  paper's model: the gradient IS one d-dimensional vector).  Best statistical
+  behaviour for rank-based compressors (global top-k across layers).
+* ``per_leaf`` — compress each tensor independently (how per-tensor fusion
+  buckets behave in production all-reduce stacks).  Each leaf gets its own
+  level draw, scale header and compressor family sized to its length.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core.types import Array, PRNGKey
+
+PyTree = Any
+
+
+def tree_ravel(tree: PyTree) -> tuple[Array, Callable[[Array], PyTree]]:
+    flat, unravel = ravel_pytree(tree)
+    return flat.astype(jnp.float32), unravel
+
+
+def tree_size(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def map_flat_leaves(
+    fn: Callable[[Array, PRNGKey], tuple[Array, Array]],
+    tree: PyTree,
+    rng: PRNGKey,
+) -> tuple[PyTree, Array]:
+    """Apply ``fn(flat_leaf, key) -> (flat_out, bits)`` to every leaf.
+
+    Returns the reassembled pytree and the summed bit cost."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(rng, len(leaves))
+    outs, bits = [], jnp.zeros((), jnp.float32)
+    for leaf, key in zip(leaves, keys):
+        flat = leaf.reshape(-1).astype(jnp.float32)
+        out, b = fn(flat, key)
+        outs.append(out.reshape(leaf.shape).astype(leaf.dtype))
+        bits = bits + b
+    return jax.tree_util.tree_unflatten(treedef, outs), bits
+
+
+def tree_compress_concat(
+    fn: Callable[[Array, PRNGKey], tuple[Array, Array]],
+    tree: PyTree,
+    rng: PRNGKey,
+) -> tuple[PyTree, Array]:
+    """Ravel the whole pytree, compress once, unravel."""
+    flat, unravel = tree_ravel(tree)
+    out, bits = fn(flat, rng)
+    return unravel(out), bits

@@ -1,0 +1,147 @@
+"""Core type definitions for the MLMC compression framework.
+
+The paper (Zukerman, Hamoud & Levy, ICML 2025) defines (Def. 3.1) a
+*multilevel compressor* as a family ``C^l : R^d -> R^d`` for ``l in [L]``
+where the highest level is the identity (``C^L(v) = v``) and, by convention,
+``C^0(v) = 0``.  The MLMC estimator (Eq. 6) telescopes over this family:
+
+    g~ = C^0(v) + (1/p_l) (C^l(v) - C^{l-1}(v)),   l ~ p
+
+and is conditionally unbiased (Lemma 3.2) for *any* non-zero level
+distribution p.  Everything in :mod:`repro.core` is written against the
+interface below so that the MLMC machinery is plug-and-play, exactly as the
+paper advertises.
+
+Design notes (JAX):
+
+* All compressor methods are pure functions of ``(v, l)`` and jit-safe with a
+  *traced* level ``l`` (levels select bit-planes / rank-ranges, never shapes).
+* Compressed values are represented **densely** (same shape as ``v``, zeros
+  outside the support).  The *wire format* (what would actually cross the
+  interconnect) is accounted separately in :mod:`repro.core.bits` and realised
+  by the compressed collectives in :mod:`repro.sharding.collectives`.
+* Compressors operate on flat ``float32`` vectors; pytree plumbing lives in
+  :mod:`repro.core.tree`.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PRNGKey = jax.Array
+
+
+class Compressor(abc.ABC):
+    """A (possibly biased) single-level compressor ``C : R^d -> R^d``.
+
+    Biased compressors satisfy Eq. (4): ``E||C(v) - v||^2 <= (1-alpha)||v||^2``
+    with ``0 < alpha <= 1``.  Unbiased compressors satisfy Eq. (3):
+    ``E[C(v)] = v`` and ``E||C(v) - v||^2 <= omega ||v||^2``.
+    """
+
+    #: True if ``E[C(v)] = v`` holds by construction.
+    unbiased: bool = False
+
+    @abc.abstractmethod
+    def compress(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        """Return the (densely represented) compressed vector."""
+
+    @abc.abstractmethod
+    def bits(self, d: int) -> float:
+        """Idealized wire cost in bits for one compressed length-``d`` vector."""
+
+    def __call__(self, v: Array, *, rng: PRNGKey | None = None) -> Array:
+        return self.compress(v, rng=rng)
+
+
+class MultilevelCompressor(abc.ABC):
+    """A family ``C^0 = 0, C^1, ..., C^L = id`` per Definition 3.1.
+
+    Subclasses must make ``compress``/``residual`` jit-safe in the level
+    argument ``l`` (an int32 scalar, possibly traced), because the MLMC
+    estimator samples ``l`` at every step.
+    """
+
+    @property
+    @abc.abstractmethod
+    def num_levels(self) -> int:
+        """L — number of levels (levels are 1-indexed; level L = identity)."""
+
+    @abc.abstractmethod
+    def compress(self, v: Array, l: Array | int) -> Array:
+        """``C^l(v)``, densely represented.  ``C^0 = 0`` must hold."""
+
+    @abc.abstractmethod
+    def residual(self, v: Array, l: Array | int) -> Array:
+        """``C^l(v) - C^{l-1}(v)`` — the MLMC payload.
+
+        Subclasses override with the *efficient* form where one exists
+        (single rank-range for (s-)Top-k, single bit-plane for fixed point);
+        the contract is checked against ``compress`` in the test-suite.
+        """
+
+    @abc.abstractmethod
+    def residual_norms(self, v: Array) -> Array:
+        """``(L,)`` vector of ``Delta_l = ||C^l(v) - C^{l-1}(v)||``.
+
+        This powers the adaptive level distribution of Lemma 3.4
+        (``p_l ∝ Delta_l``).  Implementations must compute all L norms in one
+        pass (never L separate compressions).
+        """
+
+    @abc.abstractmethod
+    def static_probs(self) -> Array:
+        """A fixed, input-independent level distribution ``(L,)``.
+
+        For bit-wise compressors this is the Lemma 3.3 / B.1 optimum
+        (``p_l ∝ 2^{-l}``); for rank-based compressors it is a sensible
+        default (the adaptive Alg. 3 path is preferred there).
+        """
+
+    @abc.abstractmethod
+    def residual_bits(self, d: int) -> float:
+        """Idealized wire cost in bits of ONE residual for a length-d vector
+        (excluding the level index / scale header; see :mod:`.bits`)."""
+
+    # --- provided ----------------------------------------------------------
+
+    def base(self, v: Array) -> Array:
+        """``C^0(v)`` — the deterministic part transmitted alongside every
+        residual.  Zero for most families; the floating-point compressor
+        transmits sign+exponent every step (App. B counts them in the 13
+        bits/entry), so there ``C^0(v) = sign(v) * 2^{E(v)}``.  The MLMC
+        estimator is ``base(v) + residual(v, l) / p_l`` (Eq. 6)."""
+        return jnp.zeros_like(v)
+
+    def identity_level(self) -> int:
+        return self.num_levels
+
+    def check_identity(self, v: Array) -> Array:
+        """``C^L(v)`` — used by tests to assert Def 3.1's top-level identity."""
+        return self.compress(v, self.num_levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLMCEstimate:
+    """Result of one MLMC compression of one tensor (see core/mlmc.py)."""
+
+    estimate: Array          # g~ — dense unbiased estimate (Eq. 6)
+    level: Array             # sampled l (int32 scalar)
+    prob: Array              # p_l of the sampled level (f32 scalar)
+    payload_bits: Array      # idealized bits that would cross the wire
+    residual: Array          # raw residual C^l - C^{l-1} (dense), pre-scaling
+
+
+LevelProbFn = Callable[[MultilevelCompressor, Array], Array]
+
+
+def categorical(rng: PRNGKey, probs: Array) -> Array:
+    """Sample an index from a (possibly unnormalized) probability vector."""
+    probs = probs / jnp.sum(probs)
+    return jax.random.categorical(rng, jnp.log(probs + 1e-30))

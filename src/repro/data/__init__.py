@@ -1,0 +1,10 @@
+from repro.data.synthetic import (
+    LMTask,
+    TeacherTask,
+    flatten_worker_batch,
+    lm_batches,
+    teacher_student,
+)
+
+__all__ = ["LMTask", "TeacherTask", "flatten_worker_batch", "lm_batches",
+           "teacher_student"]

@@ -1,0 +1,19 @@
+"""repro.kernels — Pallas TPU kernels for the compression hot-spots the
+paper optimizes (bit-plane extraction, segment energies, RTN quantize) plus
+the sort-free histogram/threshold Top-k selection (beyond-paper, TPU-native).
+
+Validated on CPU via interpret=True against the `ref.py` oracles."""
+
+from repro.kernels.ops import (
+    band_select,
+    bitplane_residual,
+    exp_histogram,
+    rtn_quantize,
+    segment_sumsq,
+    ternary_bitplane,
+    topk_threshold,
+)
+
+__all__ = ["band_select", "bitplane_residual", "exp_histogram",
+           "rtn_quantize", "segment_sumsq", "ternary_bitplane",
+           "topk_threshold"]

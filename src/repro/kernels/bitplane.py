@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fixed-point bit-plane extraction (§3.1 hot-spot).
+
+The MLMC fixed-point compressor touches every gradient element once per
+step: normalize by the (prefetched) scale, extract bit l, emit either the
+f32 residual plane or the {-1,0,+1} int8 wire tensor.  Pure VPU work — the
+kernel's job is to do it in ONE HBM pass with (8k, 128) VMEM tiles instead
+of the ~5 materialized intermediates of the naive jnp chain.
+
+Layout: inputs are (R, 128) f32 (the `ops` wrapper pads/reshapes 1D);
+scale/level ride in SMEM as (1, 1) scalars.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_BELOW_ONE = 1.0 - 2.0 ** -24
+BLOCK_ROWS = 256  # (256, 128) f32 tile = 128 KiB VMEM in + same out
+
+
+def _bitplane_kernel(scale_ref, level_ref, v_ref, out_ref, *, ternary: bool):
+    v = v_ref[...]
+    scale = scale_ref[0, 0]
+    level = level_ref[0, 0]
+    x = jnp.minimum(jnp.abs(v) / scale, _BELOW_ONE)
+    bit = jnp.mod(jnp.floor(jnp.ldexp(x, level)), 2.0)
+    tern = jnp.sign(v) * bit
+    if ternary:
+        out_ref[...] = tern.astype(jnp.int8)
+    else:
+        plane = tern * jnp.ldexp(jnp.ones((), v.dtype), -level) * scale
+        out_ref[...] = plane.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ternary", "interpret"))
+def bitplane_residual_2d(v: Array, scale: Array, level: Array, *,
+                         ternary: bool = False,
+                         interpret: bool = False) -> Array:
+    """v: (R, 128) f32; scale: () f32; level: () int32.
+
+    Returns the level-l bit-plane residual (f32) or its ternary int8 form."""
+    rows, lanes = v.shape
+    assert lanes == 128, "kernel layout is (rows, 128)"
+    br = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, br),)
+    out_dtype = jnp.int8 if ternary else v.dtype
+    return pl.pallas_call(
+        functools.partial(_bitplane_kernel, ternary=ternary),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),      # scale (SMEM-ish)
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),      # level
+            pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), out_dtype),
+        interpret=interpret,
+    )(scale.reshape(1, 1), level.reshape(1, 1), v)

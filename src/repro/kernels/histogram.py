@@ -1,0 +1,100 @@
+"""Pallas TPU kernels: sort-free approximate rank selection (beyond-paper).
+
+Exact (s-)Top-k needs a global argsort of the gradient — O(d log d) and
+sort-lowering-hostile on TPU.  Production systems select by THRESHOLD
+instead: build a histogram of |v| over power-of-two magnitude buckets
+(one pass), walk the cumulative counts to find the bucket containing rank
+k, then extract the band ``lo <= |v| < hi`` (second pass).  Both passes are
+streaming VPU work with (rows, 128) VMEM tiles.
+
+* `exp_histogram`  — accumulates bucket counts across the sequential TPU
+  grid (out_ref += partial counts; revisited output blocks are legal on
+  TPU's sequential grid and under interpret=True).
+* `band_select`    — masks the magnitude band, emitting the candidate
+  Top-k / MLMC-residual entries without any sort.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_ROWS = 256
+N_BUCKETS = 32
+
+
+def _hist_kernel(vmax_ref, v_ref, out_ref, *, n_buckets: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = v_ref[...]
+    av = jnp.abs(v)
+    vmax = jnp.maximum(vmax_ref[0, 0], 1e-30)
+    safe = jnp.maximum(av, 1e-30)
+    b = jnp.floor(jnp.log2(vmax / safe)).astype(jnp.int32)
+    b = jnp.where(av > 0, jnp.clip(b, 0, n_buckets - 1), n_buckets - 1)
+    # one-hot compare-and-sum: (NB,) partial counts for this tile
+    buckets = jnp.arange(n_buckets, dtype=jnp.int32)
+    counts = jnp.sum(
+        (b[None, :, :] == buckets[:, None, None]).astype(jnp.int32),
+        axis=(1, 2))
+    out_ref[...] += counts
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def exp_histogram(v: Array, vmax: Array, *, n_buckets: int = N_BUCKETS,
+                  interpret: bool = False) -> Array:
+    """v: (R, 128); vmax: () f32.  Returns (n_buckets,) int32 counts of
+    floor(log2(vmax/|v|)), zeros in the last bucket."""
+    rows, lanes = v.shape
+    assert lanes == 128
+    br = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, br),)
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, n_buckets=n_buckets),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_buckets,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_buckets,), jnp.int32),
+        interpret=interpret,
+    )(vmax.reshape(1, 1), v)
+
+
+def _band_kernel(lo_ref, hi_ref, v_ref, out_ref):
+    v = v_ref[...]
+    av = jnp.abs(v)
+    keep = (av >= lo_ref[0, 0]) & (av < hi_ref[0, 0])
+    out_ref[...] = jnp.where(keep, v, jnp.zeros((), v.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def band_select(v: Array, lo: Array, hi: Array, *,
+                interpret: bool = False) -> Array:
+    """v: (R, 128) -> entries with lo <= |v| < hi, zeros elsewhere."""
+    rows, lanes = v.shape
+    assert lanes == 128
+    br = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, br),)
+    return pl.pallas_call(
+        _band_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), v.dtype),
+        interpret=interpret,
+    )(lo.reshape(1, 1), hi.reshape(1, 1), v)

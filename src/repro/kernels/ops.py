@@ -1,0 +1,103 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles: 1D -> (rows, 128) padding/reshape, scalar coercion, and automatic
+``interpret=True`` on CPU (the container target; real TPUs compile the same
+kernels natively).  Every wrapper has a matching oracle in `ref.py` and an
+allclose sweep in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitplane as _bp
+from repro.kernels import histogram as _hist
+from repro.kernels import rtn as _rtn
+from repro.kernels import segnorm as _sn
+
+Array = jax.Array
+
+LANES = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(v: Array) -> tuple[Array, int]:
+    """Pad a flat vector to (rows, 128)."""
+    d = v.shape[0]
+    rows = max(1, -(-d // LANES))
+    pad = rows * LANES - d
+    return jnp.pad(v, (0, pad)).reshape(rows, LANES), d
+
+
+def bitplane_residual(v: Array, scale: Array, level: Array) -> Array:
+    """Fixed-point MLMC residual of a flat vector (kernel-backed)."""
+    v2d, d = _to_2d(v)
+    out = _bp.bitplane_residual_2d(v2d, jnp.asarray(scale, v.dtype),
+                                   jnp.asarray(level, jnp.int32),
+                                   ternary=False, interpret=_interpret())
+    return out.reshape(-1)[:d]
+
+
+def ternary_bitplane(v: Array, scale: Array, level: Array) -> Array:
+    """int8 {-1,0,+1} wire tensor for the int8-psum collective."""
+    v2d, d = _to_2d(v)
+    out = _bp.bitplane_residual_2d(v2d, jnp.asarray(scale, v.dtype),
+                                   jnp.asarray(level, jnp.int32),
+                                   ternary=True, interpret=_interpret())
+    return out.reshape(-1)[:d]
+
+
+def segment_sumsq(v2d: Array) -> Array:
+    """(L, s) segment energies (call on the sorted-magnitude reshape)."""
+    return _sn.segment_sumsq(v2d, interpret=_interpret())
+
+
+def rtn_quantize(v: Array, c: Array, level: Array) -> Array:
+    v2d, d = _to_2d(v)
+    out = _rtn.rtn_quantize_2d(v2d, jnp.asarray(c, v.dtype),
+                               jnp.asarray(level, jnp.int32),
+                               interpret=_interpret())
+    return out.reshape(-1)[:d]
+
+
+def exp_histogram(v: Array, n_buckets: int = 32) -> Array:
+    """Power-of-two magnitude histogram of a flat vector.  Padding zeros
+    land in the last bucket and are subtracted here; the explicit pad to a
+    whole number of (BLOCK_ROWS, 128) tiles keeps Pallas' out-of-bounds
+    block content out of the counts."""
+    d = v.shape[0]
+    tile = _hist.BLOCK_ROWS * LANES
+    total = max(tile, -(-d // tile) * tile)
+    v2d = jnp.pad(v, (0, total - d)).reshape(-1, LANES)
+    vmax = jnp.max(jnp.abs(v2d))
+    counts = _hist.exp_histogram(v2d, vmax, n_buckets=n_buckets,
+                                 interpret=_interpret())
+    return counts.at[n_buckets - 1].add(-(total - d))
+
+
+def band_select(v: Array, lo: Array, hi: Array) -> Array:
+    v2d, d = _to_2d(v)
+    out = _hist.band_select(v2d, jnp.asarray(lo, v.dtype),
+                            jnp.asarray(hi, v.dtype),
+                            interpret=_interpret())
+    return out.reshape(-1)[:d]
+
+
+def topk_threshold(v: Array, k: int, n_buckets: int = 32) -> tuple[Array, Array]:
+    """Sort-free approximate Top-k: histogram -> threshold bucket -> band.
+
+    Returns (lo, hi) |value| thresholds such that the band ``|v| >= lo``
+    contains at least k entries and at most k + (bucket population) — the
+    TPU-native replacement for exact rank selection."""
+    counts = exp_histogram(v, n_buckets)
+    cum = jnp.cumsum(counts)
+    # first bucket index where cumulative count reaches k
+    bidx = jnp.argmax(cum >= k)
+    vmax = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30)
+    lo = vmax * jnp.exp2(-(bidx + 1).astype(jnp.float32))
+    hi = jnp.asarray(jnp.inf, v.dtype)
+    return lo, hi

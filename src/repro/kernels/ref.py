@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+All references operate on the kernels' native 2D layout (rows, 128) —
+the `ops` wrappers handle 1D padding/reshaping symmetrically for both
+implementations, so tests compare kernel-vs-ref on identical layouts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_BELOW_ONE = 1.0 - 2.0 ** -24
+
+
+def bitplane_residual_ref(v: Array, scale: Array, level: Array) -> Array:
+    """Fixed-point level-l MLMC residual: sign(v) * b_l * 2^-l * scale."""
+    x = jnp.minimum(jnp.abs(v) / scale, _BELOW_ONE)
+    bit = jnp.mod(jnp.floor(jnp.ldexp(x, level)), 2.0)
+    return jnp.sign(v) * bit * jnp.ldexp(jnp.ones((), v.dtype), -level) * scale
+
+
+def ternary_bitplane_ref(v: Array, scale: Array, level: Array) -> Array:
+    """{-1,0,+1} int8 bit-plane (what rides the int8 psum collective)."""
+    x = jnp.minimum(jnp.abs(v) / scale, _BELOW_ONE)
+    bit = jnp.mod(jnp.floor(jnp.ldexp(x, level)), 2.0)
+    return (jnp.sign(v) * bit).astype(jnp.int8)
+
+
+def segment_sumsq_ref(v2d: Array) -> Array:
+    """Row-wise sum of squares: (L, s) -> (L,).  (s-Top-k segment energies —
+    Delta_l^2 of Lemma 3.4 after the sort.)"""
+    return jnp.sum(v2d.astype(jnp.float32) ** 2, axis=-1)
+
+
+def rtn_quantize_ref(v: Array, c: Array, level: Array) -> Array:
+    """RTN on a 2^l-point grid over [-c, c] (Eq. 125)."""
+    level = level.astype(jnp.float32)
+    cells = 2.0 ** level - 1.0
+    delta = 2.0 * c / jnp.maximum(cells, 1.0)
+    m = jnp.floor(cells / 2.0)
+    return delta * jnp.clip(jnp.round(v / jnp.maximum(delta, 1e-30)), -m, m)
+
+
+def exp_histogram_ref(v: Array, n_buckets: int = 32) -> Array:
+    """Histogram of |v| over power-of-two magnitude buckets relative to
+    max|v|: bucket = clamp(floor(log2(max|v| / |v|)), 0, NB-1).  Zero entries
+    land in the last bucket.  Used for sort-free approximate rank selection
+    (the TPU-native replacement for the global argsort)."""
+    vmax = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30)
+    av = jnp.abs(v)
+    safe = jnp.maximum(av, 1e-30)
+    b = jnp.floor(jnp.log2(vmax / safe)).astype(jnp.int32)
+    b = jnp.where(av > 0, jnp.clip(b, 0, n_buckets - 1), n_buckets - 1)
+    return jnp.zeros((n_buckets,), jnp.int32).at[b.reshape(-1)].add(1)
+
+
+def band_select_ref(v: Array, lo: Array, hi: Array) -> Array:
+    """Keep entries with lo <= |v| < hi, zero elsewhere (threshold-based
+    Top-k band extraction; pairs with exp_histogram for rank selection)."""
+    av = jnp.abs(v)
+    return jnp.where((av >= lo) & (av < hi), v, jnp.zeros((), v.dtype))

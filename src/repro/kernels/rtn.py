@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: RTN quantization at level l (App. G.2 hot-spot).
+
+Elementwise grid round/clip in one HBM pass; level and clip-scale are
+scalar-prefetched so one compiled kernel serves every level of the
+multilevel ladder (the MLMC estimator samples l per step)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_ROWS = 256
+
+
+def _rtn_kernel(c_ref, level_ref, v_ref, out_ref):
+    v = v_ref[...]
+    c = c_ref[0, 0]
+    level = level_ref[0, 0].astype(jnp.float32)
+    cells = 2.0 ** level - 1.0
+    delta = 2.0 * c / jnp.maximum(cells, 1.0)
+    m = jnp.floor(cells / 2.0)
+    q = jnp.clip(jnp.round(v / jnp.maximum(delta, 1e-30)), -m, m)
+    out_ref[...] = (delta * q).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rtn_quantize_2d(v: Array, c: Array, level: Array, *,
+                    interpret: bool = False) -> Array:
+    """v: (R, 128); c: () clip scale; level: () int32 -> quantized (R, 128)."""
+    rows, lanes = v.shape
+    assert lanes == 128
+    br = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, br),)
+    return pl.pallas_call(
+        _rtn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), v.dtype),
+        interpret=interpret,
+    )(c.reshape(1, 1), level.reshape(1, 1), v)

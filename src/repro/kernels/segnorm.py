@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: s-Top-k segment energies (Lemma 3.4 hot-spot).
+
+After sorting by magnitude, the adaptive level distribution needs
+``Delta_l^2 = sum of v^2 over each length-s segment`` for ALL L = d/s
+segments — a strided reduction over the full gradient.  The kernel streams
+(rows, s) VMEM tiles and emits one partial row-sum per segment, fused with
+the squaring (one HBM pass, no (d,) f32 squared temp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_SEGMENTS = 256
+
+
+def _segsum_kernel(v_ref, out_ref):
+    v = v_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.sum(v * v, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segment_sumsq(v2d: Array, *, interpret: bool = False) -> Array:
+    """v2d: (L, s) — sorted-magnitude values reshaped to segments.
+    Returns (L,) f32 segment energies."""
+    L, s = v2d.shape
+    bl = min(BLOCK_SEGMENTS, L)
+    grid = (pl.cdiv(L, bl),)
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bl, s), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bl,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.float32),
+        interpret=interpret,
+    )(v2d)

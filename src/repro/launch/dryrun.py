@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax (device count is now locked at 512) ---
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ASSIGNED, REGISTRY, SHAPES_BY_NAME  # noqa: E402
+from repro.launch import roofline as rl                       # noqa: E402
+from repro.launch.mesh import ctx_for_mesh, make_production_mesh  # noqa: E402
+from repro.launch.specs import input_specs                    # noqa: E402
+from repro.models import build_model                          # noqa: E402
+from repro.optim import sgd                                   # noqa: E402
+from repro.train import step as step_mod                      # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production mesh, print memory/cost analyses, and record the
+roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh single --method mlmc_topk --out benchmarks/results
+
+Roofline methodology: XLA's HloCostAnalysis counts a while-loop body ONCE,
+so the production (scanned-over-layers) module under-reports flops/bytes/
+collectives by ~the layer count.  We therefore compile THREE artifacts per
+combo: the full scanned module (the lowering/compile proof + memory
+analysis, since scan reuses body buffers) and 1-repeat / 2-repeat UNROLLED
+variants whose cost analyses are exact; the full-depth cost is the linear
+extrapolation  m(R) = m1 + (R-1) * (m2 - m1)  — still derived entirely from
+compiled artifacts.
+
+The FIRST two lines of this file force 512 host platform devices BEFORE any
+jax import — do not move them.
+"""
+
+import dataclasses  # noqa: E402
+
+RESULTS_DIR = pathlib.Path("benchmarks/results")
+
+
+def scale_repeats(cfg, r: int):
+    """Variant of cfg with r pattern repeats (and r encoder layers — for the
+    audio arch both stacks have the same true repeat count, 24)."""
+    changes: dict = {"num_layers": len(cfg.prefix) + r * len(cfg.pattern)}
+    if cfg.encoder is not None:
+        changes["encoder"] = dataclasses.replace(cfg.encoder, num_layers=r)
+    return dataclasses.replace(cfg, **changes)
+
+
+def _cost_of(compiled) -> dict:
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+    except Exception:
+        cost = {}
+    coll = rl.collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "hbm_bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll}
+
+
+def _extrapolate(c1: dict, c2: dict, repeats: int) -> dict:
+    def ext(a, b):
+        return a + (repeats - 1) * max(b - a, 0.0)
+
+    coll = {k: ext(c1["coll"][k], c2["coll"][k]) for k in c1["coll"]}
+    return {"flops": ext(c1["flops"], c2["flops"]),
+            "hbm_bytes": ext(c1["hbm_bytes"], c2["hbm_bytes"]),
+            "coll": coll}
+
+
+def combo_supported(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full-attention architecture without a sliding-window "
+                       "variant: 500k decode is skipped per DESIGN.md "
+                       "§Arch-applicability")
+    return True, ""
+
+
+def build_step(model, mesh, shape, method: str, k_fraction: float):
+    """Returns (step_fn, abstract_args) for the shape's kind."""
+    if shape.kind == "train":
+        opt = sgd(3e-3)
+        fn, _, _ = step_mod.make_train_step(model, mesh, opt, shape=shape,
+                                            method=method,
+                                            k_fraction=k_fraction)
+        args = input_specs(model, shape, mesh, "train", optimizer=opt)
+    elif shape.kind == "prefill":
+        fn, _, _ = step_mod.make_prefill_step(model, mesh, shape=shape)
+        args = input_specs(model, shape, mesh, "prefill")
+    else:
+        fn, _, _ = step_mod.make_decode_step(model, mesh, shape=shape)
+        args = input_specs(model, shape, mesh, "decode")
+    return fn, args
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, method: str,
+            k_fraction: float, out_dir: pathlib.Path,
+            save_hlo: bool = False) -> dict:
+    from repro import perf
+
+    cfg = REGISTRY[arch]
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "method": method, "opts": list(perf.active())}
+
+    ok, reason = combo_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = build_model(cfg)
+    t0 = time.time()
+    try:
+        # 1. the production (scanned) module: the lowering/compile proof +
+        #    memory analysis (scan reuses body buffers, so this is the
+        #    realistic footprint)
+        fn, args = build_step(model, mesh, shape, method, k_fraction)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes":
+                    getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_rec = {"error": str(e)}
+
+        # 2. exact per-layer costs from 1-/2-repeat unrolled variants
+        costs = []
+        for r in (1, 2):
+            vcfg = scale_repeats(cfg, r)
+            vmodel = build_model(vcfg)
+            vfn, vargs = build_step(vmodel, mesh, shape, method, k_fraction)
+            costs.append(_cost_of(vfn.lower(*vargs).compile()))
+        ext = _extrapolate(costs[0], costs[1], cfg.num_repeats)
+
+        roof = rl.Roofline(
+            flops=ext["flops"], hbm_bytes=ext["hbm_bytes"],
+            coll_bytes=float(sum(ext["coll"].values())),
+            coll_breakdown={k: int(v) for k, v in ext["coll"].items()},
+            model_flops=rl.model_flops_for(cfg, shape) / chips)
+        rec.update(status="ok", chips=chips, lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), memory=mem_rec,
+                   roofline=roof.as_dict(),
+                   cost_r1=costs[0], cost_r2=costs[1],
+                   cost_scanned=_cost_of(compiled))
+        if save_hlo:
+            (out_dir / f"hlo_{arch}_{shape_name}_{mesh_name}.txt").write_text(
+                compiled.as_text())
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (see repro.configs.REGISTRY)")
+    ap.add_argument("--shape", default="all",
+                    help="train_4k|prefill_32k|decode_32k|long_500k|all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--method", default="mlmc_topk",
+                    help="gradient aggregation: dense|mlmc_topk|mlmc_fixed")
+    ap.add_argument("--k-fraction", type=float, default=0.001)
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    archs = ([c.name for c in ASSIGNED] if args.arch == "all"
+             else [args.arch])
+    shapes = (list(SHAPES_BY_NAME) if args.shape == "all" else [args.shape])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                rec = run_one(arch, shape_name, multi_pod, args.method,
+                              args.k_fraction, out_dir,
+                              save_hlo=args.save_hlo)
+                tag = (f"{arch}:{shape_name}:"
+                       f"{'multi' if multi_pod else 'single'}:{args.method}")
+                from repro import perf
+
+                opt_tag = ("_" + "-".join(perf.active())
+                           if perf.active() else "")
+                fname = out_dir / (
+                    f"dryrun_{arch}_{shape_name}_"
+                    f"{'pod2x16x16' if multi_pod else 'pod16x16'}_"
+                    f"{args.method}{opt_tag}.json")
+                fname.write_text(json.dumps(rec, indent=1))
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"[OK]   {tag} compile={rec['compile_s']}s "
+                          f"flops/chip={r['flops']:.3e} "
+                          f"coll={r['coll_bytes']:.3e}B "
+                          f"bottleneck={r['bottleneck']}", flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"[SKIP] {tag}: {rec['reason'][:60]}", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run combinations failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.  The dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing
+jax; smoke tests and benchmarks see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.ctx import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary test meshes (e.g. (2, 4) on 8 forced host devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+def ctx_for_mesh(mesh) -> ShardCtx:
+    """Build the ShardCtx matching a mesh's axis names/sizes."""
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    return ShardCtx(
+        model_axis="model" if "model" in names else None,
+        data_axis="data" if "data" in names else None,
+        pod_axis="pod" if "pod" in names else None,
+        model_sizes=(sizes.get("model", 1),),
+        tp=sizes.get("model", 1),
+        dp=sizes.get("data", 1),
+        pp=sizes.get("pod", 1),
+    )
+
+
+def serve_ctx_for_mesh(mesh) -> ShardCtx:
+    """§Perf `serve_tp_all`: fuse the (data, model) axes into ONE 256-way
+    model group for serving.  Decode batches are small and weights are huge,
+    so data parallelism is the wrong axis assignment at serve time: fusing
+    gives 16x more weight/cache sharding and removes the per-step FSDP
+    all-gathers entirely (weights fit at 1/256 per chip)."""
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    axes = tuple(a for a in ("data", "model") if a in names)
+    m_sizes = tuple(sizes[a] for a in axes)
+    tp = 1
+    for s in m_sizes:
+        tp *= s
+    return ShardCtx(
+        model_axis=axes if len(axes) > 1 else (axes[0] if axes else None),
+        data_axis=None,
+        pod_axis="pod" if "pod" in names else None,
+        model_sizes=m_sizes,
+        tp=tp,
+        dp=1,
+        pp=sizes.get("pod", 1),
+    )

@@ -1,0 +1,151 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Per (arch × shape × mesh) we derive three per-chip time terms from the
+compiled SPMD module (whose HLO is already per-partition):
+
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e-class)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = collective_bytes / ICI_bw       (~50 GB/s/link)
+
+`cost_analysis()` supplies FLOPs and bytes-accessed; collective bytes are NOT
+in cost_analysis, so we parse the optimized HLO text and sum the OUTPUT
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (start-ops counted once, done-ops skipped).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) sanity-checks how much of
+the compiled compute is "useful" — catching remat recompute and dispatch
+overheads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# --- hardware constants (TPU v5e-class target) ------------------------------
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|f8e4m3fn|f8e5m2|f8e4m3|bf16|f16|f32|f64|s8|s16|"
+                       r"s32|s64|u8|u16|u32|u64|c64|c128)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes per collective kind (per-chip, SPMD module)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            token = f" {kind}("
+            start_token = f" {kind}-start("
+            if token in stripped or start_token in stripped:
+                # bytes of the op's OUTPUT: shapes appearing before the op name
+                cut = stripped.find(start_token if start_token in stripped
+                                    else token)
+                head = stripped[:cut]
+                for m in _SHAPE_RE.finditer(head):
+                    out[kind] += _shape_bytes(m.group(1), m.group(2))
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip bytes accessed
+    coll_bytes: float            # per-chip collective output bytes
+    coll_breakdown: dict[str, int]
+    model_flops: float           # 6·N(_active)·D, per-chip share
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_fraction": self.useful_fraction,
+        }
+
+
+def analyze(compiled, *, chips: int, model_flops_total: float) -> Roofline:
+    """Build the roofline record from a compiled executable."""
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older API returns [dict]
+            cost = cost[0]
+    except Exception:
+        cost = {}
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    coll = collective_bytes(text)
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops_total / chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N(_active)·D total FLOPs for the step's token volume.  Decode steps
+    process one token per sequence; train includes the 3x backward factor
+    (6ND already counts fwd+bwd for training; for inference use 2ND)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n * shape.global_batch

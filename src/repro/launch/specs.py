@@ -1,0 +1,122 @@
+"""`input_specs()` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation: the dry-run lowers
+`train_step` / `prefill_step` / `decode_step` against these.  The modality
+carve-out lives here: VLM vision tokens and audio frames arrive as
+precomputed embeddings of the right shape (the stub frontend).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import Model
+from repro.sharding.ctx import ShardCtx, unsharded
+
+PyTree = Any
+
+
+def _sds(shape, dtype, mesh=None, spec: P | None = None):
+    sharding = None
+    if mesh is not None and spec is not None:
+        sharding = NamedSharding(mesh, spec)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(tree: PyTree, specs: PyTree, mesh) -> PyTree:
+    def attach(x, s):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=NamedSharding(mesh, s))
+    return jax.tree.map(attach, tree, specs)
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, kind: str) -> dict:
+    """Abstract batch (GLOBAL shapes, no shardings)."""
+    b, s = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.activ_dtype)
+    out: dict = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["vision"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_vision_tokens, cfg.d_model), act)
+    if cfg.family == "audio":
+        out["source"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.max_source_len, cfg.encoder.d_model), act)
+    return out
+
+
+def abstract_caches(model: Model, shape: InputShape) -> PyTree:
+    """GLOBAL cache shapes (unsharded ctx => tp-independent ring sizes)."""
+    return jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len,
+                                  unsharded()))
+
+
+def rng_struct():
+    return jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+
+def input_specs(model: Model, shape: InputShape, mesh, kind: str,
+                optimizer=None) -> tuple[PyTree, ...]:
+    """Fully-sharded abstract inputs for one step function.
+
+    kind='train'   -> (params, opt_state, batch, rng)
+    kind='prefill' -> (params, batch)
+    kind='decode'  -> (params, token, pos, caches[, enc_out])
+    """
+    import dataclasses
+
+    from repro import perf
+    from repro.launch.mesh import ctx_for_mesh, serve_ctx_for_mesh
+    from repro.train import step as step_mod
+
+    serve = kind in ("prefill", "decode")
+    if serve and perf.enabled("serve_no_fsdp") and model.cfg.fsdp:
+        # serving stores weights WITHOUT data-axis sharding (see perf.py)
+        model = Model(dataclasses.replace(model.cfg, fsdp=False))
+    ctx = (serve_ctx_for_mesh(mesh)
+           if serve and perf.enabled("serve_tp_all") else ctx_for_mesh(mesh))
+    cfg = model.cfg
+    p_abs = model.abstract_params()
+    p_specs = step_mod.model_param_specs(model, ctx)
+    params = _with_shardings(p_abs, p_specs, mesh)
+    b_axes = step_mod.batch_axes(shape.global_batch, ctx)
+
+    if kind == "train":
+        assert optimizer is not None
+        o_abs = jax.eval_shape(optimizer.init, p_abs)
+        o_specs = optimizer.state_specs(p_specs)
+        opt = _with_shardings(o_abs, o_specs, mesh)
+        batch = _with_shardings(
+            batch_struct(cfg, shape, kind),
+            step_mod.make_batch_specs(cfg, shape, ctx, kind), mesh)
+        rng = _sds(rng_struct().shape, rng_struct().dtype, mesh, P())
+        return params, opt, batch, rng
+
+    if kind == "prefill":
+        batch = _with_shardings(
+            batch_struct(cfg, shape, kind),
+            step_mod.make_batch_specs(cfg, shape, ctx, kind), mesh)
+        return params, batch
+
+    if kind == "decode":
+        token = _sds((shape.global_batch,), jnp.int32, mesh, P(b_axes))
+        pos = _sds((), jnp.int32, mesh, P())
+        caches = _with_shardings(
+            abstract_caches(model, shape),
+            step_mod.cache_specs(cfg, ctx, shape.global_batch), mesh)
+        if cfg.is_encdec:
+            enc = _sds((shape.global_batch, cfg.encoder.max_source_len,
+                        cfg.encoder.d_model), jnp.dtype(cfg.activ_dtype),
+                       mesh, P(b_axes, None, None))
+            return params, token, pos, caches, enc
+        return params, token, pos, caches
+
+    raise ValueError(kind)

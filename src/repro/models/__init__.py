@@ -1,0 +1,5 @@
+"""repro.models — the 10-architecture model zoo (manual-TP, shard_map-ready)."""
+
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

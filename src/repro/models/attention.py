@@ -1,0 +1,541 @@
+"""Attention: GQA (full + sliding-window) and DeepSeek-style MLA, with
+flash-style streaming softmax for train/prefill and a **sequence-parallel
+decode path** (the KV cache is sharded over the ``model`` axis on the
+sequence dimension; partial (out, lse) pairs combine with one tiny psum).
+
+Sequence-parallel decode is the TPU adaptation that makes the ``long_500k``
+shape feasible: a 524288-token cache never lives on one chip, and the scheme
+is uniform in ``num_kv_heads`` (no head-divisibility constraint).
+
+Layout conventions:
+  q:    (B, S, Hl, hd)      Hl = local (model-sharded) query heads
+  k/v:  (B, S, KVl, hd)     KVl = kv heads this shard computes with
+  caches (decode): (B, S_loc, KV, hd) — FULL kv heads, LOCAL seq slice.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    col_linear,
+    dense_init,
+    rms_norm,
+    rms_norm_params,
+    row_linear,
+)
+from repro.sharding.ctx import ShardCtx
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def attn_params(cfg: ModelConfig, key, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),       # column (heads)
+        "wk": dense_init(ks[1], d, kv * hd, dtype),      # replicated or column
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),       # row (+psum)
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_params(hd, dtype)
+        p["k_norm"] = rms_norm_params(hd, dtype)
+    return p
+
+
+def mla_params(cfg: ModelConfig, key, dtype) -> dict:
+    m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype),          # repl.
+        "q_norm": rms_norm_params(m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], m.q_lora_rank,
+                           h * (m.nope_head_dim + m.rope_head_dim), dtype),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank + m.rope_head_dim, dtype),
+        "kv_norm": rms_norm_params(m.kv_lora_rank, dtype),
+        "w_uk": dense_init(ks[3], m.kv_lora_rank, h * m.nope_head_dim, dtype),
+        "w_uv": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], h * m.v_head_dim, d, dtype),         # row
+    }
+
+
+# ---------------------------------------------------------------------------
+# flash-style full attention (train / prefill, causal)
+# ---------------------------------------------------------------------------
+
+
+def _softcap(s: Array, cap: float) -> Array:
+    return cap * jnp.tanh(s / cap) if cap > 0.0 else s
+
+
+def flash_attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array,
+                    *, window: int = 0, softcap: float = 0.0,
+                    block: int = 1024) -> Array:
+    """Streaming-softmax causal attention over KV blocks (O(S·block) memory).
+
+    q: (B,Sq,Hl,hd); k/v: (B,Skv,KVl,hd) with Hl % KVl == 0.
+    ``window > 0`` additionally masks kv older than ``window`` positions."""
+    b, sq, hl, hd = q.shape
+    skv, kvl = k.shape[1], k.shape[2]
+    g = hl // kvl
+    scale = hd ** -0.5
+    qr = (q * scale).reshape(b, sq, kvl, g, hd).astype(jnp.float32)
+
+    block = min(block, skv)
+    nb = math.ceil(skv / block)
+    pad = nb * block - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(b, nb, block, kvl, hd).swapaxes(0, 1)
+    vb = v.reshape(b, nb, block, kvl, hd).swapaxes(0, 1)
+    pb = kv_pos.reshape(nb, block)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kj, vj, pj = blk
+        s = jnp.einsum("bqkgd,bjkd->bqkgj", qr, kj.astype(jnp.float32))
+        s = _softcap(s, softcap)
+        ok = pj[None, None, None, None, :] <= q_pos[None, :, None, None, None]
+        if window:
+            ok &= (q_pos[None, :, None, None, None]
+                   - pj[None, None, None, None, :]) < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgj,bjkd->bqkgd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvl, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvl, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kvl, g, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, hl, hd).astype(q.dtype)
+
+
+def local_attention(q: Array, k: Array, v: Array, positions: Array,
+                    window: int, softcap: float = 0.0) -> Array:
+    """Chunked sliding-window attention: O(S · 2W) FLOPs instead of O(S²).
+
+    Each length-W chunk attends to itself + the previous chunk under the
+    causal ∧ (q_pos - kv_pos < W) mask — exactly SWA when chunk == window."""
+    b, s, hl, hd = q.shape
+    kvl = k.shape[2]
+    g = hl // kvl
+    w = min(window, s)
+    nc = math.ceil(s / w)
+    pad = nc * w - s
+
+    def chunk(x, fill=0.0):
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2),
+                    constant_values=fill)
+        return x.reshape((b, nc, w) + x.shape[2:])
+
+    big = jnp.iinfo(jnp.int32).max
+    qp = jnp.pad(positions, (0, pad), constant_values=big - 1).reshape(nc, w)
+    kp = jnp.pad(positions, (0, pad), constant_values=big).reshape(nc, w)
+    qc = chunk(q).reshape(b, nc, w, kvl, g, hd)
+    kc, vc = chunk(k), chunk(v)
+
+    def prev(x, fill=0.0):
+        shifted = jnp.roll(x, 1, axis=1)
+        return shifted.at[:, 0].set(fill) if x.ndim > 2 else shifted
+
+    kcat = jnp.concatenate([prev(kc), kc], axis=2)        # (b, nc, 2w, kvl, hd)
+    vcat = jnp.concatenate([prev(vc), vc], axis=2)
+    kpcat = jnp.concatenate(
+        [jnp.roll(kp, 1, axis=0).at[0].set(big), kp], axis=1)  # (nc, 2w)
+
+    scale = hd ** -0.5
+    s_ = jnp.einsum("bcqkgd,bcjkd->bcqkgj",
+                    (qc * scale).astype(jnp.float32), kcat.astype(jnp.float32))
+    s_ = _softcap(s_, softcap)
+    dq = qp[None, :, :, None, None, None]
+    dk = kpcat[None, :, None, None, None, :]
+    ok = (dk <= dq) & ((dq - dk) < window)
+    s_ = jnp.where(ok, s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    p = jnp.where(jnp.any(ok, axis=-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bcqkgj,bcjkd->bcqkgd", p, vcat.astype(jnp.float32))
+    out = out.reshape(b, nc * w, hl, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel decode
+# ---------------------------------------------------------------------------
+
+
+class AttnCache(NamedTuple):
+    """Per-layer decode cache, sequence-sharded over ``model``.
+
+    k/v: (B, S_loc, KV, hd); pos: (S_loc,) global position stored in each
+    slot (-1 = empty).  For SWA layers S_loc = window/tp (ring buffer)."""
+    k: Array
+    v: Array
+    pos: Array
+
+
+def init_attn_cache(batch: int, seq: int, kv_heads: int, hd: int,
+                    ctx: ShardCtx, dtype) -> AttnCache:
+    s_loc = seq // ctx.tp
+    return AttnCache(
+        k=jnp.zeros((batch, s_loc, kv_heads, hd), dtype),
+        v=jnp.zeros((batch, s_loc, kv_heads, hd), dtype),
+        pos=jnp.full((s_loc,), -1, jnp.int32),
+    )
+
+
+def _ring_sources(seq_len: int, s_loc: int, ctx: ShardCtx):
+    """For each LOCAL cache slot, the prefill position that lands in it.
+
+    The cache is a ring of period P = s_loc * tp over global positions;
+    prefill positions are 0..seq_len-1, so the LAST position hitting global
+    slot g is ``g + P * floor((seq_len - 1 - g) / P)`` (negative ⇒ empty).
+    A gather formulation avoids duplicate-index scatter hazards."""
+    start, _ = ctx.seq_shard_bounds(s_loc * ctx.tp)
+    period = s_loc * ctx.tp
+    gslots = start + jnp.arange(s_loc)
+    reps = jnp.floor_divide(seq_len - 1 - gslots, period)
+    src = gslots + period * reps
+    valid = reps >= 0
+    return jnp.clip(src, 0, seq_len - 1), valid, src
+
+
+def cache_write_prefill(cache: AttnCache, k: Array, v: Array,
+                        positions: Array, ctx: ShardCtx) -> AttnCache:
+    """Store a full prefill's kv: this shard keeps its sequence slice
+    (ring-mapped, so window caches smaller than the prefill also work)."""
+    del positions  # prefill positions are 0..S-1 by construction
+    s_loc = cache.k.shape[1]
+    idx, valid, src = _ring_sources(k.shape[1], s_loc, ctx)
+    k_new = jnp.where(valid[None, :, None, None], k[:, idx], cache.k)
+    v_new = jnp.where(valid[None, :, None, None], v[:, idx], cache.v)
+    pos_new = jnp.where(valid, src, cache.pos)
+    return AttnCache(k_new.astype(cache.k.dtype),
+                     v_new.astype(cache.v.dtype), pos_new.astype(jnp.int32))
+
+
+def cache_write_token(cache: AttnCache, k1: Array, v1: Array,
+                      pos: Array, ctx: ShardCtx) -> AttnCache:
+    """Write one token's kv (B, KV, hd) at global position ``pos``."""
+    s_loc = cache.k.shape[1]
+    start, _ = ctx.seq_shard_bounds(s_loc * ctx.tp)
+    slot = jnp.mod(pos, s_loc * ctx.tp)
+    mine = (slot >= start) & (slot < start + s_loc)
+    idx = jnp.clip(slot - start, 0, s_loc - 1)
+    k_new = jax.lax.dynamic_update_slice(
+        cache.k, k1[:, None].astype(cache.k.dtype), (0, idx, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(
+        cache.v, v1[:, None].astype(cache.v.dtype), (0, idx, 0, 0))
+    pos_new = jax.lax.dynamic_update_slice(
+        cache.pos, pos[None].astype(jnp.int32), (idx,))
+    return AttnCache(
+        k=jnp.where(mine, k_new, cache.k),
+        v=jnp.where(mine, v_new, cache.v),
+        pos=jnp.where(mine, pos_new, cache.pos),
+    )
+
+
+def decode_attention(q: Array, cache: AttnCache, pos: Array, ctx: ShardCtx,
+                     *, num_heads: int, window: int = 0,
+                     softcap: float = 0.0) -> Array:
+    """One-token attention over a sequence-sharded cache.
+
+    q: (B, Hl, hd) — LOCAL query heads (Hl == num_heads when the head count
+    doesn't divide tp and attention params are replicated); cache holds FULL
+    kv heads for this shard's sequence slice.  Exact flash combine: each
+    shard computes partial (max, sumexp, out); one psum/pmax pair merges."""
+    from repro import perf
+
+    b, hl, hd = q.shape
+    kv = cache.k.shape[2]
+    group = num_heads // kv
+    ok = (cache.pos >= 0) & (cache.pos <= pos)
+    if window:
+        ok &= (pos - cache.pos) < window
+    qf = q.astype(jnp.float32) * hd ** -0.5
+
+    if perf.enabled("grouped_decode") and hl == num_heads and group > 1:
+        # §Perf `grouped_decode`: keep the GQA group structure in the einsum
+        # instead of expanding the cache to per-query-head — the cache is
+        # read ONCE (B,S,KV,hd) rather than group-times.
+        qr = qf.reshape(b, kv, group, hd)
+        kf = cache.k.astype(jnp.float32)
+        s = jnp.einsum("bkgd,bskd->bkgs", qr, kf)
+        s = _softcap(s, softcap)
+        s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+        m_glob = ctx.pmax_model(jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_glob[..., None])
+        p = jnp.where(ok[None, None, None, :], p, 0.0)
+        l_glob = ctx.psum_model(jnp.sum(p, axis=-1))
+        o = ctx.psum_model(jnp.einsum(
+            "bkgs,bskd->bkgd", p, cache.v.astype(jnp.float32)))
+        o = o / jnp.maximum(l_glob, 1e-30)[..., None]
+        return o.reshape(b, hl, hd).astype(q.dtype)
+
+    # baseline: map each local q head to its kv group and expand
+    head_offset = ctx.model_index() * hl if hl < num_heads else 0
+    my_heads = head_offset + jnp.arange(hl)
+    kv_idx = my_heads // group                                    # (hl,)
+    k_sel = jnp.take(cache.k, kv_idx, axis=2).astype(jnp.float32)  # (B,S,hl,hd)
+    v_sel = jnp.take(cache.v, kv_idx, axis=2).astype(jnp.float32)
+
+    s = jnp.einsum("bhd,bshd->bhs", qf, k_sel)
+    s = _softcap(s, softcap)
+    s = jnp.where(ok[None, None, :], s, NEG_INF)
+
+    m_loc = jnp.max(s, axis=-1)                                   # (B, hl)
+    m_glob = ctx.pmax_model(m_loc)
+    p = jnp.exp(s - m_glob[..., None])
+    p = jnp.where(ok[None, None, :], p, 0.0)
+    l_glob = ctx.psum_model(jnp.sum(p, axis=-1))
+    o = ctx.psum_model(jnp.einsum("bhs,bshd->bhd", p, v_sel))
+    return (o / jnp.maximum(l_glob, 1e-30)[..., None]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer front-ends (sequence / single-token)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: Array, positions: Array):
+    """Shared q/k/v projection + qk-norm + rope.  x: (B, S, d)."""
+    hd = cfg.hd
+    q = col_linear(x, p["wq"], p.get("bq"))
+    k = col_linear(x, p["wk"], p.get("bk"))     # wk replicated ⇒ full kv heads
+    v = col_linear(x, p["wv"], p.get("bv"))
+    b, s, _ = x.shape
+    q = q.reshape(b, s, -1, hd)
+    k = k.reshape(b, s, -1, hd)
+    v = v.reshape(b, s, -1, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions[None, :], cfg.rope_theta, cfg.rope_style)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta, cfg.rope_style)
+    return q, k, v
+
+
+def _row_out(out_flat: Array, wo: Array, ctx: ShardCtx,
+             sharded: bool) -> Array:
+    """Output projection: row-parallel (+psum) when the heads are sharded,
+    plain replicated matmul when the head count didn't divide tp and the
+    whole attention runs replicated (e.g. recurrentgemma's 10 heads)."""
+    if sharded:
+        return row_linear(out_flat, wo, ctx)
+    return jnp.einsum("...i,io->...o", out_flat, wo)
+
+
+def gqa_sequence(p: dict, cfg: ModelConfig, x: Array, positions: Array,
+                 ctx: ShardCtx, *, is_swa: bool,
+                 cache: AttnCache | None = None):
+    """Full-sequence GQA (train or prefill).  Returns (out, new_cache)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    kv_total = cfg.num_kv_heads
+    kvl = k.shape[2]
+    hl = q.shape[2]
+    sharded = hl < cfg.num_heads           # heads divide tp => params sliced
+    # compute-side GQA: wk is replicated, so every shard computed ALL kv
+    # heads.  Select one kv head per LOCAL q head (g = 1 layout) so grouping
+    # stays exact for any (heads, kv_heads, tp) combination.
+    if kvl == kv_total and ctx.tp > 1:
+        group = cfg.num_heads // kv_total
+        offset = ctx.model_index() * hl if sharded else 0
+        my_heads = offset + jnp.arange(hl)
+        kv_idx = my_heads // group
+        k_use = jnp.take(k, kv_idx, axis=2)
+        v_use = jnp.take(v, kv_idx, axis=2)
+    else:
+        k_use, v_use = k, v
+    if is_swa:
+        out = local_attention(q, k_use, v_use, positions, cfg.swa_window,
+                              cfg.softcap)
+    else:
+        out = flash_attention(q, k_use, v_use, positions, positions,
+                              softcap=cfg.softcap)
+    b, s = out.shape[0], out.shape[1]
+    y = _row_out(out.reshape(b, s, -1), p["wo"], ctx, sharded)
+    if cache is not None:
+        cache = cache_write_prefill(cache, k, v, positions, ctx)
+    return y, cache
+
+
+def gqa_decode(p: dict, cfg: ModelConfig, x1: Array, pos: Array,
+               cache: AttnCache, ctx: ShardCtx, *, is_swa: bool):
+    """One-token GQA decode.  x1: (B, d).  Returns (out (B, d), new_cache).
+
+    The decode parallelism axis is the SEQUENCE (the cache is seq-sharded
+    over ``model``), so every shard must attend with ALL query heads over
+    its slice: the head-sharded q is all-gathered first (tiny: B x H x hd),
+    the lse-combine yields the replicated full-head output, and each shard
+    slices its own heads back out for the row-parallel wo psum."""
+    q, k, v = _project_qkv(p, cfg, x1[:, None, :], pos[None])
+    q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]          # (B, Hl/KV, hd)
+    hl = q1.shape[1]
+    sharded = hl < cfg.num_heads
+    cache = cache_write_token(cache, k1, v1, pos, ctx)
+    window = cfg.swa_window if is_swa else 0
+    if sharded:
+        q_full = ctx.all_gather_model(q1, axis=1)   # (B, H, hd)
+    else:
+        q_full = q1
+    out = decode_attention(q_full, cache, pos, ctx, num_heads=cfg.num_heads,
+                           window=window, softcap=cfg.softcap)
+    if sharded:
+        out = jax.lax.dynamic_slice_in_dim(
+            out, ctx.model_index() * hl, hl, axis=1)
+    # decode_attention already psums over `model` (seq combine); the wo
+    # projection psums again ONLY when the heads are genuinely sharded.
+    y = _row_out(out.reshape(out.shape[0], -1), p["wo"], ctx, sharded)
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+class MLACache(NamedTuple):
+    """Latent cache: c_kv (B, S_loc, kv_lora) + k_rope (B, S_loc, rope_hd),
+    sequence-sharded like AttnCache."""
+    ckv: Array
+    krope: Array
+    pos: Array
+
+
+def init_mla_cache(batch: int, seq: int, cfg: ModelConfig, ctx: ShardCtx,
+                   dtype) -> MLACache:
+    m = cfg.mla
+    s_loc = seq // ctx.tp
+    return MLACache(
+        ckv=jnp.zeros((batch, s_loc, m.kv_lora_rank), dtype),
+        krope=jnp.zeros((batch, s_loc, m.rope_head_dim), dtype),
+        pos=jnp.full((s_loc,), -1, jnp.int32),
+    )
+
+
+def _mla_qkv_latent(p: dict, cfg: ModelConfig, x: Array, positions: Array):
+    """Shared down-projections.  Returns (q_nope, q_rope, ckv, krope)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    cq = rms_norm(col_linear(x, p["w_dq"]), p["q_norm"])     # replicated
+    q = col_linear(cq, p["w_uq"]).reshape(b, s, -1, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions[None, :], cfg.rope_theta, "full")
+
+    dkv = col_linear(x, p["w_dkv"])                           # replicated
+    ckv = rms_norm(dkv[..., : m.kv_lora_rank], p["kv_norm"])
+    krope = dkv[..., m.kv_lora_rank:]
+    krope = apply_rope(krope[:, :, None, :], positions[None, :],
+                       cfg.rope_theta, "full")[:, :, 0, :]
+    return q_nope, q_rope, ckv, krope
+
+
+def mla_sequence(p: dict, cfg: ModelConfig, x: Array, positions: Array,
+                 ctx: ShardCtx, cache: MLACache | None = None):
+    """Full-sequence MLA (unabsorbed): per-shard heads expand the latent."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope, ckv, krope = _mla_qkv_latent(p, cfg, x, positions)
+    hl = q_nope.shape[2]
+    k_nope = col_linear(ckv, p["w_uk"]).reshape(b, s, hl, m.nope_head_dim)
+    v = col_linear(ckv, p["w_uv"]).reshape(b, s, hl, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], (b, s, hl, m.rope_head_dim))],
+        axis=-1)
+    # v head dim differs from qk head dim -> pad v for the shared flash core
+    pad = q.shape[-1] - m.v_head_dim
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = flash_attention(q, k, v_p, positions, positions)[..., : m.v_head_dim]
+    y = row_linear(out.reshape(b, s, -1), p["wo"], ctx)
+    if cache is not None:
+        s_loc = cache.ckv.shape[1]
+        idx, valid, src = _ring_sources(s, s_loc, ctx)
+        cache = MLACache(
+            ckv=jnp.where(valid[None, :, None], ckv[:, idx],
+                          cache.ckv).astype(cache.ckv.dtype),
+            krope=jnp.where(valid[None, :, None], krope[:, idx],
+                            cache.krope).astype(cache.krope.dtype),
+            pos=jnp.where(valid, src, cache.pos).astype(jnp.int32),
+        )
+    return y, cache
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x1: Array, pos: Array,
+               cache: MLACache, ctx: ShardCtx):
+    """Absorbed single-token MLA over the sequence-sharded latent cache."""
+    m = cfg.mla
+    b = x1.shape[0]
+    q_nope, q_rope, ckv, krope = _mla_qkv_latent(
+        p, cfg, x1[:, None, :], pos[None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]       # (B, hl, nope/rope)
+    ckv1, krope1 = ckv[:, 0], krope[:, 0]
+
+    # write latent into the seq-sharded cache
+    tmp = AttnCache(k=cache.ckv[:, :, None, :], v=cache.krope[:, :, None, :],
+                    pos=cache.pos)
+    tmp = cache_write_token(tmp, ckv1[:, None, :], krope1[:, None, :], pos, ctx)
+    cache = MLACache(ckv=tmp.k[:, :, 0, :], krope=tmp.v[:, :, 0, :], pos=tmp.pos)
+
+    # absorbed q: per-head, computed with the LOCAL head slice of w_uk, then
+    # all-gathered to FULL heads — the decode parallelism axis is the
+    # sequence (latent cache is seq-sharded), so every shard must score all
+    # heads over its slice (same structure as gqa_decode).
+    hl = q_nope.shape[1]
+    sharded = hl < cfg.num_heads
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, hl, m.nope_head_dim)
+    q_abs = jnp.einsum("bhn,chn->bhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))       # (B, hl, kv_lora)
+    if sharded:
+        q_abs = ctx.all_gather_model(q_abs, axis=1)    # (B, H, kv_lora)
+        q_rope = ctx.all_gather_model(q_rope, axis=1)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bhc,bsc->bhs", q_abs,
+                       cache.ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                        cache.krope.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    ok = (cache.pos >= 0) & (cache.pos <= pos)
+    s = jnp.where(ok[None, None, :], s, NEG_INF)
+
+    m_loc = jnp.max(s, axis=-1)
+    m_glob = ctx.pmax_model(m_loc)
+    pw = jnp.exp(s - m_glob[..., None])
+    pw = jnp.where(ok[None, None, :], pw, 0.0)
+    l_glob = ctx.psum_model(jnp.sum(pw, axis=-1))
+    ctx_lat = ctx.psum_model(
+        jnp.einsum("bhs,bsc->bhc", pw, cache.ckv.astype(jnp.float32)))
+    ctx_lat = ctx_lat / jnp.maximum(l_glob, 1e-30)[..., None]
+    if sharded:
+        ctx_lat = jax.lax.dynamic_slice_in_dim(
+            ctx_lat, ctx.model_index() * hl, hl, axis=1)
+
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, hl, m.v_head_dim)
+    out = jnp.einsum("bhc,chv->bhv", ctx_lat, w_uv.astype(jnp.float32))
+    y = _row_out(out.reshape(b, -1).astype(x1.dtype), p["wo"], ctx,
+                 sharded or ctx.model_axis is None)
+    return y, cache

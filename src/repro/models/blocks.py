@@ -1,0 +1,201 @@
+"""Layer assembly: one decoder layer = norm → mixer → residual
+(→ norm → mlp → residual), with the mixer/mlp kinds chosen per LayerSpec.
+
+The repeated pattern is executed under `lax.scan` over stacked per-repeat
+params (+ per-repeat caches in serve mode), keeping HLO size O(pattern).
+`jax.checkpoint` wraps the scan body in training (remat policy is a §Perf
+knob).  Enc-dec decoder layers additionally carry cross-attention.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp, mlp_params, rms_norm, rms_norm_params
+from repro.sharding.ctx import ShardCtx
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def layer_params(cfg: ModelConfig, spec: LayerSpec, key, dtype,
+                 cross_attn: bool = False) -> dict:
+    d = cfg.d_model
+    k_mix, k_mlp, k_cross = jax.random.split(key, 3)
+    p: dict = {"norm1": rms_norm_params(d, dtype)}
+    if spec.mixer in ("attn", "swa"):
+        p["mixer"] = attn.attn_params(cfg, k_mix, dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = attn.mla_params(cfg, k_mix, dtype)
+    elif spec.mixer == "ssd":
+        p["mixer"] = ssm_mod.ssd_params(cfg, k_mix, dtype)
+    elif spec.mixer == "rglru":
+        p["mixer"] = rglru_mod.rglru_params(cfg, k_mix, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cross_attn:
+        p["norm_cross"] = rms_norm_params(d, dtype)
+        p["cross"] = attn.attn_params(cfg, k_cross, dtype)
+    if cfg.d_ff > 0 or spec.mlp == "moe":
+        p["norm2"] = rms_norm_params(d, dtype)
+        if spec.mlp == "moe":
+            p["mlp"] = moe_mod.moe_params(cfg, k_mlp, dtype)
+        else:
+            p["mlp"] = mlp_params(k_mlp, d, cfg.d_ff, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     seq_len: int, ctx: ShardCtx, dtype) -> PyTree:
+    if spec.mixer == "attn":
+        return attn.init_attn_cache(batch, seq_len, cfg.num_kv_heads, cfg.hd,
+                                    ctx, dtype)
+    if spec.mixer == "swa":
+        w = swa_ring_size(cfg.swa_window, seq_len)
+        assert w % ctx.tp == 0, (w, ctx.tp)
+        return attn.init_attn_cache(batch, w, cfg.num_kv_heads, cfg.hd,
+                                    ctx, dtype)
+    if spec.mixer == "mla":
+        return attn.init_mla_cache(batch, seq_len, cfg, ctx, dtype)
+    if spec.mixer == "ssd":
+        return ssm_mod.init_ssd_cache(batch, cfg, ctx, dtype)
+    if spec.mixer == "rglru":
+        return rglru_mod.init_rglru_cache(batch, cfg, ctx, dtype)
+    raise ValueError(spec.mixer)
+
+
+def swa_ring_size(window: int, seq_len: int) -> int:
+    """SWA ring-cache size: >= window + 1 slots (the newest token must never
+    evict a still-visible one), rounded to a multiple of 256 so the ring
+    shards evenly over any tp <= 256, capped at the full sequence.
+
+    tp-INDEPENDENT by construction: global cache shapes must agree between
+    the sharded runtime and the unsharded abstract-shape path."""
+    ring = ((window // 256) + 1) * 256
+    return min(ring, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def layer_seq(cfg: ModelConfig, spec: LayerSpec, p: dict, x: Array,
+              positions: Array, ctx: ShardCtx, cache: PyTree | None,
+              enc_out: Array | None = None):
+    """Full-sequence layer (train when cache is None, else prefill).
+
+    Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"])
+    if spec.mixer in ("attn", "swa"):
+        y, cache = attn.gqa_sequence(p["mixer"], cfg, h, positions, ctx,
+                                     is_swa=spec.mixer == "swa", cache=cache)
+    elif spec.mixer == "mla":
+        y, cache = attn.mla_sequence(p["mixer"], cfg, h, positions, ctx,
+                                     cache=cache)
+    elif spec.mixer == "ssd":
+        y, cache = ssm_mod.ssd_sequence(p["mixer"], cfg, h, ctx,
+                                        want_cache=cache is not None)
+    elif spec.mixer == "rglru":
+        y, cache = rglru_mod.rglru_sequence(p["mixer"], cfg, h, ctx,
+                                            want_cache=cache is not None)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y.astype(x.dtype)
+
+    if "cross" in p and enc_out is not None:
+        h = rms_norm(x, p["norm_cross"])
+        y = _cross_attention_seq(p["cross"], cfg, h, enc_out, ctx)
+        x = x + y.astype(x.dtype)
+
+    if "mlp" in p:
+        h = rms_norm(x, p["norm2"])
+        if spec.mlp == "moe":
+            y, aux = moe_mod.moe_mlp(p["mlp"], cfg, h, ctx)
+        else:
+            y = mlp(p["mlp"], h, ctx)
+        x = x + y.astype(x.dtype)
+    return x, cache, aux
+
+
+def layer_decode(cfg: ModelConfig, spec: LayerSpec, p: dict, x1: Array,
+                 pos: Array, cache: PyTree, ctx: ShardCtx,
+                 enc_out: Array | None = None):
+    """Single-token layer step.  x1: (B, d).  Returns (x1, new_cache)."""
+    h = rms_norm(x1, p["norm1"])
+    if spec.mixer in ("attn", "swa"):
+        y, cache = attn.gqa_decode(p["mixer"], cfg, h, pos, cache, ctx,
+                                   is_swa=spec.mixer == "swa")
+    elif spec.mixer == "mla":
+        y, cache = attn.mla_decode(p["mixer"], cfg, h, pos, cache, ctx)
+    elif spec.mixer == "ssd":
+        y, cache = ssm_mod.ssd_decode(p["mixer"], cfg, h, cache, ctx)
+    elif spec.mixer == "rglru":
+        y, cache = rglru_mod.rglru_decode(p["mixer"], cfg, h, cache, ctx)
+    else:
+        raise ValueError(spec.mixer)
+    x1 = x1 + y.astype(x1.dtype)
+
+    if "cross" in p and enc_out is not None:
+        h = rms_norm(x1, p["norm_cross"])
+        y = _cross_attention_seq(p["cross"], cfg, h[:, None, :], enc_out,
+                                 ctx)[:, 0, :]
+        x1 = x1 + y.astype(x1.dtype)
+
+    if "mlp" in p:
+        h = rms_norm(x1, p["norm2"])
+        if spec.mlp == "moe":
+            y, _ = moe_mod.moe_mlp(p["mlp"], cfg, h[:, None, :], ctx)
+            y = y[:, 0, :]
+        else:
+            y = mlp(p["mlp"], h, ctx)
+        x1 = x1 + y.astype(x1.dtype)
+    return x1, cache
+
+
+def _cross_attention_seq(p: dict, cfg: ModelConfig, x: Array, enc_out: Array,
+                         ctx: ShardCtx) -> Array:
+    """Bidirectional cross-attention: q from decoder x, kv from encoder
+    output (replicated; source lengths are short).  No rope."""
+    from repro.models.layers import col_linear, row_linear
+
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    hd = cfg.hd
+    q = col_linear(x, p["wq"], p.get("bq")).reshape(b, s, -1, hd)
+    k = col_linear(enc_out, p["wk"], p.get("bk")).reshape(b, t, -1, hd)
+    v = col_linear(enc_out, p["wv"], p.get("bv")).reshape(b, t, -1, hd)
+    hl = q.shape[2]
+    sharded = hl < cfg.num_heads
+    if k.shape[2] == cfg.num_kv_heads and ctx.tp > 1:
+        group = cfg.num_heads // cfg.num_kv_heads
+        offset = ctx.model_index() * hl if sharded else 0
+        my = offset + jnp.arange(hl)
+        k = jnp.take(k, my // group, axis=2)
+        v = jnp.take(v, my // group, axis=2)
+    # all kv visible: q_pos = T for every query, kv_pos = 0..T-1
+    qpos = jnp.full((s,), t, jnp.int32)
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    out = attn.flash_attention(q, k, v, qpos, kpos)
+    if sharded:
+        return row_linear(out.reshape(b, s, -1), p["wo"], ctx)
+    return jnp.einsum("...i,io->...o", out.reshape(b, s, -1), p["wo"])

@@ -1,0 +1,245 @@
+"""Shared neural-net layers: norms, rotary embeddings, init helpers, and the
+tensor-parallel linear/embedding primitives used by every architecture.
+
+Tensor-parallel convention (Megatron-style, manual inside one shard_map):
+
+* column-parallel weights shard their OUTPUT features over the ``model`` axis
+  (the caller sees a local slice; no collective needed),
+* row-parallel weights shard their INPUT features; the caller must ``psum``
+  the product over ``model`` (we fold that into `row_linear`),
+* activations between layers are replicated across ``model`` and sharded over
+  ``data``/``pod`` on the batch dim,
+* model code NEVER consults the mesh — local shapes come from the (possibly
+  sliced) param arrays themselves, collectives go through `ShardCtx`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import ShardCtx
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def rms_norm_params(dim: int, dtype) -> Array:
+    return jnp.zeros((dim,), dtype)
+
+
+def sharded_rms_norm(x: Array, scale: Array, ctx: ShardCtx,
+                     eps: float = 1e-6) -> Array:
+    """RMS norm over a feature dim that is SHARDED over ``model`` (used by
+    the Mamba2 gated norm whose d_inner channels are tensor-parallel):
+    the mean-square reduces globally via one scalar-ish psum."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    local_dim = x.shape[-1]
+    ssq = ctx.psum_model(jnp.sum(x * x, axis=-1, keepdims=True))
+    var = ssq / (local_dim * ctx.tp)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, style: str) -> Array:
+    """Inverse frequencies.  ``style='half'`` (chatglm 2d-RoPE) rotates only
+    the first half of each head dim; ``'full'`` rotates all of it."""
+    rot = head_dim if style == "full" else head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+
+
+def apply_rope(x: Array, positions: Array, theta: float, style: str) -> Array:
+    """x: (..., S, H, hd) or (..., H, hd) with matching positions (..., S)/().
+
+    Rotates pairs (x[2i], x[2i+1]) within the rotary span; the non-rotary
+    tail (half-style) passes through unchanged."""
+    if style == "none":
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta, style)          # (rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    # broadcast over the head axis: x is (..., S, H, hd) -> angles (..., S, 1, rot/2)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    rot = 2 * freqs.shape[0]
+    xr, tail = x[..., :rot], x[..., rot:]
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, tail], axis=-1) if tail.shape[-1] else out
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def col_linear(x: Array, w: Array, b: Array | None = None) -> Array:
+    """Column-parallel: w is a LOCAL (d_in, d_out/tp) slice; output is the
+    local feature slice — no collective."""
+    y = jnp.einsum("...i,io->...o", x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def row_linear(x_local: Array, w: Array, ctx: ShardCtx,
+               b: Array | None = None) -> Array:
+    """Row-parallel: x_local is this shard's input-feature slice, w its
+    (d_in/tp, d_out) slice; the partial products are psum'ed over model."""
+    y = ctx.psum_model(jnp.einsum("...i,io->...o", x_local, w))
+    if b is not None:
+        y = y + b
+    return y
+
+
+def vocab_embed(tokens: Array, table: Array, ctx: ShardCtx,
+                vocab_size: int) -> Array:
+    """Vocab-sharded embedding lookup: table is a LOCAL (V/tp, d) slice;
+    out-of-range ids contribute zero and the psum assembles the row."""
+    local_v = table.shape[0]
+    offset = ctx.model_index() * local_v
+    local_ids = tokens - offset
+    ok = (local_ids >= 0) & (local_ids < local_v)
+    rows = jnp.take(table, jnp.clip(local_ids, 0, local_v - 1), axis=0)
+    rows = jnp.where(ok[..., None], rows, jnp.zeros_like(rows))
+    out = ctx.psum_model(rows)
+    del vocab_size
+    return out
+
+
+def vocab_parallel_logits(x: Array, head: Array) -> Array:
+    """LM head: head is a LOCAL (d, V/tp) slice -> local logits slice."""
+    return jnp.einsum("...d,dv->...v", x, head)
+
+
+def vocab_parallel_xent(local_logits: Array, labels: Array,
+                        ctx: ShardCtx) -> Array:
+    """Cross-entropy over a vocab-sharded logit tensor (..., V/tp).
+
+    Uses the standard 3-collective scheme: pmax for the global max, psum for
+    the partition function, psum for the label logit."""
+    local_v = local_logits.shape[-1]
+    offset = ctx.model_index() * local_v
+    logits = local_logits.astype(jnp.float32)
+
+    # max-shift is gradient-neutral (d logsumexp/dm == 0); stop_gradient goes
+    # INSIDE the pmax because pmax itself has no differentiation rule
+    gmax = ctx.pmax_model(jax.lax.stop_gradient(jnp.max(logits, axis=-1)))
+    sumexp = ctx.psum_model(jnp.sum(jnp.exp(logits - gmax[..., None]), axis=-1))
+
+    local_label = labels - offset
+    ok = (local_label >= 0) & (local_label < local_v)
+    picked = jnp.take_along_axis(
+        logits, jnp.clip(local_label, 0, local_v - 1)[..., None], axis=-1
+    )[..., 0]
+    label_logit = ctx.psum_model(jnp.where(ok, picked, 0.0))
+
+    return jnp.log(sumexp) + gmax - label_logit
+
+
+def vocab_parallel_sample(local_logits: Array, ctx: ShardCtx, rng: Array,
+                          temperature: float = 1.0) -> Array:
+    """Temperature sampling over a vocab-sharded logit tensor via the
+    Gumbel-max trick: argmax(logits/T + G) needs only the existing
+    pmax/pmin combine — no logit gather.  The key must be IDENTICAL on all
+    model shards; per-shard noise comes from folding in the vocab offset."""
+    local_v = local_logits.shape[-1]
+    offset = ctx.model_index() * local_v
+    shard_key = jax.random.fold_in(rng, offset)
+    g = jax.random.gumbel(shard_key, local_logits.shape, jnp.float32)
+    return vocab_parallel_argmax(
+        local_logits.astype(jnp.float32) / max(temperature, 1e-6) + g, ctx)
+
+
+def vocab_parallel_argmax(local_logits: Array, ctx: ShardCtx) -> Array:
+    """Greedy next-token id over a vocab-sharded logit tensor (..., V/tp)."""
+    local_v = local_logits.shape[-1]
+    offset = ctx.model_index() * local_v
+    logits = local_logits.astype(jnp.float32)
+    lmax = jnp.max(logits, axis=-1)
+    larg = jnp.argmax(logits, axis=-1).astype(jnp.int32) + offset
+    gmax = ctx.pmax_model(lmax)
+    # the shard holding the global max reports its index; others report INF
+    cand = jnp.where(lmax >= gmax, larg, jnp.iinfo(jnp.int32).max)
+    if ctx.model_axis is None:
+        return cand
+    return jax.lax.pmin(cand, ctx.model_axis)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),   # column-parallel
+        "up": dense_init(k2, d_model, d_ff, dtype),     # column-parallel
+        "down": dense_init(k3, d_ff, d_model, dtype),   # row-parallel
+    }
+
+
+def mlp(params: dict, x: Array, ctx: ShardCtx) -> Array:
+    h = jax.nn.silu(col_linear(x, params["gate"])) * col_linear(x, params["up"])
+    return row_linear(h, params["down"], ctx)
+
+
+def causal_conv1d(x: Array, w: Array, b: Array | None = None) -> Array:
+    """Depthwise causal conv over the sequence axis.  x: (B, S, C),
+    w: (K, C) depthwise taps.  Used by Mamba2 and RG-LRU blocks."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (4) — unrolled taps keep HLO simple
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def causal_conv1d_step(x_t: Array, conv_state: Array, w: Array,
+                       b: Array | None = None) -> tuple[Array, Array]:
+    """Single decode step.  x_t: (B, C); conv_state: (B, K-1, C) past inputs.
+    Returns (y_t, new_state)."""
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:k, :]

@@ -1,0 +1,389 @@
+"""Top-level model: embedding → (prefix layers ∥ scanned pattern blocks) →
+norm → vocab-parallel head, with train / prefill / decode entry points.
+
+One class serves all 10 assigned architectures; the LayerSpec pattern in the
+config decides which mixers run.  Params layout:
+
+    {"embed": (V, d), "prefix": (layer_dict, ...),
+     "blocks": (stacked_layer_dict_per_pattern_position, ...),
+     "final_norm": (d,), "head": (d, V) [absent when tied],
+     "encoder": {...} [audio], "mtp": {...} [deepseek]}
+
+Stacked leaves (leading repeat dim) live under "blocks" — the partitioning
+rules in `repro.sharding.partition` key off that path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import blocks as blk
+from repro.models.layers import (
+    embed_init,
+    dense_init,
+    rms_norm,
+    rms_norm_params,
+    vocab_embed,
+    vocab_parallel_argmax,
+    vocab_parallel_logits,
+    vocab_parallel_xent,
+)
+from repro.sharding.ctx import ShardCtx, unsharded
+from repro.sharding.partition import fsdp_axes, fsdp_gather
+
+Array = jax.Array
+PyTree = Any
+
+
+def _scan_unroll(repeats: int) -> int:
+    """Fully unroll tiny stacks (<= 2 repeats).  This keeps production HLO
+    O(pattern) via scan while letting the dry-run's 1-/2-repeat variants
+    produce EXACT per-layer cost analysis (XLA's HloCostAnalysis counts a
+    while-loop body once, so scanned modules under-report flops/bytes by
+    ~the trip count — see EXPERIMENTS.md §Roofline methodology)."""
+    return repeats if repeats <= 2 else 1
+
+
+@functools.lru_cache(maxsize=None)
+def _fsdp_axes_cached(cfg: ModelConfig, dp: int, tp: int) -> Any:
+    """Per-leaf FSDP gather axes, computed once per (cfg, mesh) on global
+    abstract shapes (hashable ModelConfig makes this cacheable)."""
+    from repro.sharding.partition import replicate_set
+
+    abstract = Model(cfg).abstract_params()
+    return fsdp_axes(abstract, dp=dp, tp=tp, fsdp=True,
+                     replicate=replicate_set(cfg, tp))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_embed, k_prefix, k_blocks, k_head, k_enc, k_mtp = jax.random.split(key, 6)
+        cross = cfg.is_encdec
+
+        params: dict = {
+            "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+            "final_norm": rms_norm_params(cfg.d_model, dtype),
+        }
+
+        params["prefix"] = tuple(
+            blk.layer_params(cfg, spec, k, dtype, cross)
+            for spec, k in zip(cfg.prefix,
+                               jax.random.split(k_prefix, max(len(cfg.prefix), 1)))
+        )
+
+        def one_repeat(k):
+            ks = jax.random.split(k, len(cfg.pattern))
+            return tuple(blk.layer_params(cfg, spec, kk, dtype, cross)
+                         for spec, kk in zip(cfg.pattern, ks))
+
+        params["blocks"] = jax.vmap(one_repeat)(
+            jax.random.split(k_blocks, cfg.num_repeats))
+
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                        dtype)
+        if cfg.encoder is not None:
+            e = cfg.encoder
+            enc_cfg = dataclasses.replace(
+                cfg, d_model=e.d_model, num_heads=e.num_heads,
+                num_kv_heads=e.num_heads, d_ff=e.d_ff, head_dim=0,
+                qk_norm=False, qkv_bias=False)
+            spec = LayerSpec("attn", "dense")
+
+            def one_enc(k):
+                return blk.layer_params(enc_cfg, spec, k, dtype)
+
+            params["encoder"] = {
+                "blocks": jax.vmap(one_enc)(
+                    jax.random.split(k_enc, e.num_layers)),
+                "final_norm": rms_norm_params(e.d_model, dtype),
+            }
+        if cfg.mtp_depth > 0:
+            km1, km2 = jax.random.split(k_mtp)
+            params["mtp"] = {
+                "mtp_proj": dense_init(km1, 2 * cfg.d_model, cfg.d_model, dtype),
+                "layer": blk.layer_params(
+                    cfg, LayerSpec(cfg.pattern[0].mixer, "dense"), km2, dtype),
+                "final_norm": rms_norm_params(cfg.d_model, dtype),
+            }
+        return params
+
+    def abstract_params(self) -> PyTree:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------------
+    # shared hidden pass (full sequence)
+    # ------------------------------------------------------------------
+
+    def _embed_inputs(self, params: PyTree, batch: dict, ctx: ShardCtx):
+        """Token (+ modality) embedding.  Returns (x, positions, n_prefix_tok)."""
+        cfg = self.cfg
+        x = vocab_embed(batch["tokens"], params["embed"], ctx, cfg.vocab_size)
+        x = x.astype(jnp.dtype(cfg.activ_dtype))
+        n_extra = 0
+        if cfg.family == "vlm" and "vision" in batch:
+            vis = batch["vision"].astype(x.dtype)       # (B, nv, d) stub
+            x = jnp.concatenate([vis, x], axis=1)
+            n_extra = vis.shape[1]
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        return x, positions, n_extra
+
+    def _encode(self, params: PyTree, source: Array, ctx: ShardCtx) -> Array:
+        """Audio encoder over stubbed frame embeddings (B, T, d_enc)."""
+        cfg = self.cfg
+        e = cfg.encoder
+        enc_cfg = dataclasses.replace(
+            cfg, d_model=e.d_model, num_heads=e.num_heads,
+            num_kv_heads=e.num_heads, d_ff=e.d_ff, head_dim=0,
+            qk_norm=False, qkv_bias=False)
+        spec = LayerSpec("attn", "dense")
+        x = source.astype(jnp.dtype(cfg.activ_dtype))
+        t = x.shape[1]
+        # bidirectional: every query sees every kv
+        positions = jnp.full((t,), t, jnp.int32)
+
+        def body(carry, p):
+            h, _, _ = blk.layer_seq(enc_cfg, spec, p, carry,
+                                    positions, ctx, None)
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"],
+                            unroll=_scan_unroll(e.num_layers))
+        return rms_norm(x, params["encoder"]["final_norm"])
+
+    def _fsdp_active(self, ctx: ShardCtx) -> bool:
+        return self.cfg.fsdp and ctx.data_axis is not None and ctx.dp > 1
+
+    def _blk_axes(self, ctx: ShardCtx):
+        if not self._fsdp_active(ctx):
+            return None
+        return _fsdp_axes_cached(self.cfg, ctx.dp, ctx.tp)["blocks"]
+
+    def _gather_fsdp(self, params: PyTree, ctx: ShardCtx):
+        """All-gather FSDP-sharded NON-block params eagerly; return the
+        per-repeat gather axes for the scanned blocks (gathered JIT inside
+        the scan body so only one repeat's weights are resident).
+
+        NOT idempotent — callers must gather exactly once per step; entry
+        points (loss / prefill / decode_step) gather and pass
+        ``gathered=True`` down to hidden_sequence."""
+        if not self._fsdp_active(ctx):
+            return params, None
+        axes = _fsdp_axes_cached(self.cfg, ctx.dp, ctx.tp)
+        rest = {k: v for k, v in params.items() if k != "blocks"}
+        rest_axes = {k: axes[k] for k in rest}
+        gathered = fsdp_gather(rest, rest_axes, ctx)
+        gathered["blocks"] = params["blocks"]
+        return gathered, axes["blocks"]
+
+    def hidden_sequence(self, params: PyTree, batch: dict, ctx: ShardCtx,
+                        caches: PyTree | None = None, *,
+                        remat: bool = False, gathered: bool = False):
+        """Returns (h (B,S,d), new_caches, aux, enc_out, n_extra)."""
+        cfg = self.cfg
+        if gathered:
+            blk_axes = self._blk_axes(ctx)
+        else:
+            params, blk_axes = self._gather_fsdp(params, ctx)
+        x, positions, n_extra = self._embed_inputs(params, batch, ctx)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch["source"], ctx)
+
+        aux = jnp.zeros((), jnp.float32)
+        new_prefix = []
+        for i, spec in enumerate(cfg.prefix):
+            c = None if caches is None else caches["prefix"][i]
+            x, c, a = blk.layer_seq(cfg, spec, params["prefix"][i], x,
+                                    positions, ctx, c, enc_out)
+            new_prefix.append(c)
+            aux = aux + a
+
+        pattern = cfg.pattern
+
+        if caches is None:
+            def body(carry, p):
+                h, acc = carry
+                if blk_axes is not None:
+                    p = fsdp_gather(p, blk_axes, ctx)
+                for j, spec in enumerate(pattern):
+                    h, _, a = blk.layer_seq(cfg, spec, p[j], h, positions,
+                                            ctx, None, enc_out)
+                    acc = acc + a
+                return (h, acc), None
+
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"],
+                                       unroll=_scan_unroll(cfg.num_repeats))
+            new_blocks = None
+        else:
+            def body(carry, inp):
+                h, acc = carry
+                p, cs = inp
+                if blk_axes is not None:
+                    p = fsdp_gather(p, blk_axes, ctx)
+                ncs = []
+                for j, spec in enumerate(pattern):
+                    h, nc, a = blk.layer_seq(cfg, spec, p[j], h, positions,
+                                             ctx, cs[j], enc_out)
+                    ncs.append(nc)
+                    acc = acc + a
+                return (h, acc), tuple(ncs)
+
+            (x, aux), new_blocks = jax.lax.scan(
+                body, (x, aux), (params["blocks"], caches["blocks"]),
+                unroll=_scan_unroll(cfg.num_repeats))
+
+        x = rms_norm(x, params["final_norm"])
+        new_caches = None
+        if caches is not None:
+            new_caches = {"prefix": tuple(new_prefix), "blocks": new_blocks}
+        return x, new_caches, aux, enc_out, n_extra
+
+    # ------------------------------------------------------------------
+    # logits / loss
+    # ------------------------------------------------------------------
+
+    def _local_logits(self, params: PyTree, h: Array) -> Array:
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("...d,vd->...v", h, params["embed"])
+        return vocab_parallel_logits(h, params["head"])
+
+    def loss(self, params: PyTree, batch: dict, ctx: ShardCtx | None = None,
+             *, remat: bool = True):
+        """Mean next-token cross-entropy over the LOCAL batch shard
+        (+ MoE aux + MTP).  Returns (loss, metrics)."""
+        ctx = ctx or unsharded()
+        cfg = self.cfg
+        params, _ = self._gather_fsdp(params, ctx)  # head/mtp need full leaves
+        h, _, aux, _, n_extra = self.hidden_sequence(params, batch, ctx,
+                                                     remat=remat,
+                                                     gathered=True)
+        if n_extra:
+            h = h[:, n_extra:, :]
+        labels = batch["labels"]
+        lg = self._local_logits(params, h)
+        xe = vocab_parallel_xent(lg, jnp.maximum(labels, 0), ctx)
+        mask = (labels >= 0).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(xe * mask) / denom
+        total = ce + aux
+
+        if cfg.mtp_depth > 0:
+            total = total + 0.1 * self._mtp_loss(params, batch, h, ctx)
+
+        return total, {"ce": ce, "aux": aux}
+
+    def _mtp_loss(self, params: PyTree, batch: dict, h: Array,
+                  ctx: ShardCtx) -> Array:
+        """DeepSeek MTP: one extra block predicts token t+2 from
+        (h_t, embed(token_{t+1}))."""
+        cfg = self.cfg
+        tokens, labels = batch["tokens"], batch["labels"]
+        emb_next = vocab_embed(tokens[:, 1:], params["embed"], ctx,
+                               cfg.vocab_size).astype(h.dtype)
+        inp = jnp.concatenate([h[:, :-1, :], emb_next], axis=-1)
+        x = jnp.einsum("...i,io->...o", inp, params["mtp"]["mtp_proj"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        spec = LayerSpec(cfg.pattern[0].mixer, "dense")
+        x, _, _ = blk.layer_seq(cfg, spec, params["mtp"]["layer"], x,
+                                positions, ctx, None)
+        x = rms_norm(x, params["mtp"]["final_norm"])
+        lg = self._local_logits(params, x)
+        lbl = labels[:, 1:]
+        xe = vocab_parallel_xent(lg, jnp.maximum(lbl, 0), ctx)
+        mask = (lbl >= 0).astype(jnp.float32)
+        return jnp.sum(xe * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+
+    def init_caches(self, batch_size: int, seq_len: int,
+                    ctx: ShardCtx | None = None) -> PyTree:
+        ctx = ctx or unsharded()
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.activ_dtype)
+        prefix = tuple(
+            blk.init_layer_cache(cfg, spec, batch_size, seq_len, ctx, dtype)
+            for spec in cfg.prefix)
+
+        def one(_):
+            return tuple(
+                blk.init_layer_cache(cfg, spec, batch_size, seq_len, ctx, dtype)
+                for spec in cfg.pattern)
+
+        stacked = jax.vmap(one)(jnp.arange(cfg.num_repeats))
+        return {"prefix": prefix, "blocks": stacked}
+
+    def prefill(self, params: PyTree, batch: dict, seq_len: int,
+                ctx: ShardCtx | None = None):
+        """Process the full prompt; returns (caches, next_token, enc_out)."""
+        ctx = ctx or unsharded()
+        params, _ = self._gather_fsdp(params, ctx)
+        caches = self.init_caches(batch["tokens"].shape[0], seq_len, ctx)
+        h, caches, _, enc_out, n_extra = self.hidden_sequence(
+            params, batch, ctx, caches, gathered=True)
+        last = h[:, -1, :]
+        nxt = vocab_parallel_argmax(self._local_logits(params, last), ctx)
+        return caches, nxt, enc_out
+
+    def decode_step(self, params: PyTree, token: Array, pos: Array,
+                    caches: PyTree, ctx: ShardCtx | None = None,
+                    enc_out: Array | None = None):
+        """One greedy decode step.  token: (B,) int32; pos: scalar int32.
+
+        Returns (next_token (B,), new_caches)."""
+        ctx = ctx or unsharded()
+        cfg = self.cfg
+        params, blk_axes = self._gather_fsdp(params, ctx)
+        x1 = vocab_embed(token[:, None], params["embed"], ctx,
+                         cfg.vocab_size)[:, 0, :]
+        x1 = x1.astype(jnp.dtype(cfg.activ_dtype))
+
+        new_prefix = []
+        for i, spec in enumerate(cfg.prefix):
+            x1, c = blk.layer_decode(cfg, spec, params["prefix"][i], x1, pos,
+                                     caches["prefix"][i], ctx, enc_out)
+            new_prefix.append(c)
+
+        pattern = cfg.pattern
+
+        def body(carry, inp):
+            h1 = carry
+            p, cs = inp
+            if blk_axes is not None:
+                p = fsdp_gather(p, blk_axes, ctx)
+            ncs = []
+            for j, spec in enumerate(pattern):
+                h1, nc = blk.layer_decode(cfg, spec, p[j], h1, pos, cs[j],
+                                          ctx, enc_out)
+                ncs.append(nc)
+            return h1, tuple(ncs)
+
+        x1, new_blocks = jax.lax.scan(body, x1,
+                                      (params["blocks"], caches["blocks"]),
+                                      unroll=_scan_unroll(cfg.num_repeats))
+        x1 = rms_norm(x1, params["final_norm"])
+        nxt = vocab_parallel_argmax(self._local_logits(params, x1), ctx)
+        return nxt, {"prefix": tuple(new_prefix), "blocks": new_blocks}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts layer (Mixtral / DeepSeek-V3 style).
+
+Design (TPU, manual TP inside shard_map):
+
+* Activations are replicated across the ``model`` axis (the framework's
+  layer-level convention), so routing is computed locally on every shard.
+* Expert FFN weights are sharded over ``model`` on the **d_ff dimension**
+  ("expert tensor parallelism"): every shard holds a 1/tp slice of ALL
+  experts and the combine rides the row-parallel psum that the dense MLP
+  already pays.  No all-to-all is needed because tokens never move.
+  (An all_to_all expert-parallel variant is an explicit §Perf candidate —
+  see EXPERIMENTS.md.)
+* Dispatch is **sort-based with capacity** (MegaBlocks-style, not the
+  GShard one-hot einsum): tokens are bucketed to (expert, slot) via a
+  stable argsort of the routed expert ids, giving O(T·k log T·k) index work
+  and exactly ``E * C`` rows of expert GEMM — no T x E x C einsum blow-up.
+* Router: softmax top-k with renormalization (Mixtral) or
+  sigmoid+normalize (DeepSeek-V3 uses sigmoid scoring); we use softmax
+  for both, plus the standard load-balance auxiliary loss.
+
+Shared ("always-on") experts — DeepSeek's 1 shared expert — are a plain
+dense MLP added to the routed output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import perf
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, mlp, mlp_params
+from repro.sharding.ctx import ShardCtx
+
+Array = jax.Array
+
+
+def moe_params(cfg: ModelConfig, key, dtype) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    fe = m.d_ff_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    e = m.num_experts
+    scale = (2.0 / (d + fe)) ** 0.5
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # replicated, f32
+        # experts: (E, d, fe) column / (E, fe, d) row — fe sharded over model
+        "w_gate": (jax.random.normal(ks[1], (e, d, fe), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, fe), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, fe, d), jnp.float32) * scale).astype(dtype),
+    }
+    if m.num_shared:
+        p["shared"] = mlp_params(ks[4], d, fe * m.num_shared, dtype)
+    return p
+
+
+def _capacity(tokens: int, num_experts: int, top_k: int, factor: float) -> int:
+    cap = int(tokens * top_k * factor / num_experts) + 1
+    # round up to a lane-friendly multiple of 8 (128 when large)
+    mult = 128 if cap >= 512 else 8
+    return ((cap + mult - 1) // mult) * mult
+
+
+def moe_mlp(params: dict, cfg: ModelConfig, x: Array, ctx: ShardCtx):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    xf = x.reshape(t, d)
+
+    # ---- routing (replicated compute; f32 for stable softmax) -------------
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                    # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Shazeer/Switch): E * mean(frac_tokens*frac_prob)
+    counts = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    frac_tok = counts / (t * k)
+    frac_prob = jnp.mean(probs, axis=0)
+    aux = m.aux_loss_weight * e * jnp.sum(frac_tok * frac_prob)
+
+    flat_e = top_i.reshape(-1)                                # (T*k,)
+    flat_w = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+
+    if perf.enabled("sparse_moe_gather") and t * k < e:
+        # §Perf `sparse_moe_gather`: low-occupancy decode — gather only the
+        # routed experts' weight slices (T*k of E) instead of streaming all
+        # E experts through the dense GEMM.  Weight bytes: E*3*d*fe/tp ->
+        # T*k*3*d*fe/tp per step.
+        xi = xf[flat_tok]                                     # (T*k, d)
+        w_g = jnp.take(params["w_gate"], flat_e, axis=0)      # (T*k, d, fe)
+        w_u = jnp.take(params["w_up"], flat_e, axis=0)
+        w_d = jnp.take(params["w_down"], flat_e, axis=0)
+        hh = jax.nn.silu(jnp.einsum("td,tdf->tf", xi, w_g))
+        hh = hh * jnp.einsum("td,tdf->tf", xi, w_u)
+        yy = ctx.psum_model(jnp.einsum("tf,tfd->td", hh, w_d))
+        out = jnp.zeros((t, d), yy.dtype).at[flat_tok].add(
+            yy * flat_w[:, None].astype(yy.dtype))
+        if m.num_shared:
+            out = out + mlp(params["shared"], xf, ctx)
+        return out.reshape(b, s, d).astype(x.dtype), aux
+
+    # ---- sort-based dispatch with capacity --------------------------------
+    cap = _capacity(t, e, k, m.capacity_factor)
+
+    order = jnp.argsort(flat_e, stable=True)                  # group by expert
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    w_sorted = flat_w[order]
+    counts_i = jnp.bincount(flat_e, length=e)
+    seg_start = jnp.cumsum(counts_i) - counts_i               # (E,)
+    slot = jnp.arange(t * k) - seg_start[e_sorted]            # rank in expert
+    keep = slot < cap                                         # capacity drop
+
+    # gather tokens into the (E*C, d) expert buffer
+    buf_idx = e_sorted * cap + jnp.clip(slot, 0, cap - 1)
+    buffer = jnp.zeros((e * cap + 1, d), x.dtype)             # +1 = trash slot
+    src = jnp.where(keep, buf_idx, e * cap)
+    buffer = buffer.at[src].add(xf[tok_sorted].astype(x.dtype))
+    buffer = buffer[:-1].reshape(e, cap, d)
+
+    # ---- expert GEMMs (fe sharded over model; psum on the way out) --------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buffer, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buffer, params["w_up"])
+    y_part = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    if perf.enabled("fused_moe_psum"):
+        # §Perf `fused_moe_psum`: gather/scatter are linear, so commute them
+        # with the psum and merge the shared-expert partial — ONE (T, d)
+        # psum per layer instead of (E*cap, d) + (T, d).
+        y_buf = y_part.reshape(e * cap, d)
+        routed = jnp.take(y_buf, buf_idx, axis=0)
+        routed = routed * (w_sorted * keep)[:, None].astype(routed.dtype)
+        out = jnp.zeros((t, d), routed.dtype).at[tok_sorted].add(routed)
+        if m.num_shared:
+            sh = params["shared"]
+            hs = jax.nn.silu(jnp.einsum("td,df->tf", xf, sh["gate"]))
+            hs = hs * jnp.einsum("td,df->tf", xf, sh["up"])
+            out = out + jnp.einsum("tf,fd->td", hs, sh["down"])
+        out = ctx.psum_model(out)
+        return out.reshape(b, s, d).astype(x.dtype), aux
+
+    y_buf = ctx.psum_model(y_part).reshape(e * cap, d)
+
+    # ---- combine back to tokens -------------------------------------------
+    routed = jnp.take(y_buf, buf_idx, axis=0)                 # (T*k, d)
+    routed = routed * (w_sorted * keep)[:, None].astype(routed.dtype)
+    out = jnp.zeros((t, d), routed.dtype).at[tok_sorted].add(routed)
+
+    if m.num_shared:
+        out = out + mlp(params["shared"], xf, ctx)
+    return out.reshape(b, s, d).astype(x.dtype), aux

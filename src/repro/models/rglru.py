@@ -1,0 +1,122 @@
+"""RecurrentGemma recurrent block: causal conv + RG-LRU gated linear
+recurrence [arXiv:2402.19427].
+
+RG-LRU per channel:
+    r_t = sigmoid(W_a x_t)                    (recurrence gate)
+    i_t = sigmoid(W_x x_t)                    (input gate)
+    log a_t = -c * softplus(Λ) * r_t          (Λ learnable, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses `lax.associative_scan` over the sequence (the
+recurrence h_t = a_t h_{t-1} + b_t is associative) — O(S log S) work on
+O(log S) depth; decode is the O(1) single step.
+
+TP: lru_width channels are sharded over ``model`` (gates, Λ, conv taps all
+live per-channel); the block's linear-in / linear-out are column / row
+parallel respectively.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    causal_conv1d,
+    causal_conv1d_step,
+    col_linear,
+    dense_init,
+    row_linear,
+)
+from repro.sharding.ctx import ShardCtx
+
+Array = jax.Array
+
+
+class RGLRUCache(NamedTuple):
+    h: Array         # (B, W_local) recurrent state
+    conv: Array      # (B, K-1, W_local) conv tail
+
+
+def rglru_params(cfg: ModelConfig, key, dtype) -> dict:
+    r = cfg.rglru
+    d = cfg.d_model
+    w = r.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        # column-parallel branch projections (sharded on lru width)
+        "w_in": dense_init(ks[0], d, w, dtype),
+        "w_gate_branch": dense_init(ks[1], d, w, dtype),
+        "conv": (jax.random.normal(ks[2], (r.d_conv, w), jnp.float32)
+                 * 0.1).astype(dtype),
+        # per-channel RG-LRU gates (diagonal W_a / W_x as in the paper's
+        # block-diagonal approximation; full dense gates are the variant)
+        "w_a": dense_init(ks[3], d, w, dtype),
+        "w_x": dense_init(ks[4], d, w, dtype),
+        "lam": jnp.full((w,), 0.5, jnp.float32),   # Λ (softplus-parameterized)
+        # row-parallel out
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _gates(params: dict, x: Array, u: Array, c: float):
+    """Compute (log_a, b) for the recurrence h = a*h + b.  x: raw block
+    input (for the gates); u: conv'd branch signal."""
+    r = jax.nn.sigmoid(col_linear(x, params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(col_linear(x, params["w_x"]).astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_sequence(params: dict, cfg: ModelConfig, x: Array, ctx: ShardCtx,
+                   want_cache: bool):
+    """Full-sequence recurrent block.  x: (B, S, d)."""
+    r = cfg.rglru
+    u_raw = col_linear(x, params["w_in"])                 # (B,S,Wl)
+    gate = jax.nn.gelu(col_linear(x, params["w_gate_branch"]))
+    u = causal_conv1d(u_raw, params["conv"])
+    a, b = _gates(params, x, u, r.c)
+
+    # associative scan over the sequence: (a2,b2)∘(a1,b1) = (a1a2, a2 b1 + b2)
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    out = row_linear(y, params["w_out"], ctx)
+
+    cache = None
+    if want_cache:
+        k = r.d_conv - 1
+        cache = RGLRUCache(h=h[:, -1, :].astype(x.dtype),
+                           conv=u_raw[:, -k:, :])
+    return out, cache
+
+
+def init_rglru_cache(batch: int, cfg: ModelConfig, ctx: ShardCtx,
+                     dtype) -> RGLRUCache:
+    w = (cfg.rglru.lru_width or cfg.d_model) // ctx.tp
+    k = cfg.rglru.d_conv - 1
+    return RGLRUCache(h=jnp.zeros((batch, w), dtype),
+                      conv=jnp.zeros((batch, k, w), dtype))
+
+
+def rglru_decode(params: dict, cfg: ModelConfig, x1: Array,
+                 cache: RGLRUCache, ctx: ShardCtx):
+    """Single-token step.  x1: (B, d)."""
+    r = cfg.rglru
+    u_raw = col_linear(x1, params["w_in"])
+    gate = jax.nn.gelu(col_linear(x1, params["w_gate_branch"]))
+    u, conv = causal_conv1d_step(u_raw, cache.conv, params["conv"])
+    a, b = _gates(params, x1, u, r.c)
+    h = a * cache.h.astype(jnp.float32) + b
+    y = h.astype(x1.dtype) * gate
+    out = row_linear(y, params["w_out"], ctx)
+    return out, RGLRUCache(h=h.astype(x1.dtype), conv=conv)

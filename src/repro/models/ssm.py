@@ -1,0 +1,232 @@
+"""Mamba2 block with the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+The SSD form computes the selective-SSM scan as block matmuls (MXU-friendly,
+the whole point of state-space *duality*): within-chunk outputs use the
+quadratic-in-chunk masked kernel, inter-chunk state is carried by a short
+`lax.scan` over chunks — O(S·chunk) FLOPs, O(S/chunk) sequential steps.
+
+TP: heads (d_inner = expand*d_model) are sharded over ``model``; B/C are
+per-group (n_groups = 1 ⇒ replicated);  out_proj is row-parallel (+psum).
+
+Decode keeps the O(1) recurrent state h (B, H, P, N) + conv tail.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    causal_conv1d,
+    causal_conv1d_step,
+    col_linear,
+    dense_init,
+    rms_norm,
+    sharded_rms_norm,
+    rms_norm_params,
+    row_linear,
+)
+from repro.sharding.ctx import ShardCtx
+
+Array = jax.Array
+
+
+class SSDCache(NamedTuple):
+    state: Array       # (B, Hl, P, N) recurrent state
+    conv_x: Array      # (B, K-1, d_inner_local) conv tail for x
+    conv_b: Array      # (B, K-1, G*N)
+    conv_c: Array      # (B, K-1, G*N)
+
+
+def ssd_params(cfg: ModelConfig, key, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.expand * d
+    nheads = din // s.head_dim
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 9)
+    return {
+        # column-parallel (sharded over model on the head/channel dim)
+        "w_x": dense_init(ks[0], d, din, dtype),
+        "w_z": dense_init(ks[1], d, din, dtype),
+        "w_dt": dense_init(ks[2], d, nheads, dtype),
+        # replicated (groups are tiny)
+        "w_b": dense_init(ks[3], d, gn, dtype),
+        "w_c": dense_init(ks[4], d, gn, dtype),
+        # depthwise conv taps
+        "conv_x": (jax.random.normal(ks[5], (s.d_conv, din), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": (jax.random.normal(ks[6], (s.d_conv, gn), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_c": (jax.random.normal(ks[7], (s.d_conv, gn), jnp.float32)
+                   * 0.1).astype(dtype),
+        # per-head decay/skip/dt-bias (sharded over model with the heads)
+        "a_log": jnp.zeros((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "gnorm": rms_norm_params(din, dtype),
+        # row-parallel out
+        "w_out": dense_init(ks[8], din, d, dtype),
+    }
+
+
+def _segsum(a: Array) -> Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] =
+    sum(a[..., j+1:i+1]) for j <= i, -inf above the diagonal."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+             chunk: int, init_state: Array | None = None):
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); b,c: (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    reps = h // g
+    nc = s // chunk
+    assert nc * chunk == s, "seq must divide by chunk"
+
+    a = -jnp.exp(a_log)[None, None, :] * dt                  # (B,S,H) log-decay
+    xb = x.reshape(bsz, nc, chunk, h, p)
+    dtb = dt.reshape(bsz, nc, chunk, h)
+    ab = a.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # (B,H,nc,L)
+    bb = b.reshape(bsz, nc, chunk, g, n)
+    cb = c.reshape(bsz, nc, chunk, g, n)
+    bh = jnp.repeat(bb, reps, axis=3)                        # (B,nc,L,H,N)
+    ch = jnp.repeat(cb, reps, axis=3)
+
+    a_cs = jnp.cumsum(ab, axis=-1)                           # (B,H,nc,L)
+    # 1. within-chunk (diagonal) term
+    L = jnp.exp(_segsum(ab))                                 # (B,H,nc,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp,bcsh->bclhp",
+                        ch, bh, L, xb, dtb)
+    # 2. per-chunk end states
+    decay_to_end = jnp.exp(a_cs[..., -1:] - a_cs)            # (B,H,nc,L)
+    states = jnp.einsum("bclhn,bhcl,bclhp,bclh->bchpn",
+                        bh, decay_to_end, xb, dtb)
+    # 3. inter-chunk recurrence (sequential over chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1])                     # (B,H,nc)
+
+    def body(h_prev, inp):
+        st, dec = inp                                        # (B,H,P,N),(B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = (init_state if init_state is not None
+          else jnp.zeros((bsz, h, p, n), x.dtype))
+    final, prev_states = jax.lax.scan(
+        body, h0.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(a_cs)                              # (B,H,nc,L)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       ch, prev_states.astype(x.dtype), state_decay)
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final.astype(x.dtype)
+
+
+def ssd_sequence(params: dict, cfg: ModelConfig, x: Array, ctx: ShardCtx,
+                 want_cache: bool):
+    """Full-sequence Mamba2 block.  x: (B,S,d)."""
+    s_cfg = cfg.ssm
+    bsz, s, _ = x.shape
+    hd = s_cfg.head_dim
+    xin = col_linear(x, params["w_x"])                       # (B,S,din_l)
+    z = col_linear(x, params["w_z"])
+    dt = jax.nn.softplus(col_linear(x, params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])                # (B,S,Hl)
+    b = causal_conv1d(col_linear(x, params["w_b"]), params["conv_b"])
+    c = causal_conv1d(col_linear(x, params["w_c"]), params["conv_c"])
+    xin = jax.nn.silu(causal_conv1d(xin, params["conv_x"]))
+    b = jax.nn.silu(b)
+    c = jax.nn.silu(c)
+
+    hl = xin.shape[-1] // hd
+    xh = xin.reshape(bsz, s, hl, hd)
+    bg = b.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    cg = c.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+
+    chunk = min(s_cfg.chunk, s)
+    y, final = ssd_scan(xh, dt, params["a_log"], bg, cg, chunk)
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, -1) * jax.nn.silu(z)
+    y = sharded_rms_norm(y, params["gnorm"], ctx)
+    out = row_linear(y, params["w_out"], ctx)
+
+    cache = None
+    if want_cache:
+        k = s_cfg.d_conv - 1
+        cache = SSDCache(
+            state=final,
+            conv_x=col_linear(x[:, -k:, :], params["w_x"]),
+            conv_b=col_linear(x[:, -k:, :], params["w_b"]),
+            conv_c=col_linear(x[:, -k:, :], params["w_c"]),
+        )
+    return out, cache
+
+
+def init_ssd_cache(batch: int, cfg: ModelConfig, ctx: ShardCtx,
+                   dtype) -> SSDCache:
+    s = cfg.ssm
+    din_l = (s.expand * cfg.d_model) // ctx.tp
+    hl = din_l // s.head_dim
+    gn = s.n_groups * s.d_state
+    k = s.d_conv - 1
+    return SSDCache(
+        state=jnp.zeros((batch, hl, s.head_dim, s.d_state), dtype),
+        conv_x=jnp.zeros((batch, k, din_l), dtype),
+        conv_b=jnp.zeros((batch, k, gn), dtype),
+        conv_c=jnp.zeros((batch, k, gn), dtype),
+    )
+
+
+def ssd_decode(params: dict, cfg: ModelConfig, x1: Array, cache: SSDCache,
+               ctx: ShardCtx):
+    """Single-token recurrent step.  x1: (B, d)."""
+    s_cfg = cfg.ssm
+    hd = s_cfg.head_dim
+    bsz = x1.shape[0]
+
+    x_raw = col_linear(x1, params["w_x"])
+    b_raw = col_linear(x1, params["w_b"])
+    c_raw = col_linear(x1, params["w_c"])
+    z = col_linear(x1, params["w_z"])
+    dt = jax.nn.softplus(col_linear(x1, params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])                # (B, Hl)
+
+    xc, conv_x = causal_conv1d_step(x_raw, cache.conv_x, params["conv_x"])
+    bc, conv_b = causal_conv1d_step(b_raw, cache.conv_b, params["conv_b"])
+    cc, conv_c = causal_conv1d_step(c_raw, cache.conv_c, params["conv_c"])
+    xc = jax.nn.silu(xc)
+    bc = jax.nn.silu(bc)
+    cc = jax.nn.silu(cc)
+
+    hl = xc.shape[-1] // hd
+    xh = xc.reshape(bsz, hl, hd)
+    bg = bc.reshape(bsz, s_cfg.n_groups, s_cfg.d_state)
+    cg = cc.reshape(bsz, s_cfg.n_groups, s_cfg.d_state)
+    reps = hl // s_cfg.n_groups
+    bh = jnp.repeat(bg, reps, axis=1)                        # (B, Hl, N)
+    chh = jnp.repeat(cg, reps, axis=1)
+
+    decay = jnp.exp(-jnp.exp(params["a_log"]) * dt)          # (B, Hl)
+    state = (cache.state * decay[..., None, None]
+             + jnp.einsum("bhp,bhn,bh->bhpn", xh, bh, dt).astype(cache.state.dtype))
+    y = jnp.einsum("bhpn,bhn->bhp", state.astype(jnp.float32),
+                   chh.astype(jnp.float32)).astype(x1.dtype)
+    y = y + xh * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, -1) * jax.nn.silu(z)
+    y = sharded_rms_norm(y, params["gnorm"], ctx)
+    out = row_linear(y, params["w_out"], ctx)
+    return out, SSDCache(state, conv_x, conv_b, conv_c)

@@ -1,0 +1,9 @@
+"""repro.optim — minimal pure-JAX optimizers (SGD / momentum / AdamW).
+
+The paper's experiments run SGD (+ EF21-SGDM's momentum living in the
+*aggregator*, not here).  Optimizers are compression-agnostic: they consume
+whatever aggregated gradient estimate the trainer hands them."""
+
+from repro.optim.optimizers import Optimizer, adamw, momentum_sgd, sgd
+
+__all__ = ["Optimizer", "adamw", "momentum_sgd", "sgd"]

@@ -1,0 +1,88 @@
+"""Pure-function optimizers over arbitrary pytrees."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    #: (grads, state, params) -> (new_params, new_state)
+    apply: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    #: param_specs pytree -> opt-state PartitionSpec pytree (mirrors init)
+    state_specs: Callable[[PyTree], PyTree] = lambda ps: ()
+    name: str = "opt"
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        del params
+        return ()
+
+    def apply(grads, state, params):
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, apply, lambda ps: (), "sgd")
+
+
+def momentum_sgd(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def apply(grads, state, params):
+        new_m = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, apply, lambda ps: ps, "momentum_sgd")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def apply(grads, state, params):
+        t = state["t"] + 1
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        new_m = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        new_v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+
+        def upd(p, m, v):
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, new_m, new_v)
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    def state_specs(ps):
+        from jax.sharding import PartitionSpec as P
+
+        return {"m": ps, "v": ps, "t": P()}
+
+    return Optimizer(init, apply, state_specs, "adamw")

@@ -1,0 +1,45 @@
+"""Beyond-paper performance switches (§Perf hillclimbing).
+
+Optimizations are opt-in via ``REPRO_OPT=name1,name2`` so the
+paper-faithful baseline stays the default and every A/B in EXPERIMENTS.md
+§Perf is a one-flag diff.  Flags are read at TRACE time — set the env var
+before building/lowering a step function.
+
+Available flags:
+  grouped_decode     GQA decode attention without expanding the KV cache to
+                     per-query-head (einsum over the group dim): cuts decode
+                     cache reads by heads/kv_heads (2x gemma3, 6x mixtral).
+  sparse_moe_gather  Low-occupancy MoE decode gathers only the routed
+                     experts' weight slices (T*top_k < E) instead of running
+                     the dense E-expert GEMM: cuts decode weight reads by
+                     E/(T*top_k) (deepseek decode: 256 -> T*8).
+  bf16_wire          MLMC-Top-k residual values cross the gather collective
+                     in bf16 (indices stay int32): 8 -> 6 bytes/entry.
+  serve_no_fsdp      prefill/decode keep weights replicated over the data
+                     axes (FSDP is a TRAINING memory optimization — at serve
+                     time it forces a full all-gather of every layer's
+                     weights per decoded token).  Applicable when weights/tp
+                     fit HBM (gemma3-27b: 3.4 GB/chip; NOT deepseek-671b).
+  serve_tp_all       prefill/decode fuse the (data, model) mesh axes into ONE
+                     model group (256-way TP/SP within a pod): weights shard
+                     16x finer, caches shard 16x finer, the pod axis keeps
+                     batch parallelism.  Requires num_heads % fused_tp == 0
+                     (head-sharded attention) — demonstrated at reduced scale
+                     in tests; the assigned archs cap at 128 heads so the
+                     production-mesh §Perf runs use serve_no_fsdp instead.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def enabled(name: str) -> bool:
+    flags = os.environ.get("REPRO_OPT", "")
+    return name in {f.strip() for f in flags.split(",") if f.strip()}
+
+
+def active() -> tuple[str, ...]:
+    return tuple(sorted(
+        f.strip() for f in os.environ.get("REPRO_OPT", "").split(",")
+        if f.strip()))

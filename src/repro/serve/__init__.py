@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, ServeResult
+
+__all__ = ["Engine", "ServeResult"]

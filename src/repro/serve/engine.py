@@ -1,0 +1,54 @@
+"""Batched decode engine: prefill once, then greedy decode steps with the
+per-layer caches (KV / latent / SSM-state / LRU-state) threaded through.
+
+Works both unsharded (CPU examples/tests) and over a mesh (pass the step
+functions built by `repro.train.step`)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.sharding.ctx import ShardCtx, unsharded
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: jax.Array          # (B, n_generated)
+    prefill_len: int
+
+
+class Engine:
+    """Single-host serving engine over a Model."""
+
+    def __init__(self, model: Model, params: PyTree,
+                 ctx: ShardCtx | None = None):
+        self.model = model
+        self.params = params
+        self.ctx = ctx or unsharded()
+        self._decode = jax.jit(
+            lambda tok, pos, caches, enc: model.decode_step(
+                self.params, tok, pos, caches, self.ctx, enc))
+
+    def generate(self, batch: dict, *, max_new_tokens: int,
+                 cache_len: int | None = None) -> ServeResult:
+        """batch: {"tokens": (B, S_prompt), [modality inputs]}."""
+        prompt = batch["tokens"]
+        b, s = prompt.shape
+        cache_len = cache_len or (s + max_new_tokens)
+        caches, nxt, enc_out = self.model.prefill(
+            self.params, batch, cache_len, self.ctx)
+
+        toks = [nxt]
+        tok = nxt
+        for i in range(max_new_tokens - 1):
+            pos = jnp.int32(s + i)
+            tok, caches = self._decode(tok, pos, caches, enc_out)
+            toks.append(tok)
+        return ServeResult(tokens=jnp.stack(toks, axis=1), prefill_len=s)

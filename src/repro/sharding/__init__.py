@@ -1,0 +1,13 @@
+"""repro.sharding — explicit parallel context, partitioning rules and the
+compressed gradient collectives."""
+
+from repro.sharding.ctx import ShardCtx, unsharded
+from repro.sharding.partition import (
+    fsdp_axes,
+    fsdp_gather,
+    param_specs,
+    shard_params_like,
+)
+
+__all__ = ["ShardCtx", "fsdp_axes", "fsdp_gather", "param_specs",
+           "shard_params_like", "unsharded"]

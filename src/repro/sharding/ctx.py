@@ -1,0 +1,135 @@
+"""ShardCtx — the explicit parallel context threaded through all model code.
+
+The whole runtime is ONE `jax.shard_map` over the production mesh; model code
+never touches mesh globals.  Instead every layer receives a `ShardCtx` that
+knows the axis names and (static) sizes, and exposes the collectives it is
+allowed to use.  With the default `ShardCtx()` (all axes None / size 1) every
+collective degenerates to the identity, so the exact same model code runs
+unsharded on one CPU device for smoke tests.
+
+Axis roles:
+  * ``model``  — tensor / expert / sequence(-cache) parallelism (size tp)
+  * ``data``   — data parallelism within a pod; also FSDP weight sharding
+  * ``pod``    — data parallelism across pods (the slow hop; MLMC compression
+                 always applies here)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    #: one axis name, or a TUPLE of axis names fused into one logical model
+    #: group (serve_tp_all: both mesh axes become 256-way model parallelism)
+    model_axis: str | tuple[str, ...] | None = None
+    data_axis: str | None = None
+    pod_axis: str | None = None
+    #: per-axis sizes matching model_axis (int or tuple)
+    model_sizes: tuple[int, ...] = ()
+    tp: int = 1     # TOTAL size of the model group
+    dp: int = 1     # size of data axis
+    pp: int = 1     # size of pod axis  (pods, not pipeline)
+
+    # ---- static helpers ----------------------------------------------------
+
+    @property
+    def dp_total(self) -> int:
+        return self.dp * self.pp
+
+    def data_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in (self.pod_axis, self.data_axis) if a)
+
+    def model_axes(self) -> tuple[str, ...]:
+        if self.model_axis is None:
+            return ()
+        if isinstance(self.model_axis, tuple):
+            return self.model_axis
+        return (self.model_axis,)
+
+    # ---- indices ------------------------------------------------------------
+
+    def model_index(self) -> Array:
+        axes = self.model_axes()
+        if not axes:
+            return jnp.zeros((), jnp.int32)
+        sizes = self.model_sizes or (self.tp,)
+        idx = jnp.zeros((), jnp.int32)
+        for a, s in zip(axes, sizes):
+            idx = idx * s + lax.axis_index(a)
+        return idx
+
+    def data_index(self) -> Array:
+        """Flat data-parallel worker index in [0, dp_total)."""
+        idx = jnp.zeros((), jnp.int32)
+        if self.pod_axis is not None:
+            idx = idx + lax.axis_index(self.pod_axis) * self.dp
+        if self.data_axis is not None:
+            idx = idx + lax.axis_index(self.data_axis)
+        return idx
+
+    # ---- collectives (identity when the axis is absent) ---------------------
+
+    def psum_model(self, x):
+        axes = self.model_axes()
+        return lax.psum(x, axes) if axes else x
+
+    def pmax_model(self, x):
+        axes = self.model_axes()
+        return lax.pmax(x, axes) if axes else x
+
+    def psum_data(self, x):
+        axes = self.data_axes()
+        return lax.psum(x, axes) if axes else x
+
+    def pmean_data(self, x):
+        axes = self.data_axes()
+        return lax.pmean(x, axes) if axes else x
+
+    def pmax_data(self, x):
+        axes = self.data_axes()
+        return lax.pmax(x, axes) if axes else x
+
+    def psum_pod(self, x):
+        return lax.psum(x, self.pod_axis) if self.pod_axis else x
+
+    def all_gather_model(self, x, axis: int = 0, tiled: bool = True):
+        for a in reversed(self.model_axes()):
+            x = lax.all_gather(x, a, axis=axis, tiled=tiled)
+        return x
+
+    def all_gather_data(self, x, axis: int = 0, tiled: bool = True):
+        """Gather over the within-pod data axis (FSDP weight gather)."""
+        if self.data_axis is None:
+            return x
+        return lax.all_gather(x, self.data_axis, axis=axis, tiled=tiled)
+
+    def all_gather_dp(self, x, axis: int = 0, tiled: bool = True):
+        """Gather over ALL data-parallel axes (pod x data)."""
+        for a in self.data_axes():
+            x = lax.all_gather(x, a, axis=axis, tiled=tiled)
+        return x
+
+    def ppermute_model(self, x, perm):
+        if self.model_axis is None:
+            return x
+        return lax.ppermute(x, self.model_axis, perm)
+
+    # ---- sequence-parallel cache helpers ------------------------------------
+
+    def seq_shard_bounds(self, seq_len: int) -> tuple[Array, int]:
+        """(start, size) of this model shard's slice of a length-``seq_len``
+        sequence-sharded KV cache.  ``seq_len`` must divide by tp."""
+        local = seq_len // self.tp
+        return self.model_index() * local, local
+
+
+def unsharded() -> ShardCtx:
+    return ShardCtx()

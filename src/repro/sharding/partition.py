@@ -1,0 +1,175 @@
+"""Parameter partitioning rules.
+
+Specs are derived from leaf *names* (the innermost dict key) — every layer
+module registers its tensor-parallel dimension here.  Leaves living under
+the scanned ``blocks`` subtree carry a leading stack (repeat) dimension, so
+their sharded axes shift by one.
+
+FSDP (``cfg.fsdp``): large leaves are additionally sharded over ``data`` on
+the largest dimension that (a) is not the TP dim and (b) divides by dp.
+The chosen axis is precomputed on GLOBAL shapes (``fsdp_axes``) and closed
+over by the scan body, which all-gathers just-in-time (`fsdp_gather`).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.ctx import ShardCtx
+
+PyTree = Any
+
+# leaf name -> tensor-parallel axis (on the UNSTACKED shape); absent/None =>
+# replicated over `model`
+TP_AXIS: dict[str, int | None] = {
+    # embeddings / head
+    "embed": 0, "head": 1, "enc_embed": None,
+    # attention
+    "wq": 1, "wk": None, "wv": None, "wo": 0,
+    "bq": 0, "bk": None, "bv": None,
+    "q_norm": None, "k_norm": None,
+    # MLA
+    "w_dq": None, "w_uq": 1, "w_dkv": None, "kv_norm": None,
+    "w_uk": 1, "w_uv": 1,
+    # dense mlp
+    "gate": 1, "up": 1, "down": 0,
+    # moe
+    "router": None, "w_gate": 2, "w_up": 2, "w_down": 1,
+    # mamba2 / SSD
+    "w_x": 1, "w_z": 1, "w_dt": 1, "w_b": None, "w_c": None,
+    "conv_x": 1, "conv_b": None, "conv_c": None,
+    "a_log": 0, "dt_bias": 0, "d_skip": 0, "gnorm": 0,
+    # rg-lru
+    "w_in": 1, "w_gate_branch": 1, "conv": 1, "w_a": 1, "lam": 0,
+    "w_out": 0,
+    # norms / misc
+    "norm1": None, "norm2": None, "norm_cross": None, "final_norm": None,
+    "mtp_proj": None,  # output is an activation (full d_model) — replicate
+}
+
+#: minimum leaf size to bother FSDP-sharding (small tensors stay replicated)
+_FSDP_MIN_SIZE = 1 << 20
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    return any(isinstance(e, jax.tree_util.DictKey) and e.key == "blocks"
+               for e in path)
+
+
+def tp_axis(name: str) -> int | None:
+    return TP_AXIS.get(name)
+
+
+#: attention leaves that must replicate when num_heads % tp != 0 — the flat
+#: feature dim may divide tp while still splitting mid-head, which is
+#: semantically invalid (softmax is per-head).
+_HEAD_SHARDED = frozenset({"wq", "wo", "bq", "w_uq", "w_uk", "w_uv"})
+
+
+def replicate_set(cfg, tp: int) -> frozenset:
+    """Leaf names forced to replicate for this (config, tp)."""
+    if tp > 1 and cfg.num_heads % tp != 0:
+        return _HEAD_SHARDED
+    return frozenset()
+
+
+def _fsdp_axis(shape: tuple[int, ...], tp_ax: int | None, dp: int,
+               size: int) -> int | None:
+    if dp <= 1 or size < _FSDP_MIN_SIZE:
+        return None
+    best = None
+    for i, s in enumerate(shape):
+        if i == tp_ax or s % dp != 0:
+            continue
+        if best is None or s > shape[best]:
+            best = i
+    return best
+
+
+def param_specs(abstract_params: PyTree, *, dp: int, tp: int,
+                fsdp: bool, data_axis: str = "data",
+                model_axis: str = "model",
+                replicate: frozenset = frozenset()) -> PyTree:
+    """PartitionSpec pytree mirroring the params pytree (GLOBAL shapes)."""
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        stacked = _is_stacked(path)
+        shape = tuple(leaf.shape)
+        ushape = shape[1:] if stacked else shape
+        tp_ax = (tp_axis(name)
+                 if tp > 1 and name not in replicate else None)
+        if tp_ax is not None and ushape[tp_ax] % tp != 0:
+            tp_ax = None  # fall back to replication when not divisible
+        fs_ax = (_fsdp_axis(ushape, tp_ax, dp, leaf.size)
+                 if fsdp else None)
+        axes: list[str | None] = [None] * len(ushape)
+        if tp_ax is not None:
+            axes[tp_ax] = model_axis
+        if fs_ax is not None:
+            axes[fs_ax] = data_axis
+        if stacked:
+            axes = [None] + axes
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def fsdp_axes(abstract_params: PyTree, *, dp: int, tp: int, fsdp: bool,
+              replicate: frozenset = frozenset()) -> PyTree:
+    """Per-leaf FSDP axis (on the UNSTACKED/global layout) or -1.
+
+    Computed on global shapes; the scan body uses it to all-gather leaves
+    just-in-time.  Inside the scan the stack dim is already sliced away, so
+    the recorded axis applies directly to the local leaf."""
+
+    def ax(path, leaf):
+        if not fsdp:
+            return -1
+        name = _leaf_name(path)
+        stacked = _is_stacked(path)
+        shape = tuple(leaf.shape)
+        ushape = shape[1:] if stacked else shape
+        tp_ax = (tp_axis(name)
+                 if tp > 1 and name not in replicate else None)
+        if tp_ax is not None and ushape[tp_ax] % tp != 0:
+            tp_ax = None
+        fs = _fsdp_axis(ushape, tp_ax, dp, leaf.size)
+        return -1 if fs is None else fs
+
+    return jax.tree_util.tree_map_with_path(ax, abstract_params)
+
+
+def fsdp_gather(params: PyTree, axes: PyTree, ctx: ShardCtx) -> PyTree:
+    """All-gather FSDP-sharded leaves over ``data`` (identity when axis<0).
+
+    Called inside the scan body on UNSTACKED leaves; autodiff turns the
+    gather into the matching reduce-scatter of the gradient."""
+    if ctx.data_axis is None:
+        return params
+
+    def g(leaf, ax):
+        if ax < 0:
+            return leaf
+        return ctx.all_gather_data(leaf, axis=int(ax), tiled=True)
+
+    return jax.tree_util.tree_map(g, params, axes)
+
+
+def shard_params_like(params: PyTree, specs: PyTree, mesh) -> PyTree:
+    """Device-put global params according to specs (multi-device tests)."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)

@@ -1,0 +1,3 @@
+from repro.train.loop import History, Trainer
+
+__all__ = ["History", "Trainer"]

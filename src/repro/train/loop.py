@@ -1,0 +1,120 @@
+"""In-process M-worker trainer — the paper's experimental harness (§5).
+
+Simulates M machines by splitting each global batch into M worker shards and
+running the full Alg. 1 / Alg. 2 / Alg. 3 / EF21(-SGDM) pipeline over the
+stacked per-worker gradients.  Mathematically identical to M real machines
+(the server sees exactly the same aggregate), which is how the CPU container
+reproduces Figures 1-6.  The gradient is raveled to ONE flat d-vector per
+worker, matching the paper's model of the gradient as a d-dimensional
+object.
+
+For the mesh-collective realization of the same algorithms see
+`repro.train.step` (used by the dry-run and real-device tests)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core.aggregators import Aggregator, make_aggregator
+from repro.optim.optimizers import Optimizer, sgd
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class History:
+    steps: list[int] = dataclasses.field(default_factory=list)
+    loss: list[float] = dataclasses.field(default_factory=list)
+    bits: list[float] = dataclasses.field(default_factory=list)  # cumulative
+    eval_loss: list[float] = dataclasses.field(default_factory=list)
+
+
+class Trainer:
+    """MLMC-compressed distributed SGD over simulated workers.
+
+    Args:
+      loss_fn: (params_pytree, batch) -> scalar loss.  The batch's leading
+        axis is the per-worker batch (the trainer adds the worker axis).
+      params: initial parameter pytree.
+      num_workers: M.
+      method: aggregator registry key (see repro.core.aggregators).
+      optimizer: from repro.optim (default SGD, as in the paper).
+    """
+
+    def __init__(self, loss_fn: Callable, params: PyTree, *,
+                 num_workers: int = 4, method: str = "mlmc_topk",
+                 optimizer: Optimizer | None = None,
+                 k_fraction: float = 0.01, s: int = 0,
+                 momentum_beta: float = 0.1, qsgd_levels: int = 2,
+                 rtn_level: int = 4):
+        self.loss_fn = loss_fn
+        self.m = num_workers
+        flat, self.unravel = ravel_pytree(params)
+        self.dim = flat.size
+        self.flat_params = flat.astype(jnp.float32)
+        self.optimizer = optimizer or sgd(0.05)
+        self.agg: Aggregator = make_aggregator(
+            method, self.dim, k_fraction=k_fraction,
+            s=s or max(1, int(round(k_fraction * self.dim))),
+            momentum_beta=momentum_beta, qsgd_levels=qsgd_levels,
+            rtn_level=rtn_level)
+        self.opt_state = self.optimizer.init(self.flat_params)
+        self.ef_state = (self.agg.init(self.m, self.dim)
+                         if self.agg.init else None)
+        self.total_bits = 0.0
+        self.method = method
+        self._step = self._build_step()
+
+    def _build_step(self):
+        loss_fn, unravel, agg, opt = (self.loss_fn, self.unravel, self.agg,
+                                      self.optimizer)
+
+        @jax.jit
+        def step(flat_params, opt_state, ef_state, batch, rng):
+            def worker_loss(p_flat, wb):
+                return loss_fn(unravel(p_flat), wb)
+
+            # stacked per-worker (loss, grad): batch leaves are (M, b, ...)
+            losses, grads = jax.vmap(
+                jax.value_and_grad(worker_loss), in_axes=(None, 0)
+            )(flat_params, batch)
+
+            out = agg(grads, rng, ef_state)
+            new_flat, new_opt = opt.apply(out.direction, opt_state,
+                                          flat_params)
+            return (new_flat, new_opt, out.state, jnp.mean(losses), out.bits)
+
+        return step
+
+    def fit(self, batches: Iterator, *, steps: int, seed: int = 0,
+            eval_fn: Callable | None = None, eval_every: int = 0,
+            log_every: int = 0) -> History:
+        """batches yields pytrees whose leaves are (M, b, ...)."""
+        hist = History()
+        rng = jax.random.PRNGKey(seed)
+        for t in range(steps):
+            rng, sub = jax.random.split(rng)
+            batch = next(batches)
+            (self.flat_params, self.opt_state, self.ef_state, loss,
+             bits) = self._step(self.flat_params, self.opt_state,
+                                self.ef_state, batch, sub)
+            self.total_bits += float(bits)
+            hist.steps.append(t)
+            hist.loss.append(float(loss))
+            hist.bits.append(self.total_bits)
+            if eval_fn and eval_every and (t + 1) % eval_every == 0:
+                hist.eval_loss.append(float(eval_fn(self.params)))
+            if log_every and (t + 1) % log_every == 0:
+                print(f"  step {t+1:4d} loss={float(loss):.4f} "
+                      f"Gbits={self.total_bits/1e9:.3f}", flush=True)
+        return hist
+
+    @property
+    def params(self) -> PyTree:
+        return self.unravel(self.flat_params)

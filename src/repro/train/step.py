@@ -1,0 +1,246 @@
+"""Distributed step builders: ONE shard_map over the production mesh per
+step function (train / prefill / decode), with the paper's MLMC compression
+applied to the gradient aggregation path.
+
+Aggregation semantics (paper Alg. 2/3 mapped to the mesh):
+
+* non-FSDP params are replicated over the data axes; each data shard
+  computes a local gradient = one of the paper's M machines.  The chosen
+  `method` ("dense" | "mlmc_topk" | "mlmc_fixed") reduces them.
+* FSDP params are sharded over ``data``; autodiff's reduce-scatter has
+  already summed their gradient over ``data`` (native FSDP behaviour), so
+  only the expensive cross-pod hop remains — compression applies on the
+  ``pod`` axis.  This matches production practice: compress the slow link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.attention import AttnCache, MLACache
+from repro.models.model import Model, _fsdp_axes_cached
+from repro.models.rglru import RGLRUCache
+from repro.models.ssm import SSDCache
+from repro.optim.optimizers import Optimizer
+from repro.sharding.collectives import compressed_allreduce
+from repro.sharding.ctx import ShardCtx
+from repro.sharding.partition import param_specs as build_param_specs
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# spec helpers
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(global_batch: int, ctx: ShardCtx):
+    """Mesh axes carrying the batch dim: all data axes when divisible,
+    replicated otherwise (tiny-batch decode, e.g. long_500k B=1)."""
+    if global_batch % ctx.dp_total == 0 and global_batch >= ctx.dp_total:
+        return tuple(a for a in (ctx.pod_axis, ctx.data_axis) if a)
+    return None
+
+
+def batch_pspec(global_batch: int, ctx: ShardCtx, extra_dims: int = 1) -> P:
+    b = batch_axes(global_batch, ctx)
+    return P(b, *([None] * extra_dims))
+
+
+def make_batch_specs(cfg: ModelConfig, shape: InputShape, ctx: ShardCtx,
+                     kind: str) -> dict:
+    """PartitionSpecs for the batch dict fed to loss/prefill."""
+    specs = {"tokens": batch_pspec(shape.global_batch, ctx, 1)}
+    if kind == "train":
+        specs["labels"] = batch_pspec(shape.global_batch, ctx, 1)
+    if cfg.family == "vlm":
+        specs["vision"] = batch_pspec(shape.global_batch, ctx, 2)
+    if cfg.family == "audio":
+        specs["source"] = batch_pspec(shape.global_batch, ctx, 2)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, ctx: ShardCtx, global_batch: int) -> PyTree:
+    """PartitionSpec pytree mirroring Model.init_caches output."""
+    b = batch_axes(global_batch, ctx)
+    m = ctx.model_axis  # one name, or the fused (data, model) serve group
+
+    def one(spec):
+        if spec.mixer in ("attn", "swa"):
+            return AttnCache(k=P(b, m, None, None),
+                             v=P(b, m, None, None), pos=P(m))
+        if spec.mixer == "mla":
+            return MLACache(ckv=P(b, m, None),
+                            krope=P(b, m, None), pos=P(m))
+        if spec.mixer == "ssd":
+            return SSDCache(state=P(b, m, None, None),
+                            conv_x=P(b, None, m),
+                            conv_b=P(b, None, None), conv_c=P(b, None, None))
+        if spec.mixer == "rglru":
+            return RGLRUCache(h=P(b, m), conv=P(b, None, m))
+        raise ValueError(spec.mixer)
+
+    def stack(s: P) -> P:
+        return P(None, *tuple(s))
+
+    prefix = tuple(one(s) for s in cfg.prefix)
+    blocks = tuple(jax.tree.map(stack, one(s), is_leaf=lambda x: isinstance(x, P))
+                   for s in cfg.pattern)
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def model_param_specs(model: Model, ctx: ShardCtx) -> PyTree:
+    from repro.sharding.partition import replicate_set
+
+    return build_param_specs(model.abstract_params(), dp=ctx.dp, tp=ctx.tp,
+                             fsdp=model.cfg.fsdp,
+                             model_axis=ctx.model_axis or "model",
+                             replicate=replicate_set(model.cfg, ctx.tp))
+
+
+# ---------------------------------------------------------------------------
+# gradient aggregation (the paper's algorithms on the mesh)
+# ---------------------------------------------------------------------------
+
+
+def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
+                        method: str, k_fraction: float):
+    """Per-leaf compressed mean over the data axes.  Returns (grads, bits)."""
+    fsdp_map = (_fsdp_axes_cached(cfg, ctx.dp, ctx.tp)
+                if cfg.fsdp and ctx.dp > 1 else
+                jax.tree.map(lambda _: -1, grads))
+    pod_ctx = dataclasses.replace(ctx, data_axis=None, dp=1)
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    ax_leaves = jax.tree_util.tree_leaves(fsdp_map)
+    keys = jax.random.split(rng, len(leaves))
+    outs = []
+    bits = jnp.zeros((), jnp.float32)
+    for leaf, ax, key in zip(leaves, ax_leaves, keys):
+        flat = leaf.reshape(-1).astype(jnp.float32)
+        if ax >= 0:
+            # FSDP leaf: already summed over `data` by the reduce-scatter
+            # transpose of the forward all-gather -> normalize, then
+            # compress only the cross-pod hop.
+            flat = flat / ctx.dp
+            out, b = compressed_allreduce(flat, pod_ctx, key, method,
+                                          k_fraction=k_fraction)
+        else:
+            out, b = compressed_allreduce(flat, ctx, key, method,
+                                          k_fraction=k_fraction)
+        outs.append(out.reshape(leaf.shape))
+        bits = bits + b
+    return jax.tree_util.tree_unflatten(treedef, outs), bits
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
+                    shape: InputShape, method: str = "mlmc_topk",
+                    k_fraction: float = 0.001, remat: bool = True):
+    """Returns (jitted_fn, in_specs, out_specs).  fn(params, opt_state,
+    batch, rng) -> (params, opt_state, metrics)."""
+    from repro.launch.mesh import ctx_for_mesh
+
+    ctx = ctx_for_mesh(mesh)
+    cfg = model.cfg
+    p_specs = model_param_specs(model, ctx)
+    o_specs = optimizer.state_specs(p_specs)
+    b_specs = make_batch_specs(cfg, shape, ctx, "train")
+    m_specs = {"loss": P(), "bits": P(), "ce": P(), "aux": P()}
+
+    def local_step(params, opt_state, batch, rng):
+        def loss_fn(p):
+            return model.loss(p, batch, ctx, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, bits = aggregate_gradients(grads, ctx, rng, cfg, method,
+                                          k_fraction)
+        new_params, new_opt = optimizer.apply(grads, opt_state, params)
+        out_metrics = {
+            "loss": ctx.pmean_data(loss),
+            "bits": bits,
+            "ce": ctx.pmean_data(metrics["ce"]),
+            "aux": ctx.pmean_data(metrics["aux"]),
+        }
+        return new_params, new_opt, out_metrics
+
+    fn = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(p_specs, o_specs, b_specs, P()),
+        out_specs=(p_specs, o_specs, m_specs),
+        check_vma=False,
+    )
+    return jax.jit(fn), (p_specs, o_specs, b_specs, P()), (p_specs, o_specs,
+                                                           m_specs)
+
+
+def make_prefill_step(model: Model, mesh, *, shape: InputShape):
+    """fn(params, batch) -> (caches, next_token[, enc_out])."""
+    from repro import perf
+    from repro.launch.mesh import ctx_for_mesh, serve_ctx_for_mesh
+
+    if perf.enabled("serve_no_fsdp") and model.cfg.fsdp:
+        model = Model(dataclasses.replace(model.cfg, fsdp=False))
+    ctx = (serve_ctx_for_mesh(mesh) if perf.enabled("serve_tp_all")
+           else ctx_for_mesh(mesh))
+    cfg = model.cfg
+    p_specs = model_param_specs(model, ctx)
+    b_specs = make_batch_specs(cfg, shape, ctx, "prefill")
+    c_specs = cache_specs(cfg, ctx, shape.global_batch)
+    tok_spec = P(batch_axes(shape.global_batch, ctx))
+    enc_spec = (batch_pspec(shape.global_batch, ctx, 2)
+                if cfg.is_encdec else None)
+
+    def local_step(params, batch):
+        caches, nxt, enc_out = model.prefill(params, batch, shape.seq_len, ctx)
+        if cfg.is_encdec:
+            return caches, nxt, enc_out
+        return caches, nxt
+
+    out_specs = ((c_specs, tok_spec, enc_spec) if cfg.is_encdec
+                 else (c_specs, tok_spec))
+    fn = jax.shard_map(local_step, mesh=mesh, in_specs=(p_specs, b_specs),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn), (p_specs, b_specs), out_specs
+
+
+def make_decode_step(model: Model, mesh, *, shape: InputShape):
+    """fn(params, token, pos, caches[, enc_out]) -> (next_token, caches)."""
+    from repro import perf
+    from repro.launch.mesh import ctx_for_mesh, serve_ctx_for_mesh
+
+    if perf.enabled("serve_no_fsdp") and model.cfg.fsdp:
+        model = Model(dataclasses.replace(model.cfg, fsdp=False))
+    ctx = (serve_ctx_for_mesh(mesh) if perf.enabled("serve_tp_all")
+           else ctx_for_mesh(mesh))
+    cfg = model.cfg
+    p_specs = model_param_specs(model, ctx)
+    c_specs = cache_specs(cfg, ctx, shape.global_batch)
+    tok_spec = P(batch_axes(shape.global_batch, ctx))
+    enc_spec = (batch_pspec(shape.global_batch, ctx, 2)
+                if cfg.is_encdec else None)
+
+    if cfg.is_encdec:
+        def local_step(params, token, pos, caches, enc_out):
+            return model.decode_step(params, token, pos, caches, ctx, enc_out)
+        in_specs = (p_specs, tok_spec, P(), c_specs, enc_spec)
+    else:
+        def local_step(params, token, pos, caches):
+            return model.decode_step(params, token, pos, caches, ctx)
+        in_specs = (p_specs, tok_spec, P(), c_specs)
+
+    fn = jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                       out_specs=(tok_spec, c_specs), check_vma=False)
+    return jax.jit(fn), in_specs, (tok_spec, c_specs)

@@ -1,0 +1,143 @@
+"""Unit tests for the multilevel compressor families (Def. 3.1 contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FixedPointCompressor,
+    FixedPointMultilevel,
+    FloatingPointMultilevel,
+    QSGD,
+    RTNCompressor,
+    RTNMultilevel,
+    RandK,
+    STopKMultilevel,
+    TopK,
+    magnitude_ranks,
+)
+
+FAMILIES = [
+    STopKMultilevel(d=96, s=1),
+    STopKMultilevel(d=96, s=8),
+    STopKMultilevel(d=100, s=7),   # non-divisible tail
+    FixedPointMultilevel(num_bits=24),
+    FixedPointMultilevel(num_bits=8),
+    FloatingPointMultilevel(num_bits=23),
+    RTNMultilevel(num_bits=8),
+]
+
+
+def _vec(d=96, seed=0, decay=0.15):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, (d,)) * jnp.exp(-decay * jnp.arange(d))
+
+
+@pytest.mark.parametrize("comp", FAMILIES, ids=lambda c: f"{type(c).__name__}")
+def test_def31_contract(comp):
+    """C^L = id, C^0 = base, residual == C^l - C^{l-1}, telescoping."""
+    d = getattr(comp, "d", 96)
+    v = _vec(d)
+    L = comp.num_levels
+    np.testing.assert_allclose(np.asarray(comp.compress(v, L)),
+                               np.asarray(v), rtol=1e-6, atol=1e-7)
+    for l in [1, 2, L // 2 or 1, L]:
+        prev = comp.base(v) if l == 1 else comp.compress(v, l - 1)
+        np.testing.assert_allclose(
+            np.asarray(comp.residual(v, l)),
+            np.asarray(comp.compress(v, l) - prev), atol=2e-5)
+    total = comp.base(v) + sum(comp.residual(v, l) for l in range(1, L + 1))
+    np.testing.assert_allclose(np.asarray(total), np.asarray(v), atol=1e-4)
+
+
+@pytest.mark.parametrize("comp", FAMILIES, ids=lambda c: f"{type(c).__name__}")
+def test_residual_norms_match_residuals(comp):
+    d = getattr(comp, "d", 96)
+    v = _vec(d, seed=3)
+    norms = np.asarray(comp.residual_norms(v))
+    want = np.array([float(jnp.linalg.norm(comp.residual(v, l)))
+                     for l in range(1, comp.num_levels + 1)])
+    np.testing.assert_allclose(norms, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("comp", FAMILIES, ids=lambda c: f"{type(c).__name__}")
+def test_static_probs_valid(comp):
+    p = np.asarray(comp.static_probs())
+    assert p.shape == (comp.num_levels,)
+    assert (p > 0).all()
+    np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-5)
+
+
+def test_stopk_is_topk_ls():
+    """s-Top-k at level l == Top-(l*s) (the sort-first definition)."""
+    v = _vec(100, seed=5)
+    comp = STopKMultilevel(d=100, s=7)
+    for l in [1, 3, 10]:
+        got = comp.compress(v, l)
+        want = TopK(min(l * 7, 100)).compress(v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_stopk_alphas_energy():
+    """alpha_l = ||C^l(v)||^2/||v||^2 (Eq. 10) and is increasing to 1."""
+    v = _vec(96, seed=7)
+    comp = STopKMultilevel(d=96, s=8)
+    alphas = np.asarray(comp.alphas(v))
+    for l in [1, 4, 12]:
+        want = float(jnp.sum(comp.compress(v, l) ** 2) / jnp.sum(v**2))
+        np.testing.assert_allclose(alphas[l - 1], want, rtol=1e-5)
+    assert (np.diff(alphas) >= -1e-6).all()
+    np.testing.assert_allclose(alphas[-1], 1.0, rtol=1e-5)
+
+
+def test_topk_biased_energy_bound():
+    """Eq. 9: ||C(v)-v||^2 <= (1 - k/d)||v||^2."""
+    v = _vec(128, seed=1)
+    for k in [1, 16, 64, 128]:
+        c = TopK(k).compress(v)
+        lhs = float(jnp.sum((c - v) ** 2))
+        rhs = (1 - k / 128) * float(jnp.sum(v**2))
+        assert lhs <= rhs + 1e-6
+
+
+def test_magnitude_ranks():
+    v = jnp.asarray([0.1, -3.0, 2.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(magnitude_ranks(v)),
+                                  [2, 0, 1, 3])
+
+
+def test_randk_unbiased_mc():
+    v = _vec(64, seed=2)
+    comp = RandK(8)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    est = jax.vmap(lambda k: comp.compress(v, rng=k))(keys).mean(0)
+    rel = float(jnp.linalg.norm(est - v) / jnp.linalg.norm(v))
+    assert rel < 0.1
+
+
+def test_qsgd_unbiased_mc():
+    v = _vec(64, seed=4)
+    comp = QSGD(2)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    est = jax.vmap(lambda k: comp.compress(v, rng=k))(keys).mean(0)
+    rel = float(jnp.linalg.norm(est - v) / jnp.linalg.norm(v))
+    assert rel < 0.05
+
+
+def test_fixed_point_biased_distortion():
+    """F-bit truncation distortion bounded by 2^-F per (normalized) entry."""
+    v = _vec(64, seed=6)
+    scale = float(jnp.max(jnp.abs(v)))
+    for f in [2, 4, 8]:
+        c = FixedPointCompressor(f).compress(v)
+        assert float(jnp.max(jnp.abs(c - v))) <= 2.0 ** -f * scale + 1e-6
+
+
+def test_rtn_grid():
+    v = _vec(64, seed=8)
+    out = RTNCompressor(4).compress(v)
+    c = float(jnp.max(jnp.abs(v)))
+    delta = 2 * c / (2**4 - 1)
+    ratio = np.asarray(out) / delta
+    np.testing.assert_allclose(ratio, np.round(ratio), atol=1e-4)

@@ -1,0 +1,99 @@
+"""Extended-feature tests: natural compression / SignSGD baselines,
+vocab-parallel sampling, LR schedules + clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.natural import NaturalCompression, SignSGD
+from repro.models.layers import vocab_parallel_sample
+from repro.optim import sgd
+from repro.optim.schedules import scheduled, warmup_cosine, with_global_clip
+from repro.sharding.ctx import unsharded
+
+
+def test_natural_compression_unbiased():
+    v = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    comp = NaturalCompression()
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    est = jax.vmap(lambda k: comp.compress(v, rng=k))(keys).mean(0)
+    rel = float(jnp.linalg.norm(est - v) / jnp.linalg.norm(v))
+    assert rel < 0.05
+    # outputs are exact powers of two (in magnitude)
+    one = comp.compress(v, rng=keys[0])
+    m, _ = jnp.frexp(jnp.where(one == 0, 1.0, one))
+    assert bool(jnp.all(jnp.isin(jnp.abs(m), jnp.asarray([0.5, 1.0])) |
+                        (one == 0)))
+
+
+def test_natural_compression_bounded_variance():
+    """omega = 1/8 for natural compression: E||C(v)-v||^2 <= ||v||^2 / 8."""
+    v = jax.random.normal(jax.random.PRNGKey(2), (256,))
+    comp = NaturalCompression()
+    keys = jax.random.split(jax.random.PRNGKey(3), 2000)
+    errs = jax.vmap(lambda k: jnp.sum((comp.compress(v, rng=k) - v) ** 2))(keys)
+    assert float(errs.mean()) <= float(jnp.sum(v * v)) / 8 * 1.1
+
+
+def test_signsgd():
+    v = jnp.asarray([3.0, -1.0, 0.5, -0.5])
+    out = SignSGD().compress(v)
+    np.testing.assert_allclose(np.asarray(jnp.sign(out)),
+                               np.asarray(jnp.sign(v)))
+    np.testing.assert_allclose(float(jnp.abs(out).max()),
+                               float(jnp.mean(jnp.abs(v))), rtol=1e-6)
+
+
+def test_new_aggregators():
+    from repro.core.aggregators import make_aggregator
+
+    g = jax.random.normal(jax.random.PRNGKey(4), (4, 64))
+    for name in ("natural", "signsgd", "signsgd_ef"):
+        agg = make_aggregator(name, 64)
+        state = agg.init(4, 64) if agg.init else None
+        out = agg(g, jax.random.PRNGKey(5), state)
+        assert out.direction.shape == (64,)
+        assert np.isfinite(np.asarray(out.direction)).all()
+
+
+def test_vocab_parallel_sample():
+    """Unsharded: gumbel sampling matches categorical frequencies and at
+    temperature->0 converges to argmax."""
+    logits = jnp.log(jnp.asarray([[0.7, 0.2, 0.1, 1e-9]]))
+    keys = jax.random.split(jax.random.PRNGKey(6), 3000)
+    toks = jax.vmap(lambda k: vocab_parallel_sample(logits, unsharded(), k))(
+        keys)[:, 0]
+    freq = np.bincount(np.asarray(toks), minlength=4) / toks.shape[0]
+    np.testing.assert_allclose(freq[:3], [0.7, 0.2, 0.1], atol=0.05)
+    cold = vocab_parallel_sample(logits, unsharded(), keys[0],
+                                 temperature=1e-4)
+    assert int(cold[0]) == 0
+
+
+def test_warmup_cosine_schedule():
+    sch = warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(sch(0)) < 0.2
+    np.testing.assert_allclose(float(sch(10)), 1.0, rtol=0.1)
+    assert float(sch(99)) < 0.2
+    assert float(sch(99)) >= 0.1 - 1e-6  # min_frac floor
+
+
+def test_scheduled_optimizer_descends():
+    opt = scheduled(lambda lr: sgd(lr), warmup_cosine(0.2, 5, 60))
+    params = {"x": jnp.asarray([4.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(60):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, state = opt.apply(grads, state, params)
+    assert float(jnp.linalg.norm(params["x"])) < 0.5
+    assert int(state["step"]) == 60
+
+
+def test_global_clip():
+    opt = with_global_clip(sgd(1.0), max_norm=1.0)
+    params = {"x": jnp.zeros(4)}
+    state = opt.init(params)
+    big = {"x": jnp.full((4,), 100.0)}
+    params, _ = opt.apply(big, state, params)
+    np.testing.assert_allclose(float(jnp.linalg.norm(params["x"])), 1.0,
+                               rtol=1e-5)

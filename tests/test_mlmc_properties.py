@@ -1,0 +1,169 @@
+"""Property-based tests of the MLMC estimator — the paper's lemmas as
+executable invariants (hypothesis-driven where the space is continuous).
+
+Key trick: Lemma 3.2's unbiasedness can be checked EXACTLY (no Monte Carlo):
+``E[g~] = sum_l p_l (base + residual_l / p_l) = base + sum_l residual_l = v``
+by the telescoping property, for ANY valid level distribution.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FixedPointMultilevel,
+    FloatingPointMultilevel,
+    RTNMultilevel,
+    STopKMultilevel,
+    adaptive_probs,
+    mlmc_estimate,
+    mlmc_second_moment,
+    optimal_second_moment,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _families(d):
+    return [STopKMultilevel(d=d, s=1), STopKMultilevel(d=d, s=4),
+            FixedPointMultilevel(num_bits=12),
+            FloatingPointMultilevel(num_bits=12), RTNMultilevel(num_bits=6)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100.0, 100.0), min_size=8, max_size=48),
+       st.integers(0, 2**31 - 1))
+def test_lemma_3_2_exact_unbiasedness(vals, seed):
+    """sum_l p_l * estimate_l == v exactly, for arbitrary vectors and for
+    both adaptive (Alg. 3) and static (Alg. 2) level distributions."""
+    v = jnp.asarray(vals, jnp.float32)
+    if not bool(jnp.all(jnp.isfinite(v))):
+        return
+    for comp in _families(v.shape[0]):
+        for probs in (None, adaptive_probs(comp, v)):
+            p = comp.static_probs() if probs is None else probs
+            p = p / jnp.sum(p)
+            mean = np.asarray(comp.base(v), np.float64).copy()
+            for l in range(1, comp.num_levels + 1):
+                resid = np.asarray(comp.residual(v, l))
+                if float(p[l - 1]) == 0.0:
+                    # Lemma 3.4's optimum zeroes p_l exactly when Delta_l = 0;
+                    # such levels carry no mass AND no residual.
+                    np.testing.assert_allclose(resid, 0.0, atol=1e-6)
+                    continue
+                mean += float(p[l - 1]) * (resid / float(p[l - 1]))
+            np.testing.assert_allclose(mean, np.asarray(v),
+                                       atol=5e-4 * (1 + float(jnp.max(jnp.abs(v)))))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_lemma_3_2_monte_carlo(seed):
+    """MC sanity: the sampled estimator's mean converges to v."""
+    key = jax.random.PRNGKey(seed % 1000)
+    v = jax.random.normal(key, (32,)) * jnp.exp(
+        -0.2 * jnp.arange(32, dtype=jnp.float32))
+    comp = STopKMultilevel(d=32, s=4)
+    keys = jax.random.split(jax.random.PRNGKey(seed % 997), 2000)
+    est = jax.vmap(
+        lambda k: mlmc_estimate(comp, v, k, adaptive=True).estimate)(keys)
+    rel = float(jnp.linalg.norm(est.mean(0) - v) / jnp.linalg.norm(v))
+    assert rel < 0.15
+
+
+def test_second_moment_closed_form_matches_mc():
+    """E||g~||^2 == sum_l Delta_l^2/p_l (Eq. 48) — MC cross-check."""
+    v = jax.random.normal(jax.random.PRNGKey(0), (24,))
+    comp = STopKMultilevel(d=24, s=3)
+    probs = adaptive_probs(comp, v)
+    keys = jax.random.split(jax.random.PRNGKey(1), 4000)
+    sq = jax.vmap(lambda k: jnp.sum(
+        mlmc_estimate(comp, v, k, adaptive=True).estimate ** 2))(keys)
+    closed = float(mlmc_second_moment(comp, v, probs))
+    assert abs(float(sq.mean()) - closed) / closed < 0.1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_lemma_3_4_optimality(seed):
+    """The adaptive distribution minimizes sum_l Delta_l^2 / p_l: any other
+    random distribution gives a second moment >= the optimum (Eq. 54)."""
+    key = jax.random.PRNGKey(seed % 4096)
+    k1, k2 = jax.random.split(key)
+    v = jax.random.normal(k1, (40,)) * jnp.exp(
+        -0.1 * jnp.arange(40, dtype=jnp.float32))
+    comp = STopKMultilevel(d=40, s=5)
+    opt = float(optimal_second_moment(comp, v))
+    # check the closed form too
+    np.testing.assert_allclose(
+        opt, float(mlmc_second_moment(comp, v, adaptive_probs(comp, v))),
+        rtol=1e-4)
+    other = jax.random.dirichlet(k2, jnp.ones((comp.num_levels,)))
+    alt = float(mlmc_second_moment(comp, v, other))
+    assert alt >= opt - 1e-4 * opt
+
+
+def test_lemma_3_4_stopk_reduction():
+    """For s-Top-k: p_l ∝ sqrt(alpha_l - alpha_{l-1}) (the Lemma 3.4
+    reduction via Eq. 59)."""
+    v = jax.random.normal(jax.random.PRNGKey(5), (48,))
+    comp = STopKMultilevel(d=48, s=6)
+    p = np.asarray(adaptive_probs(comp, v))
+    alphas = np.concatenate([[0.0], np.asarray(comp.alphas(v))])
+    want = np.sqrt(np.maximum(np.diff(alphas), 0))
+    want = want / want.sum()
+    np.testing.assert_allclose(p, want, atol=1e-5)
+
+
+def test_lemma_3_3_fixed_point_optimal_probs():
+    """p_l = 2^-l/(1-2^-L): verify it beats perturbations on the worst-case
+    objective sum_l 2^-2l / p_l (the Lemma's optimization problem)."""
+    L = 12
+    comp = FixedPointMultilevel(num_bits=L)
+    p_star = np.asarray(comp.static_probs())
+    np.testing.assert_allclose(p_star.sum(), 1.0, rtol=1e-6)
+    obj = lambda p: float(np.sum(4.0 ** -np.arange(1, L + 1) / p))
+    base = obj(p_star)
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        q = p_star * np.exp(0.3 * rng.standard_normal(L))
+        q = q / q.sum()
+        assert obj(q) >= base - 1e-9
+
+
+def test_lemma_3_6_variance_scaling():
+    """Under exponential decay |v_j| = e^{-rj/2}, the adaptive MLMC s-Top-k
+    compression variance is O(1/(r s)) * ||v||^2 — check the 4/(rs)-1 form
+    (Eq. 75) and that it beats Rand-k's (d/s - 1) factor when 1/r < d."""
+    d, s = 4096, 32
+    # the paper's approximation holds in the r*s <= 1 regime (App. E:
+    # "we consider s such that s * r_{t,i} <= 1") with r*d >> 1
+    for r in [0.005, 0.01, 0.03]:
+        assert r * s <= 1.0 and r * d > 1.0
+        v = jnp.exp(-r / 2 * jnp.arange(d, dtype=jnp.float32))
+        comp = STopKMultilevel(d=d, s=s)
+        var = float(optimal_second_moment(comp, v) - jnp.sum(v * v))
+        norm2 = float(jnp.sum(v * v))
+        predicted = (4.0 / (r * s) - 1.0) * norm2
+        assert var <= predicted * 1.2 + 1e-6, (r, var, predicted)
+        randk_var = (d / s - 1.0) * norm2
+        assert var < randk_var
+    # outside the approximation regime the Rand-k dominance still holds
+    v = jnp.exp(-0.05 * jnp.arange(d, dtype=jnp.float32))
+    comp = STopKMultilevel(d=d, s=s)
+    var = float(optimal_second_moment(comp, v) - jnp.sum(v * v))
+    assert var < (d / s - 1.0) * float(jnp.sum(v * v))
+
+
+def test_payload_bits_accounting():
+    from repro.core import bits as bc
+
+    d = 10000
+    assert bc.fixed_point_mlmc_bits(d) == 2 * d + 64 + 6
+    assert bc.floating_point_mlmc_bits(d) == pytest.approx(
+        13 * d + np.log2(52))
+    assert bc.dense_bits(d, 64) == 64 * d
+    assert bc.compression_ratio(bc.fixed_point_mlmc_bits(d), d, 64) == (
+        pytest.approx(32, rel=0.01))  # the paper's x32 headline

@@ -1,0 +1,90 @@
+"""§Perf optimization flags must be EXACT rewrites: decode outputs with
+REPRO_OPT flags on == baseline (token-for-token), and the MLMC bf16-wire
+variant stays unbiased.  Each flagged test runs in a subprocess so the env
+var is set before tracing."""
+
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = pathlib.Path(__file__).parent.parent
+
+_SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["REPRO_OPT"] = sys.argv[1]
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import ASSIGNED, reduce_for_smoke
+    from repro.models import build_model
+    cfg = reduce_for_smoke([c for c in ASSIGNED if c.name == sys.argv[2]][0])
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              cfg.vocab_size)
+    caches, nxt, enc = model.prefill(params, {"tokens": toks}, 28)
+    out = [np.asarray(nxt)]
+    tok = nxt
+    for i in range(3):
+        tok, caches = model.decode_step(params, tok, jnp.int32(24 + i),
+                                        caches)
+        out.append(np.asarray(tok))
+    print("TOKENS", [int(x) for o in out for x in o])
+""")
+
+
+def _decode_tokens(flags: str, arch: str) -> str:
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT, flags, arch],
+                          cwd=ROOT, capture_output=True, text=True,
+                          timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return [l for l in proc.stdout.splitlines() if l.startswith("TOKENS")][0]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma3-27b", "deepseek-v3-671b"])
+def test_perf_flags_exact(arch):
+    base = _decode_tokens("", arch)
+    opt = _decode_tokens("grouped_decode,sparse_moe_gather", arch)
+    assert base == opt
+
+
+def test_bf16_wire_unbiased():
+    """bf16 residual values keep the estimator unbiased (just coarser)."""
+    import os
+    import subprocess
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["REPRO_OPT"] = "bf16_wire"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh, ctx_for_mesh
+        from repro.sharding.collectives import compressed_allreduce
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        ctx = ctx_for_mesh(mesh)
+        d = 512
+        decay = jnp.exp(-0.02 * jnp.arange(d))
+        g = jax.random.normal(jax.random.PRNGKey(0), (2, 2, d)) * decay
+        target = np.asarray(g.mean((0, 1)))
+        def body(gs, rng):
+            out, bits = compressed_allreduce(gs.reshape(-1), ctx, rng,
+                                             "mlmc_topk", k_fraction=0.05)
+            return out, bits
+        fn = jax.jit(jax.shard_map(body, mesh=mesh,
+            in_specs=(P("pod", "data", None), P()),
+            out_specs=(P(), P()), check_vma=False))
+        outs = np.stack([np.asarray(fn(g, k)[0])
+                         for k in jax.random.split(jax.random.PRNGKey(2), 60)])
+        rel = np.linalg.norm(outs.mean(0) - target) / np.linalg.norm(target)
+        assert rel < 0.3, rel
+        print("PASS", rel)
+    """)
+    proc = subprocess.run([sys.executable, "-c", script], cwd=ROOT,
+                          capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "PASS" in proc.stdout
