@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import save_and_print
+from repro.comm import make_codec, pack_bits, unpack_bits
 from repro.kernels import ops
 
 
@@ -38,6 +39,29 @@ def main(tag="kernel_bench") -> dict:
     # the jnp baseline it replaces (sort-based selection)
     res["argsort_baseline"] = _time(
         lambda: jnp.argsort(-jnp.abs(v)))
+    # wire-codec bit-packing (repro.comm.pack_kernels): 2-bit ternary planes
+    # and 12-bit index streams, the packed-wire encode/decode hot loops
+    tern = jax.random.randint(jax.random.PRNGKey(1), (d,), 0, 3,
+                              dtype=jnp.uint32)
+    res["pack_bits_w2"] = _time(lambda: pack_bits(tern, 2))
+    packed2 = pack_bits(tern, 2)
+    res["unpack_bits_w2"] = _time(lambda: unpack_bits(packed2, 2, d))
+    idx = jax.random.randint(jax.random.PRNGKey(2), (d,), 0, 1 << 12,
+                             dtype=jnp.uint32)
+    res["pack_bits_w12"] = _time(lambda: pack_bits(idx, 12))
+    packed12 = pack_bits(idx, 12)
+    res["unpack_bits_w12"] = _time(lambda: unpack_bits(packed12, 12, d))
+    # full codec paths (host-side encode -> Packet -> decode), gradient-sized
+    dc = 1 << 18
+    vc = jax.random.normal(jax.random.PRNGKey(3), (dc,))
+    for cname in ("mlmc_topk", "mlmc_fixed"):
+        codec = make_codec(cname, dc, k_fraction=0.01)
+        ckey = jax.random.PRNGKey(4)
+        res[f"codec_encode_{cname}"] = _time(
+            lambda codec=codec: (codec.encode(vc, ckey), 0)[-1], iters=3)
+        pkt = codec.encode(vc, ckey).packet
+        res[f"codec_decode_{cname}"] = _time(
+            lambda codec=codec, pkt=pkt: (codec.decode(pkt), 0)[-1], iters=3)
     for k, us in res.items():
         print(f"kernel/{k},{us:.0f},d={d}")
     save_and_print(tag, {k: {"us_per_call": u} for k, u in res.items()},

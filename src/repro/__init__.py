@@ -6,7 +6,9 @@ A Multilevel Monte Carlo Approach for Mitigating Compression Bias in
 Distributed Learning", ICML 2025 — plus a production-grade multi-pod
 training/serving substrate (10-architecture model zoo, manual TP/EP/FSDP
 shard_map runtime, compressed gradient collectives, Pallas compression
-kernels, roofline tooling).
+kernels, roofline tooling, and the `repro.comm` wire subsystem: byte-exact
+codecs, bit-pack kernels and cost-modeled transports for every compressor
+family).
 """
 
 __version__ = "1.0.0"

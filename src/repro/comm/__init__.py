@@ -1,0 +1,32 @@
+"""repro.comm — the wire: codecs, packets, bit-pack kernels, transports.
+
+Turns every compressor family of `repro.core` into a byte-exact wire format
+(`make_codec`), ships the resulting packets through pluggable transports
+with an alpha-beta cost model (`make_transport`), and exposes the
+packed-wire aggregation path behind ``make_aggregator(..., wire="packed")``.
+"""
+
+from repro.comm.aggregate import PackedAggregate, PackedEF21, packed_aggregator
+from repro.comm.codec import EncodeResult, WireCodec, make_codec
+from repro.comm.packets import Header, Packet, Stream
+from repro.kernels.pack import pack_bits, unpack_bits
+from repro.comm.topology import (
+    CostModel,
+    make_topology,
+    simulated_step_time,
+)
+from repro.comm.transport import (
+    LoopbackTransport,
+    SimulatedTransport,
+    Transport,
+    TransportStats,
+    make_transport,
+)
+
+__all__ = [
+    "CostModel", "EncodeResult", "Header", "LoopbackTransport",
+    "PackedAggregate", "PackedEF21", "Packet", "SimulatedTransport",
+    "Stream", "Transport", "TransportStats", "WireCodec", "make_codec",
+    "make_topology", "make_transport", "pack_bits", "packed_aggregator",
+    "simulated_step_time", "unpack_bits",
+]

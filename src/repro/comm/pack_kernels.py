@@ -1,0 +1,19 @@
+"""Bit-packing for the wire codecs — the comm-facing seam.
+
+The Pallas implementation lives in :mod:`repro.kernels.pack` (kernels are a
+lower layer than the wire; `repro.comm` depends on `repro.kernels`, never
+the reverse).  Codec code imports packing through this module so the wire
+subsystem has a single place to swap or instrument its packing backend.
+"""
+
+from repro.kernels.pack import (
+    BLOCK_ROWS,
+    fields_per_word,
+    pack_bits,
+    pack_words_2d,
+    unpack_bits,
+    unpack_words_2d,
+)
+
+__all__ = ["BLOCK_ROWS", "fields_per_word", "pack_bits", "pack_words_2d",
+           "unpack_bits", "unpack_words_2d"]

@@ -1,0 +1,158 @@
+"""Wire packets — the byte-level container every codec emits.
+
+A `Packet` is a small fixed `Header` plus one or more bit-packed `Stream`s
+(uint32 word buffers).  `to_bytes()`/`from_bytes()` give the *actual* network
+representation, so the transports in :mod:`repro.comm.transport` ship real
+byte strings, and tests can reconcile ``len(payload) * 8`` against the
+idealized ledger in :mod:`repro.core.bits` instead of trusting it.
+
+Two bit-accounting views coexist deliberately:
+
+* ``used_bits``   — ``width * count`` per stream: the information content the
+  paper's formulas count.
+* ``padded_bits`` — ``32 * n_words``: what the uint32 buffers actually hold
+  (fields never straddle word boundaries; ``32 // width`` fields per word).
+
+The serialized byte stream adds a fixed struct overhead
+(`HEADER_STRUCT_BYTES` + `STREAM_STRUCT_BYTES` per stream) on top — that is
+the "documented header padding" the reconciliation tests allow for.
+
+Float headers (scale / norm / p_l) are stored as raw float32 bit patterns so
+decode is bit-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+
+MAGIC = b"RCW1"
+#: magic + codec_id/version/flags/n_streams + dim/level/nnz + scale/prob
+_HEADER_FMT = "<4sBBBBIIIff"
+HEADER_STRUCT_BYTES = struct.calcsize(_HEADER_FMT)   # 28
+_STREAM_FMT = "<BBHII"                               # width, _, _, count, words
+STREAM_STRUCT_BYTES = struct.calcsize(_STREAM_FMT)   # 12
+
+#: stable codec ids for the wire (order is append-only)
+CODEC_IDS = {
+    "dense": 0, "topk": 1, "randk": 2, "qsgd": 3, "rtn": 4, "fixed2": 5,
+    "natural": 6, "signsgd": 7, "mlmc_topk": 8, "mlmc_topk_static": 9,
+    "mlmc_stopk": 10, "mlmc_fixed": 11, "mlmc_float": 12, "mlmc_rtn": 13,
+}
+_ID_TO_CODEC = {i: n for n, i in CODEC_IDS.items()}
+
+#: header flag: the MLMC draw hit the top level — payload is the dense f32
+#: residual (Def. 3.1's C^L = id has no compact plane/segment form)
+FLAG_DENSE_FALLBACK = 1
+#: header flag: p_l is shipped in the header rather than derived from the
+#: family's static distribution (adaptive draws, or an explicit `probs`
+#: override at encode time)
+FLAG_EXPLICIT_PROB = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Stream:
+    """One bit-packed field stream: ``count`` fields of ``width`` bits each,
+    packed ``32 // width`` to a word (width > 16 occupies a full word)."""
+
+    name: str
+    words: np.ndarray          # uint32
+    width: int
+    count: int
+
+    def __post_init__(self):
+        assert self.words.dtype == np.uint32, self.words.dtype
+
+    @property
+    def used_bits(self) -> int:
+        return self.width * self.count
+
+    @property
+    def padded_bits(self) -> int:
+        return 32 * int(self.words.size)
+
+
+@dataclasses.dataclass(frozen=True)
+class Header:
+    codec: str
+    dim: int
+    level: int = 0        # sampled MLMC level; 0 for single-level codecs
+    nnz: int = 0          # entries in a sparse payload
+    scale: float = 0.0    # f32 scale / norm header (bit pattern preserved)
+    prob: float = 0.0     # f32 p_l (adaptive families ship it; else derived)
+    flags: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Packet:
+    header: Header
+    streams: tuple[Stream, ...]
+
+    # ---- bit accounting ----------------------------------------------------
+
+    @property
+    def payload_used_bits(self) -> int:
+        return sum(s.used_bits for s in self.streams)
+
+    @property
+    def payload_padded_bits(self) -> int:
+        return sum(s.padded_bits for s in self.streams)
+
+    @property
+    def payload_bytes(self) -> int:
+        return sum(int(s.words.nbytes) for s in self.streams)
+
+    @property
+    def serialized_bytes(self) -> int:
+        return (HEADER_STRUCT_BYTES
+                + STREAM_STRUCT_BYTES * len(self.streams)
+                + self.payload_bytes)
+
+    # ---- bytes on the wire -------------------------------------------------
+    # NOTE: stream names are debugging labels only and are NOT serialized —
+    # codecs address streams positionally (`packet.streams[i]`), which works
+    # identically on both sides of the wire.
+
+    def to_bytes(self) -> bytes:
+        h = self.header
+        out = [struct.pack(_HEADER_FMT, MAGIC, CODEC_IDS[h.codec], 1,
+                           h.flags, len(self.streams), h.dim, h.level, h.nnz,
+                           np.float32(h.scale), np.float32(h.prob))]
+        for s in self.streams:
+            out.append(struct.pack(_STREAM_FMT, s.width, 0, 0, s.count,
+                                   s.words.size))
+            out.append(s.words.tobytes())
+        return b"".join(out)
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "Packet":
+        magic, codec_id, version, flags, n_streams, dim, level, nnz, scale, \
+            prob = struct.unpack_from(_HEADER_FMT, raw, 0)
+        if magic != MAGIC:
+            raise ValueError(f"bad packet magic {magic!r}")
+        off = HEADER_STRUCT_BYTES
+        streams = []
+        #: stream names are positional per codec (see codec.py stream orders)
+        for i in range(n_streams):
+            width, _, _, count, n_words = struct.unpack_from(_STREAM_FMT,
+                                                             raw, off)
+            off += STREAM_STRUCT_BYTES
+            words = np.frombuffer(raw, np.uint32, n_words, off).copy()
+            off += 4 * n_words
+            streams.append(Stream(f"s{i}", words, width, count))
+        header = Header(_ID_TO_CODEC[codec_id], dim, level, nnz,
+                        float(np.float32(scale)), float(np.float32(prob)),
+                        flags)
+        return cls(header, tuple(streams))
+
+
+def f32_stream(name: str, values: np.ndarray) -> Stream:
+    """Raw float32 values as a width-32 stream (bit patterns preserved)."""
+    v = np.ascontiguousarray(np.asarray(values, np.float32))
+    return Stream(name, v.view(np.uint32).reshape(-1), 32, int(v.size))
+
+
+def f32_from_stream(s: Stream) -> np.ndarray:
+    return s.words.view(np.float32)[: s.count]

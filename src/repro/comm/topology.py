@@ -1,0 +1,121 @@
+"""Communication topologies + the alpha-beta cost model.
+
+The paper's experiments count bits; a deployment cares about *time*.  The
+standard alpha-beta model charges ``alpha`` seconds of latency per message
+plus ``bytes * 8 / bandwidth`` of serialization per link.  Each topology
+turns one aggregation round's worker payload sizes into (a) total bytes on
+the wire and (b) simulated wall-clock, so benchmarks can report seconds per
+step instead of raw bits (`benchmarks/fig1_communication_efficiency.py`).
+
+Topologies:
+
+* ``star``  — parameter server (the paper's Alg. 1/2 picture): all M uplinks
+  land on one ingress NIC, so serialization time is the SUM of payloads
+  (incast), one latency hop.
+* ``ring``  — all-gather ring: M-1 rounds, each forwarding the largest
+  in-flight packet; every payload traverses M-1 links.
+* ``hierarchical`` — pods of ``pod_size`` workers star-aggregate locally,
+  then pod leaders star-aggregate across the slow link (the `ShardCtx`
+  pod/data split).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Alpha-beta link model.  Defaults: 50us latency, 10 Gbit/s links."""
+
+    latency_s: float = 50e-6
+    bandwidth_bps: float = 10e9
+
+    def xfer_time(self, nbytes: float, messages: int = 1) -> float:
+        return messages * self.latency_s + 8.0 * nbytes / self.bandwidth_bps
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+
+    def wire_bytes(self, sizes: list[int]) -> int:
+        """Total bytes crossing any link during one aggregation round."""
+        raise NotImplementedError
+
+    def step_time(self, sizes: list[int], cost: CostModel) -> float:
+        """Simulated wall-clock of one aggregation round."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class StarTopology(Topology):
+    name: str = "star"
+
+    def wire_bytes(self, sizes):
+        return sum(sizes)
+
+    def step_time(self, sizes, cost):
+        # uplinks are parallel but share the server ingress: incast sum
+        return cost.xfer_time(sum(sizes), messages=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingTopology(Topology):
+    name: str = "ring"
+
+    def wire_bytes(self, sizes):
+        return (max(len(sizes) - 1, 0)) * sum(sizes)
+
+    def step_time(self, sizes, cost):
+        rounds = max(len(sizes) - 1, 0)
+        # per round every link is busy; the slowest carries the max packet
+        return rounds * cost.xfer_time(max(sizes, default=0), messages=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalTopology(Topology):
+    name: str = "hierarchical"
+    pod_size: int = 4
+    #: cross-pod links are typically the slow hop (DC spine vs rack)
+    cross_pod_slowdown: float = 4.0
+
+    def _pods(self, sizes):
+        return [sizes[i:i + self.pod_size]
+                for i in range(0, len(sizes), self.pod_size)]
+
+    def wire_bytes(self, sizes):
+        pods = self._pods(sizes)
+        # in-pod uplinks + one aggregated (max-size) packet per pod leader
+        return sum(sizes) + sum(max(p, default=0) for p in pods)
+
+    def step_time(self, sizes, cost):
+        pods = self._pods(sizes)
+        local = max((cost.xfer_time(sum(p)) for p in pods), default=0.0)
+        slow = CostModel(cost.latency_s * self.cross_pod_slowdown,
+                         cost.bandwidth_bps / self.cross_pod_slowdown)
+        cross = slow.xfer_time(sum(max(p, default=0) for p in pods))
+        return local + cross
+
+
+TOPOLOGIES = {
+    "star": StarTopology,
+    "ring": RingTopology,
+    "hierarchical": HierarchicalTopology,
+}
+
+
+def make_topology(name: str, **kw) -> Topology:
+    if name not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {name!r}; have {sorted(TOPOLOGIES)}")
+    return TOPOLOGIES[name](**kw)
+
+
+def simulated_step_time(total_bits: float, workers: int, topology: str = "star",
+                        cost: CostModel | None = None) -> float:
+    """Post-hoc estimate for benchmarks that only recorded a bit total:
+    split the step's bits evenly over M workers and price one round."""
+    cost = cost or CostModel()
+    per_worker = math.ceil(total_bits / 8.0 / max(workers, 1))
+    return make_topology(topology).step_time([per_worker] * workers, cost)

@@ -1,0 +1,104 @@
+"""Transports — how encoded packets move from M workers to the server.
+
+A `Transport` takes one aggregation round's worth of serialized packets
+(real ``bytes``, produced by `Packet.to_bytes`) and delivers them to the
+aggregation point, accumulating byte counts and simulated wall-clock from
+the :mod:`repro.comm.topology` cost model.  The in-process implementations
+are deliberately simple — the subsystem's value is that *actual bytes* flow
+through a pluggable seam (cf. Hivemind-style pluggable compression
+transports), so a real network backend only has to implement `exchange`.
+
+* ``loopback``          — zero-cost in-process delivery (tests, parity runs)
+* ``parameter_server``  — star topology with incast accounting
+* ``ring``              — all-gather ring accounting
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+from repro.comm.topology import CostModel, Topology, make_topology
+
+
+@dataclasses.dataclass
+class TransportStats:
+    rounds: int = 0
+    bytes_up: int = 0          # worker -> server payload bytes
+    bytes_down: int = 0        # server -> worker broadcast bytes
+    wire_bytes: int = 0        # bytes crossing any link (topology-dependent)
+    sim_time_s: float = 0.0
+
+    def observe(self, sizes: list[int], topology: Topology,
+                cost: CostModel) -> None:
+        self.rounds += 1
+        self.bytes_up += sum(sizes)
+        self.wire_bytes += topology.wire_bytes(sizes)
+        self.sim_time_s += topology.step_time(sizes, cost)
+
+
+@runtime_checkable
+class Transport(Protocol):
+    stats: TransportStats
+
+    def exchange(self, payloads: list[bytes]) -> list[bytes]:
+        """Deliver every worker's serialized packet to the server."""
+        ...
+
+    def broadcast(self, nbytes: int, workers: int) -> None:
+        """Account a server -> workers broadcast of ``nbytes`` per worker
+        (a byte count, not a payload — the model update itself never needs
+        to be materialized just to be priced)."""
+        ...
+
+
+@dataclasses.dataclass
+class LoopbackTransport:
+    """In-process delivery; counts bytes, charges no time."""
+
+    stats: TransportStats = dataclasses.field(default_factory=TransportStats)
+
+    def exchange(self, payloads: list[bytes]) -> list[bytes]:
+        self.stats.rounds += 1
+        self.stats.bytes_up += sum(len(p) for p in payloads)
+        self.stats.wire_bytes += sum(len(p) for p in payloads)
+        return list(payloads)
+
+    def broadcast(self, nbytes: int, workers: int) -> None:
+        self.stats.bytes_down += nbytes * workers
+
+
+@dataclasses.dataclass
+class SimulatedTransport:
+    """Topology-priced in-process delivery (parameter_server / ring)."""
+
+    topology: Topology
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+    stats: TransportStats = dataclasses.field(default_factory=TransportStats)
+
+    def exchange(self, payloads: list[bytes]) -> list[bytes]:
+        sizes = [len(p) for p in payloads]
+        self.stats.observe(sizes, self.topology, self.cost)
+        return list(payloads)
+
+    def broadcast(self, nbytes: int, workers: int) -> None:
+        total = nbytes * workers
+        self.stats.bytes_down += total
+        self.stats.wire_bytes += total
+        # mirror the uplink incast: all W copies leave one server egress NIC
+        self.stats.sim_time_s += self.cost.xfer_time(total, messages=1)
+
+
+def make_transport(name: str = "loopback", *,
+                   cost: CostModel | None = None, **topo_kw) -> Transport:
+    if name == "loopback":
+        return LoopbackTransport()
+    if name in ("parameter_server", "star"):
+        return SimulatedTransport(make_topology("star"),
+                                  cost or CostModel())
+    if name == "ring":
+        return SimulatedTransport(make_topology("ring"), cost or CostModel())
+    if name == "hierarchical":
+        return SimulatedTransport(make_topology("hierarchical", **topo_kw),
+                                  cost or CostModel())
+    raise ValueError(f"unknown transport {name!r}")

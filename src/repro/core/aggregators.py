@@ -58,6 +58,17 @@ class Aggregator:
         return self.fn(worker_grads, rng, state)
 
 
+def mlmc_topk_segment(name: str, k: int, s: int) -> int:
+    """Segment length of the MLMC (s-)Top-k family for a registry name —
+    shared with `repro.comm.codec.make_codec` so the packed wire always
+    encodes exactly the segment the abstract aggregator computes.
+
+    For MLMC-Top-k the natural segment is the sparsification budget k
+    itself: each residual carries one length-k rank segment, matching the
+    paper's per-step budget of "k entries"."""
+    return s if name == "mlmc_stopk" else (s if s > 1 else max(1, k))
+
+
 def _per_worker(fn):
     """Lift fn(v, key) -> (vec, bits) over the worker axis and average."""
 
@@ -81,8 +92,29 @@ def make_aggregator(
     qsgd_levels: int = 2,
     momentum_beta: float = 0.1,
     fixed_levels: int = 24,
+    wire: str = "abstract",
+    transport=None,
 ) -> Aggregator:
-    """Build an aggregator for gradients of flat dimension ``dim``."""
+    """Build an aggregator for gradients of flat dimension ``dim``.
+
+    ``wire`` selects the aggregation substrate:
+
+    * ``"abstract"`` (default) — dense in-memory estimates, jit/vmap-able,
+      bits *accounted* from `repro.core.bits` formulas.
+    * ``"packed"`` — every worker estimate is encoded to a byte-exact
+      `repro.comm` packet, shipped through ``transport`` (loopback unless
+      given), decoded server-side; bits are *measured* from the packets.
+      Host-side Python — for verification and honest telemetry.
+    """
+    if wire == "packed":
+        from repro.comm import packed_aggregator
+
+        return packed_aggregator(
+            name, dim, transport=transport, k_fraction=k_fraction, s=s,
+            rtn_level=rtn_level, qsgd_levels=qsgd_levels,
+            momentum_beta=momentum_beta, fixed_levels=fixed_levels)
+    if wire != "abstract":
+        raise ValueError(f"unknown wire mode {wire!r}")
     k = max(1, int(round(k_fraction * dim)))
 
     if name == "dense":
@@ -125,11 +157,7 @@ def make_aggregator(
         return Aggregator(name, _per_worker(f))
 
     if name in ("mlmc_topk", "mlmc_stopk", "mlmc_topk_static"):
-        seg = s if name == "mlmc_stopk" else (s if s > 1 else max(1, k))
-        # NOTE: for MLMC-Top-k the natural segment is the sparsification
-        # budget k itself: each residual carries one length-k rank segment,
-        # matching the paper's per-step budget of "k entries".
-        comp = STopKMultilevel(d=dim, s=seg)
+        comp = STopKMultilevel(d=dim, s=mlmc_topk_segment(name, k, s))
         adaptive = name != "mlmc_topk_static"
         def f(v, key):
             est = mlmc_estimate(comp, v, key, adaptive=adaptive)

@@ -1,9 +1,11 @@
 """repro.kernels — Pallas TPU kernels for the compression hot-spots the
-paper optimizes (bit-plane extraction, segment energies, RTN quantize) plus
-the sort-free histogram/threshold Top-k selection (beyond-paper, TPU-native).
+paper optimizes (bit-plane extraction, segment energies, RTN quantize), the
+sort-free histogram/threshold Top-k selection (beyond-paper, TPU-native),
+and the wire-codec bit-packing of `repro.comm` (sub-32-bit field streams).
 
 Validated on CPU via interpret=True against the `ref.py` oracles."""
 
+from repro.kernels.pack import pack_bits, unpack_bits
 from repro.kernels.ops import (
     band_select,
     bitplane_residual,
@@ -14,6 +16,6 @@ from repro.kernels.ops import (
     topk_threshold,
 )
 
-__all__ = ["band_select", "bitplane_residual", "exp_histogram",
+__all__ = ["band_select", "bitplane_residual", "exp_histogram", "pack_bits",
            "rtn_quantize", "segment_sumsq", "ternary_bitplane",
-           "topk_threshold"]
+           "topk_threshold", "unpack_bits"]

@@ -1,0 +1,130 @@
+"""Pallas TPU kernels: bit-packing of sub-32-bit field streams (the codec
+hot loop of :mod:`repro.comm.codec`).
+
+Every wire stream (ternary bit-planes, RTN/fixed-point mantissas, Top-k index
+streams) is a vector of small unsigned codes.  Packing ``F = 32 // width``
+codes per uint32 word is pure VPU work — shifts and ORs — and the kernel's
+job, like `kernels/bitplane.py`, is to do it in ONE pass over (rows, 128)
+VMEM tiles.
+
+Layout contract (shared by kernel, wrapper and the `kernels/ref.py` oracle):
+word ``w`` packs codes ``[w*F, (w+1)*F)`` at bit offsets ``f * width``.  The
+wrapper maps that word-major order to the kernel's planar block layout
+``(rows, F*128)`` where columns ``[f*128, (f+1)*128)`` hold field ``f`` of
+the row's 128 words — so the kernel only needs static slices.
+
+Fields never straddle word boundaries; the ``32 mod (F*width)`` spare bits
+per word are the documented packing overhead the reconciliation tests allow.
+Widths > 16 get F = 1 (one code per word, a passthrough).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_ROWS = 256  # (256, F*128) u32 tile; F <= 32 -> at most 4 MiB VMEM
+
+
+def fields_per_word(width: int) -> int:
+    if not 1 <= width <= 32:
+        raise ValueError(f"field width must be in [1, 32], got {width}")
+    return max(1, 32 // width)
+
+
+def _pack_kernel(v_ref, out_ref, *, width: int, fields: int):
+    v = v_ref[...]
+    out = v[:, 0:128]
+    for f in range(1, fields):
+        out = out | (v[:, f * 128:(f + 1) * 128] << jnp.uint32(f * width))
+    out_ref[...] = out
+
+
+def _unpack_kernel(w_ref, out_ref, *, width: int, fields: int):
+    w = w_ref[...]
+    mask = jnp.uint32(0xFFFFFFFF if width == 32 else (1 << width) - 1)
+    planes = [(w >> jnp.uint32(f * width)) & mask for f in range(fields)]
+    out_ref[...] = jnp.concatenate(planes, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def pack_words_2d(v2d: Array, *, width: int, interpret: bool = False) -> Array:
+    """v2d: (rows, F*128) uint32 planar codes -> (rows, 128) packed words."""
+    fields = fields_per_word(width)
+    rows = v2d.shape[0]
+    assert v2d.shape[1] == fields * 128, v2d.shape
+    br = min(BLOCK_ROWS, rows)
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, width=width, fields=fields),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((br, fields * 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 128), jnp.uint32),
+        interpret=interpret,
+    )(v2d)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def unpack_words_2d(w2d: Array, *, width: int,
+                    interpret: bool = False) -> Array:
+    """w2d: (rows, 128) packed words -> (rows, F*128) planar codes."""
+    fields = fields_per_word(width)
+    rows = w2d.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, width=width, fields=fields),
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((br, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, fields * 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, fields * 128), jnp.uint32),
+        interpret=interpret,
+    )(w2d)
+
+
+# ---------------------------------------------------------------------------
+# 1D wrappers (the public ops; `kernels/__init__.py` re-exports them)
+# ---------------------------------------------------------------------------
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _num_words(count: int, width: int) -> int:
+    return -(-count // fields_per_word(width))
+
+
+def pack_bits(codes: Array, width: int) -> Array:
+    """Pack (N,) unsigned codes of ``width`` bits into ceil(N/F) uint32 words
+    (word-major: word w holds codes [w*F, (w+1)*F))."""
+    codes = jnp.asarray(codes, jnp.uint32)
+    n = codes.shape[0]
+    fields = fields_per_word(width)
+    if fields == 1:
+        return codes
+    n_words = _num_words(n, width)
+    rows = max(1, -(-n_words // 128))
+    padded = jnp.pad(codes, (0, rows * 128 * fields - n))
+    planar = padded.reshape(rows, 128, fields).transpose(0, 2, 1) \
+                   .reshape(rows, fields * 128)
+    words = pack_words_2d(planar, width=width, interpret=_interpret())
+    return words.reshape(-1)[:n_words]
+
+
+def unpack_bits(words: Array, width: int, count: int) -> Array:
+    """Inverse of :func:`pack_bits`: (W,) words -> (count,) uint32 codes."""
+    words = jnp.asarray(words, jnp.uint32)
+    fields = fields_per_word(width)
+    if fields == 1:
+        return words[:count]
+    n_words = words.shape[0]
+    rows = max(1, -(-n_words // 128))
+    w2d = jnp.pad(words, (0, rows * 128 - n_words)).reshape(rows, 128)
+    planar = unpack_words_2d(w2d, width=width, interpret=_interpret())
+    codes = planar.reshape(rows, fields, 128).transpose(0, 2, 1).reshape(-1)
+    return codes[:count]

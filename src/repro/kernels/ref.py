@@ -62,3 +62,30 @@ def band_select_ref(v: Array, lo: Array, hi: Array) -> Array:
     Top-k band extraction; pairs with exp_histogram for rank selection)."""
     av = jnp.abs(v)
     return jnp.where((av >= lo) & (av < hi), v, jnp.zeros((), v.dtype))
+
+
+def pack_bits_ref(codes: Array, width: int) -> Array:
+    """(N,) unsigned codes -> ceil(N/F) uint32 words, F = 32 // width codes
+    per word at bit offsets f*width (the wire layout of repro.comm)."""
+    codes = jnp.asarray(codes, jnp.uint32)
+    fields = max(1, 32 // width)
+    if fields == 1:
+        return codes
+    n = codes.shape[0]
+    n_words = -(-n // fields)
+    c = jnp.pad(codes, (0, n_words * fields - n)).reshape(n_words, fields)
+    shifts = (jnp.arange(fields, dtype=jnp.uint32) * width)[None, :]
+    # fields are disjoint, so the sum of shifted codes IS the bitwise OR
+    return jnp.sum(c << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack_bits_ref(words: Array, width: int, count: int) -> Array:
+    """Inverse of pack_bits_ref: (W,) uint32 words -> (count,) uint32."""
+    words = jnp.asarray(words, jnp.uint32)
+    fields = max(1, 32 // width)
+    if fields == 1:
+        return words[:count]
+    mask = jnp.uint32((1 << width) - 1)
+    shifts = (jnp.arange(fields, dtype=jnp.uint32) * width)[None, :]
+    codes = (words[:, None] >> shifts) & mask
+    return codes.reshape(-1)[:count]

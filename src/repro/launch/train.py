@@ -35,6 +35,14 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch-per-worker", type=int, default=4)
+    ap.add_argument("--wire", default="abstract",
+                    choices=["abstract", "packed"],
+                    help="sim-mode aggregation substrate: abstract in-memory "
+                         "estimates, or byte-exact repro.comm packets")
+    ap.add_argument("--transport", default="loopback",
+                    choices=["loopback", "parameter_server", "ring",
+                             "hierarchical"],
+                    help="packed-wire transport (cost-model accounting)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduce the architecture to smoke size")
     ap.add_argument("--mesh-shape", default="1,2,2",
@@ -65,15 +73,29 @@ def main() -> None:
         def loss_fn(p, batch):
             return model.loss(p, batch, remat=False)[0]
 
+        transport = None
+        if args.wire == "packed":
+            from repro.comm import make_transport
+            transport = make_transport(args.transport)
+        elif args.transport != "loopback":
+            print(f"note: --transport {args.transport} has no effect "
+                  "without --wire packed (abstract wire ships no bytes)")
         trainer = Trainer(loss_fn, params, num_workers=args.workers,
                           method=args.method, optimizer=sgd(args.lr),
-                          k_fraction=args.k_fraction)
+                          k_fraction=args.k_fraction, wire=args.wire,
+                          transport=transport)
         print(f"sim: {cfg.name} M={args.workers} method={args.method} "
-              f"dim={trainer.dim:,}")
+              f"wire={args.wire} dim={trainer.dim:,}")
         t0 = time.time()
         hist = trainer.fit(data, steps=args.steps, log_every=10)
         print(f"done in {time.time()-t0:.1f}s; final loss "
               f"{hist.loss[-1]:.4f}; total {hist.bits[-1]/1e9:.3f} Gbits")
+        if transport is not None:
+            st = transport.stats
+            print(f"wire: {st.rounds} rounds, {st.bytes_up/1e6:.3f} MB up, "
+                  f"{st.bytes_down/1e6:.3f} MB down, "
+                  f"sim_time={st.sim_time_s*1e3:.2f} ms "
+                  f"({args.transport})")
         if args.checkpoint:
             from repro import checkpoint
             checkpoint.save(args.checkpoint, trainer.params,
@@ -84,6 +106,9 @@ def main() -> None:
         return
 
     # --- mesh mode ---------------------------------------------------------
+    if args.wire != "abstract":
+        print("note: --wire applies to sim mode only; mesh mode realizes "
+              "the wire as actual collectives (see repro.sharding)")
     from repro.configs.base import InputShape
     from repro.launch.mesh import make_mesh
     from repro.train import step as step_mod

@@ -1,6 +1,8 @@
 """repro.sharding — explicit parallel context, partitioning rules and the
 compressed gradient collectives."""
 
+import jax as _jax
+
 from repro.sharding.ctx import ShardCtx, unsharded
 from repro.sharding.partition import (
     fsdp_axes,
@@ -9,5 +11,25 @@ from repro.sharding.partition import (
     shard_params_like,
 )
 
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """Version-compat `shard_map`.
+
+    jax >= 0.6 exposes `jax.shard_map` with a `check_vma` kwarg; older
+    releases (this container ships 0.4.x) only have
+    `jax.experimental.shard_map.shard_map`, where the same knob is called
+    `check_rep`.  All repo code and tests route through this wrapper.
+    """
+    if hasattr(_jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return _jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
 __all__ = ["ShardCtx", "fsdp_axes", "fsdp_gather", "param_specs",
-           "shard_params_like", "unsharded"]
+           "shard_map", "shard_params_like", "unsharded"]

@@ -52,41 +52,71 @@ class Trainer:
                  optimizer: Optimizer | None = None,
                  k_fraction: float = 0.01, s: int = 0,
                  momentum_beta: float = 0.1, qsgd_levels: int = 2,
-                 rtn_level: int = 4):
+                 rtn_level: int = 4, wire: str = "abstract",
+                 transport=None):
         self.loss_fn = loss_fn
         self.m = num_workers
         flat, self.unravel = ravel_pytree(params)
         self.dim = flat.size
         self.flat_params = flat.astype(jnp.float32)
         self.optimizer = optimizer or sgd(0.05)
+        self.wire = wire
         self.agg: Aggregator = make_aggregator(
             method, self.dim, k_fraction=k_fraction,
             s=s or max(1, int(round(k_fraction * self.dim))),
             momentum_beta=momentum_beta, qsgd_levels=qsgd_levels,
-            rtn_level=rtn_level)
+            rtn_level=rtn_level, wire=wire, transport=transport)
         self.opt_state = self.optimizer.init(self.flat_params)
         self.ef_state = (self.agg.init(self.m, self.dim)
                          if self.agg.init else None)
         self.total_bits = 0.0
         self.method = method
-        self._step = self._build_step()
+        self._step = (self._build_packed_step() if wire == "packed"
+                      else self._build_step())
 
-    def _build_step(self):
-        loss_fn, unravel, agg, opt = (self.loss_fn, self.unravel, self.agg,
-                                      self.optimizer)
+    @property
+    def transport(self):
+        """The packed-wire transport (None in abstract mode)."""
+        return getattr(self.agg.fn, "transport", None)
+
+    def _grad_fn(self):
+        loss_fn, unravel = self.loss_fn, self.unravel
 
         @jax.jit
-        def step(flat_params, opt_state, ef_state, batch, rng):
+        def grads_of(flat_params, batch):
             def worker_loss(p_flat, wb):
                 return loss_fn(unravel(p_flat), wb)
 
             # stacked per-worker (loss, grad): batch leaves are (M, b, ...)
-            losses, grads = jax.vmap(
+            return jax.vmap(
                 jax.value_and_grad(worker_loss), in_axes=(None, 0)
             )(flat_params, batch)
 
+        return grads_of
+
+    def _build_step(self):
+        agg, opt, grads_of = self.agg, self.optimizer, self._grad_fn()
+
+        @jax.jit
+        def step(flat_params, opt_state, ef_state, batch, rng):
+            losses, grads = grads_of(flat_params, batch)
             out = agg(grads, rng, ef_state)
             new_flat, new_opt = opt.apply(out.direction, opt_state,
+                                          flat_params)
+            return (new_flat, new_opt, out.state, jnp.mean(losses), out.bits)
+
+        return step
+
+    def _build_packed_step(self):
+        """Packed wire: jitted grads + host-side encode/ship/decode + jitted
+        apply (serialization cannot live under jit)."""
+        agg, opt, grads_of = self.agg, self.optimizer, self._grad_fn()
+        apply_jit = jax.jit(opt.apply)
+
+        def step(flat_params, opt_state, ef_state, batch, rng):
+            losses, grads = grads_of(flat_params, batch)
+            out = agg(grads, rng, ef_state)
+            new_flat, new_opt = apply_jit(out.direction, opt_state,
                                           flat_params)
             return (new_flat, new_opt, out.state, jnp.mean(losses), out.bits)
 

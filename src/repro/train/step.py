@@ -29,6 +29,7 @@ from repro.models.model import Model, _fsdp_axes_cached
 from repro.models.rglru import RGLRUCache
 from repro.models.ssm import SSDCache
 from repro.optim.optimizers import Optimizer
+from repro.sharding import shard_map
 from repro.sharding.collectives import compressed_allreduce
 from repro.sharding.ctx import ShardCtx
 from repro.sharding.partition import param_specs as build_param_specs
@@ -176,7 +177,7 @@ def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
         }
         return new_params, new_opt, out_metrics
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_step, mesh=mesh,
         in_specs=(p_specs, o_specs, b_specs, P()),
         out_specs=(p_specs, o_specs, m_specs),
@@ -211,8 +212,8 @@ def make_prefill_step(model: Model, mesh, *, shape: InputShape):
 
     out_specs = ((c_specs, tok_spec, enc_spec) if cfg.is_encdec
                  else (c_specs, tok_spec))
-    fn = jax.shard_map(local_step, mesh=mesh, in_specs=(p_specs, b_specs),
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map(local_step, mesh=mesh, in_specs=(p_specs, b_specs),
+                   out_specs=out_specs, check_vma=False)
     return jax.jit(fn), (p_specs, b_specs), out_specs
 
 
@@ -241,6 +242,6 @@ def make_decode_step(model: Model, mesh, *, shape: InputShape):
             return model.decode_step(params, token, pos, caches, ctx)
         in_specs = (p_specs, tok_spec, P(), c_specs)
 
-    fn = jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
-                       out_specs=(tok_spec, c_specs), check_vma=False)
+    fn = shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                   out_specs=(tok_spec, c_specs), check_vma=False)
     return jax.jit(fn), in_specs, (tok_spec, c_specs)

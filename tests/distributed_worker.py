@@ -19,6 +19,7 @@ from repro.configs import ASSIGNED, InputShape, reduce_for_smoke  # noqa: E402
 from repro.launch.mesh import ctx_for_mesh, make_mesh  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.optim import sgd  # noqa: E402
+from repro.sharding import shard_map  # noqa: E402
 from repro.sharding.collectives import compressed_allreduce  # noqa: E402
 from repro.train import step as step_mod  # noqa: E402
 
@@ -43,7 +44,7 @@ def check_collectives():
                                              k_fraction=0.05)
             return out, bits
 
-        fn = jax.jit(jax.shard_map(
+        fn = jax.jit(shard_map(
             body, mesh=mesh,
             in_specs=(P("pod", "data", None), P()),
             out_specs=(P(), P()), check_vma=False))

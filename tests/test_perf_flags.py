@@ -64,6 +64,7 @@ def test_bf16_wire_unbiased():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_mesh, ctx_for_mesh
+        from repro.sharding import shard_map
         from repro.sharding.collectives import compressed_allreduce
         mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         ctx = ctx_for_mesh(mesh)
@@ -75,7 +76,7 @@ def test_bf16_wire_unbiased():
             out, bits = compressed_allreduce(gs.reshape(-1), ctx, rng,
                                              "mlmc_topk", k_fraction=0.05)
             return out, bits
-        fn = jax.jit(jax.shard_map(body, mesh=mesh,
+        fn = jax.jit(shard_map(body, mesh=mesh,
             in_specs=(P("pod", "data", None), P()),
             out_specs=(P(), P()), check_vma=False))
         outs = np.stack([np.asarray(fn(g, k)[0])
