@@ -8,7 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import save_and_print
-from repro.comm import make_codec, pack_bits, unpack_bits
+from repro.comm import make_codec, make_device_codec, pack_bits, \
+    pack_planes, unpack_bits, unpack_planes
+from repro.comm.device_wire import ternary_words, topk_segment_words
 from repro.kernels import ops
 
 
@@ -51,6 +53,12 @@ def main(tag="kernel_bench") -> dict:
     res["pack_bits_w12"] = _time(lambda: pack_bits(idx, 12))
     packed12 = pack_bits(idx, 12)
     res["unpack_bits_w12"] = _time(lambda: unpack_bits(packed12, 12, d))
+    # split-plane packing (device-wire index streams: 20-bit at d=1M)
+    idx20 = jax.random.randint(jax.random.PRNGKey(5), (d,), 0, 1 << 20,
+                               dtype=jnp.uint32)
+    res["pack_planes_w20"] = _time(lambda: pack_planes(idx20, 20))
+    packed20 = pack_planes(idx20, 20)
+    res["unpack_planes_w20"] = _time(lambda: unpack_planes(packed20, 20, d))
     # full codec paths (host-side encode -> Packet -> decode), gradient-sized
     dc = 1 << 18
     vc = jax.random.normal(jax.random.PRNGKey(3), (dc,))
@@ -62,10 +70,41 @@ def main(tag="kernel_bench") -> dict:
         pkt = codec.encode(vc, ckey).packet
         res[f"codec_decode_{cname}"] = _time(
             lambda codec=codec, pkt=pkt: (codec.decode(pkt), 0)[-1], iters=3)
+    # jit-native device codecs (encode -> DevicePacket -> decode, all traced)
+    for cname in ("mlmc_topk", "mlmc_fixed", "qsgd"):
+        dcodec = make_device_codec(cname, dc, k_fraction=0.01)
+        enc = jax.jit(lambda v, k, c=dcodec: c.encode(v, k)[0])
+        dec = jax.jit(lambda p, c=dcodec: c.decode(p))
+        ckey = jax.random.PRNGKey(6)
+        res[f"device_encode_{cname}"] = _time(lambda: enc(vc, ckey), iters=3)
+        dpkt = enc(vc, ckey)
+        res[f"device_decode_{cname}"] = _time(lambda: dec(dpkt), iters=3)
+    # packed-gather operand bytes (what the wire="device" collectives move
+    # per worker vs the raw abstract operands), at the tentpole's d = 1M
+    dm = 1 << 20
+    sm = max(8, int(round(0.001 * dm)))
+    topk_raw = 8 * sm                                   # int32 idx + f32 val
+    topk_packed = 4 * topk_segment_words(dm, sm, 16)    # 20-bit idx + bf16
+    fixed_raw = dm                                      # int8 psum operand
+    fixed_packed = 4 * ternary_words(dm)                # 2-bit plane gather
+    res_bytes = {
+        "topk_gather_raw_bytes": topk_raw,
+        "topk_gather_packed_bytes": topk_packed,
+        "fixed_psum_int8_bytes": fixed_raw,
+        "fixed_gather_packed_bytes": fixed_packed,
+    }
+    topk_ratio = topk_raw / topk_packed
+    fixed_ratio = fixed_raw / fixed_packed
     for k, us in res.items():
         print(f"kernel/{k},{us:.0f},d={d}")
-    save_and_print(tag, {k: {"us_per_call": u} for k, u in res.items()},
-                   derived=f"d={d};interpret_mode=True")
+    for k, b in res_bytes.items():
+        print(f"kernel/{k},{b},d={dm};s={sm}")
+    out = {k: {"us_per_call": u} for k, u in res.items()}
+    out.update({k: {"operand_bytes": b} for k, b in res_bytes.items()})
+    save_and_print(tag, out,
+                   derived=(f"d={d};interpret_mode=True;"
+                            f"device_topk_operand_reduction={topk_ratio:.2f}x;"
+                            f"device_fixed_operand_reduction={fixed_ratio:.2f}x"))
     return res
 
 

@@ -3,7 +3,10 @@ worker count M grows (error ∝ 1/sqrt(MT) with no bias floor), which is the
 paper's massive-parallelization argument vs EF21-SGDM's O(N^{1/3}) cap.
 
 We train the same model at fixed per-worker batch for M ∈ {2, 8} and check
-the M=8 run reaches a lower tail loss for the MLMC method."""
+the M=8 run reaches a lower tail loss for the MLMC method.  The MLMC method
+also runs on the jit-native device wire (``wire="device"``: bit-packed
+collective operands, repro.comm.device_wire), recording the MEASURED
+operand bytes/step each worker count actually moves."""
 
 from benchmarks.common import BENCH_STEPS, run_methods, save_and_print
 
@@ -13,15 +16,26 @@ def main(tag="parallelization_scaling") -> dict:
     for m in (2, 8):
         res = run_methods(
             {"mlmc": dict(method="mlmc_topk", k_fraction=0.02),
+             "mlmc_device": dict(method="mlmc_topk", k_fraction=0.02,
+                                 wire="device"),
              "ef21_sgdm": dict(method="ef21_sgdm", k_fraction=0.02)},
             workers=m, steps=BENCH_STEPS)
         out[f"M={m}"] = {k: {"mean_tail_loss": v["mean_tail_loss"],
                              "total_gbits": v["total_gbits"],
                              "loss": v["loss"], "wall_s": v["wall_s"]}
                          for k, v in res.items()}
+        # measured per-step collective operand bytes (all M workers): only
+        # the device wire measures packet shapes; the other entries book
+        # core.bits formulas and stay gbits-only
+        out[f"M={m}"]["mlmc_device"]["operand_bytes_per_step"] = (
+            res["mlmc_device"]["bits"][-1] / 8.0
+            / max(len(res["mlmc_device"]["bits"]), 1))
     improves = (out["M=8"]["mlmc"]["mean_tail_loss"]
                 <= out["M=2"]["mlmc"]["mean_tail_loss"] + 0.05)
-    save_and_print(tag, out, derived=f"mlmc_improves_with_M={improves}")
+    dev8 = out["M=8"]["mlmc_device"]["operand_bytes_per_step"]
+    save_and_print(tag, out,
+                   derived=(f"mlmc_improves_with_M={improves};"
+                            f"device_operand_bytes_per_step_M8={dev8:.0f}"))
     return out
 
 

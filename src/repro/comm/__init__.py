@@ -4,12 +4,25 @@ Turns every compressor family of `repro.core` into a byte-exact wire format
 (`make_codec`), ships the resulting packets through pluggable transports
 with an alpha-beta cost model (`make_transport`), and exposes the
 packed-wire aggregation path behind ``make_aggregator(..., wire="packed")``.
+
+`device_wire` is the jit-native sibling: fixed-shape `DevicePacket`s
+(static uint32 word buffers + a small f32 header lane, no Python bytes)
+that the mesh collectives gather directly — ``wire="device"`` in
+`make_aggregator` and `repro.sharding.collectives.compressed_allreduce`.
 """
 
 from repro.comm.aggregate import PackedAggregate, PackedEF21, packed_aggregator
 from repro.comm.codec import EncodeResult, WireCodec, make_codec
-from repro.comm.packets import Header, Packet, Stream
-from repro.kernels.pack import pack_bits, unpack_bits
+from repro.comm.device_wire import (
+    DEVICE_WIRE_METHODS,
+    DeviceCodec,
+    DevicePacket,
+    device_aggregator,
+    make_device_codec,
+)
+from repro.comm.packets import Header, Packet, Stream, header_lane
+from repro.kernels.pack import pack_bits, pack_planes, unpack_bits, \
+    unpack_planes
 from repro.comm.topology import (
     CostModel,
     make_topology,
@@ -24,9 +37,11 @@ from repro.comm.transport import (
 )
 
 __all__ = [
-    "CostModel", "EncodeResult", "Header", "LoopbackTransport",
-    "PackedAggregate", "PackedEF21", "Packet", "SimulatedTransport",
-    "Stream", "Transport", "TransportStats", "WireCodec", "make_codec",
-    "make_topology", "make_transport", "pack_bits", "packed_aggregator",
-    "simulated_step_time", "unpack_bits",
+    "CostModel", "DEVICE_WIRE_METHODS", "DeviceCodec", "DevicePacket",
+    "EncodeResult", "Header", "LoopbackTransport", "PackedAggregate",
+    "PackedEF21", "Packet", "SimulatedTransport", "Stream", "Transport",
+    "TransportStats", "WireCodec", "device_aggregator", "header_lane",
+    "make_codec", "make_device_codec", "make_topology", "make_transport",
+    "pack_bits", "pack_planes", "packed_aggregator", "simulated_step_time",
+    "unpack_bits", "unpack_planes",
 ]

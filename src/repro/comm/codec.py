@@ -26,8 +26,9 @@ Documented deviations surfaced by measuring instead of asserting:
 * `mlmc_rtn` — the level-l RTN residual has NO compact closed form (§3.2:
   no importance-sampling interpretation).  The honest wire format ships the
   level-l codes (l bits/entry) plus a {-1,0,+1} refinement correction
-  (2 bits/entry); the 2d "fixed-point analogy" ledger entry is optimistic
-  for every level l > 1 — quantified here rather than hidden.
+  (2 bits/entry).  The ledger now books exactly that
+  (`bits.rtn_mlmc_bits`, ~(l+2) bits/entry per draw) — the former 2d
+  "fixed-point analogy" entry this codec's measurements exposed is gone.
 * MLMC top-level draws (l = L) — ``C^L = id`` has no plane/segment form, so
   the dense f32 residual ships (probability ~2^-L under Lemma 3.3).
 """
@@ -678,9 +679,10 @@ class MLMCRTNCodec(_MLMCCodecBase):
     has no sparse/bit-plane form, so the honest wire format is the level-l
     grid codes (l bits/entry) plus a {-1,0,+1} correction (2 bits/entry)
     that turns the decoder's re-quantization of C^l onto the coarse grid
-    into the true C^{l-1}.  The 2d ledger (`fixed_point_mlmc_bits`) is
-    therefore optimistic for every l > 1 — quantified in
-    `reconcile_bounds`, not hidden."""
+    into the true C^{l-1}.  The ledger (`bits.rtn_mlmc_bits`) now books
+    exactly this ~(l+2) bits/entry per sampled level, so `reconcile_bounds`
+    is tight (word padding + f32-vs-f64 header) instead of absorbing an
+    l·d deviation."""
 
     def __init__(self, dim: int, num_bits: int = 8):
         self.name, self.dim = "mlmc_rtn", dim
@@ -759,26 +761,30 @@ class MLMCRTNCodec(_MLMCCodecBase):
         return (residual / p).astype(np.float32)
 
     def nominal_bits(self):
-        # the aggregator reuses the fixed-point ledger entry for mlmc_rtn
-        return bitcost.fixed_point_mlmc_bits(self.dim,
-                                             self.compressor.num_levels)
+        # expectation of the honest per-level cost under the static
+        # Lemma-3.3 distribution (the aggregator books the per-draw value)
+        return bitcost.rtn_mlmc_expected_bits(self.dim,
+                                              self.compressor.num_levels)
+
+    def nominal_bits_for(self, level: int) -> float:
+        """The honest per-draw ledger value for one sampled level."""
+        return float(bitcost.rtn_mlmc_bits(self.dim, level,
+                                           self.compressor.num_levels))
 
     def header_bits(self, packet):
         return 64.0 + self.level_header_bits()   # scale + p_l + level
 
     def reconcile_bounds(self, packet):
-        n = self.nominal_bits()   # 2d + 64 + ceil(log2 L)
         level = packet.header.level
+        n = self.nominal_bits_for(level)
         if packet.header.flags & FLAG_DENSE_FALLBACK:
-            return n, n + 30.0 * self.dim
-        if level <= 1:
-            # a single 1-bit stream: measured sits BELOW the 2d ledger
-            return n - 1.0 * self.dim - 32.0, n + 32.0
-        # documented deviation: (l + 2) bits/entry on the wire vs 2d claimed
-        extra = float(level) * self.dim
-        pad = _padding_bits(self.dim, max(level, 1)) + \
-            _padding_bits(self.dim, 2)
-        return n - 32.0, n + extra + pad + 32.0
+            # honest formula already charges 32d; only header slack remains
+            return n - 32.0, n + 32.0
+        # tight: word padding of the q (and, for l > 1, corr) streams
+        pad = _padding_bits(self.dim, max(level, 1))
+        if level > 1:
+            pad += _padding_bits(self.dim, 2)
+        return n - 32.0, n + pad + 32.0
 
 
 # ---------------------------------------------------------------------------

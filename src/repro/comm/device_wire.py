@@ -1,0 +1,498 @@
+"""Jit-native device wire — fixed-shape packed packets for the mesh
+collectives.
+
+The `repro.comm.codec` wire is byte-exact but host-side: `Packet` holds
+numpy buffers and Python `bytes`, so the fast jitted mesh path
+(`repro.sharding.collectives`) could not use it and kept moving *unpacked*
+f32/int32 operands.  This module closes that gap with a `DevicePacket`: a
+pytree of two fixed-shape jnp arrays —
+
+* ``words`` — a static-width uint32 buffer holding the bit-packed payload
+  (packed with the Pallas kernels of :mod:`repro.kernels.pack`), and
+* ``lane``  — the small f32 header lane of :mod:`repro.comm.packets`
+  (scale / p_l / level as exact f32 values).
+
+Everything here traces under ``jax.jit`` + ``shard_map`` with **no host
+callbacks**: a packet can be all-gathered across the data axes as a plain
+array operand, so compression, bit-packing and communication all run
+on-device.  `repro.sharding.collectives` uses the codecs below for its
+``wire="device"`` branch, and `device_aggregator` exposes the same path for
+the in-process M-worker simulation (``make_aggregator(..., wire="device")``).
+
+Exactness contract (mirrors `repro.comm.codec`): ``decode(packet)`` replays
+the abstract compressor's float32 operations in the same order, so the
+device direction equals the abstract direction elementwise.  Two documented
+deviations:
+
+* `mlmc_topk` ships residual values in **bf16** (2 per word) by default —
+  identical to the abstract collective under the ``bf16_wire`` perf flag,
+  and within bf16 rounding of the f32 abstract path otherwise
+  (``value_bits=32`` restores exact f32 parity at 2x the value words);
+* `mlmc_fixed` always ships the level-l ternary plane, i.e. it is the
+  24-bit-grid-unbiased variant of the mesh collective (constraint (b) in
+  `repro.sharding.collectives`): a top-level draw (probability ~2^-24)
+  decodes to the grid value rather than the exact dense residual.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.packets import (
+    HEADER_LANE_LEN,
+    LANE_LEVEL,
+    LANE_PROB,
+    LANE_SCALE,
+    header_lane,
+)
+from repro.core import bits as bitcost
+from repro.core.bitwise import _BELOW_ONE, _fixed_scale, FixedPointMultilevel
+from repro.core.topk import STopKMultilevel
+from repro.core.types import categorical
+from repro.kernels.pack import pack_planes, packed_words, unpack_planes
+
+Array = jax.Array
+
+_EPS = 1e-30
+
+
+class DevicePacket(NamedTuple):
+    """One fixed-shape on-device packet: packed payload + f32 header lane.
+
+    A NamedTuple so it is a pytree: vmap-able per worker, gather-able per
+    mesh axis, and passable through jit boundaries unchanged."""
+
+    words: Array   # uint32 (codec.words_len,)
+    lane: Array    # float32 (HEADER_LANE_LEN,)
+
+
+def _index_bits(d: int) -> int:
+    return math.ceil(math.log2(max(d, 2)))
+
+
+# ---------------------------------------------------------------------------
+# value-stream packing (bf16 2-per-word / raw f32 words)
+# ---------------------------------------------------------------------------
+
+
+def pack_values(vals: Array, value_bits: int) -> Array:
+    """f32 values -> uint32 words: bf16 bit patterns packed 2/word when
+    ``value_bits == 16``, raw f32 bit patterns (1/word) when 32."""
+    if value_bits == 16:
+        u16 = jax.lax.bitcast_convert_type(vals.astype(jnp.bfloat16),
+                                           jnp.uint16)
+        return pack_planes(u16.astype(jnp.uint32), 16)
+    return jax.lax.bitcast_convert_type(vals.astype(jnp.float32), jnp.uint32)
+
+
+def unpack_values(words: Array, count: int, value_bits: int) -> Array:
+    """Inverse of :func:`pack_values`; always returns f32."""
+    if value_bits == 16:
+        codes = unpack_planes(words, 16, count).astype(jnp.uint16)
+        return jax.lax.bitcast_convert_type(codes, jnp.bfloat16) \
+                  .astype(jnp.float32)
+    return jax.lax.bitcast_convert_type(words[:count], jnp.float32)
+
+
+def value_words(count: int, value_bits: int) -> int:
+    return packed_words(count, 16) if value_bits == 16 else count
+
+
+# ---------------------------------------------------------------------------
+# stream helpers shared with the collectives
+# ---------------------------------------------------------------------------
+
+
+def topk_segment_words(d: int, s: int, value_bits: int = 16) -> int:
+    """Static word count of one packed (s-)Top-k residual segment."""
+    return packed_words(s, _index_bits(d)) + value_words(s, value_bits)
+
+
+def pack_topk_segment(seg_vals: Array, seg_idx: Array, d: int,
+                      value_bits: int = 16) -> Array:
+    """One MLMC Top-k segment (s values + s positions) as packed words:
+    indices at ceil(log2 d) bits (split planes above 16), values per
+    :func:`pack_values`."""
+    iwords = pack_planes(seg_idx.astype(jnp.uint32), _index_bits(d))
+    return jnp.concatenate([iwords, pack_values(seg_vals, value_bits)])
+
+
+def unpack_topk_segment(words: Array, d: int, s: int,
+                        value_bits: int = 16) -> tuple[Array, Array]:
+    """Inverse of :func:`pack_topk_segment` -> (vals f32, idx int32)."""
+    n_idx = packed_words(s, _index_bits(d))
+    idx = unpack_planes(words[:n_idx], _index_bits(d), s).astype(jnp.int32)
+    vals = unpack_values(words[n_idx:], s, value_bits)
+    return vals, idx
+
+
+def ternary_words(d: int) -> int:
+    """Static word count of one packed {-1,0,+1} plane (2 bits/entry)."""
+    return packed_words(d, 2)
+
+
+def pack_ternary(tern: Array) -> Array:
+    """{-1,0,+1} plane -> 2-bit codes (tern+1) packed 16/word."""
+    codes = (tern.astype(jnp.int32) + 1).astype(jnp.uint32)
+    return pack_planes(codes, 2)
+
+
+def unpack_ternary(words: Array, d: int) -> Array:
+    """Inverse of :func:`pack_ternary` -> int32 in {-1,0,+1}."""
+    return unpack_planes(words, 2, d).astype(jnp.int32) - 1
+
+
+# ---------------------------------------------------------------------------
+# device codecs
+# ---------------------------------------------------------------------------
+
+
+class DeviceCodec:
+    """One compressor family as a jit-traceable fixed-shape wire format.
+
+    ``encode(v, rng) -> (DevicePacket, estimate)`` replays the abstract
+    compressor (same jnp ops, same PRNG draws) and additionally emits the
+    packed packet; ``decode(packet)`` reconstructs the dense estimate from
+    the packet alone.  ``operand_bits()`` is the static per-packet collective
+    operand size (what actually crosses the mesh), reconciled against the
+    `repro.core.bits` ledger by ``reconcile_bounds()``."""
+
+    name: str
+    dim: int
+    words_len: int
+
+    def encode(self, v: Array, rng) -> tuple[DevicePacket, Array]:
+        raise NotImplementedError
+
+    def decode(self, packet: DevicePacket) -> Array:
+        raise NotImplementedError
+
+    def operand_bits(self) -> float:
+        """Bits per packet on the wire: packed words + the header lane."""
+        return 32.0 * (self.words_len + HEADER_LANE_LEN)
+
+    def nominal_bits(self) -> float:
+        """The `repro.core.bits` ledger value for one worker message."""
+        raise NotImplementedError
+
+    def reconcile_bounds(self) -> tuple[float, float]:
+        """Static (lo, hi) range `operand_bits()` must fall in around
+        `nominal_bits()`; the derivation is documented per codec."""
+        n = self.nominal_bits()
+        return n, n
+
+    # shared bound pieces ----------------------------------------------------
+
+    def _lane_slack(self, ledger_header_bits: float) -> float:
+        """Lane bits beyond what the ledger already charges for headers."""
+        return 32.0 * HEADER_LANE_LEN - ledger_header_bits
+
+    def _padding(self, count: int, width: int) -> float:
+        return 32.0 * packed_words(count, width) - float(count * width)
+
+
+class DenseDeviceCodec(DeviceCodec):
+    """Alg. 1 baseline: raw f32 bit patterns (completeness / parity oracle)."""
+
+    def __init__(self, dim: int):
+        self.name, self.dim = "dense", dim
+        self.words_len = dim
+
+    def encode(self, v, rng):
+        del rng
+        est = jnp.asarray(v, jnp.float32)
+        words = jax.lax.bitcast_convert_type(est, jnp.uint32)
+        return DevicePacket(words, header_lane()), est
+
+    def decode(self, packet):
+        return jax.lax.bitcast_convert_type(packet.words, jnp.float32)
+
+    def nominal_bits(self):
+        return bitcost.dense_bits(self.dim)
+
+    def reconcile_bounds(self):
+        n = self.nominal_bits()
+        return n, n + self._lane_slack(0.0)
+
+
+class QSGDDeviceCodec(DeviceCodec):
+    """Norm in the lane + per-entry (level-index | sign) codes."""
+
+    def __init__(self, dim: int, s: int):
+        self.name, self.dim, self.s = "qsgd", dim, s
+        self.width = 1 + math.ceil(math.log2(s + 1))
+        self.words_len = packed_words(dim, self.width)
+
+    def encode(self, v, rng):
+        if rng is None:
+            raise ValueError("QSGD is stochastic; an rng key is required")
+        v = jnp.asarray(v, jnp.float32)
+        # replay QSGD.compress exactly (same ops, same key -> same rounding)
+        norm = jnp.maximum(jnp.linalg.norm(v), _EPS)
+        x = jnp.abs(v) / norm * self.s
+        lo = jnp.floor(x)
+        up = jax.random.bernoulli(rng, x - lo)
+        xi = lo + up.astype(v.dtype)
+        est = norm * jnp.sign(v) * xi / self.s
+        codes = (xi.astype(jnp.uint32) << 1) | (v < 0).astype(jnp.uint32)
+        return DevicePacket(pack_planes(codes, self.width),
+                            header_lane(scale=norm)), est
+
+    def decode(self, packet):
+        codes = unpack_planes(packet.words, self.width, self.dim)
+        xi = (codes >> 1).astype(jnp.float32)
+        sgn = jnp.where((codes & 1) != 0, jnp.float32(-1.0), jnp.float32(1.0))
+        norm = packet.lane[LANE_SCALE]
+        # same association order as `norm * sign(v) * xi / s`
+        return norm * sgn * xi / self.s
+
+    def nominal_bits(self):
+        return bitcost.qsgd_bits(self.dim, self.s)
+
+    def reconcile_bounds(self):
+        n = self.nominal_bits()   # d*width + 32 (norm header)
+        return n, n + self._padding(self.dim, self.width) + \
+            self._lane_slack(32.0)
+
+
+class RTNDeviceCodec(DeviceCodec):
+    """Clip scale in the lane + l-bit grid codes (plain biased RTN)."""
+
+    def __init__(self, dim: int, level: int):
+        self.name, self.dim, self.level = "rtn", dim, level
+        self.words_len = packed_words(dim, level)
+
+    def _grid(self, c):
+        l = jnp.asarray(self.level, jnp.float32)
+        cells = 2.0 ** l - 1.0
+        delta = 2.0 * c / jnp.maximum(cells, 1.0)
+        return delta, jnp.floor(cells / 2.0)
+
+    def encode(self, v, rng):
+        del rng
+        v = jnp.asarray(v, jnp.float32)
+        c = jnp.maximum(jnp.max(jnp.abs(v)), _EPS)
+        delta, m = self._grid(c)
+        q = jnp.clip(jnp.round(v / jnp.maximum(delta, _EPS)), -m, m)
+        est = delta * q
+        codes = (q + m).astype(jnp.uint32)
+        return DevicePacket(pack_planes(codes, self.level),
+                            header_lane(scale=c)), est
+
+    def decode(self, packet):
+        delta, m = self._grid(packet.lane[LANE_SCALE])
+        codes = unpack_planes(packet.words, self.level, self.dim)
+        return delta * (codes.astype(jnp.float32) - m)
+
+    def nominal_bits(self):
+        return bitcost.rtn_bits(self.dim, self.level)
+
+    def reconcile_bounds(self):
+        n = self.nominal_bits()   # level*d + 32
+        return n, n + self._padding(self.dim, self.level) + \
+            self._lane_slack(32.0)
+
+
+class SignSGDDeviceCodec(DeviceCodec):
+    """Mean-|v| scale in the lane + one {-1,0,+1} plane.
+
+    The fixed-shape wire has no room for the byte-codec's variable-length
+    exact-zero side stream, so signs ship at 2 bits/entry (the zero mask
+    rides inline) — documented as +d over the d + 32 ledger."""
+
+    def __init__(self, dim: int):
+        self.name, self.dim = "signsgd", dim
+        self.words_len = ternary_words(dim)
+
+    def encode(self, v, rng):
+        del rng
+        v = jnp.asarray(v, jnp.float32)
+        scale = jnp.mean(jnp.abs(v))
+        sgn = jnp.sign(v)
+        est = sgn * scale
+        return DevicePacket(pack_ternary(sgn), header_lane(scale=scale)), est
+
+    def decode(self, packet):
+        sgn = unpack_ternary(packet.words, self.dim).astype(jnp.float32)
+        return sgn * packet.lane[LANE_SCALE]
+
+    def nominal_bits(self):
+        return bitcost.dense_bits(self.dim, 1) + 32   # d + 32
+
+    def reconcile_bounds(self):
+        n = self.nominal_bits()
+        # documented: +1 bit/entry (inline zero mask) + padding + lane slack
+        return n, n + self.dim + self._padding(self.dim, 2) + \
+            self._lane_slack(32.0)
+
+
+class MLMCFixedDeviceCodec(DeviceCodec):
+    """§3.1 fixed point: shared-scale ternary level-l plane at 2 bits/entry.
+
+    Replays the Lemma-3.3 level draw of the abstract aggregator (same
+    `categorical` call, same key) and ships ``sign(v) * b_l``; the estimate
+    is the bit-plane residual / p_l at EVERY level, i.e. unbiased w.r.t. the
+    ``num_levels``-bit fixed-point grid value of the gradient (the same
+    constraint (b) the int8-psum mesh collective documents)."""
+
+    def __init__(self, dim: int, num_levels: int = 24):
+        self.name, self.dim = "mlmc_fixed", dim
+        self.compressor = FixedPointMultilevel(num_bits=num_levels)
+        self.words_len = ternary_words(dim)
+
+    def encode(self, v, rng):
+        v = jnp.asarray(v, jnp.float32)
+        probs = self.compressor.static_probs()
+        probs = probs / jnp.sum(probs)
+        idx = categorical(rng, probs)
+        level = idx + 1
+        p_l = jnp.maximum(probs[idx], 1e-30)
+        scale = _fixed_scale(v)
+        x = jnp.minimum(jnp.abs(v) / scale, _BELOW_ONE)
+        bit = jnp.mod(jnp.floor(jnp.ldexp(x, level)), 2.0)
+        # same op order as FixedPointMultilevel.residual's plane branch
+        plane = scale * jnp.sign(v) * jnp.ldexp(bit, -level)
+        est = plane / p_l
+        pkt = DevicePacket(pack_ternary(jnp.sign(v) * bit),
+                           header_lane(scale=scale, prob=p_l, level=level))
+        return pkt, est
+
+    def decode(self, packet):
+        tern = unpack_ternary(packet.words, self.dim).astype(jnp.float32)
+        scale = packet.lane[LANE_SCALE]
+        level = packet.lane[LANE_LEVEL].astype(jnp.int32)
+        plane = (scale * tern) * jnp.ldexp(jnp.float32(1.0), -level)
+        return plane / packet.lane[LANE_PROB]
+
+    def nominal_bits(self):
+        return bitcost.fixed_point_mlmc_bits(self.dim,
+                                             self.compressor.num_levels)
+
+    def reconcile_bounds(self):
+        n = self.nominal_bits()   # 2d + 64 + ceil(log2 L)
+        hdr = 64.0 + math.ceil(math.log2(self.compressor.num_levels))
+        return n - hdr, n + self._padding(self.dim, 2) + \
+            self._lane_slack(hdr)
+
+
+class MLMCTopKDeviceCodec(DeviceCodec):
+    """(s-)Top-k MLMC: one magnitude-rank segment, positions packed at
+    ceil(log2 d) bits and values in bf16 (2/word) by default.
+
+    Level/p_l are drawn through the real `mlmc_estimate` (identical
+    categorical call), so against the abstract aggregator the decoded
+    direction is exact for ``value_bits=32`` and within bf16 rounding of
+    the residual values for the default ``value_bits=16``."""
+
+    def __init__(self, dim: int, s: int, *, adaptive: bool = True,
+                 value_bits: int = 16, name: str = "mlmc_topk"):
+        if value_bits not in (16, 32):
+            raise ValueError(f"value_bits must be 16 or 32, got {value_bits}")
+        self.name, self.dim, self.adaptive = name, dim, adaptive
+        self.value_bits = value_bits
+        self.compressor = STopKMultilevel(d=dim, s=min(s, dim))
+        self.words_len = topk_segment_words(dim, self.compressor.s, value_bits)
+
+    def encode(self, v, rng):
+        from repro.core.mlmc import mlmc_estimate
+
+        v = jnp.asarray(v, jnp.float32)
+        d, s = self.dim, self.compressor.s
+        est = mlmc_estimate(self.compressor, v, rng, adaptive=self.adaptive)
+        idx0 = est.level - 1
+        L = self.compressor.num_levels
+        order = jnp.argsort(-jnp.abs(v))
+        sv = jnp.pad(v[order], (0, L * s - d))
+        so = jnp.pad(order, (0, L * s - d), constant_values=d - 1)
+        seg_vals = jax.lax.dynamic_slice(sv, (idx0 * s,), (s,)) / est.prob
+        seg_idx = jax.lax.dynamic_slice(so, (idx0 * s,), (s,))
+        seg_vals = jnp.where(jnp.arange(s) + idx0 * s < d, seg_vals, 0.0)
+        pkt = DevicePacket(
+            pack_topk_segment(seg_vals, seg_idx, d, self.value_bits),
+            header_lane(prob=est.prob, level=est.level))
+        return pkt, est.estimate
+
+    def decode(self, packet):
+        vals, idx = unpack_topk_segment(packet.words, self.dim,
+                                        self.compressor.s, self.value_bits)
+        return jnp.zeros((self.dim,), jnp.float32).at[idx].add(vals)
+
+    def nominal_bits(self):
+        return bitcost.topk_mlmc_bits(self.dim, self.compressor.s,
+                                      value_bits=self.value_bits)
+
+    def reconcile_bounds(self):
+        s = self.compressor.s
+        n = self.nominal_bits()   # s*(vb + ceil(log2 d)) + ceil(log2 L)
+        hdr = math.ceil(math.log2(max(self.compressor.num_levels, 2)))
+        pad = self._padding(s, _index_bits(self.dim)) + \
+            (32.0 * value_words(s, self.value_bits) - s * self.value_bits)
+        return n - hdr, n + pad + self._lane_slack(float(hdr))
+
+
+# ---------------------------------------------------------------------------
+# registry + jit-native aggregator
+# ---------------------------------------------------------------------------
+
+
+def make_device_codec(name: str, dim: int, *, k_fraction: float = 0.01,
+                      s: int = 1, rtn_level: int = 4, qsgd_levels: int = 2,
+                      fixed_levels: int = 24,
+                      topk_value_bits: int = 16) -> DeviceCodec:
+    """Build the device-wire codec matching ``make_aggregator(name, dim)``.
+
+    Only families with a fixed-shape packed form are registered; the
+    variable-length codecs (topk/randk/natural/mlmc_float/mlmc_rtn/EF21)
+    stay on the host byte wire (``wire="packed"``)."""
+    k = max(1, int(round(k_fraction * dim)))
+    if name == "dense":
+        return DenseDeviceCodec(dim)
+    if name == "qsgd":
+        return QSGDDeviceCodec(dim, qsgd_levels)
+    if name == "rtn":
+        return RTNDeviceCodec(dim, rtn_level)
+    if name == "signsgd":
+        return SignSGDDeviceCodec(dim)
+    if name == "mlmc_fixed":
+        return MLMCFixedDeviceCodec(dim, fixed_levels)
+    if name in ("mlmc_topk", "mlmc_topk_static", "mlmc_stopk"):
+        from repro.core.aggregators import mlmc_topk_segment
+
+        return MLMCTopKDeviceCodec(
+            dim, mlmc_topk_segment(name, k, s),
+            adaptive=name != "mlmc_topk_static",
+            value_bits=topk_value_bits, name=name)
+    raise ValueError(f"no device-wire codec for {name!r}")
+
+
+DEVICE_WIRE_METHODS = ("dense", "qsgd", "rtn", "signsgd", "mlmc_fixed",
+                       "mlmc_topk", "mlmc_topk_static", "mlmc_stopk")
+
+
+def device_aggregator(name: str, dim: int, **codec_kw):
+    """The ``wire="device"`` branch of `make_aggregator`: every worker
+    gradient is encoded to a fixed-shape `DevicePacket`, "shipped" as plain
+    arrays, decoded, and averaged — all inside one jit, with bits accounted
+    from the static packet operand size."""
+    from repro.core.aggregators import AggregateOut, Aggregator
+
+    codec = make_device_codec(name, dim, **codec_kw)
+
+    def agg(worker_grads, rng, state):
+        del state
+        m = worker_grads.shape[0]
+        keys = jax.random.split(rng, m)
+
+        def one(v, key):
+            packet, _ = codec.encode(v, key)
+            return codec.decode(packet)
+
+        decoded = jax.vmap(one)(worker_grads, keys)
+        bits = jnp.asarray(m * codec.operand_bits(), jnp.float32)
+        return AggregateOut(jnp.mean(decoded, axis=0), None, bits)
+
+    return Aggregator(name, agg)

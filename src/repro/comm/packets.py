@@ -148,6 +148,44 @@ class Packet:
         return cls(header, tuple(streams))
 
 
+# ---------------------------------------------------------------------------
+# device header lane
+# ---------------------------------------------------------------------------
+#
+# The jit-native device wire (`repro.comm.device_wire`) cannot carry a Python
+# `Header`; its packets ship a small fixed float32 LANE next to the packed
+# uint32 payload.  Slot order is part of the wire format (append-only, like
+# CODEC_IDS).  Levels/counts ride as exact f32 integers (< 2^24).
+
+#: header-lane slot indices (append-only)
+LANE_SCALE, LANE_PROB, LANE_LEVEL, LANE_META = 0, 1, 2, 3
+HEADER_LANE_LEN = 4
+
+
+def header_lane(*, scale=0.0, prob=1.0, level=0, meta=0.0):
+    """Build the fixed (HEADER_LANE_LEN,) f32 header lane of a DevicePacket.
+
+    jit-traceable: any argument may be a traced jnp scalar."""
+    import jax.numpy as jnp
+
+    return jnp.stack([
+        jnp.asarray(scale, jnp.float32),
+        jnp.asarray(prob, jnp.float32),
+        jnp.asarray(level, jnp.float32),
+        jnp.asarray(meta, jnp.float32),
+    ])
+
+
+def lane_to_header(codec: str, dim: int, lane: np.ndarray, *,
+                   nnz: int = 0, flags: int = 0) -> Header:
+    """Host-side bridge: a device header lane as a byte-wire `Header` (used
+    by tests and telemetry to cross-check the two packet families)."""
+    lane = np.asarray(lane, np.float32)
+    return Header(codec, dim, level=int(lane[LANE_LEVEL]), nnz=nnz,
+                  scale=float(lane[LANE_SCALE]), prob=float(lane[LANE_PROB]),
+                  flags=flags)
+
+
 def f32_stream(name: str, values: np.ndarray) -> Stream:
     """Raw float32 values as a width-32 stream (bit patterns preserved)."""
     v = np.ascontiguousarray(np.asarray(values, np.float32))

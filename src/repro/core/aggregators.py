@@ -105,6 +105,12 @@ def make_aggregator(
       `repro.comm` packet, shipped through ``transport`` (loopback unless
       given), decoded server-side; bits are *measured* from the packets.
       Host-side Python — for verification and honest telemetry.
+    * ``"device"`` — every worker estimate is bit-packed into a fixed-shape
+      `repro.comm.device_wire.DevicePacket` and decoded back, entirely
+      inside jit (no host callbacks); bits are the measured static packet
+      operand sizes.  Supported for the fixed-shape families
+      (`DEVICE_WIRE_METHODS`); see device_wire for the two documented
+      deviations (bf16 mlmc_topk values, grid-value mlmc_fixed).
     """
     if wire == "packed":
         from repro.comm import packed_aggregator
@@ -113,6 +119,15 @@ def make_aggregator(
             name, dim, transport=transport, k_fraction=k_fraction, s=s,
             rtn_level=rtn_level, qsgd_levels=qsgd_levels,
             momentum_beta=momentum_beta, fixed_levels=fixed_levels)
+    if wire == "device":
+        from repro.comm.device_wire import device_aggregator
+
+        if transport is not None:
+            raise ValueError("wire='device' ships arrays through the mesh, "
+                             "not a host Transport")
+        return device_aggregator(
+            name, dim, k_fraction=k_fraction, s=s, rtn_level=rtn_level,
+            qsgd_levels=qsgd_levels, fixed_levels=fixed_levels)
     if wire != "abstract":
         raise ValueError(f"unknown wire mode {wire!r}")
     k = max(1, int(round(k_fraction * dim)))
@@ -185,8 +200,11 @@ def make_aggregator(
         comp = RTNMultilevel()
         def f(v, key):
             est = mlmc_estimate(comp, v, key, adaptive=True)   # Alg. 3
+            # honest per-draw wire cost ~(l+2) bits/entry, not the former
+            # 2d fixed-point analogy (see bits.rtn_mlmc_bits)
             return est.estimate, jnp.asarray(
-                bitcost.fixed_point_mlmc_bits(dim, comp.num_levels), jnp.float32)
+                bitcost.rtn_mlmc_bits(dim, est.level, comp.num_levels),
+                jnp.float32)
         return Aggregator(name, _per_worker(f))
 
     if name == "natural":

@@ -46,6 +46,42 @@ def topk_mlmc_bits(d: int, s: int = 1, value_bits: int = 32,
     return s * (value_bits + index_bits) + math.ceil(math.log2(num_levels))
 
 
+def rtn_mlmc_bits(d: int, level, num_levels: int = 8,
+                  header_bits: int = 64):
+    """Honest adaptive MLMC-RTN wire cost for a SAMPLED level (App. G.2).
+
+    The RTN residual ``C^l - C^{l-1}`` has no sparse/bit-plane closed form
+    (§3.2: no importance-sampling interpretation), so the wire ships the
+    level-l grid codes (``max(l, 1)`` bits/entry) plus, for ``l > 1``, a
+    {-1,0,+1} refinement correction (2 bits/entry); the top level
+    (``C^L = id``) ships the dense f32 residual.  This replaces the former
+    2d fixed-point-analogy entry, which was optimistic for every ``l > 1``
+    — the deviation `repro.comm.codec.MLMCRTNCodec` measured.
+
+    ``level`` may be a traced jnp scalar (the adaptive Alg. 3 draw); the
+    result is then a traced f32 scalar.  Wrap in ``float()`` for a concrete
+    level."""
+    import jax.numpy as jnp
+
+    lvl = jnp.asarray(level, jnp.float32)
+    per_entry = jnp.where(
+        lvl >= num_levels, 32.0,
+        jnp.maximum(lvl, 1.0) + jnp.where(lvl > 1.0, 2.0, 0.0))
+    hdr = header_bits + math.ceil(math.log2(max(num_levels, 2)))
+    return per_entry * d + hdr
+
+
+def rtn_mlmc_expected_bits(d: int, num_levels: int = 8,
+                           header_bits: int = 64) -> float:
+    """Expectation of :func:`rtn_mlmc_bits` under the family's static
+    Lemma-3.3 distribution ``p_l ∝ 2^{-l}`` (the reference point the packet
+    reconciliation centres on when no level has been sampled yet)."""
+    z = sum(2.0 ** -l for l in range(1, num_levels + 1))
+    return sum(
+        (2.0 ** -l / z) * float(rtn_mlmc_bits(d, l, num_levels, header_bits))
+        for l in range(1, num_levels + 1))
+
+
 def topk_bits(k: int, d: int, value_bits: int = 32) -> float:
     """Biased Top-k: k values + k indices."""
     return k * (value_bits + math.ceil(math.log2(max(d, 2))))

@@ -128,3 +128,62 @@ def unpack_bits(words: Array, width: int, count: int) -> Array:
     planar = unpack_words_2d(w2d, width=width, interpret=_interpret())
     codes = planar.reshape(rows, fields, 128).transpose(0, 2, 1).reshape(-1)
     return codes[:count]
+
+
+# ---------------------------------------------------------------------------
+# split-plane packing (gather-friendly: every stream stays word-aligned)
+# ---------------------------------------------------------------------------
+#
+# `pack_bits` wastes a full word per field once width > 16 (32 // width = 1),
+# which is exactly the regime of Top-k index streams: ceil(log2 d) is 17..25
+# bits for gradient buckets of 2^17..2^25 entries.  Rather than letting
+# fields straddle word boundaries (which would force bit-offset fixup after
+# an all-gather concatenates per-shard buffers), a wide field is split into
+# bit PLANES that each pack an integral number of fields per word with the
+# existing kernels: a 20-bit index becomes a 16-bit low plane (2/word) plus
+# a 4-bit high plane (8/word) — 20 effective bits/entry, fixed static word
+# counts, and packed buffers from different shards concatenate verbatim.
+
+
+def plane_widths(width: int) -> tuple[int, ...]:
+    """Plane decomposition of a field width: one plane for widths that pack
+    natively (<= 16, or 32 = passthrough); 16-bit low + (width-16)-bit high
+    planes for 17..31."""
+    if not 1 <= width <= 32:
+        raise ValueError(f"field width must be in [1, 32], got {width}")
+    if width <= 16 or width == 32:
+        return (width,)
+    return (16, width - 16)
+
+
+def packed_words(count: int, width: int) -> int:
+    """Static uint32 word count of `pack_planes(codes, width)` for ``count``
+    fields (the fixed wire shape the device packets are built around)."""
+    return sum(_num_words(count, w) for w in plane_widths(width))
+
+
+def pack_planes(codes: Array, width: int) -> Array:
+    """Pack (N,) unsigned ``width``-bit codes into `packed_words(N, width)`
+    uint32 words, splitting widths 17..31 into word-aligned bit planes
+    (low plane first).  Identical to :func:`pack_bits` for widths <= 16/32."""
+    codes = jnp.asarray(codes, jnp.uint32)
+    planes = plane_widths(width)
+    if len(planes) == 1:
+        return pack_bits(codes, width)
+    lo_w, hi_w = planes
+    lo = codes & jnp.uint32((1 << lo_w) - 1)
+    hi = codes >> jnp.uint32(lo_w)
+    return jnp.concatenate([pack_bits(lo, lo_w), pack_bits(hi, hi_w)])
+
+
+def unpack_planes(words: Array, width: int, count: int) -> Array:
+    """Inverse of :func:`pack_planes`: (W,) words -> (count,) uint32 codes."""
+    words = jnp.asarray(words, jnp.uint32)
+    planes = plane_widths(width)
+    if len(planes) == 1:
+        return unpack_bits(words, width, count)
+    lo_w, hi_w = planes
+    n_lo = _num_words(count, lo_w)
+    lo = unpack_bits(words[:n_lo], lo_w, count)
+    hi = unpack_bits(words[n_lo:], hi_w, count)
+    return lo | (hi << jnp.uint32(lo_w))

@@ -89,3 +89,28 @@ def unpack_bits_ref(words: Array, width: int, count: int) -> Array:
     shifts = (jnp.arange(fields, dtype=jnp.uint32) * width)[None, :]
     codes = (words[:, None] >> shifts) & mask
     return codes.reshape(-1)[:count]
+
+
+def pack_planes_ref(codes: Array, width: int) -> Array:
+    """Oracle for `pack.pack_planes`: widths 17..31 split into a 16-bit low
+    plane + (width-16)-bit high plane, each packed word-aligned."""
+    codes = jnp.asarray(codes, jnp.uint32)
+    if width <= 16 or width == 32:
+        return pack_bits_ref(codes, width)
+    lo_w = 16
+    lo = codes & jnp.uint32((1 << lo_w) - 1)
+    hi = codes >> jnp.uint32(lo_w)
+    return jnp.concatenate([pack_bits_ref(lo, lo_w),
+                            pack_bits_ref(hi, width - lo_w)])
+
+
+def unpack_planes_ref(words: Array, width: int, count: int) -> Array:
+    """Inverse of pack_planes_ref."""
+    words = jnp.asarray(words, jnp.uint32)
+    if width <= 16 or width == 32:
+        return unpack_bits_ref(words, width, count)
+    lo_w, hi_w = 16, width - 16
+    n_lo = -(-count // (32 // lo_w))
+    lo = unpack_bits_ref(words[:n_lo], lo_w, count)
+    hi = unpack_bits_ref(words[n_lo:], hi_w, count)
+    return lo | (hi << jnp.uint32(lo_w))

@@ -36,9 +36,11 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch-per-worker", type=int, default=4)
     ap.add_argument("--wire", default="abstract",
-                    choices=["abstract", "packed"],
-                    help="sim-mode aggregation substrate: abstract in-memory "
-                         "estimates, or byte-exact repro.comm packets")
+                    choices=["abstract", "packed", "device"],
+                    help="aggregation substrate: abstract in-memory "
+                         "estimates, byte-exact host-side repro.comm "
+                         "packets (sim only), or jit-native fixed-shape "
+                         "device packets (sim + mesh)")
     ap.add_argument("--transport", default="loopback",
                     choices=["loopback", "parameter_server", "ring",
                              "hierarchical"],
@@ -106,9 +108,10 @@ def main() -> None:
         return
 
     # --- mesh mode ---------------------------------------------------------
-    if args.wire != "abstract":
-        print("note: --wire applies to sim mode only; mesh mode realizes "
-              "the wire as actual collectives (see repro.sharding)")
+    if args.wire == "packed":
+        raise SystemExit("--wire packed is host-side Python and applies to "
+                         "sim mode only; use --wire device for packed "
+                         "collective operands on the mesh")
     from repro.configs.base import InputShape
     from repro.launch.mesh import make_mesh
     from repro.train import step as step_mod
@@ -128,7 +131,8 @@ def main() -> None:
     opt = sgd(args.lr)
     fn, _, _ = step_mod.make_train_step(model, mesh, opt, shape=shape,
                                         method=args.method,
-                                        k_fraction=args.k_fraction)
+                                        k_fraction=args.k_fraction,
+                                        wire=args.wire)
     params = model.init(jax.random.PRNGKey(0))
     opt_state = opt.init(params)
     key = jax.random.PRNGKey(1)
@@ -141,7 +145,8 @@ def main() -> None:
     if cfg.family == "audio":
         batch["source"] = jnp.zeros(
             (gb, cfg.encoder.max_source_len, cfg.encoder.d_model))
-    print(f"mesh: {cfg.name} {mesh.devices.shape} method={args.method}")
+    print(f"mesh: {cfg.name} {mesh.devices.shape} method={args.method} "
+          f"wire={args.wire}")
     for t in range(args.steps):
         params, opt_state, metrics = fn(params, opt_state, batch,
                                         jax.random.fold_in(key, t))

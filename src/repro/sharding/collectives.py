@@ -3,13 +3,13 @@ actual mesh communication inside shard_map.
 
 On a TPU mesh there is no parameter server: "each machine sends its
 compressed gradient to the server" (Alg. 2) becomes "each data shard feeds
-its MLMC residual into a collective over the data axes".  Three schemes:
+its MLMC residual into a collective over the data axes".  Core schemes:
 
 * ``dense``            — plain f32/bf16 psum (Alg. 1).  Operand bytes: 4d.
 * ``mlmc_topk``        — each shard all-gathers only its residual segment
-  (s values + s int32 indices) and scatter-adds locally.  Operand bytes on
-  the wire: M·s·8  ≪  4d.  Levels are drawn INDEPENDENTLY per shard
-  (fold_in of the data index) exactly as Alg. 2/3 prescribe.
+  (s values + s indices) and scatter-adds locally.  Levels are drawn
+  INDEPENDENTLY per shard (fold_in of the data index) exactly as Alg. 2/3
+  prescribe.
 * ``mlmc_fixed``       — the level-l bit-plane residual is a ternary tensor
   {-1,0,+1}: psum it as **int8** (exact for M ≤ 127) and rescale locally.
   Operand bytes: 1d (4x less than dense).  Constraints vs the paper, both
@@ -18,9 +18,32 @@ its MLMC residual into a collective over the data axes".  Three schemes:
   noise just stops averaging down in M), because a psum cannot apply
   per-shard scales; (b) the estimator is unbiased w.r.t. the 24-bit
   fixed-point grid value of the gradient (grid error ≤ 2^-24·max|g|).
+* ``qsgd`` / ``rtn`` / ``signsgd`` — per-shard single-level baselines: each
+  shard compresses locally and the compressed estimates are gathered and
+  averaged (the gather keeps the abstract and device substrates bitwise
+  comparable; see below).
+
+Wire substrates (``wire=``):
+
+* ``"abstract"`` (default) — residual segments / estimates cross the
+  collectives as plain f32/int32/int8 operands; bits are *accounted* from
+  the `repro.core.bits` formulas.
+* ``"device"`` — operands are bit-packed ON-DEVICE before the collective
+  using the `repro.comm.device_wire` fixed-shape packets (Pallas pack
+  kernels, no host callbacks, traces under jit + shard_map):
+  - ``mlmc_topk`` gathers indices at ceil(log2 d) bits (split planes) and
+    bf16 values packed 2-per-word instead of raw int32/f32 — matches the
+    abstract direction exactly when the ``bf16_wire`` perf flag is set
+    (same value rounding), and within bf16 rounding otherwise;
+  - ``mlmc_fixed`` gathers the ternary plane packed at 2 bits/entry
+    (the gather variant the ring/hierarchical topologies need; the int8
+    psum remains the abstract substrate) — bit-identical direction;
+  - ``qsgd`` / ``rtn`` / ``signsgd`` gather packed code words + the f32
+    header lane and decode per worker — bit-identical direction.
+  Bits are the *measured* static packet operand sizes.
 
 Every function takes and returns a FLAT f32 vector (per-leaf plumbing lives
-in `repro.train.step`) and also returns the idealized wire-bit count.
+in `repro.train.step`) and also returns the realized wire-bit count.
 """
 
 from __future__ import annotations
@@ -37,14 +60,12 @@ from repro.sharding.ctx import ShardCtx
 
 Array = jax.Array
 
+WIRES = ("abstract", "device")
 
-def _gather_axes(x: Array, ctx: ShardCtx) -> Array:
-    """all_gather (stacking) over all data axes: (...,) -> (M, ...)."""
-    axes = ctx.data_axes()
-    out = x[None]
-    for a in reversed(axes):
-        out = lax.all_gather(out, a, axis=0, tiled=True)
-    return out
+
+def _check_wire(wire: str) -> None:
+    if wire not in WIRES:
+        raise ValueError(f"unknown collective wire {wire!r} (one of {WIRES})")
 
 
 def dense_allreduce(flat: Array, ctx: ShardCtx) -> tuple[Array, Array]:
@@ -56,11 +77,16 @@ def dense_allreduce(flat: Array, ctx: ShardCtx) -> tuple[Array, Array]:
 
 
 def mlmc_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
-                        *, s: int) -> tuple[Array, Array]:
+                        *, s: int, wire: str = "abstract"
+                        ) -> tuple[Array, Array]:
     """Adaptive MLMC s-Top-k (Alg. 3) with a sparse all-gather collective.
 
     One argsort serves both the Lemma-3.4 probabilities (segment norms of
-    the sorted vector) and the residual extraction (ranks [(l-1)s, ls))."""
+    the sorted vector) and the residual extraction (ranks [(l-1)s, ls)).
+
+    ``wire="device"``: the segment crosses the gather bit-packed — indices
+    at ceil(log2 d) bits, values in bf16 2-per-word (`repro.comm.
+    device_wire.pack_topk_segment`)."""
     d = flat.shape[0]
     s = min(s, d)
     L = math.ceil(d / s)
@@ -86,28 +112,49 @@ def mlmc_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
 
     from repro import perf
 
-    value_bits = 32
-    if perf.enabled("bf16_wire"):
-        # §Perf `bf16_wire`: residual values cross the gather in bf16
-        # (8 -> 6 bytes/entry with the int32 index)
-        seg_vals = seg_vals.astype(jnp.bfloat16)
-        value_bits = 16
-    g_vals = _gather_axes(seg_vals, ctx).reshape(-1)              # (M*s,)
-    g_idx = _gather_axes(seg_idx, ctx).reshape(-1)
+    if wire == "device":
+        from repro.comm.device_wire import (pack_topk_segment,
+                                            topk_segment_words,
+                                            unpack_topk_segment)
+
+        # bf16 values 2/word + ceil(log2 d)-bit split-plane indices: the
+        # same rounding the abstract path applies under `bf16_wire`
+        words = pack_topk_segment(seg_vals, seg_idx, d, 16)
+        g_words = ctx.gather_data_stack(words)                # (M, W) uint32
+        g_vals, g_idx = jax.vmap(
+            lambda w: unpack_topk_segment(w, d, s, 16))(g_words)
+        g_vals, g_idx = g_vals.reshape(-1), g_idx.reshape(-1)
+        bits = jnp.asarray(
+            ctx.dp_total * 32.0 * topk_segment_words(d, s, 16), jnp.float32)
+    else:
+        value_bits = 32
+        if perf.enabled("bf16_wire"):
+            # §Perf `bf16_wire`: residual values cross the gather in bf16
+            # (8 -> 6 bytes/entry with the int32 index)
+            seg_vals = seg_vals.astype(jnp.bfloat16)
+            value_bits = 16
+        g_vals = ctx.gather_data_stack(seg_vals).reshape(-1)      # (M*s,)
+        g_idx = ctx.gather_data_stack(seg_idx).reshape(-1)
+        bits = jnp.asarray(
+            ctx.dp_total * bitcost.topk_mlmc_bits(d, s,
+                                                  value_bits=value_bits),
+            jnp.float32)
+
     dense = jnp.zeros((d,), flat.dtype).at[g_idx].add(
         g_vals.astype(flat.dtype))
     mean = dense / ctx.dp_total
-
-    bits = jnp.asarray(
-        ctx.dp_total * bitcost.topk_mlmc_bits(d, s, value_bits=value_bits),
-        jnp.float32)
     return mean, bits
 
 
 def mlmc_fixedpoint_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
-                              *, num_levels: int = 24
+                              *, num_levels: int = 24, wire: str = "abstract"
                               ) -> tuple[Array, Array]:
-    """Fixed-point MLMC (Alg. 2, Lemma 3.3) with an int8 psum collective."""
+    """Fixed-point MLMC (Alg. 2, Lemma 3.3) with an int8 psum collective.
+
+    ``wire="device"``: the ternary plane crosses a gather packed at 2
+    bits/entry instead of the int8 psum — 4x fewer operand bytes per shard,
+    and the form ring/hierarchical topologies forward verbatim.  The summed
+    integers are identical, so the direction is bit-identical to the psum."""
     d = flat.shape[0]
     L = num_levels
 
@@ -124,29 +171,81 @@ def mlmc_fixedpoint_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
     bit = jnp.mod(jnp.floor(jnp.ldexp(x, level)), 2.0)
     tern = (jnp.sign(flat) * bit).astype(jnp.int8)
 
-    summed = ctx.psum_data(tern)                                  # int8 wire
+    if wire == "device":
+        from repro.comm.device_wire import (pack_ternary, ternary_words,
+                                            unpack_ternary)
+
+        words = pack_ternary(tern)                           # 2 bits/entry
+        g_words = ctx.gather_data_stack(words)               # (M, W) uint32
+        summed = jnp.sum(jax.vmap(lambda w: unpack_ternary(w, d))(g_words),
+                         axis=0)
+        bits = jnp.asarray(
+            ctx.dp_total * (32.0 * ternary_words(d) + 64.0), jnp.float32)
+    else:
+        summed = ctx.psum_data(tern)                         # int8 wire
+        bits = jnp.asarray(
+            ctx.dp_total * bitcost.fixed_point_mlmc_bits(d, L), jnp.float32)
+
     scale = gmax * jnp.ldexp(1.0, -level) / (p_l * ctx.dp_total)
     mean = summed.astype(jnp.float32) * scale
-
-    bits = jnp.asarray(
-        ctx.dp_total * bitcost.fixed_point_mlmc_bits(d, L), jnp.float32)
     return mean, bits
 
 
-AGG_METHODS = ("dense", "mlmc_topk", "mlmc_fixed")
+def _codec_allreduce(flat: Array, ctx: ShardCtx, rng: Array, codec,
+                     wire: str) -> tuple[Array, Array]:
+    """Shared path for the per-shard single-level baselines (qsgd / rtn /
+    signsgd): compress locally with a `repro.comm.device_wire` codec, gather
+    either the dense estimates (abstract) or the packed words + header lane
+    (device), and average the per-worker estimates.  Both substrates apply
+    the identical `jnp.mean` over the identical per-worker values, so the
+    directions match bitwise."""
+    from repro.comm.device_wire import DevicePacket
+
+    rng = jax.random.fold_in(rng, ctx.data_index())  # per-shard randomness
+    packet, est = codec.encode(flat, rng)
+    if wire == "device":
+        g_words = ctx.gather_data_stack(packet.words)
+        g_lane = ctx.gather_data_stack(packet.lane)
+        ests = jax.vmap(
+            lambda w, ln: codec.decode(DevicePacket(w, ln)))(g_words, g_lane)
+        bits = jnp.asarray(ctx.dp_total * codec.operand_bits(), jnp.float32)
+    else:
+        ests = ctx.gather_data_stack(est)
+        bits = jnp.asarray(ctx.dp_total * codec.nominal_bits(), jnp.float32)
+    return jnp.mean(ests, axis=0), bits
+
+
+AGG_METHODS = ("dense", "mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd")
+
+#: methods with a `wire="device"` packed-collective branch
+DEVICE_METHODS = ("mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd")
 
 
 def compressed_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
                          method: str, *, k_fraction: float = 0.001,
-                         min_segment: int = 8) -> tuple[Array, Array]:
+                         min_segment: int = 8, wire: str = "abstract",
+                         qsgd_levels: int = 2, rtn_level: int = 4
+                         ) -> tuple[Array, Array]:
     """Dispatch.  For mlmc_topk the per-leaf segment budget is
     ``s = max(min_segment, k_fraction * d)`` — one MLMC residual segment of
-    roughly the Top-k budget the paper uses (k ∈ {0.001n .. 0.5n})."""
+    roughly the Top-k budget the paper uses (k ∈ {0.001n .. 0.5n}).
+
+    ``wire`` selects the collective substrate (see module docstring):
+    ``"abstract"`` ships raw f32/int32/int8 operands, ``"device"``
+    bit-packs operands on-device before the collective."""
+    _check_wire(wire)
     if method == "dense":
         return dense_allreduce(flat, ctx)
     if method == "mlmc_topk":
         s = max(min_segment, int(round(k_fraction * flat.shape[0])))
-        return mlmc_topk_allreduce(flat, ctx, rng, s=s)
+        return mlmc_topk_allreduce(flat, ctx, rng, s=s, wire=wire)
     if method == "mlmc_fixed":
-        return mlmc_fixedpoint_allreduce(flat, ctx, rng)
+        return mlmc_fixedpoint_allreduce(flat, ctx, rng, wire=wire)
+    if method in ("qsgd", "rtn", "signsgd"):
+        from repro.comm.device_wire import make_device_codec
+
+        codec = make_device_codec(method, flat.shape[0],
+                                  qsgd_levels=qsgd_levels,
+                                  rtn_level=rtn_level)
+        return _codec_allreduce(flat, ctx, rng, codec, wire)
     raise ValueError(f"unknown aggregation method {method!r}")

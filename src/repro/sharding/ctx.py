@@ -117,6 +117,19 @@ class ShardCtx:
             x = lax.all_gather(x, a, axis=axis, tiled=tiled)
         return x
 
+    def gather_data_stack(self, x):
+        """Stacking all_gather over all data axes: (...,) -> (dp_total, ...).
+
+        Worker order is pod-major (matches `data_index`).  This is the wire
+        primitive of the compressed collectives: per-shard payloads — raw
+        residual segments or the packed uint32 word buffers / f32 header
+        lanes of a `repro.comm.device_wire.DevicePacket` — cross the mesh as
+        one stacked operand, so the per-worker bytes ARE the operand bytes."""
+        out = x[None]
+        for a in reversed(self.data_axes()):
+            out = lax.all_gather(out, a, axis=0, tiled=True)
+        return out
+
     def ppermute_model(self, x, perm):
         if self.model_axis is None:
             return x

@@ -45,6 +45,10 @@ class Trainer:
       num_workers: M.
       method: aggregator registry key (see repro.core.aggregators).
       optimizer: from repro.optim (default SGD, as in the paper).
+      wire: aggregation substrate — "abstract" (in-memory estimates),
+        "packed" (host-side byte packets through a Transport), or "device"
+        (jit-native fixed-shape packed packets, repro.comm.device_wire;
+        the whole step stays jitted like the abstract path).
     """
 
     def __init__(self, loss_fn: Callable, params: PyTree, *,

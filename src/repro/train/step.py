@@ -112,8 +112,12 @@ def model_param_specs(model: Model, ctx: ShardCtx) -> PyTree:
 
 
 def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
-                        method: str, k_fraction: float):
-    """Per-leaf compressed mean over the data axes.  Returns (grads, bits)."""
+                        method: str, k_fraction: float,
+                        wire: str = "abstract"):
+    """Per-leaf compressed mean over the data axes.  Returns (grads, bits).
+
+    ``wire="device"`` routes every leaf's collective through the bit-packed
+    `repro.comm.device_wire` operands (see `repro.sharding.collectives`)."""
     fsdp_map = (_fsdp_axes_cached(cfg, ctx.dp, ctx.tp)
                 if cfg.fsdp and ctx.dp > 1 else
                 jax.tree.map(lambda _: -1, grads))
@@ -132,10 +136,10 @@ def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
             # compress only the cross-pod hop.
             flat = flat / ctx.dp
             out, b = compressed_allreduce(flat, pod_ctx, key, method,
-                                          k_fraction=k_fraction)
+                                          k_fraction=k_fraction, wire=wire)
         else:
             out, b = compressed_allreduce(flat, ctx, key, method,
-                                          k_fraction=k_fraction)
+                                          k_fraction=k_fraction, wire=wire)
         outs.append(out.reshape(leaf.shape))
         bits = bits + b
     return jax.tree_util.tree_unflatten(treedef, outs), bits
@@ -148,9 +152,13 @@ def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
 
 def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
                     shape: InputShape, method: str = "mlmc_topk",
-                    k_fraction: float = 0.001, remat: bool = True):
+                    k_fraction: float = 0.001, remat: bool = True,
+                    wire: str = "abstract"):
     """Returns (jitted_fn, in_specs, out_specs).  fn(params, opt_state,
-    batch, rng) -> (params, opt_state, metrics)."""
+    batch, rng) -> (params, opt_state, metrics).
+
+    ``wire``: collective substrate for the gradient aggregation —
+    ``"abstract"`` (raw operands) or ``"device"`` (bit-packed operands)."""
     from repro.launch.mesh import ctx_for_mesh
 
     ctx = ctx_for_mesh(mesh)
@@ -167,7 +175,7 @@ def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
         grads, bits = aggregate_gradients(grads, ctx, rng, cfg, method,
-                                          k_fraction)
+                                          k_fraction, wire)
         new_params, new_opt = optimizer.apply(grads, opt_state, params)
         out_metrics = {
             "loss": ctx.pmean_data(loss),

@@ -63,6 +63,113 @@ def check_collectives():
         print(f"PASS {method}_unbiased rel={rel:.3f}")
 
 
+def check_device_wire():
+    """Cross-wire parity matrix on a real 8-device mesh: for every method
+    with a device branch, wire="device" must equal wire="abstract" EXACTLY
+    under jit (mlmc_topk with the bf16_wire flag so both substrates apply
+    identical value rounding), its measured bits must reconcile with the
+    `repro.core.bits` ledger inside the documented per-codec bounds, and
+    the traced program must contain no host callbacks."""
+    import math
+
+    # set BEFORE any trace: perf flags are read at trace time.  With the
+    # flag on, the abstract mlmc_topk gather also ships bf16 values, making
+    # the packed device segment bit-identical.
+    os.environ["REPRO_OPT"] = "bf16_wire"
+
+    from repro.comm.device_wire import make_device_codec
+    from repro.core import bits as bitcost
+    from repro.kernels.pack import packed_words
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    ctx = ctx_for_mesh(mesh)
+    d, M = 512, 4
+    decay = jnp.exp(-0.02 * jnp.arange(d))
+    g = jax.random.normal(jax.random.PRNGKey(0), (2, 2, d)) * decay
+    k_fraction = 0.05
+    s = max(8, int(round(k_fraction * d)))
+
+    def build(method, wire):
+        def body(gs, rng):
+            return compressed_allreduce(gs.reshape(-1), ctx, rng, method,
+                                        k_fraction=k_fraction, wire=wire)
+        return jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(P("pod", "data", None), P()),
+            out_specs=(P(), P()), check_vma=False))
+
+    def measured_bounds(method):
+        """(lo, hi) for the per-worker device operand bits, documented per
+        codec (word padding + header-lane slack around the ledger)."""
+        if method == "mlmc_topk":
+            iw = math.ceil(math.log2(d))
+            n = bitcost.topk_mlmc_bits(d, s, value_bits=16, index_bits=iw)
+            pad = 32.0 * (packed_words(s, iw) + packed_words(s, 16)) \
+                - s * (iw + 16)
+            return n - 32.0, n + pad
+        if method == "mlmc_fixed":
+            n = bitcost.fixed_point_mlmc_bits(d, 24)
+            pad = 32.0 * packed_words(d, 2) - 2.0 * d
+            return n - 32.0, n + pad
+        return make_device_codec(method, d).reconcile_bounds()
+
+    for method in ("mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd"):
+        key = jax.random.PRNGKey(3)
+        out_a, _ = build(method, "abstract")(g, key)
+        out_d, bits_d = build(method, "device")(g, key)
+        np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_a),
+                                      err_msg=method)
+        per_worker = float(bits_d) / M
+        lo, hi = measured_bounds(method)
+        assert lo <= per_worker <= hi, (method, per_worker, (lo, hi))
+        print(f"PASS device_parity_{method} bits/worker={per_worker:.0f} "
+              f"in [{lo:.0f}, {hi:.0f}]")
+
+    # no host callbacks anywhere in the traced device-wire program
+    def all_device(gs, rng):
+        outs = []
+        for i, m in enumerate(("mlmc_topk", "mlmc_fixed", "qsgd", "rtn",
+                               "signsgd")):
+            outs.append(compressed_allreduce(
+                gs.reshape(-1), ctx, jax.random.fold_in(rng, i), m,
+                k_fraction=k_fraction, wire="device"))
+        return outs
+
+    jaxpr = jax.make_jaxpr(shard_map(
+        all_device, mesh=mesh, in_specs=(P("pod", "data", None), P()),
+        out_specs=[(P(), P())] * 5, check_vma=False))(g, jax.random.PRNGKey(1))
+
+    def prims(jx):
+        for eqn in jx.eqns:
+            yield str(eqn.primitive)
+            for p in eqn.params.values():
+                inner = getattr(p, "jaxpr", None)
+                if inner is not None:
+                    yield from prims(getattr(inner, "jaxpr", inner))
+    bad = [p for p in prims(jaxpr.jaxpr) if "callback" in p]
+    assert not bad, f"host callbacks in device wire: {bad}"
+    print("PASS device_no_callbacks")
+
+    # end-to-end: a full sharded train step on the device wire
+    cfg = dataclasses.replace(
+        reduce_for_smoke([c for c in ASSIGNED if c.name == "qwen3-4b"][0]))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 8, 32
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    opt = sgd(1e-2)
+    for method in ("mlmc_fixed", "mlmc_topk"):
+        fn, _, _ = step_mod.make_train_step(
+            model, mesh, opt, shape=InputShape("t", S, B, "train"),
+            method=method, remat=False, wire="device")
+        _, _, metrics = fn(params, opt.init(params), batch,
+                           jax.random.PRNGKey(2))
+        assert np.isfinite(float(metrics["loss"])), method
+        assert float(metrics["bits"]) > 0, method
+    print("PASS device_train_step")
+
+
 def check_train_parity():
     """Sharded dense train loss == unsharded loss for a dense arch."""
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -139,7 +246,8 @@ def check_decode_parity():
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     fns = {"collectives": check_collectives, "train": check_train_parity,
-           "fsdp": check_fsdp, "decode": check_decode_parity}
+           "fsdp": check_fsdp, "decode": check_decode_parity,
+           "device_wire": check_device_wire}
     if which == "all":
         for f in fns.values():
             f()

@@ -29,6 +29,18 @@ def test_compressed_collectives_on_mesh():
 
 
 @pytest.mark.slow
+def test_device_wire_parity_on_mesh():
+    """Cross-wire matrix: wire="device" == wire="abstract" exactly on an
+    8-device mesh, measured bits reconcile with the core.bits ledger, no
+    host callbacks, and a full train step runs on the device wire."""
+    out = _run("device_wire")
+    for method in ("mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd"):
+        assert f"PASS device_parity_{method}" in out
+    assert "PASS device_no_callbacks" in out
+    assert "PASS device_train_step" in out
+
+
+@pytest.mark.slow
 def test_sharded_train_parity():
     assert "PASS train_parity" in _run("train")
 

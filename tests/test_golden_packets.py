@@ -1,0 +1,111 @@
+"""Golden-packet regression battery: the byte wire format is a compatibility
+surface.
+
+One committed snapshot (`tests/golden_packets/<name>.bin`) of an encoded
+`Packet` per registry aggregator (all 17 names — EF21 variants snapshot
+their innovation codec).  The test re-encodes the same deterministic
+gradient with the same keys and asserts `to_bytes()` is BYTE-identical to
+the snapshot: any change to the header struct, stream layout, bit-packing
+order, codec math, or the PRNG replay breaks decode for packets already on
+the wire and must be a deliberate, versioned decision.
+
+Regenerate (only when intentionally changing the wire format):
+
+    PYTHONPATH=src python tests/test_golden_packets.py --regen
+"""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.comm import Packet, make_codec
+from repro.comm.packets import CODEC_IDS
+from repro.core.aggregators import ALL_AGGREGATORS
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden_packets"
+
+#: deterministic fixture inputs (MUST never change: part of the snapshots)
+GOLDEN_DIM = 257
+GOLDEN_CODEC_KW = dict(k_fraction=0.05, s=4)
+GOLDEN_GRAD_SEED = 20250728
+GOLDEN_KEY_SEED = 42
+
+#: frozen copy of the wire codec-id table at snapshot time.  CODEC_IDS is
+#: append-only: every entry here must stay EXACTLY as-is forever; new codecs
+#: may only take ids above the frozen range.
+FROZEN_CODEC_IDS = {
+    "dense": 0, "topk": 1, "randk": 2, "qsgd": 3, "rtn": 4, "fixed2": 5,
+    "natural": 6, "signsgd": 7, "mlmc_topk": 8, "mlmc_topk_static": 9,
+    "mlmc_stopk": 10, "mlmc_fixed": 11, "mlmc_float": 12, "mlmc_rtn": 13,
+}
+
+
+def golden_grad() -> jax.Array:
+    key = jax.random.PRNGKey(GOLDEN_GRAD_SEED)
+    return jax.random.normal(key, (GOLDEN_DIM,)) * jnp.exp(
+        -0.02 * jnp.arange(GOLDEN_DIM))
+
+
+def encode_golden(name: str) -> bytes:
+    """Deterministic encode for one registry name (key folds in the name's
+    position in ALL_AGGREGATORS, which is itself append-only)."""
+    codec = make_codec(name, GOLDEN_DIM, **GOLDEN_CODEC_KW)
+    key = jax.random.fold_in(jax.random.PRNGKey(GOLDEN_KEY_SEED),
+                             ALL_AGGREGATORS.index(name))
+    return codec.encode(golden_grad(), key).packet.to_bytes()
+
+
+@pytest.mark.parametrize("name", ALL_AGGREGATORS)
+def test_golden_packet_bytes(name):
+    path = GOLDEN_DIR / f"{name}.bin"
+    assert path.exists(), \
+        f"missing golden fixture {path}; run tests/test_golden_packets.py --regen"
+    got = encode_golden(name)
+    want = path.read_bytes()
+    assert got == want, (
+        f"{name}: encoded packet ({len(got)}B) differs from the committed "
+        f"snapshot ({len(want)}B) — the wire format changed. If intentional, "
+        "bump the packet version and regenerate the fixtures.")
+
+
+@pytest.mark.parametrize("name", ALL_AGGREGATORS)
+def test_golden_packet_still_decodes(name):
+    """The committed bytes must parse and decode to a dim-sized estimate."""
+    pkt = Packet.from_bytes((GOLDEN_DIR / f"{name}.bin").read_bytes())
+    codec = make_codec(name, GOLDEN_DIM, **GOLDEN_CODEC_KW)
+    est = codec.decode(pkt)
+    assert est.shape == (GOLDEN_DIM,)
+
+
+def test_codec_ids_append_only():
+    """Wire codec ids are a compatibility surface: frozen entries immutable,
+    new entries only above the frozen range, ids unique."""
+    for name, cid in FROZEN_CODEC_IDS.items():
+        assert CODEC_IDS.get(name) == cid, \
+            f"CODEC_IDS[{name!r}] changed from {cid} to {CODEC_IDS.get(name)}"
+    ids = list(CODEC_IDS.values())
+    assert len(ids) == len(set(ids)), "duplicate codec ids"
+    frozen_max = max(FROZEN_CODEC_IDS.values())
+    for name, cid in CODEC_IDS.items():
+        if name not in FROZEN_CODEC_IDS:
+            assert cid > frozen_max, \
+                f"new codec {name!r} must take an id above {frozen_max}"
+
+
+def _regen():
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name in ALL_AGGREGATORS:
+        raw = encode_golden(name)
+        (GOLDEN_DIR / f"{name}.bin").write_bytes(raw)
+        print(f"wrote golden_packets/{name}.bin ({len(raw)} bytes)")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

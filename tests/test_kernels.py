@@ -1,5 +1,11 @@
 """Pallas kernel validation: shape/dtype sweeps, allclose vs ref.py oracles
-(interpret=True executes the kernel bodies on CPU)."""
+(interpret=True executes the kernel bodies on CPU).
+
+The bit-pack section is a property battery over the wire-format kernels of
+`repro.kernels.pack` (every width 1..32, odd lengths, all-zero / all-ones
+extremes, split-plane widths) — exhaustive parametrized sweeps that always
+run, plus randomized `hypothesis` properties when the dev extra is
+installed (requirements-dev.txt)."""
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +13,22 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.pack import (
+    fields_per_word,
+    pack_bits,
+    pack_planes,
+    packed_words,
+    plane_widths,
+    unpack_bits,
+    unpack_planes,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # pragma: no cover - dev extra not installed
+    HAVE_HYPOTHESIS = False
 
 SIZES = [1, 100, 128, 129, 1000, 8192, 65536]
 DTYPES = [jnp.float32]  # kernels are f32 (gradients are aggregated in f32)
@@ -88,6 +110,113 @@ def test_topk_threshold_covers_k(d, k):
     # and the band must include every one of the exact top-k entries
     kth = jnp.sort(jnp.abs(v))[-k]
     assert float(lo) <= float(kth) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# bit-pack property battery (pack/unpack vs the kernels/ref.py oracle)
+# ---------------------------------------------------------------------------
+
+_PACK_LENGTHS = (1, 3, 31, 33, 127, 129, 257, 1000)   # odd + off-tile sizes
+
+
+def _max_code(width: int) -> int:
+    return (1 << min(width, 31)) - 1    # np.uint32 rng cap; width 32 uses 31
+
+
+def _pack_case(codes: np.ndarray, width: int):
+    """One pack/unpack round-trip checked against the pure-jnp oracle."""
+    n = codes.shape[0]
+    kernel_words = np.asarray(pack_bits(codes, width))
+    ref_words = np.asarray(ref.pack_bits_ref(codes, width))
+    np.testing.assert_array_equal(kernel_words, ref_words)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_bits(kernel_words, width, n)), codes)
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_bits_ref(ref_words, width, n)), codes)
+
+
+@pytest.mark.parametrize("width", range(1, 33))
+def test_pack_roundtrip_every_width(width):
+    """Pack/unpack == oracle for EVERY field width 1..32 at odd lengths."""
+    rng = np.random.default_rng(width)
+    for n in _PACK_LENGTHS:
+        codes = rng.integers(0, _max_code(width) + 1, size=n,
+                             dtype=np.uint32)
+        _pack_case(codes, width)
+
+
+@pytest.mark.parametrize("width", range(1, 33))
+def test_pack_extremes_every_width(width):
+    """All-zero and all-ones (max code) payloads — the saturation extremes
+    where shift/mask bugs hide."""
+    for n in (1, 33, 257):
+        _pack_case(np.zeros(n, np.uint32), width)
+        _pack_case(np.full(n, _max_code(width), np.uint32), width)
+        if width == 32:   # true 32-bit all-ones (passthrough path)
+            _pack_case(np.full(n, 0xFFFFFFFF, np.uint32), width)
+
+
+@pytest.mark.parametrize("width", range(1, 33))
+def test_pack_planes_roundtrip_every_width(width):
+    """Split-plane packing (device-wire index streams): round-trip vs the
+    ref oracle, static word count, and effective-bits accounting."""
+    rng = np.random.default_rng(100 + width)
+    for n in (1, 5, 127, 257):
+        codes = rng.integers(0, _max_code(width) + 1, size=n,
+                             dtype=np.uint32)
+        words = np.asarray(pack_planes(codes, width))
+        assert words.shape == (packed_words(n, width),)
+        np.testing.assert_array_equal(
+            words, np.asarray(ref.pack_planes_ref(codes, width)))
+        np.testing.assert_array_equal(
+            np.asarray(unpack_planes(words, width, n)), codes)
+        np.testing.assert_array_equal(
+            np.asarray(ref.unpack_planes_ref(words, width, n)), codes)
+    # plane decomposition covers the width exactly, word-aligned
+    assert sum(plane_widths(width)) == width
+    for w in plane_widths(width):
+        assert w == 32 or fields_per_word(w) >= 32 // w > 0
+
+
+def test_pack_rejects_bad_width():
+    for width in (0, 33, -1):
+        with pytest.raises(ValueError):
+            fields_per_word(width)
+        with pytest.raises(ValueError):
+            plane_widths(width)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(width=st.integers(1, 32), n=st.integers(1, 600),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def test_pack_roundtrip_hypothesis(width, n, seed):
+        """Property: unpack(pack(codes)) == codes and kernel == oracle for
+        arbitrary (width, length, payload)."""
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, _max_code(width) + 1, size=n,
+                             dtype=np.uint32)
+        _pack_case(codes, width)
+
+    @settings(max_examples=40, deadline=None)
+    @given(width=st.integers(17, 31), n=st.integers(1, 300),
+           seed=st.integers(0, 2 ** 31 - 1))
+    def test_pack_planes_hypothesis(width, n, seed):
+        """Property: split-plane round-trip for the wide-index widths."""
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, _max_code(width) + 1, size=n,
+                             dtype=np.uint32)
+        words = pack_planes(codes, width)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_planes(words, width, n)), codes)
+else:                           # pragma: no cover - dev extra not installed
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
+    def test_pack_roundtrip_hypothesis():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
+    def test_pack_planes_hypothesis():
+        pass
 
 
 def test_kernel_vs_core_compressor():
