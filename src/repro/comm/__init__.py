@@ -9,10 +9,21 @@ packed-wire aggregation path behind ``make_aggregator(..., wire="packed")``.
 (static uint32 word buffers + a small f32 header lane, no Python bytes)
 that the mesh collectives gather directly — ``wire="device"`` in
 `make_aggregator` and `repro.sharding.collectives.compressed_allreduce`.
+
+`multihost` is the real-network realization: a TCP socket star
+(``make_transport("tcp", rank=..., world=..., coordinator=...)``) that
+moves the packet bytes between OS processes and *measures* per-link bytes
+and wall-clock instead of simulating them.
 """
 
-from repro.comm.aggregate import PackedAggregate, PackedEF21, packed_aggregator
+from repro.comm.aggregate import (
+    MultihostPackedAggregate,
+    PackedAggregate,
+    PackedEF21,
+    packed_aggregator,
+)
 from repro.comm.codec import EncodeResult, WireCodec, make_codec
+from repro.comm.multihost import TcpStarTransport, is_multihost_transport
 from repro.comm.device_wire import (
     DEVICE_WIRE_METHODS,
     DeviceCodec,
@@ -38,10 +49,12 @@ from repro.comm.transport import (
 
 __all__ = [
     "CostModel", "DEVICE_WIRE_METHODS", "DeviceCodec", "DevicePacket",
-    "EncodeResult", "Header", "LoopbackTransport", "PackedAggregate",
-    "PackedEF21", "Packet", "SimulatedTransport", "Stream", "Transport",
+    "EncodeResult", "Header", "LoopbackTransport",
+    "MultihostPackedAggregate", "PackedAggregate", "PackedEF21", "Packet",
+    "SimulatedTransport", "Stream", "TcpStarTransport", "Transport",
     "TransportStats", "WireCodec", "device_aggregator", "header_lane",
-    "make_codec", "make_device_codec", "make_topology", "make_transport",
-    "pack_bits", "pack_planes", "packed_aggregator", "simulated_step_time",
-    "unpack_bits", "unpack_planes",
+    "is_multihost_transport", "make_codec", "make_device_codec",
+    "make_topology", "make_transport", "pack_bits", "pack_planes",
+    "packed_aggregator", "simulated_step_time", "unpack_bits",
+    "unpack_planes",
 ]

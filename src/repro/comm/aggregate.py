@@ -12,14 +12,24 @@ it exists for verification and for honest telemetry, while the jitted
 abstract path remains the fast default.  `PackedEF21` does the same for the
 stateful EF21/EF21-SGDM baselines, whose wire message is the compressed
 *innovation* per worker.
+
+`MultihostPackedAggregate` is the distributed realization: when the
+transport is a real multi-host one (`repro.comm.multihost`), each OS
+process encodes only its own rank's gradient, rank 0 decodes + means, and
+the direction comes back over the wire — same math, same bytes, real
+sockets.
 """
 
 from __future__ import annotations
 
+import struct
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.comm.codec import WireCodec, make_codec
+from repro.comm.multihost import is_multihost_transport
 from repro.comm.packets import Packet
 from repro.comm.transport import LoopbackTransport, Transport
 
@@ -50,6 +60,79 @@ class PackedAggregate:
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         # account the dense model-update broadcast on the downlink
         self.transport.broadcast(4 * self.codec.dim, m)
+        return AggregateOut(direction, None, jnp.asarray(bits, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# multihost: rank-local encode, server-side decode, direction re-broadcast
+# ---------------------------------------------------------------------------
+
+#: the DIRECTION frame payload: magic, dim, measured bits, then dim f32
+_DIR_MAGIC = b"RCD1"
+_DIR_FMT = "<4sId"
+_DIR_HEADER_BYTES = struct.calcsize(_DIR_FMT)    # 16
+
+
+def pack_direction(direction: np.ndarray, bits: float) -> bytes:
+    v = np.ascontiguousarray(np.asarray(direction), np.float32)
+    return struct.pack(_DIR_FMT, _DIR_MAGIC, v.size, float(bits)) + v.tobytes()
+
+
+def unpack_direction(raw: bytes, dim: int) -> tuple[np.ndarray, float]:
+    if len(raw) < _DIR_HEADER_BYTES:
+        raise ValueError(f"truncated direction blob: {len(raw)} bytes")
+    magic, d, bits = struct.unpack_from(_DIR_FMT, raw, 0)
+    if magic != _DIR_MAGIC:
+        raise ValueError(f"bad direction magic {magic!r}")
+    if d != dim or len(raw) != _DIR_HEADER_BYTES + 4 * d:
+        raise ValueError(f"direction blob for dim {d} / {len(raw)} bytes, "
+                         f"expected dim {dim}")
+    return np.frombuffer(raw, np.float32, d, _DIR_HEADER_BYTES), bits
+
+
+class MultihostPackedAggregate:
+    """The socket-star realization of `PackedAggregate`: each OS process
+    encodes ITS OWN worker's gradient, ships it to rank 0, and rank 0
+    decodes all ``world`` packets, means them, and re-broadcasts the
+    direction — no rank ever loops over the others' gradients.
+
+    Bit-for-bit parity with the in-process loop: every rank draws the same
+    per-step ``jax.random.split(rng, world)`` key fan and uses its own row,
+    the server means the decoded estimates in rank order (exactly the
+    worker order of `PackedAggregate`), and the direction crosses the wire
+    as raw f32 bit patterns."""
+
+    def __init__(self, codec: WireCodec, transport):
+        if not is_multihost_transport(transport):
+            raise ValueError("MultihostPackedAggregate needs a multihost "
+                             "transport (rank/world + broadcast_payload)")
+        self.codec = codec
+        self.transport = transport
+
+    def __call__(self, worker_grads: Array, rng, state=None):
+        from repro.core.aggregators import AggregateOut
+
+        del state
+        tp = self.transport
+        if worker_grads.shape[0] != 1:
+            raise ValueError(
+                "a multihost rank hosts exactly one worker; got a stack of "
+                f"{worker_grads.shape[0]} gradients (slice the global batch "
+                "to this rank's shard)")
+        keys = jax.random.split(rng, tp.world)
+        enc = self.codec.encode(worker_grads[0], keys[tp.rank])
+        delivered = tp.exchange([enc.packet.to_bytes()])
+        if tp.rank == 0:
+            packets = [Packet.from_bytes(b) for b in delivered]
+            decoded = [self.codec.decode(p) for p in packets]
+            direction = jnp.mean(jnp.stack([jnp.asarray(d) for d in decoded]),
+                                 axis=0)
+            bits = float(sum(self.codec.measured_bits(p) for p in packets))
+            tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
+        else:
+            vec, bits = unpack_direction(tp.broadcast_payload(None),
+                                         self.codec.dim)
+            direction = jnp.asarray(vec)
         return AggregateOut(direction, None, jnp.asarray(bits, jnp.float32))
 
 
@@ -114,8 +197,16 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
     codec = make_codec(name, dim, k_fraction=k_fraction, s=s,
                        rtn_level=rtn_level, qsgd_levels=qsgd_levels,
                        fixed_levels=fixed_levels)
+    multihost = is_multihost_transport(transport)
     if name in ("ef21", "ef21_sgdm", "signsgd_ef"):
+        if multihost:
+            raise NotImplementedError(
+                f"{name!r} keeps per-worker innovation state on the server; "
+                "the multihost wire does not replicate it yet — use a "
+                "stateless method over tcp")
         beta = momentum_beta if name == "ef21_sgdm" else 1.0
         ef = PackedEF21(codec, beta, transport)
         return Aggregator(name, ef, init=ef.init)
+    if multihost:
+        return Aggregator(name, MultihostPackedAggregate(codec, transport))
     return Aggregator(name, PackedAggregate(codec, transport))

@@ -1,0 +1,403 @@
+"""Multi-host packed wire — a TCP socket star for the byte packets.
+
+Every transport before this one ran in-process with a simulated alpha-beta
+clock.  `TcpStarTransport` moves the *actual* `Packet.to_bytes()` payloads
+between OS processes: rank 0 is the aggregation point (the paper's parameter
+server), ranks 1..W-1 connect to it over TCP, and every uplink/downlink is a
+length-prefixed frame whose bytes and wall-clock are **measured**, never
+modeled.  `TransportStats.sim_time_s` stays 0 on this transport;
+`wall_time_s` holds real `perf_counter` deltas.
+
+Frame protocol (all little-endian, append-only like the packet header):
+
+    <4s  B      B     H      I>        then `length` payload bytes
+    RCMH type   rank  world  length
+
+* ``HELLO``     worker -> server on connect; payload is the protocol token,
+  server validates (rank, world, token) and replies ``WELCOME`` or
+  ``GOODBYE`` + reason.
+* ``PAYLOAD``   worker -> server, one serialized `Packet` per round.
+* ``DIRECTION`` server -> workers, the aggregated direction blob
+  (see `repro.comm.aggregate`).
+
+Stats semantics (cross-transport comparability is the point):
+
+* ``bytes_up`` / ``bytes_down`` count *payload* bytes.  On rank 0 — the
+  aggregation point, the vantage the in-process transports model — they
+  cover all ``world`` ranks including rank 0's loopback contribution, so
+  identical traffic books identical numbers on `LoopbackTransport` and
+  here; worker ranks see only their own link and book only that.
+* ``wire_bytes`` counts what actually crossed a socket on this process
+  (frame headers included): the honest per-link measurement.
+
+One rank hosts exactly one worker; `repro.launch.multihost` spawns a
+localhost world, `--transport tcp` in `repro.launch.train` joins one rank.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import socket
+import struct
+import time
+
+from repro.comm.transport import TransportStats
+
+FRAME_MAGIC = b"RCMH"
+_FRAME_FMT = "<4sBBHI"                 # magic, type, rank, world, payload len
+FRAME_HEADER_BYTES = struct.calcsize(_FRAME_FMT)   # 12
+
+#: frame types (append-only)
+HELLO, WELCOME, GOODBYE, PAYLOAD, DIRECTION = 1, 2, 3, 4, 5
+SCALAR, SCALAR_MEAN = 6, 7     # loss-telemetry allreduce (8-byte f64)
+
+#: a real worker HELLOs immediately after connecting; give a stray peer
+#: (port scanner, health check) at most this long before refusing it
+_HELLO_GRACE_S = 2.0
+
+#: handshake token — bump the suffix on any incompatible protocol change
+HELLO_TOKEN = b"repro-multihost-v1"
+
+MAX_WORLD = 255            # rank rides in a uint8 frame field
+_MAX_FRAME_PAYLOAD = 1 << 31
+
+
+def pick_free_port(host: str = "127.0.0.1") -> int:
+    """Bind port 0, read the kernel's choice, release it (launcher helper)."""
+    with contextlib.closing(socket.socket()) as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def parse_coordinator(spec: str) -> tuple[str, int]:
+    """``"host:port"`` -> (host, port)."""
+    host, _, port = spec.rpartition(":")
+    if not host or not port.isdigit():
+        raise ValueError(f"coordinator must be 'host:port', got {spec!r}")
+    return host, int(port)
+
+
+def is_multihost_transport(transport) -> bool:
+    """True for transports whose ranks live in different OS processes (they
+    carry a rank/world identity and a real payload broadcast)."""
+    return (getattr(transport, "world", 0) or 0) > 0 \
+        and hasattr(transport, "broadcast_payload")
+
+
+def _steady_state(sock: socket.socket) -> None:
+    """Post-handshake socket mode: the rendezvous timeout must NOT govern
+    training rounds (a slow jit or straggler rank is healthy, not dead) —
+    block indefinitely and let TCP keepalive surface dead peers."""
+    sock.settimeout(None)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+
+
+# ---------------------------------------------------------------------------
+# frame I/O
+# ---------------------------------------------------------------------------
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError(
+                f"peer closed mid-frame: got {len(buf)} of {n} bytes")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def send_frame(sock: socket.socket, ftype: int, rank: int, world: int,
+               payload: bytes = b"") -> int:
+    """Send one frame; returns the bytes that crossed the socket."""
+    sock.sendall(struct.pack(_FRAME_FMT, FRAME_MAGIC, ftype, rank, world,
+                             len(payload)) + payload)
+    return FRAME_HEADER_BYTES + len(payload)
+
+
+def recv_frame(sock: socket.socket,
+               expect: int | None = None) -> tuple[int, int, int, bytes]:
+    """Receive one frame -> (type, rank, world, payload).  Raises
+    `ConnectionError` on torn frames, bad magic, or an unexpected type."""
+    hdr = _recv_exact(sock, FRAME_HEADER_BYTES)
+    magic, ftype, rank, world, length = struct.unpack(_FRAME_FMT, hdr)
+    if magic != FRAME_MAGIC:
+        raise ConnectionError(f"bad frame magic {magic!r} (want "
+                              f"{FRAME_MAGIC!r}) — not a multihost peer?")
+    if length > _MAX_FRAME_PAYLOAD:
+        raise ConnectionError(f"frame length {length} exceeds the "
+                              f"{_MAX_FRAME_PAYLOAD}-byte cap")
+    payload = _recv_exact(sock, length) if length else b""
+    if expect is not None and ftype != expect:
+        if ftype == GOODBYE:
+            raise ConnectionError(
+                f"peer said goodbye: {payload.decode(errors='replace')}")
+        raise ConnectionError(f"expected frame type {expect}, got {ftype}")
+    return ftype, rank, world, payload
+
+
+# ---------------------------------------------------------------------------
+# the transport
+# ---------------------------------------------------------------------------
+
+
+class TcpStarTransport:
+    """Socket star over ``world`` OS processes; rank 0 aggregates.
+
+    Build with `serve` (rank 0) or `connect` (ranks 1..W-1) — or via
+    ``make_transport("tcp", rank=..., world=..., coordinator="host:port")``.
+    Implements the `Transport` seam with multihost semantics: `exchange`
+    takes THIS rank's single payload and returns all ``world`` payloads on
+    rank 0 (rank-ordered) and ``[]`` on workers; `broadcast_payload` ships
+    the direction blob down every link.
+    """
+
+    def __init__(self, rank: int, world: int):
+        self.rank = rank
+        self.world = world
+        self.stats = TransportStats()
+        self._conns: dict[int, socket.socket] = {}   # server: rank -> socket
+        self._sock: socket.socket | None = None      # worker: server link
+        self._listener: socket.socket | None = None
+        self._timeout: float = 60.0
+        self.port: int | None = None
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def listen(cls, host: str = "127.0.0.1", port: int = 0, *, world: int,
+               timeout: float = 60.0) -> "TcpStarTransport":
+        """Rank 0, step 1: bind ``host:port`` (0 = ephemeral; the kernel's
+        choice lands in ``.port``) without blocking.  Call
+        `accept_workers` to run the rendezvous."""
+        if not 2 <= world <= MAX_WORLD:
+            raise ValueError(f"world must be in [2, {MAX_WORLD}], got {world}")
+        t = cls(0, world)
+        t._listener = socket.create_server((host, port))
+        t.port = t._listener.getsockname()[1]
+        t._timeout = timeout
+        return t
+
+    def accept_workers(self) -> "TcpStarTransport":
+        """Rank 0, step 2: accept HELLOs until all ``world - 1`` workers
+        have joined.  Bad handshakes are refused with a GOODBYE and do not
+        kill the server; returns self for chaining."""
+        srv, timeout = self._listener, self._timeout
+        deadline = time.monotonic() + timeout
+
+        def timed_out():
+            self.close()
+            raise TimeoutError(
+                f"rendezvous timed out after {timeout}s with "
+                f"{len(self._conns)}/{self.world - 1} workers connected")
+
+        while len(self._conns) < self.world - 1:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:    # settimeout(0) would mean non-blocking
+                timed_out()
+            srv.settimeout(remaining)
+            try:
+                conn, _ = srv.accept()
+            except (socket.timeout, TimeoutError):
+                timed_out()
+            # a stray/silent peer gets a short grace, never the whole
+            # deadline — real workers' HELLOs must still fit in it
+            conn.settimeout(
+                max(0.1, min(_HELLO_GRACE_S, deadline - time.monotonic())))
+            try:
+                _, rank, w, token = recv_frame(conn, expect=HELLO)
+            except (ConnectionError, socket.timeout, TimeoutError, OSError):
+                conn.close()
+                continue
+            conn.settimeout(timeout)     # GOODBYE/WELCOME writes below
+            reason = None
+            if token != HELLO_TOKEN:
+                reason = f"protocol token mismatch (server {HELLO_TOKEN!r})"
+            elif w != self.world:
+                reason = f"world mismatch: server {self.world}, worker {w}"
+            elif not 1 <= rank < self.world:
+                reason = f"rank {rank} out of range [1, {self.world})"
+            elif rank in self._conns:
+                reason = f"rank {rank} already connected"
+            if reason is not None:
+                with contextlib.suppress(OSError):
+                    send_frame(conn, GOODBYE, 0, self.world, reason.encode())
+                conn.close()
+                continue
+            send_frame(conn, WELCOME, 0, self.world)
+            _steady_state(conn)
+            self._conns[rank] = conn
+        return self
+
+    @classmethod
+    def serve(cls, host: str = "127.0.0.1", port: int = 0, *, world: int,
+              timeout: float = 60.0) -> "TcpStarTransport":
+        """Rank 0: `listen` + `accept_workers` in one blocking call (the
+        ``make_transport("tcp", rank=0, ...)`` path, where the port is
+        fixed up front and every worker retries until it is up)."""
+        return cls.listen(host, port, world=world,
+                          timeout=timeout).accept_workers()
+
+    @classmethod
+    def connect(cls, host: str, port: int, *, rank: int, world: int,
+                timeout: float = 60.0) -> "TcpStarTransport":
+        """Ranks 1..W-1: dial the coordinator (retrying until ``timeout`` so
+        workers may start before the server) and handshake."""
+        if not 2 <= world <= MAX_WORLD:
+            raise ValueError(f"world must be in [2, {MAX_WORLD}], got {world}")
+        if not 1 <= rank < world:
+            raise ValueError(f"worker rank must be in [1, {world}), got {rank}")
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                sock = socket.create_connection((host, port), timeout=1.0)
+                break
+            except OSError as e:
+                if time.monotonic() >= deadline:
+                    raise ConnectionError(
+                        f"could not reach coordinator {host}:{port} within "
+                        f"{timeout}s: {e}") from e
+                time.sleep(0.05)
+        sock.settimeout(timeout)
+        try:
+            send_frame(sock, HELLO, rank, world, HELLO_TOKEN)
+            _, _, w, _ = recv_frame(sock, expect=WELCOME)
+        except Exception:
+            sock.close()
+            raise
+        if w != world:
+            sock.close()
+            raise ConnectionError(f"server runs world={w}, we expect {world}")
+        _steady_state(sock)
+        t = cls(rank, world)
+        t._sock = sock
+        return t
+
+    # ---- Transport seam ----------------------------------------------------
+
+    @property
+    def is_server(self) -> bool:
+        return self.rank == 0
+
+    def exchange(self, payloads: list[bytes]) -> list[bytes]:
+        """Ship THIS rank's payload.  Rank 0 returns all ``world`` payloads
+        in rank order; workers return ``[]`` (the aggregate comes back via
+        `broadcast_payload`)."""
+        if len(payloads) != 1:
+            raise ValueError(
+                "multihost exchange ships exactly one payload per rank per "
+                f"round (one rank hosts one worker); got {len(payloads)}")
+        t0 = time.perf_counter()
+        self.stats.rounds += 1
+        local = payloads[0]
+        if self.is_server:
+            out: list[bytes | None] = [local] + [None] * (self.world - 1)
+            for r, conn in sorted(self._conns.items()):
+                _, sender, _, data = recv_frame(conn, expect=PAYLOAD)
+                if sender != r:
+                    raise ConnectionError(
+                        f"link for rank {r} delivered a frame from rank "
+                        f"{sender}")
+                out[r] = data
+                self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
+            self.stats.bytes_up += sum(len(p) for p in out)
+            self.stats.wall_time_s += time.perf_counter() - t0
+            return out
+        sent = send_frame(self._sock, PAYLOAD, self.rank, self.world, local)
+        self.stats.bytes_up += len(local)
+        self.stats.wire_bytes += sent
+        self.stats.wall_time_s += time.perf_counter() - t0
+        return []
+
+    def broadcast_payload(self, data: bytes | None) -> bytes:
+        """Rank 0 passes the direction blob and sends it down every link;
+        workers pass ``None`` and receive it.  Returns the blob on every
+        rank.  ``bytes_down`` books blob * world (rank 0's loopback copy
+        included, like the in-process transports count every worker) — but
+        the blob is the MEASURED direction wire format, 16-byte header
+        included, so it runs slightly above loopback's modeled bare
+        ``4 * dim`` update; ``wire_bytes`` counts socket bytes only."""
+        t0 = time.perf_counter()
+        if self.is_server:
+            if data is None:
+                raise ValueError("rank 0 must provide the broadcast payload")
+            for r in sorted(self._conns):
+                self.stats.wire_bytes += send_frame(
+                    self._conns[r], DIRECTION, 0, self.world, data)
+            self.stats.bytes_down += len(data) * self.world
+            self.stats.wall_time_s += time.perf_counter() - t0
+            return data
+        _, _, _, data = recv_frame(self._sock, expect=DIRECTION)
+        self.stats.bytes_down += len(data)
+        self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
+        self.stats.wall_time_s += time.perf_counter() - t0
+        return data
+
+    def broadcast(self, nbytes: int, workers: int) -> None:
+        raise RuntimeError(
+            "TcpStarTransport measures real downlinks — use "
+            "broadcast_payload(data), not the accounting-only broadcast()")
+
+    def allreduce_scalar(self, value: float) -> float:
+        """Mean of one float across all ranks (loss telemetry: every rank
+        reports the same global number, like the in-process trainer).  The
+        24-byte frames are booked in ``wire_bytes``/``wall_time_s`` only —
+        they are telemetry, not gradient payload."""
+        t0 = time.perf_counter()
+        if self.is_server:
+            total = float(value)
+            for r, conn in sorted(self._conns.items()):
+                _, _, _, data = recv_frame(conn, expect=SCALAR)
+                total += struct.unpack("<d", data)[0]
+                self.stats.wire_bytes += FRAME_HEADER_BYTES + 8
+            mean = total / self.world
+            out = struct.pack("<d", mean)
+            for r in sorted(self._conns):
+                self.stats.wire_bytes += send_frame(
+                    self._conns[r], SCALAR_MEAN, 0, self.world, out)
+        else:
+            self.stats.wire_bytes += send_frame(
+                self._sock, SCALAR, self.rank, self.world,
+                struct.pack("<d", float(value)))
+            _, _, _, data = recv_frame(self._sock, expect=SCALAR_MEAN)
+            self.stats.wire_bytes += FRAME_HEADER_BYTES + 8
+            mean = struct.unpack("<d", data)[0]
+        self.stats.wall_time_s += time.perf_counter() - t0
+        return mean
+
+    # ---- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        for conn in self._conns.values():
+            with contextlib.suppress(OSError):
+                conn.close()
+        self._conns.clear()
+        for s in (self._sock, self._listener):
+            if s is not None:
+                with contextlib.suppress(OSError):
+                    s.close()
+        self._sock = self._listener = None
+
+    def __enter__(self) -> "TcpStarTransport":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def make_tcp_transport(*, rank: int, world: int,
+                       coordinator: str = "127.0.0.1:37737",
+                       timeout: float = 60.0) -> TcpStarTransport:
+    """The ``make_transport("tcp", ...)`` branch: rank 0 serves at
+    ``coordinator``, every other rank dials it."""
+    host, port = parse_coordinator(coordinator)
+    if rank == 0:
+        if port == 0:
+            raise ValueError("coordinator port 0 only works single-process; "
+                             "pick a concrete port every rank can dial "
+                             "(repro.launch.multihost does this for you)")
+        return TcpStarTransport.serve(host, port, world=world, timeout=timeout)
+    return TcpStarTransport.connect(host, port, rank=rank, world=world,
+                                    timeout=timeout)

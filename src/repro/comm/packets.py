@@ -128,20 +128,57 @@ class Packet:
 
     @classmethod
     def from_bytes(cls, raw: bytes) -> "Packet":
+        """Parse wire bytes, validating structure as it goes: a network
+        transport sees torn frames and stray peers, so truncation, bad
+        magic, unknown codec ids, inconsistent stream geometry, and
+        trailing garbage all raise a descriptive `ValueError` instead of
+        yielding a silently-corrupt packet."""
+        if len(raw) < HEADER_STRUCT_BYTES:
+            raise ValueError(
+                f"truncated packet: {len(raw)} bytes < the "
+                f"{HEADER_STRUCT_BYTES}-byte header")
         magic, codec_id, version, flags, n_streams, dim, level, nnz, scale, \
             prob = struct.unpack_from(_HEADER_FMT, raw, 0)
         if magic != MAGIC:
-            raise ValueError(f"bad packet magic {magic!r}")
+            raise ValueError(f"bad packet magic {magic!r} (want {MAGIC!r})")
+        if version != 1:
+            raise ValueError(f"unsupported packet version {version}")
+        if codec_id not in _ID_TO_CODEC:
+            raise ValueError(f"unknown codec id {codec_id}; have "
+                             f"{sorted(_ID_TO_CODEC)}")
         off = HEADER_STRUCT_BYTES
         streams = []
         #: stream names are positional per codec (see codec.py stream orders)
         for i in range(n_streams):
+            if len(raw) < off + STREAM_STRUCT_BYTES:
+                raise ValueError(
+                    f"truncated packet: stream {i}/{n_streams} header needs "
+                    f"bytes [{off}, {off + STREAM_STRUCT_BYTES}) of "
+                    f"{len(raw)}")
             width, _, _, count, n_words = struct.unpack_from(_STREAM_FMT,
                                                              raw, off)
             off += STREAM_STRUCT_BYTES
+            if not 1 <= width <= 32:
+                raise ValueError(
+                    f"corrupt packet: stream {i} field width {width} "
+                    "outside [1, 32]")
+            min_words = -(-count // max(1, 32 // width))
+            if n_words < min_words:
+                raise ValueError(
+                    f"corrupt packet: stream {i} declares {count} "
+                    f"{width}-bit fields but only {n_words} words "
+                    f"(needs >= {min_words})")
+            if len(raw) < off + 4 * n_words:
+                raise ValueError(
+                    f"truncated packet: stream {i} wants {n_words} words "
+                    f"ending at byte {off + 4 * n_words}, buffer has "
+                    f"{len(raw)}")
             words = np.frombuffer(raw, np.uint32, n_words, off).copy()
             off += 4 * n_words
             streams.append(Stream(f"s{i}", words, width, count))
+        if off != len(raw):
+            raise ValueError(f"corrupt packet: {len(raw) - off} trailing "
+                             f"bytes after the last stream")
         header = Header(_ID_TO_CODEC[codec_id], dim, level, nnz,
                         float(np.float32(scale)), float(np.float32(prob)),
                         flags)

@@ -11,6 +11,8 @@ transports), so a real network backend only has to implement `exchange`.
 * ``loopback``          — zero-cost in-process delivery (tests, parity runs)
 * ``parameter_server``  — star topology with incast accounting
 * ``ring``              — all-gather ring accounting
+* ``tcp``               — real multi-host socket star with *measured* bytes
+  and wall-clock (:mod:`repro.comm.multihost`)
 """
 
 from __future__ import annotations
@@ -27,7 +29,8 @@ class TransportStats:
     bytes_up: int = 0          # worker -> server payload bytes
     bytes_down: int = 0        # server -> worker broadcast bytes
     wire_bytes: int = 0        # bytes crossing any link (topology-dependent)
-    sim_time_s: float = 0.0
+    sim_time_s: float = 0.0    # alpha-beta modeled clock (in-process only)
+    wall_time_s: float = 0.0   # measured clock (real transports, e.g. tcp)
 
     def observe(self, sizes: list[int], topology: Topology,
                 cost: CostModel) -> None:
@@ -65,7 +68,9 @@ class LoopbackTransport:
         return list(payloads)
 
     def broadcast(self, nbytes: int, workers: int) -> None:
-        self.stats.bytes_down += nbytes * workers
+        total = nbytes * workers
+        self.stats.bytes_down += total
+        self.stats.wire_bytes += total
 
 
 @dataclasses.dataclass
@@ -89,16 +94,35 @@ class SimulatedTransport:
         self.stats.sim_time_s += self.cost.xfer_time(total, messages=1)
 
 
+def _reject_unused(name: str, kw: dict) -> None:
+    if kw:
+        raise TypeError(
+            f"make_transport({name!r}) got unsupported keyword arguments "
+            f"{sorted(kw)}; only 'hierarchical' takes topology kwargs "
+            "(pod_size, cross_pod_slowdown) and 'tcp' takes "
+            "rank/world/coordinator/timeout")
+
+
 def make_transport(name: str = "loopback", *,
                    cost: CostModel | None = None, **topo_kw) -> Transport:
     if name == "loopback":
+        _reject_unused(name, topo_kw)
         return LoopbackTransport()
     if name in ("parameter_server", "star"):
+        _reject_unused(name, topo_kw)
         return SimulatedTransport(make_topology("star"),
                                   cost or CostModel())
     if name == "ring":
+        _reject_unused(name, topo_kw)
         return SimulatedTransport(make_topology("ring"), cost or CostModel())
     if name == "hierarchical":
         return SimulatedTransport(make_topology("hierarchical", **topo_kw),
                                   cost or CostModel())
+    if name == "tcp":
+        if cost is not None:
+            raise TypeError("the tcp transport measures bytes and wall-clock"
+                            " — it takes no simulated CostModel")
+        from repro.comm.multihost import make_tcp_transport
+
+        return make_tcp_transport(**topo_kw)
     raise ValueError(f"unknown transport {name!r}")

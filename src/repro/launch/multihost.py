@@ -1,0 +1,96 @@
+"""Localhost multi-process launcher for the TCP packed wire.
+
+Spawns ``--world`` OS processes of ``repro.launch.train --wire packed
+--transport tcp`` (rank 0 = aggregation server), wires them to one free
+coordinator port, and forwards everything after ``--`` to every rank.  Each
+rank computes its own worker's gradient in its own process; the bytes
+between them cross real localhost sockets and every rank's
+`TransportStats` reports *measured* traffic and wall-clock.
+
+For an actual multi-machine run, start one rank per machine by hand with
+the same ``--coordinator host:port`` (see README "multi-host wire").
+
+Example:
+  PYTHONPATH=src python -m repro.launch.multihost --world 2 -- \
+      --arch paper-scale --method mlmc_topk --steps 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+from repro.comm.multihost import MAX_WORLD, pick_free_port
+
+
+def launch_world(world: int, train_args: list[str], *,
+                 coordinator: str | None = None) -> int:
+    """Spawn ``world`` ranks of `repro.launch.train`; returns the first
+    nonzero exit code (0 if all ranks succeeded).  A failing rank tears
+    the remaining ones down rather than leaving them blocked on a dead
+    socket."""
+    if not 2 <= world <= MAX_WORLD:
+        raise ValueError(f"world must be in [2, {MAX_WORLD}], got {world}")
+    reserved = {"--rank", "--world", "--coordinator", "--transport",
+                "--wire", "--workers"}
+    for arg in train_args:
+        if arg.split("=", 1)[0] in reserved:
+            raise ValueError(f"{arg!r} is set by the launcher; drop it from "
+                             "the forwarded args")
+    coordinator = coordinator or f"127.0.0.1:{pick_free_port()}"
+    env = dict(os.environ)
+    # make `-m repro.launch.train` importable in the children no matter how
+    # the launcher itself was started
+    src = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    old = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src + (os.pathsep + old if old else "")
+    procs = []
+    try:
+        for rank in range(world):
+            cmd = [sys.executable, "-m", "repro.launch.train",
+                   "--wire", "packed", "--transport", "tcp",
+                   "--rank", str(rank), "--world", str(world),
+                   "--coordinator", coordinator, *train_args]
+            procs.append(subprocess.Popen(cmd, env=env))
+        rc = 0
+        for p in procs:
+            rc = rc or p.wait()
+            if rc:
+                break
+        return rc
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.terminate()
+        for p in procs:
+            if p.poll() is None:
+                try:
+                    p.wait(timeout=10)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--world", type=int, default=2,
+                    help="number of ranks (= workers) to spawn")
+    ap.add_argument("--coordinator", default="",
+                    help="host:port override (default: a free local port)")
+    ap.add_argument("train_args", nargs="*",
+                    help="arguments after -- are forwarded to every "
+                         "repro.launch.train rank")
+    args = ap.parse_args()
+    rc = launch_world(args.world, args.train_args,
+                      coordinator=args.coordinator or None)
+    if rc:
+        raise SystemExit(rc)
+    print(f"multihost: all {args.world} ranks finished")
+
+
+if __name__ == "__main__":
+    main()

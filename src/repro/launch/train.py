@@ -11,11 +11,17 @@ Two modes:
   XLA_FLAGS=--xla_force_host_platform_device_count=N for CPU testing) and
   runs real sharded steps.
 
+Sim mode can move its packed wire over real sockets: ``--transport tcp``
+joins this process to a multi-host star (rank 0 aggregates; see
+`repro.launch.multihost` for a one-command localhost world).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch paper-scale \
       --method mlmc_topk --steps 50 --workers 8
   PYTHONPATH=src python -m repro.launch.train --mode mesh --arch qwen2.5-3b \
       --smoke --mesh-shape 1,2,2 --steps 3 --method mlmc_fixed
+  PYTHONPATH=src python -m repro.launch.train --wire packed --transport tcp \
+      --rank 0 --world 2 --coordinator 127.0.0.1:37737 --steps 10
 """
 
 from __future__ import annotations
@@ -43,8 +49,20 @@ def main() -> None:
                          "device packets (sim + mesh)")
     ap.add_argument("--transport", default="loopback",
                     choices=["loopback", "parameter_server", "ring",
-                             "hierarchical"],
-                    help="packed-wire transport (cost-model accounting)")
+                             "hierarchical", "tcp"],
+                    help="packed-wire transport: in-process cost-model "
+                         "accounting, or 'tcp' for a real multi-host "
+                         "socket star (measured bytes + wall-clock; pair "
+                         "with --rank/--world/--coordinator)")
+    ap.add_argument("--rank", type=int, default=0,
+                    help="tcp: this process's rank (0 = server)")
+    ap.add_argument("--world", type=int, default=0,
+                    help="tcp: total ranks (defaults to --workers; one "
+                         "rank hosts one worker)")
+    ap.add_argument("--coordinator", default="127.0.0.1:37737",
+                    help="tcp: host:port of rank 0's rendezvous socket")
+    ap.add_argument("--rendezvous-timeout", type=float, default=60.0,
+                    help="tcp: seconds to wait for all ranks to join")
     ap.add_argument("--smoke", action="store_true",
                     help="reduce the architecture to smoke size")
     ap.add_argument("--mesh-shape", default="1,2,2",
@@ -69,6 +87,13 @@ def main() -> None:
         from repro.train import Trainer
 
         task = LMTask(vocab=cfg.vocab_size, seq=args.seq)
+        if args.wire == "packed" and args.transport == "tcp":
+            world = args.world or args.workers
+            if args.workers != world:
+                print(f"note: --workers overridden to --world {world} "
+                      "(one tcp rank hosts one worker)")
+                args.workers = world
+        # every tcp rank draws this same global stream and slices its shard
         data = lm_batches(task, args.workers, args.batch_per_worker)
         params = model.init(jax.random.PRNGKey(0))
 
@@ -76,29 +101,47 @@ def main() -> None:
             return model.loss(p, batch, remat=False)[0]
 
         transport = None
+        rank = 0
         if args.wire == "packed":
             from repro.comm import make_transport
-            transport = make_transport(args.transport)
+            if args.transport == "tcp":
+                rank = args.rank
+                transport = make_transport(
+                    "tcp", rank=rank, world=args.workers,
+                    coordinator=args.coordinator,
+                    timeout=args.rendezvous_timeout)
+            else:
+                transport = make_transport(args.transport)
         elif args.transport != "loopback":
-            print(f"note: --transport {args.transport} has no effect "
-                  "without --wire packed (abstract wire ships no bytes)")
+            print(f"note: --transport {args.transport} has no effect with "
+                  f"--wire {args.wire} (only --wire packed ships host "
+                  "bytes through a Transport)")
         trainer = Trainer(loss_fn, params, num_workers=args.workers,
                           method=args.method, optimizer=sgd(args.lr),
                           k_fraction=args.k_fraction, wire=args.wire,
                           transport=transport)
+        who = (f" rank={rank}/{args.workers}"
+               if transport is not None and args.transport == "tcp" else "")
         print(f"sim: {cfg.name} M={args.workers} method={args.method} "
-              f"wire={args.wire} dim={trainer.dim:,}")
+              f"wire={args.wire}{who} dim={trainer.dim:,}")
         t0 = time.time()
         hist = trainer.fit(data, steps=args.steps, log_every=10)
         print(f"done in {time.time()-t0:.1f}s; final loss "
               f"{hist.loss[-1]:.4f}; total {hist.bits[-1]/1e9:.3f} Gbits")
         if transport is not None:
             st = transport.stats
+            clock = (f"wall_time={st.wall_time_s*1e3:.2f} ms measured"
+                     if args.transport == "tcp"
+                     else f"sim_time={st.sim_time_s*1e3:.2f} ms")
             print(f"wire: {st.rounds} rounds, {st.bytes_up/1e6:.3f} MB up, "
-                  f"{st.bytes_down/1e6:.3f} MB down, "
-                  f"sim_time={st.sim_time_s*1e3:.2f} ms "
+                  f"{st.bytes_down/1e6:.3f} MB down, {clock} "
                   f"({args.transport})")
-        if args.checkpoint:
+            if hasattr(transport, "close"):
+                transport.close()
+        if args.checkpoint and rank != 0:
+            print("note: --checkpoint skipped on worker ranks (params are "
+                  "identical; rank 0 writes)")
+        elif args.checkpoint:
             from repro import checkpoint
             checkpoint.save(args.checkpoint, trainer.params,
                             {"arch": cfg.name, "method": args.method,
@@ -112,6 +155,9 @@ def main() -> None:
         raise SystemExit("--wire packed is host-side Python and applies to "
                          "sim mode only; use --wire device for packed "
                          "collective operands on the mesh")
+    if args.transport != "loopback":
+        print(f"note: --transport {args.transport} has no effect in mesh "
+              "mode (collectives move device operands, not host packets)")
     from repro.configs.base import InputShape
     from repro.launch.mesh import make_mesh
     from repro.train import step as step_mod

@@ -75,6 +75,12 @@ class Trainer:
                          if self.agg.init else None)
         self.total_bits = 0.0
         self.method = method
+        if self.rank is not None and self.transport.world != self.m:
+            raise ValueError(
+                f"multihost transport world={self.transport.world} but "
+                f"num_workers={self.m}; pass the GLOBAL worker count (every "
+                "rank sees the same (M, b, ...) batch stream and computes "
+                "its own shard)")
         self._step = (self._build_packed_step() if wire == "packed"
                       else self._build_step())
 
@@ -82,6 +88,14 @@ class Trainer:
     def transport(self):
         """The packed-wire transport (None in abstract mode)."""
         return getattr(self.agg.fn, "transport", None)
+
+    @property
+    def rank(self):
+        """This process's rank on a multihost transport, else None."""
+        from repro.comm.multihost import is_multihost_transport
+
+        tp = self.transport
+        return tp.rank if is_multihost_transport(tp) else None
 
     def _grad_fn(self):
         loss_fn, unravel = self.loss_fn, self.unravel
@@ -113,16 +127,32 @@ class Trainer:
 
     def _build_packed_step(self):
         """Packed wire: jitted grads + host-side encode/ship/decode + jitted
-        apply (serialization cannot live under jit)."""
+        apply (serialization cannot live under jit).
+
+        On a multihost transport every rank runs this same step over the
+        same global (M, b, ...) batch stream but slices out ITS OWN worker
+        shard before the gradient — each worker's gradient is computed in
+        its own OS process, and only the aggregated direction (broadcast by
+        rank 0) feeds the optimizer, keeping params identical across
+        ranks."""
         agg, opt, grads_of = self.agg, self.optimizer, self._grad_fn()
         apply_jit = jax.jit(opt.apply)
+        rank, tp = self.rank, self.transport
 
         def step(flat_params, opt_state, ef_state, batch, rng):
+            if rank is not None:
+                batch = jax.tree.map(lambda x: x[rank:rank + 1], batch)
             losses, grads = grads_of(flat_params, batch)
             out = agg(grads, rng, ef_state)
             new_flat, new_opt = apply_jit(out.direction, opt_state,
                                           flat_params)
-            return (new_flat, new_opt, out.state, jnp.mean(losses), out.bits)
+            loss = jnp.mean(losses)
+            if rank is not None:
+                # telemetry parity: every rank reports the GLOBAL mean loss
+                # (f64 reduction on the server — allclose to, not bitwise
+                # with, the in-process f32 jnp.mean)
+                loss = tp.allreduce_scalar(float(loss))
+            return (new_flat, new_opt, out.state, loss, out.bits)
 
         return step
 

@@ -255,3 +255,55 @@ def test_broadcast_accounting():
     ps.broadcast(1000, workers=4)
     assert ps.stats.bytes_down == 4000
     assert ps.stats.sim_time_s == pytest.approx(1e-3 + 4000 / 1e6)
+
+
+def test_broadcast_wire_bytes_parity_across_transports():
+    """Regression: `LoopbackTransport.broadcast` used to skip ``wire_bytes``
+    while `SimulatedTransport.broadcast` booked it, so identical traffic
+    produced incomparable stats across transports.  Every transport must
+    book the same payload accounting for the same traffic."""
+    payloads = [b"x" * 100, b"y" * 60]
+    lb = make_transport("loopback")
+    ps = make_transport("parameter_server")   # star: wire == payload sum
+    for t in (lb, ps):
+        t.exchange(list(payloads))
+        t.broadcast(1000, workers=2)
+    assert lb.stats.bytes_up == ps.stats.bytes_up == 160
+    assert lb.stats.bytes_down == ps.stats.bytes_down == 2000
+    assert lb.stats.wire_bytes == ps.stats.wire_bytes == 160 + 2000
+
+
+def test_make_transport_rejects_unused_kwargs():
+    """Regression: the parameter_server/ring/loopback branches silently
+    swallowed ``**topo_kw`` (make_transport("ring", pod_size=8) just
+    dropped the kwarg)."""
+    for name in ("loopback", "parameter_server", "ring"):
+        with pytest.raises(TypeError, match="unsupported keyword"):
+            make_transport(name, pod_size=8)
+    # hierarchical consumes topology kwargs for real...
+    t = make_transport("hierarchical", pod_size=8)
+    assert t.topology.pod_size == 8
+    # ...and still fails loudly on unknown ones
+    with pytest.raises(TypeError):
+        make_transport("hierarchical", nonsense=1)
+
+
+def test_packet_from_bytes_rejects_corruption(grad):
+    """A network transport sees torn frames: every structural violation
+    must raise a descriptive ValueError, never a silently-corrupt packet."""
+    raw = make_codec("qsgd", D, **CODEC_KW).encode(
+        grad, jax.random.PRNGKey(2)).packet.to_bytes()
+    assert Packet.from_bytes(raw)  # the pristine buffer parses
+
+    with pytest.raises(ValueError, match="truncated packet"):
+        Packet.from_bytes(raw[:10])                 # inside the header
+    with pytest.raises(ValueError, match="truncated packet"):
+        Packet.from_bytes(raw[:-1])                 # inside the last stream
+    with pytest.raises(ValueError, match="bad packet magic"):
+        Packet.from_bytes(b"XXXX" + raw[4:])
+    with pytest.raises(ValueError, match="unknown codec id"):
+        Packet.from_bytes(raw[:4] + b"\xee" + raw[5:])
+    with pytest.raises(ValueError, match="unsupported packet version"):
+        Packet.from_bytes(raw[:5] + b"\x09" + raw[6:])
+    with pytest.raises(ValueError, match="trailing bytes"):
+        Packet.from_bytes(raw + b"\x00")

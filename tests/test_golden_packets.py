@@ -94,6 +94,46 @@ def test_codec_ids_append_only():
                 f"new codec {name!r} must take an id above {frozen_max}"
 
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # pragma: no cover - dev extra not installed
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=120, deadline=None)
+    @given(name=st.sampled_from(ALL_AGGREGATORS), cut=st.floats(0.0, 1.0))
+    def test_truncated_golden_packet_raises(name, cut):
+        """A torn frame (any strict prefix of real wire bytes) must raise a
+        descriptive ValueError from `Packet.from_bytes` — a TCP transport
+        will see exactly these buffers on a mid-frame disconnect."""
+        raw = (GOLDEN_DIR / f"{name}.bin").read_bytes()
+        n = min(int(cut * len(raw)), len(raw) - 1)
+        with pytest.raises(ValueError,
+                           match="truncated|corrupt|trailing|magic"):
+            Packet.from_bytes(raw[:n])
+
+    @settings(max_examples=120, deadline=None)
+    @given(name=st.sampled_from(ALL_AGGREGATORS),
+           pos=st.integers(0, 11), val=st.integers(0, 255))
+    def test_corrupt_golden_header_never_parses_silently(name, pos, val):
+        """Flipping a byte in the magic/id/version/geometry region either
+        raises ValueError or yields a packet that still declares a valid
+        structure — never an out-of-bounds buffer read or a silent hang."""
+        raw = bytearray((GOLDEN_DIR / f"{name}.bin").read_bytes())
+        raw[pos] = val ^ raw[pos]
+        try:
+            pkt = Packet.from_bytes(bytes(raw))
+        except ValueError:
+            return                    # loudly rejected: the desired outcome
+        for s in pkt.streams:         # accepted: geometry must be coherent
+            assert 1 <= s.width <= 32
+            assert s.words.size * 32 >= s.used_bits
+
+
 def _regen():
     GOLDEN_DIR.mkdir(exist_ok=True)
     for name in ALL_AGGREGATORS:
