@@ -1,0 +1,89 @@
+"""Adaptive vs fixed-probability MLMC — the perf-trajectory benchmark.
+
+Trains the stateful EMA-adaptive family (`mlmc_adaptive_topk`, Lemma 3.4 /
+Alg. 3 with the CommState ladder) against the fixed-probability variant
+(`mlmc_topk_static`, Alg. 2) and the stateless per-sample adaptive
+(`mlmc_topk`) at TWO model sizes, and emits a machine-readable
+``BENCH_adaptive.json`` at the REPO ROOT so successive PRs accumulate a
+comparable perf record: steps/s, bits/step, and final loss per method/size.
+
+    PYTHONPATH=src python -m benchmarks.bench_adaptive            # full
+    PYTHONPATH=src python -m benchmarks.bench_adaptive --smoke    # CI tier
+
+The smoke tier (a few steps, one size) exists so ci.yml exercises the
+emission path on every push without burning minutes; the weekly full run
+refreshes the real numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+from benchmarks.common import BENCH_STEPS, run_methods, small_lm_config
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_adaptive.json"
+
+#: the comparison the paper's headline empirical win rests on (§5, Fig. 2)
+METHODS = {
+    "mlmc_adaptive_topk": dict(method="mlmc_adaptive_topk", k_fraction=0.02,
+                               ema_rho=0.25),
+    "mlmc_topk": dict(method="mlmc_topk", k_fraction=0.02),
+    "mlmc_topk_static": dict(method="mlmc_topk_static", k_fraction=0.02),
+}
+
+#: two sizes so the trajectory tracks both the tiny and the wider regime
+SIZES = {
+    "small": dict(layers=2, d_model=128),
+    "wide": dict(layers=2, d_model=256),
+}
+
+
+def main(smoke: bool = False) -> dict:
+    steps = 6 if smoke else BENCH_STEPS
+    sizes = {"small": SIZES["small"]} if smoke else SIZES
+    record = {
+        "benchmark": "adaptive_vs_fixed_mlmc",
+        "smoke": smoke,
+        "steps": steps,
+        "sizes": {},
+    }
+    for size_name, size_kw in sizes.items():
+        cfg = small_lm_config(**size_kw)
+        t0 = time.time()
+        results = run_methods(METHODS, steps=steps, cfg=cfg)
+        for label, r in results.items():
+            entry = {
+                "dim": r["dim"],
+                "steps_per_s": round(len(r["loss"]) / max(r["wall_s"], 1e-9),
+                                     3),
+                "bits_per_step": r["bits"][-1] / max(len(r["bits"]), 1),
+                "final_loss": round(r["final_loss"], 6),
+                "mean_tail_loss": round(r["mean_tail_loss"], 6),
+            }
+            record["sizes"].setdefault(size_name, {})[label] = entry
+            print(f"bench_adaptive/{size_name}/{label},"
+                  f"{1e6 / max(entry['steps_per_s'], 1e-9):.0f},"
+                  f"final_loss={entry['final_loss']:.4f};"
+                  f"bits_per_step={entry['bits_per_step']:.3e}")
+        print(f"# bench_adaptive {size_name} took {time.time()-t0:.1f}s",
+              flush=True)
+    if smoke and OUT_PATH.exists():
+        try:
+            if not json.loads(OUT_PATH.read_text()).get("smoke", True):
+                # never clobber a committed FULL perf record with a smoke
+                # run (CI runs --smoke on every push to test this path)
+                print(f"# smoke run: kept existing full record {OUT_PATH}")
+                return record
+        except (json.JSONDecodeError, OSError):
+            pass
+    OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
+    print(f"# wrote {OUT_PATH}")
+    return record
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -11,6 +11,7 @@ import time
 
 def main() -> None:
     from benchmarks import (
+        bench_adaptive,
         fig1_communication_efficiency,
         fig2_iteration_efficiency,
         fig3_bitwise,
@@ -32,6 +33,7 @@ def main() -> None:
         "parallelization": parallelization_scaling.main,  # Thm 4.1 / §4
         "kernels": kernel_bench.main,                 # Pallas hot-spots
         "roofline": roofline_table.main,              # §Roofline aggregate
+        "adaptive": bench_adaptive.main,              # BENCH_adaptive.json
     }
     picks = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

@@ -1,3 +1,8 @@
-from repro.checkpoint.ckpt import restore, save
+from repro.checkpoint.ckpt import (
+    restore,
+    restore_training,
+    save,
+    save_training,
+)
 
-__all__ = ["restore", "save"]
+__all__ = ["restore", "restore_training", "save", "save_training"]

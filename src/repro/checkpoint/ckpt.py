@@ -1,5 +1,13 @@
 """Minimal checkpointing: pytree <-> .npz with path-keyed arrays + a JSON
-metadata sidecar (step, transmitted bits, config name).  No external deps."""
+metadata sidecar (step, transmitted bits, config name).  No external deps.
+
+`save_training`/`restore_training` bundle the THREE live trees of a run —
+params, opt_state, and the aggregator's `CommState` — into one checkpoint.
+Before the CommState became first-class, checkpoints silently dropped the
+EF21 innovation state: a restored EF21/EF21-SGDM run restarted from zero
+innovation (and an adaptive-MLMC run from a cold probability ladder).
+Persisting the comm state makes restore-and-continue bitwise identical to
+an uninterrupted run (see tests/test_comm_state.py)."""
 
 from __future__ import annotations
 
@@ -44,6 +52,28 @@ def save(path: str | pathlib.Path, tree: PyTree,
     np.savez(path.with_suffix(".npz"), **flat)
     meta = dict(metadata or {})
     path.with_suffix(".json").write_text(json.dumps(meta, indent=1))
+
+
+def save_training(path: str | pathlib.Path, *, params: PyTree,
+                  opt_state: PyTree = (), comm_state: PyTree = (),
+                  metadata: dict | None = None) -> None:
+    """Persist one training bundle: params + optimizer state + CommState."""
+    save(path, {"params": params, "opt_state": opt_state,
+                "comm_state": comm_state}, metadata)
+
+
+def restore_training(path: str | pathlib.Path, *, params: PyTree,
+                     opt_state: PyTree = (), comm_state: PyTree = ()
+                     ) -> tuple[PyTree, PyTree, PyTree, dict]:
+    """Restore a `save_training` bundle into the given templates.
+
+    Returns ``(params, opt_state, comm_state, metadata)``.  A checkpoint
+    written without a comm state will raise `KeyError` when restored with a
+    stateful template — better loud than an EF21 run silently restarting
+    from zero innovation."""
+    tree, meta = restore(path, {"params": params, "opt_state": opt_state,
+                                "comm_state": comm_state})
+    return tree["params"], tree["opt_state"], tree["comm_state"], meta
 
 
 def restore(path: str | pathlib.Path, like: PyTree) -> tuple[PyTree, dict]:

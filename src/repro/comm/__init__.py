@@ -17,7 +17,10 @@ and wall-clock instead of simulating them.
 """
 
 from repro.comm.aggregate import (
+    MultihostPackedAdaptive,
     MultihostPackedAggregate,
+    MultihostPackedEF21,
+    PackedAdaptiveMLMC,
     PackedAggregate,
     PackedEF21,
     packed_aggregator,
@@ -49,8 +52,9 @@ from repro.comm.transport import (
 
 __all__ = [
     "CostModel", "DEVICE_WIRE_METHODS", "DeviceCodec", "DevicePacket",
-    "EncodeResult", "Header", "LoopbackTransport",
-    "MultihostPackedAggregate", "PackedAggregate", "PackedEF21", "Packet",
+    "EncodeResult", "Header", "LoopbackTransport", "MultihostPackedAdaptive",
+    "MultihostPackedAggregate", "MultihostPackedEF21", "PackedAdaptiveMLMC",
+    "PackedAggregate", "PackedEF21", "Packet",
     "SimulatedTransport", "Stream", "TcpStarTransport", "Transport",
     "TransportStats", "WireCodec", "device_aggregator", "header_lane",
     "is_multihost_transport", "make_codec", "make_device_codec",

@@ -9,15 +9,20 @@ wire bits instead of asserted ones in `AggregateOut.bits`.
 
 This path is host-side Python (serialization is inherently un-jittable);
 it exists for verification and for honest telemetry, while the jitted
-abstract path remains the fast default.  `PackedEF21` does the same for the
-stateful EF21/EF21-SGDM baselines, whose wire message is the compressed
-*innovation* per worker.
+abstract path remains the fast default.  Every aggregator here implements
+the unified stateful protocol (`init -> CommState`, packets in, CommState
+out): `PackedEF21` threads the EF21/EF21-SGDM worker mirrors, and
+`PackedAdaptiveMLMC` threads the EMA residual-norm ladders of the stateful
+Alg.-3 family (`mlmc_adaptive_*`), shipping each worker's Lemma-3.4
+probability explicitly in the packet header.
 
-`MultihostPackedAggregate` is the distributed realization: when the
+The `Multihost*` classes are the distributed realizations: when the
 transport is a real multi-host one (`repro.comm.multihost`), each OS
-process encodes only its own rank's gradient, rank 0 decodes + means, and
-the direction comes back over the wire — same math, same bytes, real
-sockets.
+process encodes only its own rank's message, rank 0 decodes + aggregates,
+and the direction comes back over the wire — same math, same bytes, real
+sockets.  `MultihostPackedEF21` closes the ROADMAP follow-up: rank 0
+replicates every worker's decoded innovation into its ``g_workers`` mirror,
+so stateful EF21 trains over tcp bit-for-bit equal to loopback.
 """
 
 from __future__ import annotations
@@ -32,21 +37,31 @@ from repro.comm.codec import WireCodec, make_codec
 from repro.comm.multihost import is_multihost_transport
 from repro.comm.packets import Packet
 from repro.comm.transport import LoopbackTransport, Transport
+from repro.core.adaptive import ladder_ema_update, probs_from_ladder
+from repro.core.error_feedback import ef21_targets
+from repro.core.types import (
+    CommState,
+    adaptive_comm_state,
+    ef21_comm_state,
+    empty_comm_state,
+)
 
 Array = jax.Array
 
 
 class PackedAggregate:
-    """Stateless packed-wire aggregator: encode -> ship -> decode -> mean."""
+    """Stateless packed-wire aggregator: encode -> ship -> decode -> mean.
+    The CommState passes through unchanged."""
 
     def __init__(self, codec: WireCodec, transport: Transport | None = None):
         self.codec = codec
         self.transport = transport or LoopbackTransport()
 
-    def __call__(self, worker_grads: Array, rng, state=None):
+    def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
         from repro.core.aggregators import AggregateOut
 
-        del state
+        if state is None:
+            state = empty_comm_state()
         m = worker_grads.shape[0]
         keys = jax.random.split(rng, m)
         encoded = [self.codec.encode(worker_grads[i], keys[i])
@@ -60,7 +75,55 @@ class PackedAggregate:
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         # account the dense model-update broadcast on the downlink
         self.transport.broadcast(4 * self.codec.dim, m)
-        return AggregateOut(direction, None, jnp.asarray(bits, jnp.float32))
+        return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
+
+
+class PackedAdaptiveMLMC:
+    """The stateful Alg.-3 family on the byte wire: the per-worker EMA
+    residual-norm ladders live in ``CommState.ladder_ema``, the updated EMA
+    yields each worker's Lemma-3.4 distribution, and the sampled ``p_l``
+    ships explicitly in the packet header (FLAG_EXPLICIT_PROB) so the
+    server decodes from the packet alone.
+
+    Per-worker math is computed row-by-row (not vmapped) so a multihost
+    rank — which only ever sees its own row — replays the exact same f32
+    ops and stays bitwise comparable (see `MultihostPackedAdaptive`)."""
+
+    def __init__(self, codec, compressor, rho: float,
+                 transport: Transport | None = None):
+        self.codec = codec
+        self.compressor = compressor
+        self.rho = rho
+        self.transport = transport or LoopbackTransport()
+
+    def init(self, num_workers: int, dim: int) -> CommState:
+        del dim
+        return adaptive_comm_state(num_workers, self.compressor.num_levels)
+
+    def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
+        from repro.core.aggregators import AggregateOut
+
+        m = worker_grads.shape[0]
+        if state is None:
+            state = self.init(m, worker_grads.shape[1])
+        keys = jax.random.split(rng, m)
+        deltas = jnp.stack([self.compressor.residual_norms(worker_grads[i])
+                            for i in range(m)])
+        ema = ladder_ema_update(state.ladder_ema, deltas, self.rho, state.step)
+        probs = probs_from_ladder(ema)
+        encoded = [self.codec.encode(worker_grads[i], keys[i], probs=probs[i])
+                   for i in range(m)]
+        delivered = self.transport.exchange(
+            [e.packet.to_bytes() for e in encoded])
+        packets = [Packet.from_bytes(b) for b in delivered]
+        decoded = [self.codec.decode(p) for p in packets]
+        direction = jnp.mean(jnp.stack([jnp.asarray(d) for d in decoded]),
+                             axis=0)
+        bits = float(sum(self.codec.measured_bits(p) for p in packets))
+        self.transport.broadcast(4 * self.codec.dim, m)
+        new_state = state._replace(step=state.step + 1, ladder_ema=ema)
+        return AggregateOut(direction, new_state,
+                            jnp.asarray(bits, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +153,20 @@ def unpack_direction(raw: bytes, dim: int) -> tuple[np.ndarray, float]:
     return np.frombuffer(raw, np.float32, d, _DIR_HEADER_BYTES), bits
 
 
+def _require_multihost(transport, who: str):
+    if not is_multihost_transport(transport):
+        raise ValueError(f"{who} needs a multihost transport (rank/world + "
+                         "broadcast_payload)")
+
+
+def _require_one_worker(worker_grads: Array):
+    if worker_grads.shape[0] != 1:
+        raise ValueError(
+            "a multihost rank hosts exactly one worker; got a stack of "
+            f"{worker_grads.shape[0]} gradients (slice the global batch "
+            "to this rank's shard)")
+
+
 class MultihostPackedAggregate:
     """The socket-star realization of `PackedAggregate`: each OS process
     encodes ITS OWN worker's gradient, ships it to rank 0, and rank 0
@@ -103,37 +180,91 @@ class MultihostPackedAggregate:
     as raw f32 bit patterns."""
 
     def __init__(self, codec: WireCodec, transport):
-        if not is_multihost_transport(transport):
-            raise ValueError("MultihostPackedAggregate needs a multihost "
-                             "transport (rank/world + broadcast_payload)")
+        _require_multihost(transport, "MultihostPackedAggregate")
         self.codec = codec
         self.transport = transport
 
-    def __call__(self, worker_grads: Array, rng, state=None):
+    def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
         from repro.core.aggregators import AggregateOut
 
-        del state
+        if state is None:
+            state = empty_comm_state()
         tp = self.transport
-        if worker_grads.shape[0] != 1:
-            raise ValueError(
-                "a multihost rank hosts exactly one worker; got a stack of "
-                f"{worker_grads.shape[0]} gradients (slice the global batch "
-                "to this rank's shard)")
+        _require_one_worker(worker_grads)
         keys = jax.random.split(rng, tp.world)
         enc = self.codec.encode(worker_grads[0], keys[tp.rank])
-        delivered = tp.exchange([enc.packet.to_bytes()])
-        if tp.rank == 0:
-            packets = [Packet.from_bytes(b) for b in delivered]
-            decoded = [self.codec.decode(p) for p in packets]
-            direction = jnp.mean(jnp.stack([jnp.asarray(d) for d in decoded]),
-                                 axis=0)
-            bits = float(sum(self.codec.measured_bits(p) for p in packets))
-            tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
-        else:
-            vec, bits = unpack_direction(tp.broadcast_payload(None),
-                                         self.codec.dim)
-            direction = jnp.asarray(vec)
-        return AggregateOut(direction, None, jnp.asarray(bits, jnp.float32))
+        direction, bits = _serve_round(tp, self.codec,
+                                       enc.packet.to_bytes())
+        return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
+
+
+def _serve_round(tp, codec, local_payload: bytes) -> tuple[Array, float]:
+    """One multihost aggregation round: ship this rank's payload, decode +
+    mean on rank 0, broadcast the f32 direction.  Returns the direction and
+    the measured uplink bits (identical on every rank).  EF21 does NOT
+    route through here — its server must also fold the decoded innovations
+    into the state mirror, so `MultihostPackedEF21` runs its own loop."""
+    delivered = tp.exchange([local_payload])
+    if tp.rank == 0:
+        packets = [Packet.from_bytes(b) for b in delivered]
+        stacked = jnp.stack([jnp.asarray(codec.decode(p)) for p in packets])
+        direction = jnp.mean(stacked, axis=0)
+        bits = float(sum(codec.measured_bits(p) for p in packets))
+        tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
+    else:
+        vec, bits = unpack_direction(tp.broadcast_payload(None), codec.dim)
+        direction = jnp.asarray(vec)
+    return direction, bits
+
+
+class MultihostPackedAdaptive:
+    """`PackedAdaptiveMLMC` over the socket star: each rank maintains ITS
+    OWN row of the EMA ladder (it never sees the other workers' gradients),
+    computes its Lemma-3.4 distribution locally, and ships the sampled
+    ``p_l`` in the packet header — rank 0 needs no ladder at all to decode.
+    Same f32 row ops as the in-process loop, so directions and bytes match
+    loopback bit-for-bit.
+
+    Checkpoint caveat (unlike `MultihostPackedEF21`, whose server mirror is
+    complete): rank 0 cannot reconstruct the other workers' ladders from
+    the compressed segments, so a rank-0 checkpoint holds only row 0 — a
+    restored tcp world's other rows restart at zero, which the probability
+    normalization turns into the per-sample Lemma-3.4 optimum on their
+    first post-restore step (``rho * fresh`` cancels in
+    ``probs_from_ladder``); the EMA then rebuilds.  Unbiasedness is never
+    affected (Lemma 3.2).  Shipping the tiny (L,) rows on a dedicated
+    STATE frame is a noted ROADMAP follow-up."""
+
+    def __init__(self, codec, compressor, rho: float, transport):
+        _require_multihost(transport, "MultihostPackedAdaptive")
+        self.codec = codec
+        self.compressor = compressor
+        self.rho = rho
+        self.transport = transport
+
+    def init(self, num_workers: int, dim: int) -> CommState:
+        del dim
+        return adaptive_comm_state(num_workers, self.compressor.num_levels)
+
+    def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
+        from repro.core.aggregators import AggregateOut
+
+        tp = self.transport
+        _require_one_worker(worker_grads)
+        if state is None:
+            state = self.init(tp.world, worker_grads.shape[1])
+        keys = jax.random.split(rng, tp.world)
+        r = tp.rank
+        deltas = self.compressor.residual_norms(worker_grads[0])
+        row = ladder_ema_update(state.ladder_ema[r], deltas, self.rho,
+                                state.step)
+        probs = probs_from_ladder(row)
+        enc = self.codec.encode(worker_grads[0], keys[r], probs=probs)
+        direction, bits = _serve_round(tp, self.codec, enc.packet.to_bytes())
+        new_state = state._replace(step=state.step + 1,
+                                   ladder_ema=state.ladder_ema.at[r].set(row))
+        return AggregateOut(direction, new_state,
+                            jnp.asarray(bits, jnp.float32))
 
 
 class PackedEF21:
@@ -141,7 +272,8 @@ class PackedEF21:
 
     Replays `repro.core.error_feedback.EF21.step` with an
     encode -> ship -> decode round trip on each worker's compressed
-    innovation ``c_i = C(target_i - g_i)``."""
+    innovation ``c_i = C(target_i - g_i)``, threading the worker mirrors
+    through `CommState`."""
 
     def __init__(self, codec: WireCodec, beta: float,
                  transport: Transport | None = None):
@@ -149,27 +281,16 @@ class PackedEF21:
         self.beta = beta
         self.transport = transport or LoopbackTransport()
 
-    def init(self, num_workers: int, dim: int):
-        from repro.core.error_feedback import EF21State
+    def init(self, num_workers: int, dim: int) -> CommState:
+        return ef21_comm_state(num_workers, dim)
 
-        z = jnp.zeros((num_workers, dim), jnp.float32)
-        return EF21State(g_workers=z, g_server=jnp.zeros((dim,), jnp.float32),
-                         momentum=z)
-
-    def __call__(self, worker_grads: Array, rng, state):
+    def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
         from repro.core.aggregators import AggregateOut
-        from repro.core.error_feedback import EF21State
 
         del rng  # the EF21 compressors (Top-k / sign) are deterministic
         if state is None:
-            raise ValueError("PackedEF21 needs an initialized EF21State")
-        if self.beta < 1.0:
-            mom = (1.0 - self.beta) * state.momentum + self.beta * worker_grads
-            target = mom
-        else:
-            mom = state.momentum
-            target = worker_grads
-
+            state = self.init(*worker_grads.shape)
+        target, mom = ef21_targets(state, worker_grads, self.beta)
         innovations = target - state.g_workers
         m = innovations.shape[0]
         encoded = [self.codec.encode(innovations[i], None) for i in range(m)]
@@ -181,15 +302,96 @@ class PackedEF21:
         g_server = state.g_server + jnp.mean(c, axis=0)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         self.transport.broadcast(4 * self.codec.dim, m)
-        return AggregateOut(g_server,
-                            EF21State(g_workers, g_server, mom),
+        new_state = state._replace(step=state.step + 1, g_workers=g_workers,
+                                   g_server=g_server, momentum=mom)
+        return AggregateOut(g_server, new_state,
+                            jnp.asarray(bits, jnp.float32))
+
+
+class MultihostPackedEF21:
+    """EF21 / EF21-SGDM over the TCP star — the ROADMAP follow-up.
+
+    Each rank compresses only ITS OWN innovation ``c_r = C(target_r - g_r)``
+    (momentum and ``g_r`` are rank-local rows of the CommState).  Rank 0
+    decodes every worker's innovation and REPLICATES them into its full
+    ``(M, d)`` ``g_workers`` mirror — the server-side innovation-state
+    replication that makes the aggregate ``g <- g + mean_i(c_i)``
+    computable — then re-broadcasts the new direction ``g`` as raw f32 bit
+    patterns, so training over tcp equals loopback bit-for-bit.
+
+    Worker ranks update their own mirror row from their own decoded packet
+    (value-exact, the identical bytes rank 0 decoded) and adopt the
+    broadcast aggregate; rows of other workers stay at their initial zeros
+    on non-server ranks (only rank 0 owns the full ``g_workers`` mirror —
+    checkpoint on rank 0, like the launcher does).
+
+    Checkpoint caveat for ``beta < 1`` (EF21-SGDM): the MOMENTUM rows are
+    client-side by construction — rank 0 cannot derive ``v_i`` from the
+    compressed innovation ``c_i`` — so a rank-0 checkpoint carries only
+    momentum row 0; a restored tcp world's other workers restart their
+    momentum EMA from their next gradient.  Plain EF21 (``beta = 1``) has
+    no momentum and its rank-0 state IS complete.  Shipping the momentum
+    rows on a STATE frame shares the ROADMAP follow-up with
+    `MultihostPackedAdaptive`'s ladder rows."""
+
+    def __init__(self, codec: WireCodec, beta: float, transport):
+        _require_multihost(transport, "MultihostPackedEF21")
+        self.codec = codec
+        self.beta = beta
+        self.transport = transport
+
+    def init(self, num_workers: int, dim: int) -> CommState:
+        return ef21_comm_state(num_workers, dim)
+
+    def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
+        from repro.core.aggregators import AggregateOut
+
+        del rng
+        tp = self.transport
+        _require_one_worker(worker_grads)
+        if state is None:
+            state = self.init(tp.world, worker_grads.shape[1])
+        r = tp.rank
+        own = state._replace(g_workers=state.g_workers[r:r + 1],
+                             momentum=state.momentum[r:r + 1])
+        target, mom_r = ef21_targets(own, worker_grads, self.beta)
+        innovation = (target - own.g_workers)[0]
+        enc = self.codec.encode(innovation, None)
+        raw = enc.packet.to_bytes()
+
+        if tp.rank == 0:
+            # server: decode ALL innovations -> replicate the worker mirror
+            delivered = tp.exchange([raw])
+            packets = [Packet.from_bytes(b) for b in delivered]
+            c = jnp.stack([jnp.asarray(self.codec.decode(p))
+                           for p in packets])
+            g_workers = state.g_workers + c
+            g_server = state.g_server + jnp.mean(c, axis=0)
+            bits = float(sum(self.codec.measured_bits(p) for p in packets))
+            tp.broadcast_payload(pack_direction(np.asarray(g_server), bits))
+        else:
+            tp.exchange([raw])
+            # own row only: decode our own packet (the identical bytes the
+            # server decoded, so the mirror row matches rank 0's bit-for-bit)
+            c_r = jnp.asarray(self.codec.decode(Packet.from_bytes(raw)))
+            g_workers = state.g_workers.at[r].add(c_r)
+            vec, bits = unpack_direction(tp.broadcast_payload(None),
+                                         self.codec.dim)
+            g_server = jnp.asarray(vec)
+
+        momentum = state.momentum.at[r].set(mom_r[0]) \
+            if self.beta < 1.0 else state.momentum
+        new_state = state._replace(step=state.step + 1, g_workers=g_workers,
+                                   g_server=g_server, momentum=momentum)
+        return AggregateOut(g_server, new_state,
                             jnp.asarray(bits, jnp.float32))
 
 
 def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None,
                       k_fraction: float = 0.01, s: int = 1,
                       rtn_level: int = 4, qsgd_levels: int = 2,
-                      momentum_beta: float = 0.1, fixed_levels: int = 24):
+                      momentum_beta: float = 0.1, fixed_levels: int = 24,
+                      ema_rho: float = 0.25):
     """Build the packed-wire `Aggregator` for a registry name (the
     ``wire="packed"`` branch of `repro.core.aggregators.make_aggregator`)."""
     from repro.core.aggregators import Aggregator
@@ -199,14 +401,15 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
                        fixed_levels=fixed_levels)
     multihost = is_multihost_transport(transport)
     if name in ("ef21", "ef21_sgdm", "signsgd_ef"):
-        if multihost:
-            raise NotImplementedError(
-                f"{name!r} keeps per-worker innovation state on the server; "
-                "the multihost wire does not replicate it yet — use a "
-                "stateless method over tcp")
         beta = momentum_beta if name == "ef21_sgdm" else 1.0
-        ef = PackedEF21(codec, beta, transport)
-        return Aggregator(name, ef, init=ef.init)
+        cls = MultihostPackedEF21 if multihost else PackedEF21
+        ef = cls(codec, beta, transport)
+        return Aggregator(name, ef, init=ef.init, stateful=True)
+    if name in ("mlmc_adaptive_topk", "mlmc_adaptive_stopk",
+                "mlmc_adaptive_rtn"):
+        cls = MultihostPackedAdaptive if multihost else PackedAdaptiveMLMC
+        ad = cls(codec, codec.compressor, ema_rho, transport)
+        return Aggregator(name, ad, init=ad.init, stateful=True)
     if multihost:
         return Aggregator(name, MultihostPackedAggregate(codec, transport))
     return Aggregator(name, PackedAggregate(codec, transport))

@@ -210,6 +210,36 @@ class TopKCodec(_SparseCodec):
         return n, n
 
 
+class EF21InnovationCodec(TopKCodec):
+    """The EF21 / EF21-SGDM innovation message ``c_i = Top-k(target - g_i)``
+    with HONEST positions: ``ceil(log2 d)`` bits per index instead of the
+    Top-k baseline's 32 (the `bits.ef21_bits` ledger entry).
+
+    The abstract `EF21.step` books exactly `bits.ef21_bits(d, k)` per
+    worker, so measured-vs-booked reconciliation is tight — word padding of
+    the index stream is the only slack (the same move PR 2 made for
+    `mlmc_rtn`)."""
+
+    def __init__(self, dim: int, k: int):
+        super().__init__(dim, k)
+        self.name = "ef21"
+        self.index_width = _index_bits(dim)
+
+    def encode(self, v, rng):
+        res = super().encode(v, rng)
+        hdr = dataclasses.replace(res.packet.header, codec="ef21")
+        return EncodeResult(Packet(hdr, res.packet.streams), res.estimate)
+
+    def nominal_bits(self):
+        return bitcost.ef21_bits(self.dim, self.k)
+
+    def reconcile_bounds(self, packet):
+        n = self.nominal_bits()
+        # Top-k of an innovation always carries exactly k entries; only the
+        # ceil(log2 d)-bit index stream can pad out to a word boundary
+        return n, n + _padding_bits(self.k, self.index_width)
+
+
 class RandKCodec(_SparseCodec):
     def __init__(self, dim: int, k: int):
         self.name, self.dim, self.k = "randk", dim, k
@@ -536,18 +566,24 @@ class MLMCTopKCodec(_MLMCCodecBase):
     def nominal_bits(self):
         return bitcost.topk_mlmc_bits(self.dim, self.compressor.s)
 
+    def _explicit_prob(self, packet):
+        return self.adaptive or bool(packet.header.flags & FLAG_EXPLICIT_PROB)
+
     def header_bits(self, packet):
-        # level index (+ p_l for the adaptive Alg. 3 variant)
-        return self.level_header_bits() + (32.0 if self.adaptive else 0.0)
+        # level index (+ p_l whenever it actually ships: the adaptive Alg. 3
+        # variant and the stateful EMA family's explicit-prob packets)
+        return self.level_header_bits() + \
+            (32.0 if self._explicit_prob(packet) else 0.0)
 
     def reconcile_bounds(self, packet):
         n = self.nominal_bits()   # s*(32 + ceil(log2 d)) + ceil(log2 L)
         s = self.compressor.s
         pad = _padding_bits(s, self.index_width)
-        # last segment may carry fewer than s entries (d mod s), and the
-        # adaptive variant ships p_l (32 bits) on top of the ledger header
+        # last segment may carry fewer than s entries (d mod s), and a
+        # shipped p_l adds 32 bits on top of the ledger header
         short = (s - packet.header.nnz) * (32 + self.index_width)
-        return n - short, n + pad + (32.0 if self.adaptive else 0.0)
+        return n - short, n + pad + \
+            (32.0 if self._explicit_prob(packet) else 0.0)
 
 
 class MLMCFixedCodec(_MLMCCodecBase):
@@ -684,10 +720,15 @@ class MLMCRTNCodec(_MLMCCodecBase):
     is tight (word padding + f32-vs-f64 header) instead of absorbing an
     l·d deviation."""
 
-    def __init__(self, dim: int, num_bits: int = 8):
-        self.name, self.dim = "mlmc_rtn", dim
+    def __init__(self, dim: int, num_bits: int = 8, *, adaptive: bool = True,
+                 name: str = "mlmc_rtn"):
+        # adaptive=False is the stateful EMA family (`mlmc_adaptive_rtn`):
+        # the caller supplies the Lemma-3.4 probabilities per encode (they
+        # come from the CommState ladder) and they ship in the header under
+        # FLAG_EXPLICIT_PROB.
+        self.name, self.dim = name, dim
         self.compressor = RTNMultilevel(num_bits=num_bits)
-        self.adaptive = True
+        self.adaptive = adaptive
 
     def encode(self, v, rng, probs=None):
         v = jnp.asarray(v, jnp.float32)
@@ -697,7 +738,8 @@ class MLMCRTNCodec(_MLMCCodecBase):
         hdr_kw = dict(level=level, scale=float(c),
                       prob=float(_np32(est.prob)))
         if level >= self.compressor.num_levels:
-            hdr = Header("mlmc_rtn", self.dim, flags=FLAG_DENSE_FALLBACK,
+            hdr = Header(self.name, self.dim,
+                         flags=FLAG_DENSE_FALLBACK | self._prob_flag(probs),
                          **hdr_kw)
             pkt = Packet(hdr, (f32_stream("residual",
                                           np.asarray(est.residual)),))
@@ -715,7 +757,8 @@ class MLMCRTNCodec(_MLMCCodecBase):
                 "delta_{l-1}/2 should make this impossible)"
             streams.append(_pack_stream("corr",
                                         (corr + 1).astype(np.uint32), 2))
-        hdr = Header("mlmc_rtn", self.dim, **hdr_kw)
+        hdr = Header(self.name, self.dim, flags=self._prob_flag(probs),
+                     **hdr_kw)
         return EncodeResult(Packet(hdr, tuple(streams)), _np32(est.estimate))
 
     # -- grid helpers built on the shared `_rtn_grid` -----------------------
@@ -802,8 +845,10 @@ def make_codec(name: str, dim: int, *, k_fraction: float = 0.01, s: int = 1,
     k = max(1, int(round(k_fraction * dim)))
     if name == "dense":
         return DenseCodec(dim)
-    if name in ("topk", "ef21", "ef21_sgdm"):
+    if name == "topk":
         return TopKCodec(dim, k)
+    if name in ("ef21", "ef21_sgdm"):
+        return EF21InnovationCodec(dim, k)
     if name == "randk":
         return RandKCodec(dim, k)
     if name == "qsgd":
@@ -816,15 +861,22 @@ def make_codec(name: str, dim: int, *, k_fraction: float = 0.01, s: int = 1,
         return SignSGDCodec(dim)
     if name == "natural":
         return NaturalCodec(dim)
-    if name in ("mlmc_topk", "mlmc_topk_static", "mlmc_stopk"):
+    if name in ("mlmc_topk", "mlmc_topk_static", "mlmc_stopk",
+                "mlmc_adaptive_topk", "mlmc_adaptive_stopk"):
         from repro.core.aggregators import mlmc_topk_segment
 
+        # the stateful EMA family carries its Lemma-3.4 probabilities in
+        # CommState and passes them explicitly at encode time, so its codec
+        # is adaptive=False (FLAG_EXPLICIT_PROB ships p_l in the header)
         return MLMCTopKCodec(dim, mlmc_topk_segment(name, k, s),
-                             adaptive=name != "mlmc_topk_static", name=name)
+                             adaptive=name in ("mlmc_topk", "mlmc_stopk"),
+                             name=name)
     if name == "mlmc_fixed":
         return MLMCFixedCodec(dim, fixed_levels)
     if name == "mlmc_float":
         return MLMCFloatCodec(dim)
     if name == "mlmc_rtn":
         return MLMCRTNCodec(dim)
+    if name == "mlmc_adaptive_rtn":
+        return MLMCRTNCodec(dim, adaptive=False, name=name)
     raise ValueError(f"no wire codec for {name!r}")

@@ -397,12 +397,17 @@ class MLMCTopKDeviceCodec(DeviceCodec):
         self.compressor = STopKMultilevel(d=dim, s=min(s, dim))
         self.words_len = topk_segment_words(dim, self.compressor.s, value_bits)
 
-    def encode(self, v, rng):
+    def encode(self, v, rng, probs=None):
+        """``probs`` (the stateful `mlmc_adaptive_*` family) carries the
+        CommState-derived Lemma-3.4 distribution; its sampled ``p_l``/level
+        ride the f32 header lane, so the stateful device path stays
+        jit-native with no host callbacks."""
         from repro.core.mlmc import mlmc_estimate
 
         v = jnp.asarray(v, jnp.float32)
         d, s = self.dim, self.compressor.s
-        est = mlmc_estimate(self.compressor, v, rng, adaptive=self.adaptive)
+        est = mlmc_estimate(self.compressor, v, rng, probs=probs,
+                            adaptive=self.adaptive and probs is None)
         idx0 = est.level - 1
         L = self.compressor.num_levels
         order = jnp.argsort(-jnp.abs(v))
@@ -434,6 +439,43 @@ class MLMCTopKDeviceCodec(DeviceCodec):
         return n - hdr, n + pad + self._lane_slack(float(hdr))
 
 
+class EF21TopKDeviceCodec(DeviceCodec):
+    """The EF21 / EF21-SGDM Top-k innovation as a fixed-shape packet.
+
+    Top-k of an innovation always carries EXACTLY k entries, so — unlike
+    the general sparse baselines — it has a static wire form: k positions
+    at ceil(log2 d) bits (split planes) + k raw f32 values.  Values ship as
+    full f32 bit patterns, so the device EF21 direction is BITWISE equal to
+    the abstract one (no bf16 deviation: error feedback compounds state
+    step over step, and an exact mirror keeps every substrate identical)."""
+
+    def __init__(self, dim: int, k: int, name: str = "ef21"):
+        self.name, self.dim = name, dim
+        self.k = max(1, min(k, dim))
+        self.words_len = topk_segment_words(dim, self.k, 32)
+
+    def encode(self, u, rng):
+        del rng   # Top-k is deterministic
+        u = jnp.asarray(u, jnp.float32)
+        order = jnp.argsort(-jnp.abs(u))[: self.k]
+        vals = u[order]
+        est = jnp.zeros((self.dim,), jnp.float32).at[order].set(vals)
+        words = pack_topk_segment(vals, order, self.dim, 32)
+        return DevicePacket(words, header_lane()), est
+
+    def decode(self, packet):
+        vals, idx = unpack_topk_segment(packet.words, self.dim, self.k, 32)
+        return jnp.zeros((self.dim,), jnp.float32).at[idx].set(vals)
+
+    def nominal_bits(self):
+        return bitcost.ef21_bits(self.dim, self.k)
+
+    def reconcile_bounds(self):
+        n = self.nominal_bits()   # k*(32 + ceil(log2 d)), headerless ledger
+        return n, n + self._padding(self.k, _index_bits(self.dim)) + \
+            self._lane_slack(0.0)
+
+
 # ---------------------------------------------------------------------------
 # registry + jit-native aggregator
 # ---------------------------------------------------------------------------
@@ -459,31 +501,107 @@ def make_device_codec(name: str, dim: int, *, k_fraction: float = 0.01,
         return SignSGDDeviceCodec(dim)
     if name == "mlmc_fixed":
         return MLMCFixedDeviceCodec(dim, fixed_levels)
-    if name in ("mlmc_topk", "mlmc_topk_static", "mlmc_stopk"):
+    if name in ("mlmc_topk", "mlmc_topk_static", "mlmc_stopk",
+                "mlmc_adaptive_topk", "mlmc_adaptive_stopk"):
         from repro.core.aggregators import mlmc_topk_segment
 
+        # the stateful EMA family (mlmc_adaptive_*) receives its Lemma-3.4
+        # probabilities explicitly at encode time (adaptive=False)
         return MLMCTopKDeviceCodec(
             dim, mlmc_topk_segment(name, k, s),
-            adaptive=name != "mlmc_topk_static",
+            adaptive=name in ("mlmc_topk", "mlmc_stopk"),
             value_bits=topk_value_bits, name=name)
+    if name in ("ef21", "ef21_sgdm"):
+        return EF21TopKDeviceCodec(dim, k, name=name)
     raise ValueError(f"no device-wire codec for {name!r}")
 
 
 DEVICE_WIRE_METHODS = ("dense", "qsgd", "rtn", "signsgd", "mlmc_fixed",
-                       "mlmc_topk", "mlmc_topk_static", "mlmc_stopk")
+                       "mlmc_topk", "mlmc_topk_static", "mlmc_stopk",
+                       "mlmc_adaptive_topk", "mlmc_adaptive_stopk",
+                       "ef21", "ef21_sgdm")
 
 
-def device_aggregator(name: str, dim: int, **codec_kw):
+def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,
+                      ema_rho: float = 0.25, **codec_kw):
     """The ``wire="device"`` branch of `make_aggregator`: every worker
     gradient is encoded to a fixed-shape `DevicePacket`, "shipped" as plain
     arrays, decoded, and averaged — all inside one jit, with bits accounted
-    from the static packet operand size."""
+    from the static packet operand size.
+
+    Stateful families thread a real `CommState` through the jit exactly
+    like the abstract substrate: EF21/EF21-SGDM keep their worker mirrors,
+    and `mlmc_adaptive_*` keeps the EMA residual-norm ladders, whose
+    sampled p_l/level ride the packets' f32 header lane (no host
+    callbacks anywhere)."""
+    from repro.core.adaptive import ladder_ema_update, probs_from_ladder
     from repro.core.aggregators import AggregateOut, Aggregator
+    from repro.core.error_feedback import ef21_targets
+    from repro.core.types import adaptive_comm_state, ef21_comm_state, \
+        empty_comm_state
 
     codec = make_device_codec(name, dim, **codec_kw)
 
+    if name in ("ef21", "ef21_sgdm"):
+        beta = 1.0 if name == "ef21" else momentum_beta
+
+        def init(num_workers, d):
+            return ef21_comm_state(num_workers, d)
+
+        def agg(worker_grads, rng, state):
+            del rng   # Top-k innovations are deterministic
+            m = worker_grads.shape[0]
+            if state is None:
+                state = init(m, dim)
+            target, mom = ef21_targets(state, worker_grads, beta)
+            innovations = target - state.g_workers
+
+            def one(u):
+                packet, _ = codec.encode(u, None)
+                return codec.decode(packet)
+
+            c = jax.vmap(one)(innovations)
+            g_workers = state.g_workers + c
+            g_server = state.g_server + jnp.mean(c, axis=0)
+            bits = jnp.asarray(m * codec.operand_bits(), jnp.float32)
+            new_state = state._replace(step=state.step + 1,
+                                       g_workers=g_workers,
+                                       g_server=g_server, momentum=mom)
+            return AggregateOut(g_server, new_state, bits)
+
+        return Aggregator(name, agg, init=init, stateful=True)
+
+    if name in ("mlmc_adaptive_topk", "mlmc_adaptive_stopk"):
+        comp = codec.compressor
+
+        def init(num_workers, d):
+            del d
+            return adaptive_comm_state(num_workers, comp.num_levels)
+
+        def agg(worker_grads, rng, state):
+            m = worker_grads.shape[0]
+            if state is None:
+                state = init(m, dim)
+            keys = jax.random.split(rng, m)
+            deltas = jax.vmap(comp.residual_norms)(worker_grads)
+            ema = ladder_ema_update(state.ladder_ema, deltas, ema_rho,
+                                    state.step)
+            probs = probs_from_ladder(ema)
+
+            def one(v, key, p):
+                packet, _ = codec.encode(v, key, probs=p)
+                return codec.decode(packet)
+
+            decoded = jax.vmap(one)(worker_grads, keys, probs)
+            bits = jnp.asarray(m * codec.operand_bits(), jnp.float32)
+            new_state = state._replace(step=state.step + 1, ladder_ema=ema)
+            return AggregateOut(jnp.mean(decoded, axis=0), new_state, bits)
+
+        return Aggregator(name, agg, init=init, stateful=True)
+
     def agg(worker_grads, rng, state):
-        del state
+        if state is None:
+            state = empty_comm_state()
         m = worker_grads.shape[0]
         keys = jax.random.split(rng, m)
 
@@ -493,6 +611,6 @@ def device_aggregator(name: str, dim: int, **codec_kw):
 
         decoded = jax.vmap(one)(worker_grads, keys)
         bits = jnp.asarray(m * codec.operand_bits(), jnp.float32)
-        return AggregateOut(jnp.mean(decoded, axis=0), None, bits)
+        return AggregateOut(jnp.mean(decoded, axis=0), state, bits)
 
     return Aggregator(name, agg)

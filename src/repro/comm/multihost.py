@@ -37,6 +37,7 @@ localhost world, `--transport tcp` in `repro.launch.train` joins one rank.
 from __future__ import annotations
 
 import contextlib
+import selectors
 import socket
 import struct
 import time
@@ -138,6 +139,43 @@ def recv_frame(sock: socket.socket,
     return ftype, rank, world, payload
 
 
+class _FrameBuffer:
+    """Per-connection receive buffer for the server's selectors reactor.
+
+    Frames are reassembled incrementally from whatever bytes the socket had
+    ready, so a slow rank mid-frame never blocks the ranks behind it — and
+    bytes that belong to the NEXT frame (a worker may pipeline its SCALAR
+    loss frame right behind its PAYLOAD) stay buffered for the next read."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> None:
+        self._buf.extend(data)
+
+    def next_frame(self) -> tuple[int, int, int, bytes] | None:
+        """Pop one complete frame -> (type, rank, world, payload), or None
+        if the buffer does not hold a full frame yet.  Raises
+        `ConnectionError` on bad magic / oversized frames (same contract as
+        `recv_frame`)."""
+        if len(self._buf) < FRAME_HEADER_BYTES:
+            return None
+        magic, ftype, rank, world, length = struct.unpack_from(
+            _FRAME_FMT, self._buf, 0)
+        if magic != FRAME_MAGIC:
+            raise ConnectionError(f"bad frame magic {magic!r} (want "
+                                  f"{FRAME_MAGIC!r}) — not a multihost peer?")
+        if length > _MAX_FRAME_PAYLOAD:
+            raise ConnectionError(f"frame length {length} exceeds the "
+                                  f"{_MAX_FRAME_PAYLOAD}-byte cap")
+        end = FRAME_HEADER_BYTES + length
+        if len(self._buf) < end:
+            return None
+        payload = bytes(self._buf[FRAME_HEADER_BYTES:end])
+        del self._buf[:end]
+        return ftype, rank, world, payload
+
+
 # ---------------------------------------------------------------------------
 # the transport
 # ---------------------------------------------------------------------------
@@ -159,10 +197,15 @@ class TcpStarTransport:
         self.world = world
         self.stats = TransportStats()
         self._conns: dict[int, socket.socket] = {}   # server: rank -> socket
+        self._bufs: dict[int, _FrameBuffer] = {}     # server: rank -> buffer
         self._sock: socket.socket | None = None      # worker: server link
         self._listener: socket.socket | None = None
         self._timeout: float = 60.0
         self.port: int | None = None
+        #: rank order in which the last `exchange` round's uplink frames
+        #: COMPLETED on the server (fan-in observability; regression surface
+        #: for the selectors reactor — a slow rank lands last, not first)
+        self.last_arrival_order: list[int] = []
 
     # ---- construction ------------------------------------------------------
 
@@ -229,6 +272,7 @@ class TcpStarTransport:
             send_frame(conn, WELCOME, 0, self.world)
             _steady_state(conn)
             self._conns[rank] = conn
+            self._bufs[rank] = _FrameBuffer()
         return self
 
     @classmethod
@@ -281,10 +325,40 @@ class TcpStarTransport:
     def is_server(self) -> bool:
         return self.rank == 0
 
+    def _buffered_frame_from(self, r: int,
+                             expect: int) -> tuple[int, int, int, bytes]:
+        """Server: pop the next complete frame from rank ``r``'s buffer,
+        blocking on its socket only when the buffer is empty."""
+        buf = self._bufs[r]
+        frame = buf.next_frame()
+        while frame is None:
+            data = self._conns[r].recv(1 << 16)
+            if not data:
+                raise ConnectionError(f"rank {r} closed its uplink")
+            buf.feed(data)
+            frame = buf.next_frame()
+        ftype, sender, _, payload = frame
+        if ftype != expect:
+            if ftype == GOODBYE:
+                raise ConnectionError(
+                    f"peer said goodbye: {payload.decode(errors='replace')}")
+            raise ConnectionError(f"expected frame type {expect}, got "
+                                  f"{ftype} from rank {r}")
+        if sender != r:
+            raise ConnectionError(
+                f"link for rank {r} delivered a frame from rank {sender}")
+        return frame
+
     def exchange(self, payloads: list[bytes]) -> list[bytes]:
         """Ship THIS rank's payload.  Rank 0 returns all ``world`` payloads
         in rank order; workers return ``[]`` (the aggregate comes back via
-        `broadcast_payload`)."""
+        `broadcast_payload`).
+
+        The server drains uplinks through a `selectors` reactor: frames
+        from all workers interleave as their bytes arrive, so one slow or
+        large rank no longer serializes the ranks behind it (the former
+        rank-by-rank drain blocked on rank 1 before reading rank 2's
+        already-delivered frame)."""
         if len(payloads) != 1:
             raise ValueError(
                 "multihost exchange ships exactly one payload per rank per "
@@ -294,14 +368,30 @@ class TcpStarTransport:
         local = payloads[0]
         if self.is_server:
             out: list[bytes | None] = [local] + [None] * (self.world - 1)
-            for r, conn in sorted(self._conns.items()):
-                _, sender, _, data = recv_frame(conn, expect=PAYLOAD)
-                if sender != r:
-                    raise ConnectionError(
-                        f"link for rank {r} delivered a frame from rank "
-                        f"{sender}")
-                out[r] = data
-                self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
+            self.last_arrival_order = []
+            pending = set(self._conns)
+            # frames already sitting in the buffers (pipelined last round)
+            for r in sorted(pending):
+                frame = self._bufs[r].next_frame()
+                if frame is not None:
+                    self._finish_payload(out, r, frame)
+                    pending.discard(r)
+            with selectors.DefaultSelector() as sel:
+                for r in pending:
+                    sel.register(self._conns[r], selectors.EVENT_READ, r)
+                while pending:
+                    for key, _ in sel.select():
+                        r = key.data
+                        data = key.fileobj.recv(1 << 16)
+                        if not data:
+                            raise ConnectionError(
+                                f"rank {r} closed its uplink mid-round")
+                        self._bufs[r].feed(data)
+                        frame = self._bufs[r].next_frame()
+                        if frame is not None:
+                            self._finish_payload(out, r, frame)
+                            pending.discard(r)
+                            sel.unregister(key.fileobj)
             self.stats.bytes_up += sum(len(p) for p in out)
             self.stats.wall_time_s += time.perf_counter() - t0
             return out
@@ -310,6 +400,21 @@ class TcpStarTransport:
         self.stats.wire_bytes += sent
         self.stats.wall_time_s += time.perf_counter() - t0
         return []
+
+    def _finish_payload(self, out: list, r: int, frame) -> None:
+        ftype, sender, _, data = frame
+        if ftype != PAYLOAD:
+            if ftype == GOODBYE:
+                raise ConnectionError(
+                    f"peer said goodbye: {data.decode(errors='replace')}")
+            raise ConnectionError(f"expected frame type {PAYLOAD}, got "
+                                  f"{ftype} from rank {r}")
+        if sender != r:
+            raise ConnectionError(
+                f"link for rank {r} delivered a frame from rank {sender}")
+        out[r] = data
+        self.last_arrival_order.append(r)
+        self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
 
     def broadcast_payload(self, data: bytes | None) -> bytes:
         """Rank 0 passes the direction blob and sends it down every link;
@@ -348,8 +453,10 @@ class TcpStarTransport:
         t0 = time.perf_counter()
         if self.is_server:
             total = float(value)
-            for r, conn in sorted(self._conns.items()):
-                _, _, _, data = recv_frame(conn, expect=SCALAR)
+            for r in sorted(self._conns):
+                # through the shared buffers: a worker may have pipelined
+                # this SCALAR right behind its PAYLOAD frame
+                _, _, _, data = self._buffered_frame_from(r, SCALAR)
                 total += struct.unpack("<d", data)[0]
                 self.stats.wire_bytes += FRAME_HEADER_BYTES + 8
             mean = total / self.world
@@ -374,6 +481,7 @@ class TcpStarTransport:
             with contextlib.suppress(OSError):
                 conn.close()
         self._conns.clear()
+        self._bufs.clear()
         for s in (self._sock, self._listener):
             if s is not None:
                 with contextlib.suppress(OSError):

@@ -40,6 +40,10 @@ CODEC_IDS = {
     "dense": 0, "topk": 1, "randk": 2, "qsgd": 3, "rtn": 4, "fixed2": 5,
     "natural": 6, "signsgd": 7, "mlmc_topk": 8, "mlmc_topk_static": 9,
     "mlmc_stopk": 10, "mlmc_fixed": 11, "mlmc_float": 12, "mlmc_rtn": 13,
+    # PR 4 (appended): the EF21 innovation wire (honest ceil(log2 d)-bit
+    # positions) and the stateful EMA-adaptive MLMC family
+    "ef21": 14, "mlmc_adaptive_topk": 15, "mlmc_adaptive_stopk": 16,
+    "mlmc_adaptive_rtn": 17,
 }
 _ID_TO_CODEC = {i: n for n, i in CODEC_IDS.items()}
 

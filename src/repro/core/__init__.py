@@ -13,16 +13,23 @@ Public surface:
 
 from repro.core.adaptive import (
     adaptive_probs,
+    ladder_ema_update,
     optimal_compression_variance,
     optimal_second_moment,
+    probs_from_ladder,
 )
-from repro.core.aggregators import ALL_AGGREGATORS, Aggregator, make_aggregator
+from repro.core.aggregators import (
+    ALL_AGGREGATORS,
+    STATEFUL_AGGREGATORS,
+    Aggregator,
+    make_aggregator,
+)
 from repro.core.bitwise import (
     FixedPointCompressor,
     FixedPointMultilevel,
     FloatingPointMultilevel,
 )
-from repro.core.error_feedback import EF21, EF21State
+from repro.core.error_feedback import EF21, ef21_targets
 from repro.core.mlmc import (
     mlmc_compression_variance,
     mlmc_estimate,
@@ -33,19 +40,25 @@ from repro.core.randk import RandK
 from repro.core.rtn import RTNCompressor, RTNMultilevel, rtn_quantize
 from repro.core.topk import STopKMultilevel, TopK, magnitude_ranks, topk_mask
 from repro.core.types import (
+    CommState,
     Compressor,
     MLMCEstimate,
     MultilevelCompressor,
+    adaptive_comm_state,
     categorical,
+    ef21_comm_state,
+    empty_comm_state,
 )
 
 __all__ = [
-    "ALL_AGGREGATORS", "Aggregator", "Compressor", "EF21", "EF21State",
+    "ALL_AGGREGATORS", "Aggregator", "CommState", "Compressor", "EF21",
     "FixedPointCompressor", "FixedPointMultilevel", "FloatingPointMultilevel",
     "MLMCEstimate", "MultilevelCompressor", "QSGD", "RTNCompressor",
-    "RTNMultilevel", "RandK", "STopKMultilevel", "TopK", "adaptive_probs",
-    "categorical", "magnitude_ranks", "make_aggregator",
+    "RTNMultilevel", "RandK", "STATEFUL_AGGREGATORS", "STopKMultilevel",
+    "TopK", "adaptive_comm_state", "adaptive_probs", "categorical",
+    "ef21_comm_state", "ef21_targets", "empty_comm_state",
+    "ladder_ema_update", "magnitude_ranks", "make_aggregator",
     "mlmc_compression_variance", "mlmc_estimate", "mlmc_second_moment",
-    "optimal_compression_variance", "optimal_second_moment", "rtn_quantize",
-    "topk_mask",
+    "optimal_compression_variance", "optimal_second_moment",
+    "probs_from_ladder", "rtn_quantize", "topk_mask",
 ]

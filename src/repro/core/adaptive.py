@@ -32,6 +32,39 @@ def adaptive_probs(compressor: MultilevelCompressor, v: Array) -> Array:
     return jnp.where(total > _EPS, deltas / jnp.maximum(total, _EPS), uniform)
 
 
+def probs_from_ladder(ladder: Array) -> Array:
+    """Lemma-3.4 probabilities from a residual-norm ladder: ``p_l ∝ Delta_l``
+    along the LAST axis, guarded against an all-zero ladder (uniform).
+
+    Works on a single ``(L,)`` ladder or a batched ``(M, L)`` stack of
+    per-worker ladders; every wire substrate (abstract / packed / device /
+    mesh) calls this same function so the sampled levels agree across
+    wires."""
+    ladder = jnp.asarray(ladder, jnp.float32)
+    total = jnp.sum(ladder, axis=-1, keepdims=True)
+    uniform = jnp.full_like(ladder, 1.0 / ladder.shape[-1])
+    return jnp.where(total > _EPS, ladder / jnp.maximum(total, _EPS), uniform)
+
+
+def ladder_ema_update(ema: Array, deltas: Array, rho, step) -> Array:
+    """Stateful Alg. 3: EMA of the residual-norm ladder across steps.
+
+    ``ema' = (1 - rho) * ema + rho * Delta(v_t)``, seeded with the fresh
+    ladder on the very first step (``step == 0``) so the cold state never
+    biases the Lemma-3.4 distribution toward uniform.  ``rho = 1`` recovers
+    the per-sample adaptive distribution of the stateless estimator exactly.
+
+    Smoothing the *ladder* (not the probabilities) keeps the estimator
+    conditionally unbiased for any resulting distribution (Lemma 3.2 holds
+    for ANY non-zero p), while damping step-to-step noise in the sampled
+    level — the stateful refinement the `mlmc_adaptive_*` registry family
+    runs on every wire."""
+    ema = jnp.asarray(ema, jnp.float32)
+    fresh = jnp.asarray(deltas, jnp.float32)
+    blended = (1.0 - jnp.float32(rho)) * ema + jnp.float32(rho) * fresh
+    return jnp.where(jnp.asarray(step) == 0, fresh, blended)
+
+
 def optimal_second_moment(compressor: MultilevelCompressor, v: Array) -> Array:
     """``E||g~||^2`` under the Lemma-3.4 optimum: ``(sum_l Delta_l)^2``."""
     return jnp.sum(compressor.residual_norms(v)) ** 2

@@ -1,8 +1,9 @@
 """Gradient aggregation strategies — the distributed-learning surface of the
 paper's Algorithms 1–3 and of the baselines it compares against.
 
-An aggregator consumes *stacked per-worker gradients* ``(M, d)`` and produces
-the server-side update direction plus the transmitted-bit count.  This single
+An aggregator consumes *stacked per-worker gradients* ``(M, d)`` plus a
+first-class `repro.core.types.CommState` and produces the server-side update
+direction, the successor state, and the transmitted-bit count.  This single
 abstraction backs:
 
 * the in-process M-worker simulation used by CPU benchmarks/examples
@@ -10,10 +11,22 @@ abstraction backs:
 * the per-data-shard path inside `shard_map` (`repro.sharding.collectives`
   realizes the same estimators with actual mesh collectives).
 
+The unified protocol every wire substrate implements identically:
+
+    agg.init(num_workers, dim) -> CommState      # empty for stateless
+    agg.step(state, worker_grads, rng) -> AggregateOut(direction, state, bits)
+
+Stateless families return their input state unchanged (or a fresh empty one
+when called with ``state=None``); the stateful families — EF21 / EF21-SGDM
+(worker innovation mirrors) and the adaptive MLMC `mlmc_adaptive_*` family
+(EMA of Lemma-3.4 residual-norm ladders) — thread real state step over step
+on the abstract, packed, device, and tcp wires alike.
+
 Registry keys (``make_aggregator``):
   dense | topk | randk | qsgd | rtn | fixed2 |
   mlmc_topk | mlmc_topk_static | mlmc_stopk | mlmc_fixed | mlmc_float |
-  mlmc_rtn | ef21 | ef21_sgdm
+  mlmc_rtn | mlmc_adaptive_topk | mlmc_adaptive_stopk | mlmc_adaptive_rtn |
+  ef21 | ef21_sgdm | natural | signsgd | signsgd_ef
 """
 
 from __future__ import annotations
@@ -25,36 +38,58 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bits as bitcost
+from repro.core.adaptive import ladder_ema_update, probs_from_ladder
 from repro.core.bitwise import (
     FixedPointCompressor,
     FixedPointMultilevel,
     FloatingPointMultilevel,
 )
-from repro.core.error_feedback import EF21, EF21State
+from repro.core.error_feedback import EF21
 from repro.core.mlmc import mlmc_estimate
 from repro.core.qsgd import QSGD
 from repro.core.randk import RandK
 from repro.core.rtn import RTNCompressor, RTNMultilevel
 from repro.core.topk import STopKMultilevel, TopK
-from repro.core.types import Array, PRNGKey
+from repro.core.types import (
+    Array,
+    CommState,
+    PRNGKey,
+    adaptive_comm_state,
+    empty_comm_state,
+)
 
 
 class AggregateOut(NamedTuple):
     direction: Array     # (d,) server-side update direction
-    state: EF21State | None
+    state: CommState     # successor comm state (input state for stateless)
     bits: Array          # total bits transmitted this step (all workers)
+
+
+def _empty_init(num_workers: int, dim: int) -> CommState:
+    del num_workers, dim
+    return empty_comm_state()
 
 
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
     name: str
     #: fn(worker_grads (M,d), rng, state) -> AggregateOut
-    fn: Callable[[Array, PRNGKey, EF21State | None], AggregateOut]
-    #: stateful aggregators (EF21*) need init(M, d)
-    init: Callable[[int, int], EF21State] | None = None
+    fn: Callable[[Array, PRNGKey, CommState | None], AggregateOut]
+    #: init(num_workers, dim) -> CommState (empty for stateless families)
+    init: Callable[[int, int], CommState] = _empty_init
+    #: True when the state actually evolves (EF21*, mlmc_adaptive_*)
+    stateful: bool = False
+
+    def step(self, state: CommState, worker_grads: Array,
+             rng: PRNGKey) -> AggregateOut:
+        """The unified protocol entry point: state in, AggregateOut out."""
+        return self.fn(worker_grads, rng, state)
 
     def __call__(self, worker_grads: Array, rng: PRNGKey,
-                 state: EF21State | None = None) -> AggregateOut:
+                 state: CommState | None = None) -> AggregateOut:
+        """``state=None`` is single-shot convenience: stateful families
+        substitute a fresh ``init``-state; real training threads the
+        returned state."""
         return self.fn(worker_grads, rng, state)
 
 
@@ -66,20 +101,58 @@ def mlmc_topk_segment(name: str, k: int, s: int) -> int:
     For MLMC-Top-k the natural segment is the sparsification budget k
     itself: each residual carries one length-k rank segment, matching the
     paper's per-step budget of "k entries"."""
-    return s if name == "mlmc_stopk" else (s if s > 1 else max(1, k))
+    if name in ("mlmc_stopk", "mlmc_adaptive_stopk"):
+        return s
+    return s if s > 1 else max(1, k)
 
 
 def _per_worker(fn):
-    """Lift fn(v, key) -> (vec, bits) over the worker axis and average."""
+    """Lift fn(v, key) -> (vec, bits) over the worker axis and average.
+    Stateless: the input CommState passes through unchanged."""
 
     def agg(worker_grads: Array, rng: PRNGKey, state) -> AggregateOut:
-        del state
+        if state is None:
+            state = empty_comm_state()
         m = worker_grads.shape[0]
         keys = jax.random.split(rng, m)
         outs, bits = jax.vmap(fn)(worker_grads, keys)
-        return AggregateOut(jnp.mean(outs, axis=0), None, jnp.sum(bits))
+        return AggregateOut(jnp.mean(outs, axis=0), state, jnp.sum(bits))
 
     return agg
+
+
+def _adaptive_mlmc_aggregator(name: str, dim: int, comp, book,
+                              ema_rho: float) -> Aggregator:
+    """The stateful Alg.-3 family: per-worker EMA residual-norm ladders in
+    `CommState.ladder_ema`, Lemma-3.4 level sampling from the updated EMA.
+
+    The identical jnp update (`ladder_ema_update` + `probs_from_ladder`)
+    runs on every wire, so the sampled levels — and hence the directions —
+    agree across substrates."""
+    L = comp.num_levels
+
+    def init(num_workers: int, d: int) -> CommState:
+        del d
+        return adaptive_comm_state(num_workers, L)
+
+    def agg(worker_grads: Array, rng: PRNGKey, state) -> AggregateOut:
+        m = worker_grads.shape[0]
+        if state is None:
+            state = init(m, dim)
+        keys = jax.random.split(rng, m)
+        deltas = jax.vmap(comp.residual_norms)(worker_grads)       # (M, L)
+        ema = ladder_ema_update(state.ladder_ema, deltas, ema_rho, state.step)
+        probs = probs_from_ladder(ema)
+
+        def one(v, key, p):
+            est = mlmc_estimate(comp, v, key, probs=p)
+            return est.estimate, jnp.asarray(book(est), jnp.float32)
+
+        outs, bits = jax.vmap(one)(worker_grads, keys, probs)
+        new_state = state._replace(step=state.step + 1, ladder_ema=ema)
+        return AggregateOut(jnp.mean(outs, axis=0), new_state, jnp.sum(bits))
+
+    return Aggregator(name, agg, init=init, stateful=True)
 
 
 def make_aggregator(
@@ -92,6 +165,7 @@ def make_aggregator(
     qsgd_levels: int = 2,
     momentum_beta: float = 0.1,
     fixed_levels: int = 24,
+    ema_rho: float = 0.25,
     wire: str = "abstract",
     transport=None,
 ) -> Aggregator:
@@ -109,8 +183,12 @@ def make_aggregator(
       `repro.comm.device_wire.DevicePacket` and decoded back, entirely
       inside jit (no host callbacks); bits are the measured static packet
       operand sizes.  Supported for the fixed-shape families
-      (`DEVICE_WIRE_METHODS`); see device_wire for the two documented
+      (`DEVICE_WIRE_METHODS`), now including the stateful EF21 variants
+      and `mlmc_adaptive_topk`; see device_wire for the two documented
       deviations (bf16 mlmc_topk values, grid-value mlmc_fixed).
+
+    ``ema_rho`` is the ladder-EMA momentum of the stateful
+    ``mlmc_adaptive_*`` family (1.0 = per-sample Lemma 3.4).
     """
     if wire == "packed":
         from repro.comm import packed_aggregator
@@ -118,7 +196,8 @@ def make_aggregator(
         return packed_aggregator(
             name, dim, transport=transport, k_fraction=k_fraction, s=s,
             rtn_level=rtn_level, qsgd_levels=qsgd_levels,
-            momentum_beta=momentum_beta, fixed_levels=fixed_levels)
+            momentum_beta=momentum_beta, fixed_levels=fixed_levels,
+            ema_rho=ema_rho)
     if wire == "device":
         from repro.comm.device_wire import device_aggregator
 
@@ -127,7 +206,8 @@ def make_aggregator(
                              "not a host Transport")
         return device_aggregator(
             name, dim, k_fraction=k_fraction, s=s, rtn_level=rtn_level,
-            qsgd_levels=qsgd_levels, fixed_levels=fixed_levels)
+            qsgd_levels=qsgd_levels, fixed_levels=fixed_levels,
+            momentum_beta=momentum_beta, ema_rho=ema_rho)
     if wire != "abstract":
         raise ValueError(f"unknown wire mode {wire!r}")
     k = max(1, int(round(k_fraction * dim)))
@@ -207,6 +287,19 @@ def make_aggregator(
                 jnp.float32)
         return Aggregator(name, _per_worker(f))
 
+    if name in ("mlmc_adaptive_topk", "mlmc_adaptive_stopk"):
+        comp = STopKMultilevel(d=dim, s=mlmc_topk_segment(name, k, s))
+        def book(est):
+            del est
+            return bitcost.topk_mlmc_bits(dim, comp.s)
+        return _adaptive_mlmc_aggregator(name, dim, comp, book, ema_rho)
+
+    if name == "mlmc_adaptive_rtn":
+        comp = RTNMultilevel()
+        def book(est):
+            return bitcost.rtn_mlmc_bits(dim, est.level, comp.num_levels)
+        return _adaptive_mlmc_aggregator(name, dim, comp, book, ema_rho)
+
     if name == "natural":
         from repro.core.natural import NaturalCompression
 
@@ -225,32 +318,37 @@ def make_aggregator(
             return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
         return Aggregator(name, _per_worker(f))
 
-    if name == "signsgd_ef":  # sign compression + EF21 correction
-        from repro.core.natural import SignSGD
+    if name in ("ef21", "ef21_sgdm", "signsgd_ef"):
+        if name == "signsgd_ef":   # sign compression + EF21 correction
+            from repro.core.natural import SignSGD
 
-        ef = EF21(SignSGD(), beta=1.0)
+            ef = EF21(SignSGD(), beta=1.0)   # SignSGD.bits is already honest
+        else:
+            beta = 1.0 if name == "ef21" else momentum_beta
+            ef = EF21(TopK(k), beta=beta,
+                      bits_fn=lambda d: bitcost.ef21_bits(d, k))
+
         def agg(worker_grads: Array, rng: PRNGKey, state) -> AggregateOut:
-            del rng
+            del rng  # the EF21 compressors (Top-k / sign) are deterministic
+            if state is None:
+                state = ef.init(worker_grads.shape[0], dim)
             direction, new_state, nbits = ef.step(state, worker_grads)
             return AggregateOut(direction, new_state, nbits)
-        return Aggregator(name, agg, init=ef.init)
-
-    if name in ("ef21", "ef21_sgdm"):
-        comp = TopK(k)
-        beta = 1.0 if name == "ef21" else momentum_beta
-        ef = EF21(comp, beta=beta)
-        def agg(worker_grads: Array, rng: PRNGKey, state) -> AggregateOut:
-            del rng
-            direction, new_state, nbits = ef.step(state, worker_grads)
-            return AggregateOut(direction, new_state, nbits)
-        return Aggregator(name, agg, init=ef.init)
+        return Aggregator(name, agg, init=ef.init, stateful=True)
 
     raise ValueError(f"unknown aggregator {name!r}")
 
 
+#: append-only (golden-packet fixture keys fold in the registry position)
 ALL_AGGREGATORS = (
     "dense", "topk", "randk", "qsgd", "rtn", "fixed2",
     "mlmc_topk", "mlmc_topk_static", "mlmc_stopk", "mlmc_fixed",
     "mlmc_float", "mlmc_rtn", "ef21", "ef21_sgdm",
     "natural", "signsgd", "signsgd_ef",
+    "mlmc_adaptive_topk", "mlmc_adaptive_stopk", "mlmc_adaptive_rtn",
 )
+
+#: the families whose CommState actually evolves step over step
+STATEFUL_AGGREGATORS = ("ef21", "ef21_sgdm", "signsgd_ef",
+                        "mlmc_adaptive_topk", "mlmc_adaptive_stopk",
+                        "mlmc_adaptive_rtn")

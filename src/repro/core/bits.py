@@ -82,6 +82,17 @@ def rtn_mlmc_expected_bits(d: int, num_levels: int = 8,
         for l in range(1, num_levels + 1))
 
 
+def ef21_bits(d: int, k: int, value_bits: int = 32) -> float:
+    """Honest EF21 / EF21-SGDM wire cost for ONE Top-k innovation message:
+    k values + k positions at ``ceil(log2 d)`` bits.
+
+    The former accounting (`TopK.bits`) charged 32-bit positions — the
+    wire codec (`repro.comm.codec.EF21InnovationCodec`) ships the honest
+    ceil(log2 d)-bit positions, and this entry reconciles with it tightly
+    (word padding only), the same move PR 2 made for `rtn_mlmc_bits`."""
+    return float(k) * (value_bits + math.ceil(math.log2(max(d, 2))))
+
+
 def topk_bits(k: int, d: int, value_bits: int = 32) -> float:
     """Biased Top-k: k values + k indices."""
     return k * (value_bits + math.ceil(math.log2(max(d, 2))))

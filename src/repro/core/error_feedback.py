@@ -12,55 +12,68 @@ EF21-SGDM adds a client-side momentum estimate of the gradient:
     v_i^t = (1 - beta) * v_i^{t-1} + beta * grad_i^t
 and feeds v_i^t (instead of grad_i^t) into the EF21 innovation.
 
-These operate on *stacked worker gradients* of shape (M, d) so the same code
-serves the in-process M-worker simulation used by the CPU benchmarks and the
-per-shard path inside shard_map (M = 1 local worker per data shard).
+The worker mirrors / server aggregate / momentum live in the first-class
+`repro.core.types.CommState` pytree, so the exact same step runs on stacked
+worker gradients of shape (M, d) in-process, on the packed byte wire, on the
+jit-native device wire, and — with rank 0 replicating every worker's decoded
+innovation into its ``g_workers`` mirror — over the multi-host TCP star
+(`repro.comm.aggregate.MultihostPackedEF21`).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Array, Compressor
+from repro.core.types import Array, CommState, Compressor, ef21_comm_state
 
 
-class EF21State(NamedTuple):
-    g_workers: Array   # (M, d) worker-side compressed-gradient states g_i
-    g_server: Array    # (d,) server aggregate g
-    momentum: Array    # (M, d) momentum buffers v_i (zeros when beta == 1)
+def ef21_targets(state: CommState, worker_grads: Array,
+                 beta: float) -> tuple[Array, Array]:
+    """(compression target, new momentum) for one EF21(-SGDM) step.
+
+    ``beta = 1`` is plain EF21 (target = gradient, momentum untouched);
+    ``beta < 1`` is EF21-SGDM (target = the updated momentum EMA).  Shared
+    by every wire substrate so the innovation math is identical on all of
+    them — including the per-rank slice the tcp transport computes."""
+    if beta < 1.0:
+        mom = (1.0 - beta) * state.momentum + beta * worker_grads
+        return mom, mom
+    return worker_grads, state.momentum
 
 
 @dataclasses.dataclass(frozen=True)
 class EF21:
-    """EF21 / EF21-SGDM step.  ``beta = 1`` recovers plain EF21."""
+    """EF21 / EF21-SGDM step.  ``beta = 1`` recovers plain EF21.
+
+    ``bits_fn`` books the honest per-worker wire cost of one innovation
+    message (defaults to the innovation compressor's own ledger entry);
+    the registry passes `repro.core.bits.ef21_bits` for the Top-k variants
+    so the abstract booking reconciles with the packed wire's measurement.
+    """
 
     compressor: Compressor
     beta: float = 1.0  # momentum coefficient (EF21-SGDM uses beta < 1)
+    bits_fn: Callable[[int], float] | None = None
 
-    def init(self, num_workers: int, dim: int) -> EF21State:
-        z = jnp.zeros((num_workers, dim), jnp.float32)
-        return EF21State(g_workers=z, g_server=jnp.zeros((dim,), jnp.float32),
-                         momentum=z)
+    def init(self, num_workers: int, dim: int) -> CommState:
+        return ef21_comm_state(num_workers, dim)
 
-    def step(self, state: EF21State, worker_grads: Array) -> tuple[Array, EF21State, Array]:
+    def step(self, state: CommState,
+             worker_grads: Array) -> tuple[Array, CommState, Array]:
         """Returns (descent direction g^{t+1}, new state, bits transmitted)."""
-        if self.beta < 1.0:
-            mom = (1.0 - self.beta) * state.momentum + self.beta * worker_grads
-            target = mom
-        else:
-            mom = state.momentum
-            target = worker_grads
-
+        target, mom = ef21_targets(state, worker_grads, self.beta)
         innovations = target - state.g_workers                  # (M, d)
         c = jax.vmap(lambda u: self.compressor.compress(u))(innovations)
         g_workers = state.g_workers + c
         g_server = state.g_server + jnp.mean(c, axis=0)
 
-        m = worker_grads.shape[0]
-        bits = jnp.asarray(m * self.compressor.bits(worker_grads.shape[1]),
-                           jnp.float32)
-        return g_server, EF21State(g_workers, g_server, mom), bits
+        m, d = worker_grads.shape
+        per_msg = (self.bits_fn or self.compressor.bits)(d)
+        bits = jnp.asarray(m * per_msg, jnp.float32)
+        new_state = state._replace(step=state.step + 1, g_workers=g_workers,
+                                   g_server=g_server, momentum=mom)
+        return g_server, new_state, bits

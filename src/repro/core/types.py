@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -125,6 +125,50 @@ class MultilevelCompressor(abc.ABC):
     def check_identity(self, v: Array) -> Array:
         """``C^L(v)`` — used by tests to assert Def 3.1's top-level identity."""
         return self.compress(v, self.num_levels)
+
+
+class CommState(NamedTuple):
+    """First-class aggregator/compressor state — ONE pytree that every wire
+    substrate (abstract / packed / device / tcp) threads through
+    ``Aggregator.step`` and the checkpointer persists next to
+    params/opt_state.
+
+    A single fixed treedef serves every registry family: stateless
+    aggregators carry an *empty* state (zero-sized leaves, no data), EF21 /
+    EF21-SGDM populate the worker mirrors, and the adaptive MLMC family
+    populates the EMA residual-norm ladders.  Keeping one structure (rather
+    than per-family state classes) is what lets the trainer, the mesh step,
+    and the checkpointer stay generic over the aggregation method.
+    """
+
+    step: Array         # ()     int32 — aggregation rounds taken
+    g_workers: Array    # (M, d) EF21 worker-side mirrors g_i;  (0, 0) unused
+    g_server: Array     # (d,)   EF21 server aggregate g;       (0,)   unused
+    momentum: Array     # (M, d) EF21-SGDM momentum v_i;        (0, 0) unused
+    ladder_ema: Array   # (M, L) adaptive-MLMC EMA of residual-norm
+    #                            ladders (Lemma 3.4);           (0, 0) unused
+
+
+def empty_comm_state() -> CommState:
+    """The stateless aggregators' state: same treedef, zero-sized leaves."""
+    z2 = jnp.zeros((0, 0), jnp.float32)
+    return CommState(step=jnp.zeros((), jnp.int32), g_workers=z2,
+                     g_server=jnp.zeros((0,), jnp.float32), momentum=z2,
+                     ladder_ema=z2)
+
+
+def ef21_comm_state(num_workers: int, dim: int) -> CommState:
+    """Zero-innovation EF21 start: g_i = g = v_i = 0 (Richtárik et al.)."""
+    z = jnp.zeros((num_workers, dim), jnp.float32)
+    return empty_comm_state()._replace(
+        g_workers=z, g_server=jnp.zeros((dim,), jnp.float32), momentum=z)
+
+
+def adaptive_comm_state(num_workers: int, num_levels: int) -> CommState:
+    """Cold-start adaptive MLMC: the EMA ladder seeds from the first step's
+    fresh residual norms (see `repro.core.adaptive.ladder_ema_update`)."""
+    return empty_comm_state()._replace(
+        ladder_ema=jnp.zeros((num_workers, num_levels), jnp.float32))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,10 +34,16 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="paper-scale")
     ap.add_argument("--mode", default="sim", choices=["sim", "mesh"])
-    ap.add_argument("--method", default="mlmc_topk")
+    ap.add_argument("--method", default="mlmc_topk",
+                    help="aggregator registry key; stateful methods "
+                         "(ef21, ef21_sgdm, mlmc_adaptive_*) thread a "
+                         "CommState through every step and checkpoint it")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--workers", type=int, default=8, help="sim-mode M")
     ap.add_argument("--k-fraction", type=float, default=0.01)
+    ap.add_argument("--ema-rho", type=float, default=0.25,
+                    help="ladder-EMA momentum of the stateful adaptive "
+                         "MLMC family (1.0 = per-sample Lemma 3.4)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch-per-worker", type=int, default=4)
@@ -118,8 +124,8 @@ def main() -> None:
                   "bytes through a Transport)")
         trainer = Trainer(loss_fn, params, num_workers=args.workers,
                           method=args.method, optimizer=sgd(args.lr),
-                          k_fraction=args.k_fraction, wire=args.wire,
-                          transport=transport)
+                          k_fraction=args.k_fraction, ema_rho=args.ema_rho,
+                          wire=args.wire, transport=transport)
         who = (f" rank={rank}/{args.workers}"
                if transport is not None and args.transport == "tcp" else "")
         print(f"sim: {cfg.name} M={args.workers} method={args.method} "
@@ -140,13 +146,15 @@ def main() -> None:
                 transport.close()
         if args.checkpoint and rank != 0:
             print("note: --checkpoint skipped on worker ranks (params are "
-                  "identical; rank 0 writes)")
+                  "identical; rank 0 writes — it holds the FULL g_workers "
+                  "mirror for ef21/ef21_sgdm, but only its own rows of "
+                  "the mlmc_adaptive_* EMA ladder and the ef21_sgdm "
+                  "momentum: restored tcp workers re-seed those rows)")
         elif args.checkpoint:
-            from repro import checkpoint
-            checkpoint.save(args.checkpoint, trainer.params,
-                            {"arch": cfg.name, "method": args.method,
-                             "steps": args.steps,
-                             "total_bits": hist.bits[-1]})
+            # one bundle: params + opt_state + CommState, so stateful runs
+            # (EF21 mirrors, adaptive EMA ladders) resume exactly
+            trainer.save_checkpoint(args.checkpoint,
+                                    {"arch": cfg.name, "steps": args.steps})
             print(f"checkpoint -> {args.checkpoint}")
         return
 
@@ -178,7 +186,9 @@ def main() -> None:
     fn, _, _ = step_mod.make_train_step(model, mesh, opt, shape=shape,
                                         method=args.method,
                                         k_fraction=args.k_fraction,
-                                        wire=args.wire)
+                                        wire=args.wire, ema_rho=args.ema_rho)
+    comm_state, _ = step_mod.init_mesh_comm_state(
+        model, mesh, method=args.method, k_fraction=args.k_fraction)
     params = model.init(jax.random.PRNGKey(0))
     opt_state = opt.init(params)
     key = jax.random.PRNGKey(1)
@@ -194,8 +204,12 @@ def main() -> None:
     print(f"mesh: {cfg.name} {mesh.devices.shape} method={args.method} "
           f"wire={args.wire}")
     for t in range(args.steps):
-        params, opt_state, metrics = fn(params, opt_state, batch,
-                                        jax.random.fold_in(key, t))
+        rng_t = jax.random.fold_in(key, t)
+        if comm_state is not None:   # stateful method: thread the CommState
+            params, opt_state, comm_state, metrics = fn(
+                params, opt_state, comm_state, batch, rng_t)
+        else:
+            params, opt_state, metrics = fn(params, opt_state, batch, rng_t)
         print(f"  step {t} loss={float(metrics['loss']):.4f} "
               f"bits={float(metrics['bits']):.3e}")
     print("mesh training done")

@@ -76,35 +76,31 @@ def dense_allreduce(flat: Array, ctx: ShardCtx) -> tuple[Array, Array]:
     return mean, bits
 
 
-def mlmc_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
-                        *, s: int, wire: str = "abstract"
-                        ) -> tuple[Array, Array]:
-    """Adaptive MLMC s-Top-k (Alg. 3) with a sparse all-gather collective.
-
-    One argsort serves both the Lemma-3.4 probabilities (segment norms of
-    the sorted vector) and the residual extraction (ranks [(l-1)s, ls)).
-
-    ``wire="device"``: the segment crosses the gather bit-packed — indices
-    at ceil(log2 d) bits, values in bf16 2-per-word (`repro.comm.
-    device_wire.pack_topk_segment`)."""
+def _sorted_segments(flat: Array, s: int) -> tuple[Array, Array, int]:
+    """One argsort serving both the Lemma-3.4 ladder (segment norms of the
+    sorted vector) and the residual extraction (ranks [(l-1)s, ls))."""
     d = flat.shape[0]
-    s = min(s, d)
     L = math.ceil(d / s)
     pad = L * s - d
-
-    rng = jax.random.fold_in(rng, ctx.data_index())  # independent levels
     order = jnp.argsort(-jnp.abs(flat))
-    sorted_vals = flat[order]
-    sv = jnp.pad(sorted_vals, (0, pad))
+    sv = jnp.pad(flat[order], (0, pad))
     so = jnp.pad(order, (0, pad), constant_values=d - 1)
+    return sv, so, L
 
-    deltas = jnp.sqrt(jnp.sum(sv.reshape(L, s) ** 2, axis=-1))   # Lemma 3.4
-    total = jnp.sum(deltas)
-    probs = jnp.where(total > 1e-30, deltas / jnp.maximum(total, 1e-30),
-                      jnp.full((L,), 1.0 / L))
-    idx0 = categorical(rng, probs)                                # 0-based l-1
-    p_l = jnp.maximum(probs[idx0], 1e-30)
 
+def _segment_ladder(sv: Array, L: int, s: int) -> Array:
+    """Residual-norm ladder Delta_l of the sorted/padded vector."""
+    return jnp.sqrt(jnp.sum(sv.reshape(L, s) ** 2, axis=-1))
+
+
+def _gather_segment(flat: Array, ctx: ShardCtx, sv: Array, so: Array,
+                    idx0: Array, p_l: Array, *, s: int,
+                    wire: str) -> tuple[Array, Array]:
+    """Extract this shard's level-(idx0+1) residual segment, cross the data
+    axes (raw f32/int32 operands or the bit-packed device form), scatter-add
+    and mean.  Shared by the stateless Alg.-3 path and the stateful EMA
+    variant — the wire is identical, only the level distribution differs."""
+    d = flat.shape[0]
     seg_vals = lax.dynamic_slice(sv, (idx0 * s,), (s,)) / p_l
     seg_idx = lax.dynamic_slice(so, (idx0 * s,), (s,))
     # zero padded tail entries (they carry index d-1; value must be 0)
@@ -144,6 +140,76 @@ def mlmc_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
         g_vals.astype(flat.dtype))
     mean = dense / ctx.dp_total
     return mean, bits
+
+
+def mlmc_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
+                        *, s: int, wire: str = "abstract"
+                        ) -> tuple[Array, Array]:
+    """Adaptive MLMC s-Top-k (Alg. 3) with a sparse all-gather collective.
+    Levels are drawn INDEPENDENTLY per shard (fold_in of the data index)
+    from the per-sample Lemma-3.4 distribution.
+
+    ``wire="device"``: the segment crosses the gather bit-packed — indices
+    at ceil(log2 d) bits, values in bf16 2-per-word (`repro.comm.
+    device_wire.pack_topk_segment`)."""
+    from repro.core.adaptive import probs_from_ladder
+
+    d = flat.shape[0]
+    s = min(s, d)
+    rng = jax.random.fold_in(rng, ctx.data_index())  # independent levels
+    sv, so, L = _sorted_segments(flat, s)
+
+    deltas = _segment_ladder(sv, L, s)                           # Lemma 3.4
+    probs = probs_from_ladder(deltas)
+    idx0 = categorical(rng, probs)                                # 0-based l-1
+    p_l = jnp.maximum(probs[idx0], 1e-30)
+    return _gather_segment(flat, ctx, sv, so, idx0, p_l, s=s, wire=wire)
+
+
+def mlmc_adaptive_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
+                                 ladder: Array, step: Array, *, s: int,
+                                 ema_rho: float = 0.25,
+                                 wire: str = "abstract"
+                                 ) -> tuple[Array, Array, Array]:
+    """The STATEFUL Alg.-3 variant on the mesh: each data shard keeps an
+    EMA of its residual-norm ladder (`CommState.ladder_ema`'s mesh
+    realization, threaded through the train step as a per-leaf, per-shard
+    pytree) and samples its level from the smoothed Lemma-3.4 distribution.
+
+    Returns ``(mean, bits, new_ladder)``; the caller threads ``new_ladder``
+    into the next step.  The wire — segment gather, raw or bit-packed —
+    is byte-identical to `mlmc_topk_allreduce`; only the level distribution
+    is stateful, so the device substrate needs no new packet form (p_l is
+    applied shard-locally before the gather, exactly as in the stateless
+    path)."""
+    from repro.core.adaptive import ladder_ema_update, probs_from_ladder
+
+    d = flat.shape[0]
+    s = min(s, d)
+    rng = jax.random.fold_in(rng, ctx.data_index())  # independent levels
+    sv, so, L = _sorted_segments(flat, s)
+
+    deltas = _segment_ladder(sv, L, s)
+    new_ladder = ladder_ema_update(ladder.reshape(L), deltas, ema_rho, step)
+    probs = probs_from_ladder(new_ladder)
+    idx0 = categorical(rng, probs)
+    p_l = jnp.maximum(probs[idx0], 1e-30)
+    mean, bits = _gather_segment(flat, ctx, sv, so, idx0, p_l, s=s, wire=wire)
+    return mean, bits, new_ladder.reshape(ladder.shape)
+
+
+def adaptive_segment_len(d: int, k_fraction: float,
+                         min_segment: int = 8) -> int:
+    """Segment length s for a leaf of flat size d — the ONE definition the
+    dispatches and the comm-state builder share, so the threaded ladder
+    shape always matches the collective's segmentation."""
+    return min(max(min_segment, int(round(k_fraction * d))), d)
+
+
+def adaptive_ladder_len(d: int, k_fraction: float,
+                        min_segment: int = 8) -> int:
+    """Ladder length L = ceil(d / s) for a leaf of flat size d."""
+    return math.ceil(d / adaptive_segment_len(d, k_fraction, min_segment))
 
 
 def mlmc_fixedpoint_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
@@ -215,10 +281,16 @@ def _codec_allreduce(flat: Array, ctx: ShardCtx, rng: Array, codec,
     return jnp.mean(ests, axis=0), bits
 
 
-AGG_METHODS = ("dense", "mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd")
+AGG_METHODS = ("dense", "mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd",
+               "mlmc_adaptive_topk")
 
 #: methods with a `wire="device"` packed-collective branch
-DEVICE_METHODS = ("mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd")
+DEVICE_METHODS = ("mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd",
+                  "mlmc_adaptive_topk")
+
+#: methods whose mesh collective threads per-shard comm state (see
+#: `repro.train.step.init_mesh_comm_state` for the pytree layout)
+STATEFUL_MESH_METHODS = ("mlmc_adaptive_topk",)
 
 
 def compressed_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
@@ -236,6 +308,11 @@ def compressed_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
     _check_wire(wire)
     if method == "dense":
         return dense_allreduce(flat, ctx)
+    if method in STATEFUL_MESH_METHODS:
+        raise ValueError(
+            f"{method!r} threads per-shard comm state — call "
+            "stateful_allreduce(flat, ctx, rng, method, ladder, step, ...) "
+            "(repro.train.step.make_train_step wires it up)")
     if method == "mlmc_topk":
         s = max(min_segment, int(round(k_fraction * flat.shape[0])))
         return mlmc_topk_allreduce(flat, ctx, rng, s=s, wire=wire)
@@ -249,3 +326,19 @@ def compressed_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
                                   rtn_level=rtn_level)
         return _codec_allreduce(flat, ctx, rng, codec, wire)
     raise ValueError(f"unknown aggregation method {method!r}")
+
+
+def stateful_allreduce(flat: Array, ctx: ShardCtx, rng: Array, method: str,
+                       ladder: Array, step: Array, *,
+                       k_fraction: float = 0.001, min_segment: int = 8,
+                       ema_rho: float = 0.25, wire: str = "abstract"
+                       ) -> tuple[Array, Array, Array]:
+    """Dispatch for the stateful mesh methods: like `compressed_allreduce`
+    but threading this shard's per-leaf comm state (the EMA ladder) and
+    returning its successor — (mean, bits, new_ladder)."""
+    _check_wire(wire)
+    if method == "mlmc_adaptive_topk":
+        s = adaptive_segment_len(flat.shape[0], k_fraction, min_segment)
+        return mlmc_adaptive_topk_allreduce(flat, ctx, rng, ladder, step,
+                                            s=s, ema_rho=ema_rho, wire=wire)
+    raise ValueError(f"unknown stateful aggregation method {method!r}")

@@ -8,13 +8,18 @@ reproduces Figures 1-6.  The gradient is raveled to ONE flat d-vector per
 worker, matching the paper's model of the gradient as a d-dimensional
 object.
 
+Aggregator state is a first-class `repro.core.types.CommState`: the trainer
+threads ONE pytree through every step on every wire (abstract / packed /
+device / tcp) and checkpoints it alongside params and optimizer state
+(`save_checkpoint` / `load_checkpoint`) so stateful runs — EF21's innovation
+mirrors, the adaptive-MLMC EMA ladders — resume exactly where they stopped.
+
 For the mesh-collective realization of the same algorithms see
 `repro.train.step` (used by the dry-run and real-device tests)."""
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Iterator
 
 import jax
@@ -22,6 +27,7 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import Aggregator, make_aggregator
+from repro.core.types import CommState
 from repro.optim.optimizers import Optimizer, sgd
 
 PyTree = Any
@@ -45,6 +51,7 @@ class Trainer:
       num_workers: M.
       method: aggregator registry key (see repro.core.aggregators).
       optimizer: from repro.optim (default SGD, as in the paper).
+      ema_rho: ladder-EMA momentum of the stateful `mlmc_adaptive_*` family.
       wire: aggregation substrate — "abstract" (in-memory estimates),
         "packed" (host-side byte packets through a Transport), or "device"
         (jit-native fixed-shape packed packets, repro.comm.device_wire;
@@ -56,8 +63,8 @@ class Trainer:
                  optimizer: Optimizer | None = None,
                  k_fraction: float = 0.01, s: int = 0,
                  momentum_beta: float = 0.1, qsgd_levels: int = 2,
-                 rtn_level: int = 4, wire: str = "abstract",
-                 transport=None):
+                 rtn_level: int = 4, ema_rho: float = 0.25,
+                 wire: str = "abstract", transport=None):
         self.loss_fn = loss_fn
         self.m = num_workers
         flat, self.unravel = ravel_pytree(params)
@@ -69,10 +76,12 @@ class Trainer:
             method, self.dim, k_fraction=k_fraction,
             s=s or max(1, int(round(k_fraction * self.dim))),
             momentum_beta=momentum_beta, qsgd_levels=qsgd_levels,
-            rtn_level=rtn_level, wire=wire, transport=transport)
+            rtn_level=rtn_level, ema_rho=ema_rho, wire=wire,
+            transport=transport)
         self.opt_state = self.optimizer.init(self.flat_params)
-        self.ef_state = (self.agg.init(self.m, self.dim)
-                         if self.agg.init else None)
+        #: first-class aggregator state — empty for stateless methods,
+        #: threaded through every step and checkpointed with params
+        self.comm_state: CommState = self.agg.init(self.m, self.dim)
         self.total_bits = 0.0
         self.method = method
         if self.rank is not None and self.transport.world != self.m:
@@ -116,9 +125,9 @@ class Trainer:
         agg, opt, grads_of = self.agg, self.optimizer, self._grad_fn()
 
         @jax.jit
-        def step(flat_params, opt_state, ef_state, batch, rng):
+        def step(flat_params, opt_state, comm_state, batch, rng):
             losses, grads = grads_of(flat_params, batch)
-            out = agg(grads, rng, ef_state)
+            out = agg.step(comm_state, grads, rng)
             new_flat, new_opt = opt.apply(out.direction, opt_state,
                                           flat_params)
             return (new_flat, new_opt, out.state, jnp.mean(losses), out.bits)
@@ -134,16 +143,17 @@ class Trainer:
         shard before the gradient — each worker's gradient is computed in
         its own OS process, and only the aggregated direction (broadcast by
         rank 0) feeds the optimizer, keeping params identical across
-        ranks."""
+        ranks.  Stateful methods keep rank-local CommState rows (rank 0
+        additionally mirrors every worker's EF21 innovation state)."""
         agg, opt, grads_of = self.agg, self.optimizer, self._grad_fn()
         apply_jit = jax.jit(opt.apply)
         rank, tp = self.rank, self.transport
 
-        def step(flat_params, opt_state, ef_state, batch, rng):
+        def step(flat_params, opt_state, comm_state, batch, rng):
             if rank is not None:
                 batch = jax.tree.map(lambda x: x[rank:rank + 1], batch)
             losses, grads = grads_of(flat_params, batch)
-            out = agg(grads, rng, ef_state)
+            out = agg.step(comm_state, grads, rng)
             new_flat, new_opt = apply_jit(out.direction, opt_state,
                                           flat_params)
             loss = jnp.mean(losses)
@@ -165,9 +175,9 @@ class Trainer:
         for t in range(steps):
             rng, sub = jax.random.split(rng)
             batch = next(batches)
-            (self.flat_params, self.opt_state, self.ef_state, loss,
+            (self.flat_params, self.opt_state, self.comm_state, loss,
              bits) = self._step(self.flat_params, self.opt_state,
-                                self.ef_state, batch, sub)
+                                self.comm_state, batch, sub)
             self.total_bits += float(bits)
             hist.steps.append(t)
             hist.loss.append(float(loss))
@@ -182,3 +192,33 @@ class Trainer:
     @property
     def params(self) -> PyTree:
         return self.unravel(self.flat_params)
+
+    # ---- checkpointing -----------------------------------------------------
+
+    def save_checkpoint(self, path, metadata: dict | None = None) -> None:
+        """Persist params + opt_state + CommState in one bundle, so
+        stateful runs (EF21 mirrors, adaptive EMA ladders) resume exactly
+        — previously the comm state was silently dropped."""
+        from repro import checkpoint
+
+        meta = dict(metadata or {})
+        meta.setdefault("method", self.method)
+        meta["total_bits"] = self.total_bits
+        checkpoint.save_training(path, params=self.params,
+                                 opt_state=self.opt_state,
+                                 comm_state=self.comm_state, metadata=meta)
+
+    def load_checkpoint(self, path) -> dict:
+        """Restore a `save_checkpoint` bundle into this trainer (shapes and
+        method must match); returns the checkpoint metadata."""
+        from repro import checkpoint
+
+        params, opt_state, comm_state, meta = checkpoint.restore_training(
+            path, params=self.params, opt_state=self.opt_state,
+            comm_state=self.comm_state)
+        flat, _ = ravel_pytree(params)
+        self.flat_params = flat.astype(jnp.float32)
+        self.opt_state = opt_state
+        self.comm_state = comm_state
+        self.total_bits = float(meta.get("total_bits", self.total_bits))
+        return meta

@@ -30,7 +30,12 @@ from repro.models.rglru import RGLRUCache
 from repro.models.ssm import SSDCache
 from repro.optim.optimizers import Optimizer
 from repro.sharding import shard_map
-from repro.sharding.collectives import compressed_allreduce
+from repro.sharding.collectives import (
+    STATEFUL_MESH_METHODS,
+    adaptive_ladder_len,
+    compressed_allreduce,
+    stateful_allreduce,
+)
 from repro.sharding.ctx import ShardCtx
 from repro.sharding.partition import param_specs as build_param_specs
 
@@ -113,8 +118,16 @@ def model_param_specs(model: Model, ctx: ShardCtx) -> PyTree:
 
 def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
                         method: str, k_fraction: float,
-                        wire: str = "abstract"):
-    """Per-leaf compressed mean over the data axes.  Returns (grads, bits).
+                        wire: str = "abstract", comm: PyTree | None = None,
+                        ema_rho: float = 0.25):
+    """Per-leaf compressed mean over the data axes.
+
+    Returns ``(grads, bits)`` for the stateless methods, or
+    ``(grads, bits, new_comm)`` when ``comm`` is given — the mesh
+    realization of the trainer's `CommState`: ``comm["step"]`` is the round
+    counter and ``comm["ladders"]`` mirrors the grads pytree with one
+    per-shard EMA residual-norm ladder per leaf (the stateful
+    `mlmc_adaptive_*` family; see `init_mesh_comm_state`).
 
     ``wire="device"`` routes every leaf's collective through the bit-packed
     `repro.comm.device_wire` operands (see `repro.sharding.collectives`)."""
@@ -125,24 +138,99 @@ def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
 
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     ax_leaves = jax.tree_util.tree_leaves(fsdp_map)
+    ladder_leaves = (jax.tree_util.tree_leaves(comm["ladders"])
+                     if comm is not None else [None] * len(leaves))
     keys = jax.random.split(rng, len(leaves))
-    outs = []
+    outs, new_ladders = [], []
     bits = jnp.zeros((), jnp.float32)
-    for leaf, ax, key in zip(leaves, ax_leaves, keys):
+    for leaf, ax, key, ladder in zip(leaves, ax_leaves, keys, ladder_leaves):
         flat = leaf.reshape(-1).astype(jnp.float32)
+        leaf_ctx = ctx
         if ax >= 0:
             # FSDP leaf: already summed over `data` by the reduce-scatter
             # transpose of the forward all-gather -> normalize, then
             # compress only the cross-pod hop.
             flat = flat / ctx.dp
-            out, b = compressed_allreduce(flat, pod_ctx, key, method,
-                                          k_fraction=k_fraction, wire=wire)
+            leaf_ctx = pod_ctx
+        if comm is not None:
+            out, b, nl = stateful_allreduce(
+                flat, leaf_ctx, key, method, ladder, comm["step"],
+                k_fraction=k_fraction, ema_rho=ema_rho, wire=wire)
+            new_ladders.append(nl)
         else:
-            out, b = compressed_allreduce(flat, ctx, key, method,
+            out, b = compressed_allreduce(flat, leaf_ctx, key, method,
                                           k_fraction=k_fraction, wire=wire)
         outs.append(out.reshape(leaf.shape))
         bits = bits + b
-    return jax.tree_util.tree_unflatten(treedef, outs), bits
+    grads_out = jax.tree_util.tree_unflatten(treedef, outs)
+    if comm is None:
+        return grads_out, bits
+    new_comm = {"step": comm["step"] + 1,
+                "ladders": jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(comm["ladders"]),
+                    new_ladders)}
+    return grads_out, bits, new_comm
+
+
+# ---------------------------------------------------------------------------
+# mesh comm state (the CommState realization for the sharded train step)
+# ---------------------------------------------------------------------------
+
+
+def _local_leaf_size(shape, spec: P, mesh) -> int:
+    """Flat size of one param leaf's PER-SHARD slice under `spec`."""
+    names = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    size = 1
+    for dim, name in zip(shape, names):
+        div = 1
+        if name:
+            for n in (name if isinstance(name, tuple) else (name,)):
+                div *= mesh.shape[n]
+        size *= dim // div
+    return size
+
+
+def init_mesh_comm_state(model: Model, mesh, *, method: str,
+                         k_fraction: float = 0.001, min_segment: int = 8):
+    """Build the sharded train step's comm state for a stateful method.
+
+    Returns ``(comm_state, comm_specs)``: ``comm_state["step"]`` is the
+    round counter and ``comm_state["ladders"]`` mirrors the param pytree
+    with one zeroed EMA residual-norm ladder PER LEAF **PER DEVICE** —
+    shape ``(num_devices, L_leaf)`` sharded over EVERY mesh axis.  The
+    leading dim spans all axes (not just the data axes) because a leaf's
+    local gradient slice — and hence its ladder — also varies along the
+    model axis for tensor-parallel leaves and along the data axis for
+    FSDP-sharded leaves; a narrower spec would let shard_map (replication
+    unchecked under ``check_vma=False``) overwrite one shard's ladder with
+    another's.  Leaves that are replicated along an axis simply carry
+    identical rows there — redundant but exact.  For a stateless method
+    returns ``(None, None)``."""
+    if method not in STATEFUL_MESH_METHODS:
+        return None, None
+    from repro.launch.mesh import ctx_for_mesh
+
+    ctx = ctx_for_mesh(mesh)
+    p_abs = model.abstract_params()
+    p_specs = model_param_specs(model, ctx)
+    all_axes = tuple(mesh.axis_names)
+    num_devices = int(mesh.devices.size)
+
+    leaves, treedef = jax.tree_util.tree_flatten(p_abs)
+    spec_leaves = jax.tree_util.tree_leaves(
+        p_specs, is_leaf=lambda x: isinstance(x, P))
+    ladder_leaves, ladder_specs = [], []
+    for leaf, spec in zip(leaves, spec_leaves):
+        d_local = _local_leaf_size(leaf.shape, spec, mesh)
+        L = adaptive_ladder_len(d_local, k_fraction, min_segment)
+        ladder_leaves.append(jnp.zeros((num_devices, L), jnp.float32))
+        ladder_specs.append(P(all_axes, None))
+    comm = {"step": jnp.zeros((), jnp.int32),
+            "ladders": jax.tree_util.tree_unflatten(treedef, ladder_leaves)}
+    comm_specs = {"step": P(),
+                  "ladders": jax.tree_util.tree_unflatten(treedef,
+                                                          ladder_specs)}
+    return comm, comm_specs
 
 
 # ---------------------------------------------------------------------------
@@ -153,9 +241,17 @@ def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
 def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
                     shape: InputShape, method: str = "mlmc_topk",
                     k_fraction: float = 0.001, remat: bool = True,
-                    wire: str = "abstract"):
-    """Returns (jitted_fn, in_specs, out_specs).  fn(params, opt_state,
-    batch, rng) -> (params, opt_state, metrics).
+                    wire: str = "abstract", ema_rho: float = 0.25):
+    """Returns (jitted_fn, in_specs, out_specs).
+
+    Stateless methods: fn(params, opt_state, batch, rng) ->
+    (params, opt_state, metrics) — unchanged.
+
+    Stateful methods (`STATEFUL_MESH_METHODS`, e.g. ``mlmc_adaptive_topk``):
+    fn(params, opt_state, comm_state, batch, rng) ->
+    (params, opt_state, comm_state, metrics), with ``comm_state`` built by
+    `init_mesh_comm_state` — the mesh realization of the trainer's
+    first-class CommState (per-shard EMA residual-norm ladders).
 
     ``wire``: collective substrate for the gradient aggregation —
     ``"abstract"`` (raw operands) or ``"device"`` (bit-packed operands)."""
@@ -167,32 +263,51 @@ def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
     o_specs = optimizer.state_specs(p_specs)
     b_specs = make_batch_specs(cfg, shape, ctx, "train")
     m_specs = {"loss": P(), "bits": P(), "ce": P(), "aux": P()}
+    stateful = method in STATEFUL_MESH_METHODS
 
-    def local_step(params, opt_state, batch, rng):
+    def grads_and_metrics(params, batch):
         def loss_fn(p):
             return model.loss(p, batch, ctx, remat=remat)
 
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
-        grads, bits = aggregate_gradients(grads, ctx, rng, cfg, method,
-                                          k_fraction, wire)
-        new_params, new_opt = optimizer.apply(grads, opt_state, params)
-        out_metrics = {
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def out_metrics(loss, metrics, bits):
+        return {
             "loss": ctx.pmean_data(loss),
             "bits": bits,
             "ce": ctx.pmean_data(metrics["ce"]),
             "aux": ctx.pmean_data(metrics["aux"]),
         }
-        return new_params, new_opt, out_metrics
 
-    fn = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(p_specs, o_specs, b_specs, P()),
-        out_specs=(p_specs, o_specs, m_specs),
-        check_vma=False,
-    )
-    return jax.jit(fn), (p_specs, o_specs, b_specs, P()), (p_specs, o_specs,
-                                                           m_specs)
+    if stateful:
+        _, c_specs = init_mesh_comm_state(model, mesh, method=method,
+                                          k_fraction=k_fraction)
+
+        def local_step(params, opt_state, comm, batch, rng):
+            (loss, metrics), grads = grads_and_metrics(params, batch)
+            grads, bits, new_comm = aggregate_gradients(
+                grads, ctx, rng, cfg, method, k_fraction, wire, comm=comm,
+                ema_rho=ema_rho)
+            new_params, new_opt = optimizer.apply(grads, opt_state, params)
+            return (new_params, new_opt, new_comm,
+                    out_metrics(loss, metrics, bits))
+
+        in_specs = (p_specs, o_specs, c_specs, b_specs, P())
+        out_specs = (p_specs, o_specs, c_specs, m_specs)
+    else:
+        def local_step(params, opt_state, batch, rng):
+            (loss, metrics), grads = grads_and_metrics(params, batch)
+            grads, bits = aggregate_gradients(grads, ctx, rng, cfg, method,
+                                              k_fraction, wire)
+            new_params, new_opt = optimizer.apply(grads, opt_state, params)
+            return new_params, new_opt, out_metrics(loss, metrics, bits)
+
+        in_specs = (p_specs, o_specs, b_specs, P())
+        out_specs = (p_specs, o_specs, m_specs)
+
+    fn = shard_map(local_step, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return jax.jit(fn), in_specs, out_specs
 
 
 def make_prefill_step(model: Model, mesh, *, shape: InputShape):

@@ -170,6 +170,138 @@ def check_device_wire():
     print("PASS device_train_step")
 
 
+def check_stateful():
+    """Stateful pipeline on the 8-device mesh (slow half of the cross-wire
+    parity matrix in tests/test_comm_state.py):
+
+    * the stateful mesh collective: `mlmc_adaptive_topk` threads a
+      per-shard EMA ladder through shard_map; abstract and device wires
+      produce the IDENTICAL direction and identical successor ladders over
+      multiple rounds (bf16_wire flag: same value rounding both sides);
+    * the in-process stateful aggregators under the 8-device runtime:
+      EF21 / EF21-SGDM / mlmc_adaptive_topk match abstract-vs-packed
+      (allclose, the repo's packed bound) and abstract-vs-device (bitwise
+      for EF21, bitwise ladders for adaptive) over compounding state;
+    * a full sharded train step with threaded mesh comm state makes
+      progress and increments the state.
+    """
+    os.environ["REPRO_OPT"] = "bf16_wire"   # set BEFORE any trace
+
+    from repro.core.aggregators import make_aggregator
+    from repro.sharding.collectives import stateful_allreduce
+    from repro.train.step import init_mesh_comm_state
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    ctx = ctx_for_mesh(mesh)
+    d, M = 512, 4
+    decay = jnp.exp(-0.02 * jnp.arange(d))
+    g = jax.random.normal(jax.random.PRNGKey(0), (2, 2, d)) * decay
+    k_fraction = 0.05
+    import math as _math
+    s = min(max(8, int(round(k_fraction * d))), d)
+    L = _math.ceil(d / s)
+
+    def build(wire):
+        def body(gs, ladder, step, rng):
+            out, bits, nl = stateful_allreduce(
+                gs.reshape(-1), ctx, rng, "mlmc_adaptive_topk",
+                ladder, step, k_fraction=k_fraction, wire=wire)
+            return out, bits, nl
+        return jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P("pod", "data", None), P(("pod", "data"), None),
+                      P(), P()),
+            out_specs=(P(), P(), P(("pod", "data"), None)),
+            check_vma=False))
+
+    lad_a = jnp.zeros((4, L), jnp.float32)
+    lad_d = jnp.zeros((4, L), jnp.float32)
+    for t in range(3):
+        key = jax.random.fold_in(jax.random.PRNGKey(3), t)
+        step = jnp.asarray(t, jnp.int32)
+        out_a, _, lad_a = build("abstract")(g, lad_a, step, key)
+        out_d, _, lad_d = build("device")(g, lad_d, step, key)
+        np.testing.assert_array_equal(np.asarray(out_d), np.asarray(out_a),
+                                      err_msg=f"round {t}")
+        np.testing.assert_array_equal(np.asarray(lad_d), np.asarray(lad_a))
+    assert float(jnp.sum(jnp.abs(lad_a))) > 0
+    print("PASS stateful_mesh_collective_parity")
+
+    # in-process stateful aggregators under the multi-device runtime
+    gm = jax.random.normal(jax.random.PRNGKey(7), (3, 193)) \
+        * jnp.exp(-0.05 * jnp.arange(193))
+    for name in ("ef21", "ef21_sgdm", "mlmc_adaptive_topk"):
+        kw = dict(k_fraction=0.05, s=4)
+        a_abs = make_aggregator(name, 193, **kw)
+        a_pkd = make_aggregator(name, 193, **kw, wire="packed")
+        a_dev = make_aggregator(name, 193, **kw, wire="device")
+        st_a, st_p, st_d = (a.init(3, 193) for a in (a_abs, a_pkd, a_dev))
+        for t in range(3):
+            rng = jax.random.fold_in(jax.random.PRNGKey(8), t)
+            # jit both jittable substrates: bitwise parity is a statement
+            # about the compiled programs (eager XLA fuses differently)
+            oa = jax.jit(a_abs.fn)(gm, rng, st_a)
+            op = a_pkd.step(st_p, gm, rng)
+            od = jax.jit(a_dev.fn)(gm, rng, st_d)
+            st_a, st_p, st_d = oa.state, op.state, od.state
+            np.testing.assert_allclose(
+                np.asarray(op.direction), np.asarray(oa.direction),
+                rtol=1e-6, atol=1e-7, err_msg=f"{name} packed step {t}")
+            if name.startswith("ef21"):
+                np.testing.assert_array_equal(
+                    np.asarray(od.direction), np.asarray(oa.direction),
+                    err_msg=f"{name} device step {t}")
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(od.state.ladder_ema),
+                    np.asarray(oa.state.ladder_ema))
+        print(f"PASS stateful_wires_{name}")
+
+    # end-to-end: the stateful sharded train step with threaded comm state
+    cfg = dataclasses.replace(
+        reduce_for_smoke([c for c in ASSIGNED if c.name == "qwen3-4b"][0]))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 8, 32
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    opt = sgd(1e-2)
+    fn, _, _ = step_mod.make_train_step(
+        model, mesh, opt, shape=InputShape("t", S, B, "train"),
+        method="mlmc_adaptive_topk", remat=False)
+    comm, specs = init_mesh_comm_state(model, mesh,
+                                       method="mlmc_adaptive_topk")
+    # the ladder state is PER DEVICE and specced over EVERY mesh axis: a
+    # tensor-parallel leaf's gradient slice differs per model shard, so a
+    # narrower spec would let one shard's ladder overwrite another's
+    # (check_vma=False disables the replication check that would catch it)
+    for lad, spec in zip(
+            jax.tree_util.tree_leaves(comm["ladders"]),
+            jax.tree_util.tree_leaves(specs["ladders"],
+                                      is_leaf=lambda x: isinstance(x, P))):
+        assert lad.shape[0] == mesh.devices.size, lad.shape
+        assert tuple(spec)[0] == tuple(mesh.axis_names), spec
+    opt_state = opt.init(params)
+    for t in range(2):
+        params, opt_state, comm, metrics = fn(
+            params, opt_state, comm, batch, jax.random.fold_in(key, 10 + t))
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["bits"]) > 0
+    assert int(comm["step"]) == 2
+    # per-device rows are REAL state: at least one TP-sharded leaf's ladder
+    # differs across the model coordinate (rows 2k vs 2k+1 in the raveled
+    # (pod, data, model) order) — all rows zero/equal would mean the state
+    # collapsed to a single replica
+    def model_varies(lad):
+        rows = np.asarray(lad).reshape(-1, 2, lad.shape[-1])  # model last
+        return bool(np.any(rows[:, 0] != rows[:, 1]))
+    assert any(model_varies(l)
+               for l in jax.tree_util.tree_leaves(comm["ladders"])), \
+        "no ladder varies across the model axis — per-device state lost"
+    print("PASS stateful_train_step")
+
+
 def check_train_parity():
     """Sharded dense train loss == unsharded loss for a dense arch."""
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -247,7 +379,7 @@ if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     fns = {"collectives": check_collectives, "train": check_train_parity,
            "fsdp": check_fsdp, "decode": check_decode_parity,
-           "device_wire": check_device_wire}
+           "device_wire": check_device_wire, "stateful": check_stateful}
     if which == "all":
         for f in fns.values():
             f()

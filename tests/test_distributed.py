@@ -41,6 +41,20 @@ def test_device_wire_parity_on_mesh():
 
 
 @pytest.mark.slow
+def test_stateful_pipeline_on_mesh():
+    """The stateful-pipeline battery: mlmc_adaptive_topk's mesh collective
+    threads its EMA ladder identically on abstract vs device wires, the
+    stateful aggregators (EF21/EF21-SGDM/mlmc_adaptive_topk) hold
+    cross-wire parity under the 8-device runtime, and the stateful train
+    step runs end-to-end with threaded comm state."""
+    out = _run("stateful")
+    assert "PASS stateful_mesh_collective_parity" in out
+    for name in ("ef21", "ef21_sgdm", "mlmc_adaptive_topk"):
+        assert f"PASS stateful_wires_{name}" in out
+    assert "PASS stateful_train_step" in out
+
+
+@pytest.mark.slow
 def test_sharded_train_parity():
     assert "PASS train_parity" in _run("train")
 

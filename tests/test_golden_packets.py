@@ -2,12 +2,20 @@
 surface.
 
 One committed snapshot (`tests/golden_packets/<name>.bin`) of an encoded
-`Packet` per registry aggregator (all 17 names — EF21 variants snapshot
-their innovation codec).  The test re-encodes the same deterministic
-gradient with the same keys and asserts `to_bytes()` is BYTE-identical to
-the snapshot: any change to the header struct, stream layout, bit-packing
-order, codec math, or the PRNG replay breaks decode for packets already on
-the wire and must be a deliberate, versioned decision.
+`Packet` per registry aggregator (EF21 variants snapshot their innovation
+codec).  The test re-encodes the same deterministic gradient with the same
+keys and asserts `to_bytes()` is BYTE-identical to the snapshot: any change
+to the header struct, stream layout, bit-packing order, codec math, or the
+PRNG replay breaks decode for packets already on the wire and must be a
+deliberate, versioned decision.
+
+Deliberate wire changes on record:
+
+* PR 4 — ``ef21``/``ef21_sgdm`` moved off the Top-k baseline codec onto the
+  dedicated `EF21InnovationCodec` (new codec id 14): positions now pack at
+  the honest ceil(log2 d) bits the `bits.ef21_bits` ledger books, so those
+  two fixtures were regenerated.  The ``mlmc_adaptive_*`` fixtures are new
+  (codec ids 15-17).  Every pre-existing non-EF21 fixture is byte-identical.
 
 Regenerate (only when intentionally changing the wire format):
 

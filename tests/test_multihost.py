@@ -49,7 +49,7 @@ needs_sockets = pytest.mark.skipif(not _sockets_available(),
 _TOY = dict(d=48, b=4, world=3, steps=4, seed=11, data_seed=7)
 
 
-def _toy_trainer(transport, wire):
+def _toy_trainer(transport, wire, method="mlmc_topk"):
     import jax.numpy as jnp
 
     from repro.optim import sgd
@@ -62,7 +62,7 @@ def _toy_trainer(transport, wire):
         return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
 
     return Trainer(loss_fn, params, num_workers=_TOY["world"],
-                   method="mlmc_topk", optimizer=sgd(0.1), k_fraction=0.25,
+                   method=method, optimizer=sgd(0.1), k_fraction=0.25,
                    wire=wire, transport=transport)
 
 
@@ -327,12 +327,111 @@ def test_multihost_aggregate_matches_loopback_bitwise():
 
 
 @needs_sockets
-def test_multihost_ef21_unsupported():
-    tps = _connect_world(2)
+@pytest.mark.parametrize("method", ["ef21", "ef21_sgdm",
+                                    "mlmc_adaptive_topk"])
+def test_multihost_stateful_matches_loopback_bitwise(method):
+    """The stateful aggregators over tcp: rank 0 replicates every worker's
+    decoded EF21 innovation into its (M, d) mirror (resp. each rank keeps
+    its own EMA ladder row) and the per-step directions and measured bits
+    equal the in-process loopback run BIT-FOR-BIT across multiple steps of
+    evolving state — the ROADMAP follow-up this PR closes."""
+    import jax
+
     from repro.core.aggregators import make_aggregator
 
-    with pytest.raises(NotImplementedError, match="innovation state"):
-        make_aggregator("ef21", 32, wire="packed", transport=tps[0])
+    d, world, steps = 129, 3, 4
+    grads = jax.random.normal(jax.random.PRNGKey(1), (world, d))
+    kw = dict(k_fraction=0.1, s=4)
+
+    ref = make_aggregator(method, d, **kw, wire="packed")
+    st = ref.init(world, d)
+    ref_outs = []
+    for t in range(steps):
+        o = ref.step(st, grads, jax.random.fold_in(jax.random.PRNGKey(5), t))
+        st = o.state
+        ref_outs.append(o)
+
+    tps = _connect_world(world)
+    outs = {}
+
+    def run_rank(r):
+        agg = make_aggregator(method, d, **kw, wire="packed",
+                              transport=tps[r])
+        state = agg.init(world, d)
+        res = []
+        for t in range(steps):
+            o = agg.step(state, grads[r:r + 1],
+                         jax.random.fold_in(jax.random.PRNGKey(5), t))
+            state = o.state
+            res.append(o)
+        outs[r] = (res, state)
+
+    threads = [threading.Thread(target=run_rank, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    run_rank(0)
+    for t in threads:
+        t.join()
+
+    for r in range(world):
+        res, state = outs[r]
+        for t in range(steps):
+            assert np.array_equal(np.asarray(res[t].direction),
+                                  np.asarray(ref_outs[t].direction)), (r, t)
+            assert float(res[t].bits) == float(ref_outs[t].bits), (r, t)
+        assert int(state.step) == steps
+    if method.startswith("ef21"):
+        # server-side innovation replication: rank 0's FULL worker mirror
+        # equals the loopback state bitwise; a worker rank owns its row
+        srv_state = outs[0][1]
+        assert np.array_equal(np.asarray(srv_state.g_workers),
+                              np.asarray(st.g_workers))
+        w1_state = outs[1][1]
+        assert np.array_equal(np.asarray(w1_state.g_workers[1]),
+                              np.asarray(st.g_workers[1]))
+    assert tps[0].stats.bytes_up == ref.fn.transport.stats.bytes_up
+    for t in tps.values():
+        t.close()
+
+
+@needs_sockets
+def test_server_fanin_interleaves_slow_rank():
+    """Fan-in concurrency regression (ROADMAP follow-up): rank 0 drains
+    uplinks through a selectors reactor, so a slow rank 1 no longer
+    serializes ranks 2..M — their frames complete FIRST even though the
+    old code read rank-by-rank in rank order."""
+    import time as _time
+
+    world = 4
+    tps = _connect_world(world)
+    delay = 0.5
+
+    def worker_round(r):
+        if r == 1:
+            _time.sleep(delay)      # the straggler
+        tps[r].exchange([bytes([r]) * 64])
+        tps[r].broadcast_payload(None)
+
+    threads = [threading.Thread(target=worker_round, args=(r,))
+               for r in range(1, world)]
+    t0 = _time.monotonic()
+    for t in threads:
+        t.start()
+    delivered = tps[0].exchange([b"rank0" * 8])
+    elapsed = _time.monotonic() - t0
+    tps[0].broadcast_payload(b"done")
+    for t in threads:
+        t.join()
+
+    assert delivered[1] == bytes([1]) * 64 and delivered[3] == bytes([3]) * 64
+    # the fast ranks' frames completed before the straggler's
+    order = tps[0].last_arrival_order
+    assert set(order) == {1, 2, 3}
+    assert order[-1] == 1, f"straggler should arrive last, got {order}"
+    assert set(order[:2]) == {2, 3}, order
+    # and the round still only costs ~the straggler's delay
+    assert elapsed < delay + 2.0
     for t in tps.values():
         t.close()
 
@@ -392,14 +491,14 @@ def test_multihost_trainer_matches_loopback_and_abstract():
 # ---------------------------------------------------------------------------
 
 
-def _tcp_rank_main(rank, port, q):
+def _tcp_rank_main(rank, port, q, method="mlmc_topk"):
     """Entry point of one spawned rank (own process, fresh JAX runtime)."""
     try:
         from repro.comm import make_transport as mk
 
         transport = mk("tcp", rank=rank, world=_TOY["world"],
                        coordinator=f"127.0.0.1:{port}", timeout=120.0)
-        tr = _toy_trainer(transport, "packed")
+        tr = _toy_trainer(transport, "packed", method)
         hist = tr.fit(_toy_batches(), steps=_TOY["steps"], seed=_TOY["seed"])
         st = transport.stats
         q.put((rank, np.asarray(tr.flat_params).tobytes(), hist.bits[-1],
@@ -412,14 +511,19 @@ def _tcp_rank_main(rank, port, q):
 
 @pytest.mark.slow
 @needs_sockets
-def test_tcp_spawned_processes_train_in_parity():
+@pytest.mark.parametrize("method", ["mlmc_topk", "ef21",
+                                    "mlmc_adaptive_topk"])
+def test_tcp_spawned_processes_train_in_parity(method):
     """2+ OS processes (multiprocessing spawn) train over localhost TCP:
     every rank's final params match the in-process loopback run
     bit-for-bit, the server's measured bytes_up matches loopback, and the
-    clock is measured wall time (sim_time stays 0)."""
+    clock is measured wall time (sim_time stays 0).  Covers a stateless
+    method AND the stateful families (EF21 server-side innovation
+    replication; the adaptive EMA ladder) — the 3-rank spawn half of the
+    stateful cross-wire parity matrix."""
     import multiprocessing as mp
 
-    ref = _toy_trainer(None, "packed")
+    ref = _toy_trainer(None, "packed", method)
     hist_ref = ref.fit(_toy_batches(), steps=_TOY["steps"],
                        seed=_TOY["seed"])
     want = np.asarray(ref.flat_params).tobytes()
@@ -427,7 +531,7 @@ def test_tcp_spawned_processes_train_in_parity():
     ctx = mp.get_context("spawn")
     port = pick_free_port()
     q = ctx.Queue()
-    procs = [ctx.Process(target=_tcp_rank_main, args=(r, port, q))
+    procs = [ctx.Process(target=_tcp_rank_main, args=(r, port, q, method))
              for r in range(_TOY["world"])]
     for p in procs:
         p.start()
