@@ -1,0 +1,171 @@
+"""Wire fast-path benchmark — the compiled codec pipeline vs the field.
+
+Measures, at the two BENCH_adaptive model sizes:
+
+* trainer steps/s of the packed byte wire running ``mlmc_topk`` through
+  the COMPILED codec pipeline (`repro.comm.compiled`) against the
+  fully-jitted abstract reference ``mlmc_topk_static`` — the acceptance
+  target is packed within 15% of the jitted reference (the eager host
+  loop used to sit ~45% behind it);
+* the same method on the abstract wire (adaptive MLMC context) and, at
+  the small size, through the ORIGINAL eager codecs
+  (``wire_compiled=False``) — the before/after of this PR;
+* per-codec encode/decode microbenchmarks (µs/op, eager vs compiled) at
+  the small model's gradient dimension.
+
+Emits a machine-readable ``BENCH_wire.json`` at the REPO ROOT so
+successive PRs accumulate a comparable perf record:
+
+    PYTHONPATH=src python -m benchmarks.bench_wire            # full
+    PYTHONPATH=src python -m benchmarks.bench_wire --smoke    # CI tier
+
+The smoke tier (a few steps, one size, tiny micro dims) exercises the
+emission path on every push without burning minutes and NEVER clobbers a
+committed full record; the weekly full run refreshes the real numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import run_methods, small_lm_config
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_wire.json"
+
+#: the BENCH_adaptive sizes, for record-to-record comparability
+SIZES = {
+    "small": dict(layers=2, d_model=128),
+    "wide": dict(layers=2, d_model=256),
+}
+
+#: codecs micro-benchmarked per record (a spread of stream shapes: sparse
+#: segment, dense packed codes, 1-bit plane, raw-f32 innovation, and the
+#: entropy-coded mlmc_rtn corr stream — the one wire format this PR
+#: changed, whose gamma decode is part host-sequential and must stay
+#: measured)
+MICRO_CODECS = ("mlmc_topk", "qsgd", "signsgd", "ef21", "mlmc_rtn")
+
+
+def _trainer_entries(size_name: str, steps: int, smoke: bool) -> dict:
+    cfg = small_lm_config(**SIZES[size_name])
+    methods = {
+        "mlmc_topk_static_abstract": dict(method="mlmc_topk_static",
+                                          k_fraction=0.02),
+        "mlmc_topk_packed": dict(method="mlmc_topk", k_fraction=0.02,
+                                 wire="packed"),
+        "mlmc_topk_abstract": dict(method="mlmc_topk", k_fraction=0.02),
+    }
+    if size_name == "small" and not smoke:
+        # the "before": the eager per-worker host loop (few steps — it is
+        # exactly the path this PR retires)
+        methods["mlmc_topk_packed_eager"] = dict(
+            method="mlmc_topk", k_fraction=0.02, wire="packed",
+            wire_compiled=False)
+    results = run_methods(methods, steps=steps, cfg=cfg)
+    out = {}
+    for label, r in results.items():
+        out[label] = {
+            "dim": r["dim"],
+            "steps_per_s": round(len(r["loss"]) / max(r["wall_s"], 1e-9), 3),
+            "bits_per_step": r["bits"][-1] / max(len(r["bits"]), 1),
+            "final_loss": round(r["final_loss"], 6),
+        }
+    ref = out["mlmc_topk_static_abstract"]["steps_per_s"]
+    packed = out["mlmc_topk_packed"]["steps_per_s"]
+    return {
+        "trainer": out,
+        # acceptance: packed mlmc_topk within 15% of the jitted reference
+        "packed_vs_static_ratio": round(packed / max(ref, 1e-9), 3),
+    }
+
+
+def _micro_us(fn, *args, repeats: int = 5) -> float:
+    fn(*args)                                  # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return round(best * 1e6, 1)
+
+
+def _codec_micro(dim: int) -> dict:
+    from repro.comm import make_codec, make_compiled_codec
+
+    v = jax.random.normal(jax.random.PRNGKey(0), (dim,), jnp.float32)
+    v = (v * jnp.exp(-10.0 * jnp.arange(dim) / dim)).block_until_ready()
+    key = jax.random.PRNGKey(1)
+    out = {}
+    for name in MICRO_CODECS:
+        eager = make_codec(name, dim, k_fraction=0.02, s=4)
+        comp = make_compiled_codec(name, dim, k_fraction=0.02, s=4)
+        pkt = comp.encode(v, key).packet
+
+        def enc_eager():
+            eager.encode(v, key)
+
+        def enc_comp():
+            comp.encode(v, key)
+
+        def dec_eager():
+            eager.decode(pkt)
+
+        def dec_comp():
+            # includes the host staging copy + the jitted decode
+            comp.decode(pkt)
+
+        out[name] = {
+            "encode_eager_us": _micro_us(enc_eager),
+            "encode_compiled_us": _micro_us(enc_comp),
+            "decode_eager_us": _micro_us(dec_eager),
+            "decode_compiled_us": _micro_us(dec_comp),
+        }
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    steps = 3 if smoke else 12
+    sizes = ("small",) if smoke else ("small", "wide")
+    record = {
+        "benchmark": "wire_fast_path",
+        "smoke": smoke,
+        "steps": steps,
+        "sizes": {},
+    }
+    for size_name in sizes:
+        t0 = time.time()
+        entry = _trainer_entries(size_name, steps, smoke)
+        dim = entry["trainer"]["mlmc_topk_packed"]["dim"]
+        entry["codec_us"] = _codec_micro(2048 if smoke else dim)
+        record["sizes"][size_name] = entry
+        for label, r in entry["trainer"].items():
+            print(f"bench_wire/{size_name}/{label},"
+                  f"{1e6 / max(r['steps_per_s'], 1e-9):.0f},"
+                  f"steps_per_s={r['steps_per_s']};"
+                  f"final_loss={r['final_loss']:.4f}")
+        print(f"# bench_wire {size_name} ratio packed/static = "
+              f"{entry['packed_vs_static_ratio']} "
+              f"({time.time() - t0:.1f}s)", flush=True)
+    if smoke and OUT_PATH.exists():
+        try:
+            if not json.loads(OUT_PATH.read_text()).get("smoke", True):
+                # never clobber a committed FULL perf record with a smoke
+                # run (CI runs --smoke on every push to test this path)
+                print(f"# smoke run: kept existing full record {OUT_PATH}")
+                return record
+        except (json.JSONDecodeError, OSError):
+            pass
+    OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
+    print(f"# wrote {OUT_PATH}")
+    return record
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

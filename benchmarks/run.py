@@ -12,6 +12,7 @@ import time
 def main() -> None:
     from benchmarks import (
         bench_adaptive,
+        bench_wire,
         fig1_communication_efficiency,
         fig2_iteration_efficiency,
         fig3_bitwise,
@@ -34,6 +35,7 @@ def main() -> None:
         "kernels": kernel_bench.main,                 # Pallas hot-spots
         "roofline": roofline_table.main,              # §Roofline aggregate
         "adaptive": bench_adaptive.main,              # BENCH_adaptive.json
+        "wire": bench_wire.main,                      # BENCH_wire.json
     }
     picks = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

@@ -26,6 +26,11 @@ from repro.comm.aggregate import (
     packed_aggregator,
 )
 from repro.comm.codec import EncodeResult, WireCodec, make_codec
+from repro.comm.compiled import (
+    CompiledCodec,
+    compile_codec,
+    make_compiled_codec,
+)
 from repro.comm.multihost import TcpStarTransport, is_multihost_transport
 from repro.comm.device_wire import (
     DEVICE_WIRE_METHODS,
@@ -51,13 +56,15 @@ from repro.comm.transport import (
 )
 
 __all__ = [
-    "CostModel", "DEVICE_WIRE_METHODS", "DeviceCodec", "DevicePacket",
-    "EncodeResult", "Header", "LoopbackTransport", "MultihostPackedAdaptive",
-    "MultihostPackedAggregate", "MultihostPackedEF21", "PackedAdaptiveMLMC",
+    "CompiledCodec", "CostModel", "DEVICE_WIRE_METHODS", "DeviceCodec",
+    "DevicePacket", "EncodeResult", "Header", "LoopbackTransport",
+    "MultihostPackedAdaptive", "MultihostPackedAggregate",
+    "MultihostPackedEF21", "PackedAdaptiveMLMC",
     "PackedAggregate", "PackedEF21", "Packet",
     "SimulatedTransport", "Stream", "TcpStarTransport", "Transport",
-    "TransportStats", "WireCodec", "device_aggregator", "header_lane",
-    "is_multihost_transport", "make_codec", "make_device_codec",
+    "TransportStats", "WireCodec", "compile_codec", "device_aggregator",
+    "header_lane", "is_multihost_transport", "make_codec",
+    "make_compiled_codec", "make_device_codec",
     "make_topology", "make_transport", "pack_bits", "pack_planes",
     "packed_aggregator", "simulated_step_time", "unpack_bits",
     "unpack_planes",

@@ -7,10 +7,14 @@ deserialized and decoded server-side, and the direction is the mean of the
 direction matches the abstract (`wire="abstract"`) path — now with measured
 wire bits instead of asserted ones in `AggregateOut.bits`.
 
-This path is host-side Python (serialization is inherently un-jittable);
-it exists for verification and for honest telemetry, while the jitted
-abstract path remains the fast default.  Every aggregator here implements
-the unified stateful protocol (`init -> CommState`, packets in, CommState
+Only the byte framing itself lives on the host: by default every
+aggregator here runs the COMPILED codec pipeline (`repro.comm.compiled`)
+— one vmapped jitted encode for all M workers, one `device_get` of the
+packed uint32 buffers, and one fused decode+mean — so the packed wire
+tracks the fully-jitted path's step time while still shipping and
+measuring real bytes (`BENCH_wire.json`; ``compiled=False`` restores the
+original eager codecs for A-B runs).  Every aggregator implements the
+unified stateful protocol (`init -> CommState`, packets in, CommState
 out): `PackedEF21` threads the EF21/EF21-SGDM worker mirrors, and
 `PackedAdaptiveMLMC` threads the EMA residual-norm ladders of the stateful
 Alg.-3 family (`mlmc_adaptive_*`), shipping each worker's Lemma-3.4
@@ -49,9 +53,43 @@ from repro.core.types import (
 Array = jax.Array
 
 
+def _is_compiled(codec) -> bool:
+    """The compiled pipeline (`repro.comm.compiled`) exposes batched
+    encode + fused decode; a bare eager `WireCodec` does not."""
+    return hasattr(codec, "encode_batch")
+
+
+def _encode_round(codec, worker_grads: Array, keys,
+                  probs=None) -> list[Packet]:
+    """All M workers -> byte packets: ONE vmapped jitted encode + one
+    device_get on the compiled pipeline, the legacy per-worker eager loop
+    otherwise (same bytes either way — the byte-equality battery)."""
+    if _is_compiled(codec):
+        return codec.encode_batch(worker_grads, keys, probs=probs)
+    m = worker_grads.shape[0]
+    if probs is not None:
+        return [codec.encode(worker_grads[i], keys[i],
+                             probs=probs[i]).packet for i in range(m)]
+    return [codec.encode(worker_grads[i], keys[i]).packet for i in range(m)]
+
+
+def _decode_mean(codec, packets: list[Packet]) -> Array:
+    """Decoded-estimate mean: one fused unpack+scatter+mean jit over the
+    persistent staging buffers on the compiled pipeline."""
+    if _is_compiled(codec):
+        return codec.decode_mean(packets)
+    return jnp.mean(jnp.stack([jnp.asarray(codec.decode(p))
+                               for p in packets]), axis=0)
+
+
 class PackedAggregate:
     """Stateless packed-wire aggregator: encode -> ship -> decode -> mean.
-    The CommState passes through unchanged."""
+    The CommState passes through unchanged.
+
+    With a compiled codec (`make_compiled_codec`, the default wire), the
+    per-worker Python loop is gone: one vmapped jitted encode emits every
+    worker's packed buffers, one `device_get` lands them on the host for
+    byte framing, and one fused jit decodes + means all M packets."""
 
     def __init__(self, codec: WireCodec, transport: Transport | None = None):
         self.codec = codec
@@ -64,14 +102,11 @@ class PackedAggregate:
             state = empty_comm_state()
         m = worker_grads.shape[0]
         keys = jax.random.split(rng, m)
-        encoded = [self.codec.encode(worker_grads[i], keys[i])
-                   for i in range(m)]
-        raw = [e.packet.to_bytes() for e in encoded]
-        delivered = self.transport.exchange(raw)
+        packets_out = _encode_round(self.codec, worker_grads, keys)
+        delivered = self.transport.exchange(
+            [p.to_bytes() for p in packets_out])
         packets = [Packet.from_bytes(b) for b in delivered]
-        decoded = [self.codec.decode(p) for p in packets]
-        direction = jnp.mean(jnp.stack([jnp.asarray(d) for d in decoded]),
-                             axis=0)
+        direction = _decode_mean(self.codec, packets)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         # account the dense model-update broadcast on the downlink
         self.transport.broadcast(4 * self.codec.dim, m)
@@ -111,14 +146,12 @@ class PackedAdaptiveMLMC:
                             for i in range(m)])
         ema = ladder_ema_update(state.ladder_ema, deltas, self.rho, state.step)
         probs = probs_from_ladder(ema)
-        encoded = [self.codec.encode(worker_grads[i], keys[i], probs=probs[i])
-                   for i in range(m)]
+        packets_out = _encode_round(self.codec, worker_grads, keys,
+                                    probs=probs)
         delivered = self.transport.exchange(
-            [e.packet.to_bytes() for e in encoded])
+            [p.to_bytes() for p in packets_out])
         packets = [Packet.from_bytes(b) for b in delivered]
-        decoded = [self.codec.decode(p) for p in packets]
-        direction = jnp.mean(jnp.stack([jnp.asarray(d) for d in decoded]),
-                             axis=0)
+        direction = _decode_mean(self.codec, packets)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         self.transport.broadcast(4 * self.codec.dim, m)
         new_state = state._replace(step=state.step + 1, ladder_ema=ema)
@@ -198,20 +231,50 @@ class MultihostPackedAggregate:
         return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
 
 
+def _drain_decoding(tp, codec, local_payload: bytes):
+    """Server-side drain with AS-ARRIVAL decode: each uplink is parsed and
+    its jitted decode DISPATCHED the moment its frame completes (jax
+    dispatch is asynchronous), so unpack/scatter work overlaps the network
+    wait for the remaining ranks instead of starting after the full drain.
+    Returns (packets, decoded_rows|None) in rank order."""
+    world = tp.world
+    packets: list = [None] * world
+    rows: list = [None] * world
+    compiled = hasattr(codec, "decode_device")
+
+    def on_payload(r: int, raw: bytes) -> None:
+        pkt = Packet.from_bytes(raw)
+        packets[r] = pkt
+        if compiled:
+            rows[r] = codec.decode_device(pkt)
+
+    tp.exchange([local_payload], on_payload=on_payload)
+    return packets, (rows if compiled else None)
+
+
 def _serve_round(tp, codec, local_payload: bytes) -> tuple[Array, float]:
     """One multihost aggregation round: ship this rank's payload, decode +
     mean on rank 0, broadcast the f32 direction.  Returns the direction and
     the measured uplink bits (identical on every rank).  EF21 does NOT
     route through here — its server must also fold the decoded innovations
-    into the state mirror, so `MultihostPackedEF21` runs its own loop."""
-    delivered = tp.exchange([local_payload])
+    into the state mirror, so `MultihostPackedEF21` runs its own loop.
+
+    The direction crosses the host boundary exactly once on rank 0: the
+    decoded mean lives on device, `np.asarray` fetches it once for the
+    broadcast frame, and the trainer consumes the device array directly
+    (the former eager path round-tripped every decoded estimate
+    host -> device -> host before the trainer ever saw the direction)."""
     if tp.rank == 0:
-        packets = [Packet.from_bytes(b) for b in delivered]
-        stacked = jnp.stack([jnp.asarray(codec.decode(p)) for p in packets])
-        direction = jnp.mean(stacked, axis=0)
+        packets, rows = _drain_decoding(tp, codec, local_payload)
+        if rows is not None:
+            direction = jnp.mean(jnp.stack(rows), axis=0)
+        else:
+            direction = jnp.mean(jnp.stack(
+                [jnp.asarray(codec.decode(p)) for p in packets]), axis=0)
         bits = float(sum(codec.measured_bits(p) for p in packets))
         tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
     else:
+        tp.exchange([local_payload])
         vec, bits = unpack_direction(tp.broadcast_payload(None), codec.dim)
         direction = jnp.asarray(vec)
     return direction, bits
@@ -293,11 +356,19 @@ class PackedEF21:
         target, mom = ef21_targets(state, worker_grads, self.beta)
         innovations = target - state.g_workers
         m = innovations.shape[0]
-        encoded = [self.codec.encode(innovations[i], None) for i in range(m)]
+        if _is_compiled(self.codec):
+            packets_out = self.codec.encode_batch(innovations)
+        else:
+            packets_out = [self.codec.encode(innovations[i], None).packet
+                           for i in range(m)]
         delivered = self.transport.exchange(
-            [e.packet.to_bytes() for e in encoded])
+            [p.to_bytes() for p in packets_out])
         packets = [Packet.from_bytes(b) for b in delivered]
-        c = jnp.stack([jnp.asarray(self.codec.decode(p)) for p in packets])
+        if _is_compiled(self.codec):
+            c = self.codec.decode_stack(packets)
+        else:
+            c = jnp.stack([jnp.asarray(self.codec.decode(p))
+                           for p in packets])
         g_workers = state.g_workers + c
         g_server = state.g_server + jnp.mean(c, axis=0)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
@@ -361,10 +432,13 @@ class MultihostPackedEF21:
 
         if tp.rank == 0:
             # server: decode ALL innovations -> replicate the worker mirror
-            delivered = tp.exchange([raw])
-            packets = [Packet.from_bytes(b) for b in delivered]
-            c = jnp.stack([jnp.asarray(self.codec.decode(p))
-                           for p in packets])
+            # (each uplink's decode dispatches as its frame completes)
+            packets, rows = _drain_decoding(tp, self.codec, raw)
+            if rows is not None:
+                c = jnp.stack(rows)
+            else:
+                c = jnp.stack([jnp.asarray(self.codec.decode(p))
+                               for p in packets])
             g_workers = state.g_workers + c
             g_server = state.g_server + jnp.mean(c, axis=0)
             bits = float(sum(self.codec.measured_bits(p) for p in packets))
@@ -391,14 +465,25 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
                       k_fraction: float = 0.01, s: int = 1,
                       rtn_level: int = 4, qsgd_levels: int = 2,
                       momentum_beta: float = 0.1, fixed_levels: int = 24,
-                      ema_rho: float = 0.25):
+                      ema_rho: float = 0.25, compiled: bool = True):
     """Build the packed-wire `Aggregator` for a registry name (the
-    ``wire="packed"`` branch of `repro.core.aggregators.make_aggregator`)."""
+    ``wire="packed"`` branch of `repro.core.aggregators.make_aggregator`).
+
+    ``compiled=True`` (default) routes every encode/decode through the
+    jit-compiled fast path (`repro.comm.compiled`): byte-identical packets,
+    but the per-worker eager op dispatch is replaced by one vmapped encode,
+    one device_get, and one fused decode+mean per step.  ``compiled=False``
+    keeps the original eager codecs (verification / A-B benchmarks)."""
     from repro.core.aggregators import Aggregator
 
-    codec = make_codec(name, dim, k_fraction=k_fraction, s=s,
-                       rtn_level=rtn_level, qsgd_levels=qsgd_levels,
-                       fixed_levels=fixed_levels)
+    codec_kw = dict(k_fraction=k_fraction, s=s, rtn_level=rtn_level,
+                    qsgd_levels=qsgd_levels, fixed_levels=fixed_levels)
+    if compiled:
+        from repro.comm.compiled import make_compiled_codec
+
+        codec = make_compiled_codec(name, dim, **codec_kw)
+    else:
+        codec = make_codec(name, dim, **codec_kw)
     multihost = is_multihost_transport(transport)
     if name in ("ef21", "ef21_sgdm", "signsgd_ef"):
         beta = momentum_beta if name == "ef21_sgdm" else 1.0

@@ -36,6 +36,7 @@ Documented deviations surfaced by measuring instead of asserting:
 from __future__ import annotations
 
 import abc
+import bisect
 import dataclasses
 import math
 
@@ -308,6 +309,107 @@ class QSGDCodec(WireCodec):
         n = self.nominal_bits()   # d*(1 + ceil(log2(s+1))) + 32
         # only word padding of the single (1+level_width)-bit stream
         return n, n + _padding_bits(self.dim, self.width)
+
+
+# ---------------------------------------------------------------------------
+# Elias-gamma entropy coding of sparse signed ternary planes
+# ---------------------------------------------------------------------------
+#
+# The `mlmc_rtn` refinement correction is a {-1, 0, +1} plane whose nonzeros
+# mark entries that re-quantize across a coarse-grid cell boundary.  Shipping
+# it flat costs 2 bits/entry; gamma-coding the GAPS between nonzeros (plus
+# one sign bit each) costs sum_i (2*floor(log2 g_i) + 2) <= 2d bits in the
+# worst case and far less on sparse planes — the measured size is what the
+# ledger books (`bits.rtn_mlmc_bits(..., corr_bits=...)`).
+#
+# Record format, bit order LSB-first within each uint32 word (the same
+# "field f at bit offset f" layout as every width-1 stream):
+#     gamma(gap)   = u zeros, then the (u+1)-bit binary of gap MSB-first
+#                    (gap >= 1, u = floor(log2 gap))
+#     sign bit     = 1 for a -1 correction, 0 for +1
+
+
+def gamma_signed_encode(corr: np.ndarray) -> tuple[np.ndarray, int, int]:
+    """{-1,0,+1} plane -> (uint32 words, total bits, nonzero count)."""
+    corr = np.asarray(corr)
+    nz = np.flatnonzero(corr)
+    n = int(nz.size)
+    if n == 0:
+        return np.zeros((0,), np.uint32), 0, 0
+    gaps = np.diff(nz.astype(np.int64), prepend=np.int64(-1))  # >= 1
+    u = (np.frexp(gaps.astype(np.float64))[1] - 1).astype(np.int64)
+    rec_len = 2 * u + 2
+    starts = np.concatenate([[0], np.cumsum(rec_len)[:-1]])
+    total = int(rec_len.sum())
+    rec = np.repeat(np.arange(n), rec_len)
+    within = np.arange(total) - starts[rec]
+    g, uu = gaps[rec], u[rec]
+    neg = (corr[nz] < 0).astype(np.int64)[rec]
+    shift = np.maximum(2 * uu - within, 0)
+    bits = np.where(within < uu, 0,
+                    np.where(within <= 2 * uu, (g >> shift) & 1, neg))
+    pad = (-total) % 32
+    bits32 = np.concatenate([bits, np.zeros((pad,), np.int64)])
+    words = (bits32.reshape(-1, 32).astype(np.uint32)
+             << np.arange(32, dtype=np.uint32)).sum(axis=1, dtype=np.uint64)
+    return words.astype(np.uint32), total, n
+
+
+def gamma_signed_decode(words: np.ndarray, nbits: int,
+                        d: int) -> np.ndarray:
+    """Inverse of :func:`gamma_signed_encode` -> int32 plane of length d.
+
+    Gamma records self-delimit, so finding the record BOUNDARIES is
+    inherently sequential — but that phase is a cheap pointer walk over
+    the '1' positions (a few int ops per nonzero); extracting the gap
+    values, signs, and output positions is fully vectorized (one ragged
+    gather + ``np.add.reduceat``).  A corrupt-but-frame-valid stream (a
+    bit flip survives `Packet.from_bytes`'s geometry checks) raises a
+    descriptive ValueError — this decoder runs on rank 0's TCP server
+    path, which must reject bad input loudly, never die on an
+    IndexError."""
+    out = np.zeros((d,), np.int32)
+    if nbits == 0:
+        return out
+    w = np.asarray(words, np.uint32)
+    bits = ((w[:, None] >> np.arange(32, dtype=np.uint32)) & 1) \
+        .reshape(-1)[:nbits].astype(np.int64)
+    ones = np.flatnonzero(bits).tolist()
+    # phase 1 (sequential): record starts -> (p1, u) per record; the
+    # pointer advances monotonically, so each jump is one C-level bisect
+    p1s, us = [], []
+    pos, j, n_ones = 0, 0, len(ones)
+    while pos < nbits:
+        j = bisect.bisect_left(ones, pos, j)
+        if j >= n_ones:
+            raise ValueError(
+                "corrupt gamma stream: unary run starting at bit "
+                f"{pos} never terminates within the {nbits}-bit stream")
+        p1 = ones[j]
+        u = p1 - pos
+        if p1 + u + 1 >= nbits:
+            raise ValueError(
+                f"corrupt gamma stream: record at bit {pos} wants bits "
+                f"up to {p1 + u + 1}, stream has {nbits}")
+        p1s.append(p1)
+        us.append(u)
+        pos = p1 + u + 2
+    # phase 2 (vectorized): gaps = the (u+1)-bit binaries, MSB-first
+    p1a = np.asarray(p1s, np.int64)
+    ua = np.asarray(us, np.int64)
+    lens = ua + 1
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]])
+    rec = np.repeat(np.arange(lens.size), lens)
+    within = np.arange(int(lens.sum())) - starts[rec]
+    weighted = bits[p1a[rec] + within] << (ua[rec] - within)
+    gaps = np.add.reduceat(weighted, starts)
+    targets = np.cumsum(gaps) - 1
+    if targets[-1] >= d:
+        raise ValueError(
+            f"corrupt gamma stream: gaps land on entry {targets[-1]} "
+            f"of a dim-{d} plane")
+    out[targets] = np.where(bits[p1a + ua + 1], -1, 1)
+    return out
 
 
 def _rtn_grid(level: int, c: np.float32) -> tuple[np.float32, np.float32]:
@@ -713,12 +815,19 @@ class MLMCFloatCodec(_MLMCCodecBase):
 class MLMCRTNCodec(_MLMCCodecBase):
     """Adaptive MLMC-RTN (Alg. 3, App. G.2).  The residual C^l - C^{l-1}
     has no sparse/bit-plane form, so the honest wire format is the level-l
-    grid codes (l bits/entry) plus a {-1,0,+1} correction (2 bits/entry)
-    that turns the decoder's re-quantization of C^l onto the coarse grid
-    into the true C^{l-1}.  The ledger (`bits.rtn_mlmc_bits`) now books
-    exactly this ~(l+2) bits/entry per sampled level, so `reconcile_bounds`
-    is tight (word padding + f32-vs-f64 header) instead of absorbing an
-    l·d deviation."""
+    grid codes (l bits/entry) plus a {-1,0,+1} correction that turns the
+    decoder's re-quantization of C^l onto the coarse grid into the true
+    C^{l-1}.
+
+    The ``mlmc_rtn`` wire (codec id 13) ENTROPY-CODES that correction:
+    nonzeros are Elias-gamma gap + sign records (`gamma_signed_encode`),
+    so the stream measures its actual information content (<= 2d bits
+    worst-case, typically well under the flat plane) and the ledger books
+    the measured size (`bits.rtn_mlmc_bits(..., corr_bits=...)`) — its
+    golden fixture was deliberately regenerated for this PR.  The stateful
+    ``mlmc_adaptive_rtn`` wire (codec id 17) keeps the flat 2-bit plane:
+    wire formats are append-only, and its fixture stays byte-identical
+    until its own versioned change."""
 
     def __init__(self, dim: int, num_bits: int = 8, *, adaptive: bool = True,
                  name: str = "mlmc_rtn"):
@@ -729,6 +838,9 @@ class MLMCRTNCodec(_MLMCCodecBase):
         self.name, self.dim = name, dim
         self.compressor = RTNMultilevel(num_bits=num_bits)
         self.adaptive = adaptive
+        #: gamma-coded correction stream (the PR-5 wire evolution) — only
+        #: the mlmc_rtn format; see the class docstring
+        self.entropy_corr = name == "mlmc_rtn"
 
     def encode(self, v, rng, probs=None):
         v = jnp.asarray(v, jnp.float32)
@@ -748,6 +860,7 @@ class MLMCRTNCodec(_MLMCCodecBase):
         q_l, m_l = self._codes(v, level, c)
         streams = [_pack_stream("q", (q_l + m_l).astype(np.uint32),
                                 max(level, 1))]
+        nnz = 0
         if level > 1:
             q_prev, m_prev = self._codes(v, level - 1, c)
             q_hat = self._requant(self._values(q_l, level, c), level - 1, c)
@@ -755,10 +868,14 @@ class MLMCRTNCodec(_MLMCCodecBase):
             assert np.abs(corr).max(initial=0) <= 1, \
                 "RTN refinement correction left {-1,0,1} (delta_l < " \
                 "delta_{l-1}/2 should make this impossible)"
-            streams.append(_pack_stream("corr",
-                                        (corr + 1).astype(np.uint32), 2))
-        hdr = Header(self.name, self.dim, flags=self._prob_flag(probs),
-                     **hdr_kw)
+            if self.entropy_corr:
+                words, nbits, nnz = gamma_signed_encode(corr)
+                streams.append(Stream("corr", words, 1, nbits))
+            else:
+                streams.append(_pack_stream("corr",
+                                            (corr + 1).astype(np.uint32), 2))
+        hdr = Header(self.name, self.dim, nnz=nnz,
+                     flags=self._prob_flag(probs), **hdr_kw)
         return EncodeResult(Packet(hdr, tuple(streams)), _np32(est.estimate))
 
     # -- grid helpers built on the shared `_rtn_grid` -----------------------
@@ -796,10 +913,13 @@ class MLMCRTNCodec(_MLMCCodecBase):
         if h.level <= 1:
             residual = vals_l - np.float32(0.0)
         else:
-            corr = _np32(_unpack_stream(packet.streams[1])[: h.dim]) \
-                - np.float32(1.0)
-            q_prev = self._requant(vals_l, h.level - 1, c) + \
-                corr.astype(np.int64)
+            s = packet.streams[1]
+            if self.entropy_corr:
+                corr = gamma_signed_decode(s.words, s.count, h.dim) \
+                    .astype(np.int64)
+            else:
+                corr = (_unpack_stream(s)[: h.dim].astype(np.int64) - 1)
+            q_prev = self._requant(vals_l, h.level - 1, c) + corr
             residual = vals_l - self._values(q_prev, h.level - 1, c)
         return (residual / p).astype(np.float32)
 
@@ -809,24 +929,35 @@ class MLMCRTNCodec(_MLMCCodecBase):
         return bitcost.rtn_mlmc_expected_bits(self.dim,
                                               self.compressor.num_levels)
 
-    def nominal_bits_for(self, level: int) -> float:
-        """The honest per-draw ledger value for one sampled level."""
+    def nominal_bits_for(self, level: int, corr_bits=None) -> float:
+        """The honest per-draw ledger value for one sampled level; pass the
+        MEASURED gamma-stream size as ``corr_bits`` to book the
+        entropy-coded wire exactly."""
         return float(bitcost.rtn_mlmc_bits(self.dim, level,
-                                           self.compressor.num_levels))
+                                           self.compressor.num_levels,
+                                           corr_bits=corr_bits))
 
     def header_bits(self, packet):
         return 64.0 + self.level_header_bits()   # scale + p_l + level
 
     def reconcile_bounds(self, packet):
         level = packet.header.level
-        n = self.nominal_bits_for(level)
         if packet.header.flags & FLAG_DENSE_FALLBACK:
             # honest formula already charges 32d; only header slack remains
+            n = self.nominal_bits_for(level)
             return n - 32.0, n + 32.0
-        # tight: word padding of the q (and, for l > 1, corr) streams
+        corr_bits = None
         pad = _padding_bits(self.dim, max(level, 1))
         if level > 1:
-            pad += _padding_bits(self.dim, 2)
+            corr = packet.streams[1]
+            if self.entropy_corr:
+                # book the measured gamma stream: bounds stay tight around
+                # the data-dependent size instead of absorbing a 2d gap
+                corr_bits = float(corr.used_bits)
+                pad += corr.padded_bits - corr.used_bits
+            else:
+                pad += _padding_bits(self.dim, 2)
+        n = self.nominal_bits_for(level, corr_bits=corr_bits)
         return n - 32.0, n + pad + 32.0
 
 

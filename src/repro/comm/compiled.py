@@ -1,0 +1,1076 @@
+"""Compiled codec pipeline — the jit-compiled fast path of the byte wire.
+
+`repro.comm.codec` runs every compressor eagerly: one XLA dispatch per jnp
+op, a host round-trip per `np.asarray`, and a fresh Python `Packet` build
+per worker.  That is fine for verification but pays a large host tax per
+step (the BENCH_adaptive gap the wire benchmarks track).  This module
+compiles the SAME math into fixed-shape jitted functions, so the only host
+work per step is one `jax.device_get` of the packed uint32 buffers and the
+byte framing:
+
+* ``encode_arrays(v, rng[, probs]) -> (lane, word_buffers)`` — one jitted,
+  fixed-shape function per (codec, dim) pair that replays the eager codec's
+  float32 ops **in the same order** and bit-packs every stream on device
+  with the Pallas kernels of :mod:`repro.kernels.pack`.  The fixed
+  ``(EXT_LANE_LEN,)`` f32 lane (reusing the `device_wire` header-lane
+  layout, extended with nnz/flags slots) carries every `Header` field;
+  variable-length streams come back as max-size buffers the host slices to
+  their actual word counts.  The resulting `Packet` is **byte-identical**
+  to `WireCodec.encode`'s — locked down by the golden fixtures and the
+  byte-equality battery in ``tests/test_compiled_codec.py``.
+* ``decode_arrays(lane, word_buffers) -> estimate`` — the jitted inverse,
+  consuming zero-copy staged buffers.
+* ``encode_batch`` — all M workers through ONE vmapped encode (the Pallas
+  packers see a single batched launch via the 2D `pack_bits` path) and one
+  `device_get`; ``decode_mean`` fuses unpack + scatter + the M-worker mean
+  into one jit with **persistent donated staging buffers**: after the first
+  step the host path allocates nothing (buffers are reused and donated to
+  XLA, which recycles their device storage for the outputs).
+
+`mlmc_rtn` / `mlmc_adaptive_rtn` are the one family whose stream WIDTH
+depends on the sampled level, so their pipeline is two-stage: a small
+jitted level draw, then a level-specialized jitted body (jit's cache holds
+the <= `num_levels` variants).  The `mlmc_rtn` Elias-gamma correction
+stream is entropy-coded on the host (same numpy helper as the eager codec,
+so bytes trivially agree); see `repro.comm.codec.MLMCRTNCodec`.
+
+Exactness contract: for every registry codec, ``compiled.encode(v, rng)``
+returns a packet whose ``to_bytes()`` equals the eager codec's, and
+``decode`` / the ``EncodeResult.estimate`` are elementwise equal.  vmapped
+batch rows equal single-row encodes bit-for-bit (regression-tested), which
+is what keeps a TCP rank (batch of 1) bitwise comparable to the in-process
+loop (batch of M).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.codec import (
+    _EPS,
+    EncodeResult,
+    MLMCRTNCodec,
+    WireCodec,
+    gamma_signed_decode,
+    gamma_signed_encode,
+    make_codec,
+)
+from repro.comm.packets import (
+    EXT_LANE_LEN,
+    FLAG_DENSE_FALLBACK,
+    FLAG_EXPLICIT_PROB,
+    LANE_FLAGS,
+    LANE_LEVEL,
+    LANE_NNZ,
+    LANE_PROB,
+    LANE_SCALE,
+    Header,
+    Packet,
+    Stream,
+    ext_lane,
+    ext_lane_to_header,
+)
+from repro.core.adaptive import adaptive_probs
+from repro.core.bitwise import _BELOW_ONE, _fixed_scale
+from repro.core.types import categorical, opt_barrier, pin_rounding
+from repro.kernels.pack import fields_per_word, pack_bits, unpack_bits
+
+Array = jax.Array
+
+
+def _n_words(count: int, width: int) -> int:
+    return -(-count // fields_per_word(width))
+
+
+def rtn_grid(lvl, c):
+    """The RTN grid (delta, m) as traced jnp f32 ops — the jnp replay of
+    `repro.comm.codec._rtn_grid`, shared by every compiled RTN en/decoder
+    so the byte-exactness-critical formula exists exactly once here.
+    ``lvl`` must be a traced (un-foldable) scalar; see `opt_barrier`."""
+    cells = jnp.float32(2.0) ** lvl - 1.0
+    delta = jnp.float32(2.0) * c / jnp.maximum(cells, 1.0)
+    return delta, jnp.floor(cells / 2.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Static layout of one (possible) packet stream: the jitted encode
+    emits a fixed ``(M, words(max_count, width))`` uint32 buffer for it;
+    the host slices each row to the actual count's word length."""
+
+    name: str
+    width: int
+    max_count: int
+    f32: bool = False      # payload is raw f32 bit patterns (width 32)
+    rare: bool = False     # fetched from device only when a packet needs it
+
+    @property
+    def max_words(self) -> int:
+        return _n_words(self.max_count, self.width)
+
+
+class CompiledCodec:
+    """Base wrapper: jitted encode/decode around an eager `WireCodec`.
+
+    Subclasses define ``plan`` (every stream the family can emit),
+    ``_row_encode`` (the traced per-worker math, emitting pre-pack code /
+    value arrays zero-padded to ``max_count``), ``_streams_for`` /
+    ``_counts`` (host: which plan streams a given header selects and their
+    field counts), and ``_row_decode`` (the traced inverse).
+
+    Bit accounting (`nominal_bits` / `measured_bits` / `reconcile_bounds` /
+    `header_bits`) delegates to the eager codec — the packets are the same
+    bytes, so the ledger reconciliation is shared."""
+
+    def __init__(self, eager: WireCodec):
+        self.eager = eager
+        self.name, self.dim = eager.name, eager.dim
+        self._enc_cache: dict = {}
+        self._dec_cache: dict = {}
+        self._stage: dict = {}
+        self._inflight: dict = {}
+        #: `make_compiled_codec` hands the SAME instance to every caller
+        #: with matching params; the lock makes stage -> dispatch atomic
+        #: so threaded aggregators (tests run rank workers in threads)
+        #: cannot interleave writes to the shared staging buffers
+        self._stage_lock = threading.Lock()
+
+    # ---- per-family surface (overridden) -----------------------------------
+
+    plan: tuple[StreamPlan, ...] = ()
+
+    def _row_encode(self, v, key, probs):
+        """(d,) f32 + key [+ (L,) probs] -> (lane, payload, estimate) where
+        ``payload[i]`` is plan[i]'s pre-pack array (uint32 codes, or f32
+        values when ``plan[i].f32``), zero-filled beyond the actual count."""
+        raise NotImplementedError
+
+    def _streams_for(self, header: Header) -> tuple[int, ...]:
+        """Plan indices present in a packet with this header, in order."""
+        return tuple(range(len(self.plan)))
+
+    def _decode_sel_for(self, header: Header) -> tuple[int, ...]:
+        """Plan indices the DECODER needs — may be a subset of the packet's
+        streams (`CompiledSignSGD` skips an empty exact-zero side channel,
+        and with it a d-sized scatter)."""
+        return self._streams_for(header)
+
+    def _counts(self, header: Header) -> tuple[int, ...]:
+        """Actual field count of each selected stream."""
+        raise NotImplementedError
+
+    def _row_decode(self, lane, bufs, sel: tuple[int, ...]):
+        """lane + word buffers (plan order per ``sel``) -> (d,) estimate."""
+        raise NotImplementedError
+
+    # ---- compiled encode ---------------------------------------------------
+
+    def _pack_payload(self, payload):
+        out = []
+        for p, arr in zip(self.plan, payload):
+            if p.f32:
+                out.append(jax.lax.bitcast_convert_type(
+                    arr.astype(jnp.float32), jnp.uint32))
+            else:
+                out.append(pack_bits(arr.astype(jnp.uint32), p.width))
+        return tuple(out)
+
+    def _encode_fn(self, with_probs: bool):
+        if with_probs not in self._enc_cache:
+            if with_probs:
+                def run(V, K, probs):
+                    lanes, payload, est = jax.vmap(self._row_encode)(
+                        V, K, probs)
+                    return lanes, self._pack_payload(payload), est
+            else:
+                def run(V, K):
+                    lanes, payload, est = jax.vmap(
+                        lambda v, k: self._row_encode(v, k, None))(V, K)
+                    return lanes, self._pack_payload(payload), est
+            self._enc_cache[with_probs] = jax.jit(run)
+        return self._enc_cache[with_probs]
+
+    def _dispatch_single(self, v: Array, rng, probs):
+        V = jnp.asarray(v, jnp.float32)[None]
+        K = (jnp.asarray(rng)[None] if rng is not None
+             else jnp.zeros((1, 2), jnp.uint32))
+        if probs is not None:
+            return self._encode_fn(True)(
+                V, K, jnp.asarray(probs, jnp.float32)[None])
+        return self._encode_fn(False)(V, K)
+
+    def encode_arrays(self, v: Array, rng, probs=None):
+        """The core primitive: one jitted fixed-shape encode of a single
+        gradient -> ``(header_lane, word_buffers)`` (plus the estimate,
+        kept on device)."""
+        lanes, bufs, est = self._dispatch_single(v, rng, probs)
+        return lanes[0], tuple(b[0] for b in bufs), est[0]
+
+    def _finish_packet(self, lane_row: np.ndarray, buf_rows,
+                       rare_rows) -> Packet:
+        """Host: one fetched lane row + buffer rows -> the byte `Packet`."""
+        header = ext_lane_to_header(self.name, self.dim, lane_row)
+        sel = self._streams_for(header)
+        counts = self._counts(header)
+        streams = []
+        for i, count in zip(sel, counts):
+            p = self.plan[i]
+            row = rare_rows(i) if p.rare else buf_rows(i)
+            streams.append(Stream(p.name, row[: _n_words(count, p.width)],
+                                  p.width, count))
+        return Packet(header, tuple(streams))
+
+    def _fetch_rare(self, i: int, m: int, bufs, V) -> np.ndarray:
+        """Fetch one rare-stream row on demand (dense MLMC fallbacks).
+        Subclasses may derive the row from the gradient itself instead of
+        a device buffer (`CompiledSignSGD`'s exact-zero side channel)."""
+        del V
+        return np.asarray(bufs[i][m])
+
+    def encode_batch(self, worker_grads: Array, keys: Array = None,
+                     probs=None) -> list[Packet]:
+        """All M workers through one vmapped jitted encode + ONE device_get
+        (rare streams — dense MLMC fallbacks, exact-zero side channels —
+        are fetched per affected row only)."""
+        if keys is None:   # deterministic codecs (top-k innovations)
+            keys = jnp.zeros((worker_grads.shape[0], 2), jnp.uint32)
+        if probs is not None:
+            lanes, bufs, _ = self._encode_fn(True)(worker_grads, keys, probs)
+        else:
+            lanes, bufs, _ = self._encode_fn(False)(worker_grads, keys)
+        hot = [i for i, p in enumerate(self.plan) if not p.rare]
+        fetched = jax.device_get((lanes, [bufs[i] for i in hot]))
+        lanes_np, hot_np = fetched
+        hot_map = dict(zip(hot, hot_np))
+        packets = []
+        for m in range(lanes_np.shape[0]):
+            packets.append(self._finish_packet(
+                lanes_np[m],
+                lambda i, m=m: hot_map[i][m],
+                lambda i, m=m: self._fetch_rare(i, m, bufs, worker_grads)))
+        return packets
+
+    def encode(self, v: Array, rng, probs=None) -> EncodeResult:
+        """Eager-compatible single encode: byte-identical packet + the
+        in-memory estimate (fetched for `EncodeResult` parity)."""
+        lanes, bufs, est = self._dispatch_single(v, rng, probs)
+        lane_np = jax.device_get(lanes)[0]
+        V = jnp.asarray(v, jnp.float32)[None]
+        pkt = self._finish_packet(lane_np,
+                                  lambda i: np.asarray(bufs[i][0]),
+                                  lambda i: self._fetch_rare(i, 0, bufs, V))
+        return EncodeResult(pkt, np.asarray(est[0]))
+
+    # ---- compiled decode ---------------------------------------------------
+
+    def _decode_fn(self, sel: tuple[int, ...], mean: bool):
+        key = (sel, mean)
+        if key not in self._dec_cache:
+            def run(lanes, *bufs):
+                out = jax.vmap(
+                    lambda lane, *b: self._row_decode(lane, b, sel))(
+                        lanes, *bufs)
+                return jnp.mean(out, axis=0) if mean else out
+            # donate the staged word buffers: XLA recycles their device
+            # storage for the decoded estimates (nothing else reads them).
+            # On the CPU backend host-committed staging can never donate —
+            # skip it there instead of warning every call.
+            donate = () if jax.default_backend() == "cpu" else \
+                tuple(range(1, 1 + len(sel)))
+            self._dec_cache[key] = jax.jit(run, donate_argnums=donate)
+        return self._dec_cache[key]
+
+    def _lane_from_header(self, h: Header) -> np.ndarray:
+        lane = np.zeros((EXT_LANE_LEN,), np.float32)
+        lane[LANE_SCALE] = np.float32(h.scale)
+        lane[LANE_PROB] = np.float32(h.prob)
+        lane[LANE_LEVEL] = h.level
+        lane[LANE_NNZ] = h.nnz
+        lane[LANE_FLAGS] = h.flags
+        return lane
+
+    def _stage_buffers(self, m: int, sel: tuple[int, ...]):
+        """Persistent numpy staging: reused every step, so the steady-state
+        host path performs pure row copies (no allocation).  jax may
+        zero-copy these aligned buffers on CPU, so the previous in-flight
+        decode reading them must complete before they are overwritten —
+        `_guard_inflight` enforces that (a no-op once the result has been
+        consumed, which every training step's device_get forces)."""
+        key = (m, sel)
+        if key not in self._stage:
+            self._stage[key] = (
+                np.zeros((m, EXT_LANE_LEN), np.float32),
+                [np.zeros((m, self.plan[i].max_words), np.uint32)
+                 for i in sel],
+            )
+        prev = self._inflight.pop(key, None)
+        if prev is not None:
+            prev.block_until_ready()
+        return self._stage[key]
+
+    def _stage_packets(self, packets: list[Packet], sel: tuple[int, ...]):
+        lanes, bufs = self._stage_buffers(len(packets), sel)
+        for mrow, pkt in enumerate(packets):
+            lanes[mrow] = self._lane_from_header(pkt.header)
+            for b, s in zip(bufs, pkt.streams):
+                b[mrow, : s.words.size] = s.words
+                # stale bytes beyond the actual word count are fine: every
+                # decoder masks fields past the lane's count/nnz
+        return lanes, bufs
+
+    def decode_arrays(self, lane, bufs, sel: tuple[int, ...] | None = None):
+        """The jitted fixed-shape decode of one staged packet."""
+        sel = sel if sel is not None else tuple(range(len(self.plan)))
+        fn = self._decode_fn(sel, mean=False)
+        return fn(jnp.asarray(lane)[None], *(jnp.asarray(b)[None]
+                                             for b in bufs))[0]
+
+    def decode_device(self, packet: Packet) -> Array:
+        """Dispatch one packet's jitted decode (async).  Uses FRESH staging
+        so back-to-back dispatches never alias: jax zero-copies aligned
+        numpy buffers on CPU, and the tcp server decodes uplinks as they
+        arrive without waiting on the previous dispatch."""
+        sel = self._decode_sel_for(packet.header)
+        lanes = self._lane_from_header(packet.header)[None]
+        bufs = []
+        for i, s in zip(sel, packet.streams):
+            b = np.zeros((1, self.plan[i].max_words), np.uint32)
+            b[0, : s.words.size] = s.words
+            bufs.append(b)
+        return self._decode_fn(sel, mean=False)(lanes, *bufs)[0]
+
+    def decode(self, packet: Packet) -> np.ndarray:
+        """Eager-compatible decode (numpy out), via the jitted path."""
+        return np.asarray(self.decode_device(packet))
+
+    def decode_mean(self, packets: list[Packet]) -> Array:
+        """Fused decode + M-worker mean: one jit, persistent donated
+        staging.  Mixed stream variants (e.g. one worker's MLMC draw hit
+        the dense fallback) fall back to per-packet decodes + the same
+        mean, which keeps the result elementwise identical."""
+        sels = {self._decode_sel_for(p.header) for p in packets}
+        if len(sels) != 1:
+            rows = jnp.stack([self.decode_device(p) for p in packets])
+            return jnp.mean(rows, axis=0)
+        sel = sels.pop()
+        with self._stage_lock:
+            lanes, bufs = self._stage_packets(packets, sel)
+            out = self._decode_fn(sel, mean=True)(lanes, *bufs)
+            self._inflight[(len(packets), sel)] = out
+        return out
+
+    def decode_stack(self, packets: list[Packet]) -> Array:
+        """All packets' estimates as one (M, d) device array (one jit when
+        the packets share a stream variant) — the EF21 server fold needs
+        every worker's innovation, not just their mean."""
+        sels = {self._decode_sel_for(p.header) for p in packets}
+        if len(sels) != 1:
+            return jnp.stack([self.decode_device(p) for p in packets])
+        sel = sels.pop()
+        with self._stage_lock:
+            lanes, bufs = self._stage_packets(packets, sel)
+            out = self._decode_fn(sel, mean=False)(lanes, *bufs)
+            self._inflight[(len(packets), sel)] = out
+        return out
+
+    # ---- shared bit accounting (the packets are the same bytes) ------------
+
+    def nominal_bits(self) -> float:
+        return self.eager.nominal_bits()
+
+    def header_bits(self, packet: Packet) -> float:
+        return self.eager.header_bits(packet)
+
+    def measured_bits(self, packet: Packet) -> float:
+        return self.eager.measured_bits(packet)
+
+    def reconcile_bounds(self, packet: Packet):
+        return self.eager.reconcile_bounds(packet)
+
+    @property
+    def compressor(self):
+        return self.eager.compressor
+
+
+# ---------------------------------------------------------------------------
+# single-level baselines
+# ---------------------------------------------------------------------------
+
+
+class CompiledDense(CompiledCodec):
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.plan = (StreamPlan("values", 32, self.dim, f32=True),)
+
+    def _row_encode(self, v, key, probs):
+        del key, probs
+        est = jnp.asarray(v, jnp.float32)
+        return ext_lane(prob=0.0), (est,), est
+
+    def _counts(self, header):
+        return (self.dim,)
+
+    def _row_decode(self, lane, bufs, sel):
+        return jax.lax.bitcast_convert_type(bufs[0], jnp.float32)
+
+
+class CompiledSparse(CompiledCodec):
+    """topk / randk / ef21: nnz == k positions + f32 values."""
+
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.k = eager.k
+        self.index_width = eager.index_width
+        self.plan = (StreamPlan("indices", self.index_width, self.k),
+                     StreamPlan("values", 32, self.k, f32=True))
+
+    def _sparse_payload(self, est, mask):
+        idx = jnp.nonzero(mask, size=self.k, fill_value=0)[0]
+        return idx.astype(jnp.uint32), est[idx]
+
+    def _counts(self, header):
+        return (header.nnz, header.nnz)
+
+    def _row_decode(self, lane, bufs, sel):
+        nnz = lane[LANE_NNZ].astype(jnp.int32)
+        idx = unpack_bits(bufs[0], self.index_width, self.k)
+        vals = jax.lax.bitcast_convert_type(bufs[1], jnp.float32)
+        valid = jnp.arange(self.k) < nnz
+        out = jnp.zeros((self.dim,), jnp.float32)
+        return out.at[jnp.where(valid, idx, 0)].add(
+            jnp.where(valid, vals, 0.0))
+
+
+class CompiledTopK(CompiledSparse):
+    def _row_encode(self, v, key, probs):
+        del key, probs
+        from repro.core.topk import topk_mask
+
+        v = jnp.asarray(v, jnp.float32)
+        mask = topk_mask(v, self.k)
+        est = jnp.where(mask, v, 0.0)
+        idx, vals = self._sparse_payload(est, mask)
+        return ext_lane(prob=0.0, nnz=self.k), (idx, vals), est
+
+
+class CompiledRandK(CompiledSparse):
+    def _row_encode(self, v, key, probs):
+        del probs
+        v = jnp.asarray(v, jnp.float32)
+        perm = jax.random.permutation(key, self.dim)
+        mask = jnp.zeros((self.dim,), bool).at[perm[: self.k]].set(True)
+        est = jnp.where(mask, v * (self.dim / self.k), 0.0)
+        idx = jnp.sort(perm[: self.k])
+        return (ext_lane(prob=0.0, nnz=self.k),
+                (idx.astype(jnp.uint32), est[idx]), est)
+
+
+class CompiledQSGD(CompiledCodec):
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.s = eager.s
+        self.width = eager.width
+        self.plan = (StreamPlan("codes", self.width, self.dim),)
+
+    def _row_encode(self, v, key, probs):
+        del probs
+        v = jnp.asarray(v, jnp.float32)
+        # pinned replica of the eager jnp.linalg.norm (sqrt(sum(x*x))): the
+        # squares stay rounded before the reduction, so the jitted norm —
+        # and the scale header built from it — matches the eager bytes
+        norm = jnp.maximum(jnp.sqrt(jnp.sum(pin_rounding(v * v))), _EPS)
+        x = jnp.abs(v) / norm * self.s
+        lo = jnp.floor(x)
+        up = jax.random.bernoulli(key, x - lo)
+        xi = lo + up.astype(v.dtype)
+        est = norm * jnp.sign(v) * xi / self.s
+        codes = (xi.astype(jnp.uint32) << 1) | (v < 0).astype(jnp.uint32)
+        return ext_lane(scale=norm, prob=0.0), (codes,), est
+
+    def _counts(self, header):
+        return (self.dim,)
+
+    def _row_decode(self, lane, bufs, sel):
+        codes = unpack_bits(bufs[0], self.width, self.dim)
+        xi = (codes >> 1).astype(jnp.float32)
+        sgn = jnp.where((codes & 1) != 0, jnp.float32(-1.0), jnp.float32(1.0))
+        norm = lane[LANE_SCALE]
+        return (norm * sgn) * xi / jnp.float32(self.s)
+
+
+class CompiledRTN(CompiledCodec):
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.level = eager.level
+        self.plan = (StreamPlan("codes", self.level, self.dim),)
+
+    def _grid(self, c):
+        # barrier: a constant-folded level lets XLA rewrite the division as
+        # a reciprocal multiply (1 ulp off the eager delta); keeping the
+        # level un-foldable preserves the real division the bytes encode
+        return rtn_grid(opt_barrier(jnp.asarray(self.level, jnp.float32)),
+                        c)
+
+    def _row_encode(self, v, key, probs):
+        del key, probs
+        v = jnp.asarray(v, jnp.float32)
+        c = jnp.maximum(jnp.max(jnp.abs(v)), _EPS)
+        delta, m = self._grid(c)
+        q = jnp.clip(jnp.round(v / jnp.maximum(delta, _EPS)), -m, m)
+        est = delta * q
+        codes = (q + m).astype(jnp.uint32)
+        return ext_lane(scale=c, prob=0.0, level=self.level), (codes,), est
+
+    def _counts(self, header):
+        return (self.dim,)
+
+    def _row_decode(self, lane, bufs, sel):
+        delta, m = self._grid(lane[LANE_SCALE])
+        codes = unpack_bits(bufs[0], self.level, self.dim)
+        return delta * (codes.astype(jnp.float32) - m)
+
+
+class CompiledFixedPoint(CompiledCodec):
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.f = eager.f
+        self.width = eager.width
+        self.plan = (StreamPlan("codes", self.width, self.dim),)
+
+    def _row_encode(self, v, key, probs):
+        del key, probs
+        v = jnp.asarray(v, jnp.float32)
+        scale = _fixed_scale(v)
+        x = jnp.minimum(jnp.abs(v) / scale, _BELOW_ONE)
+        mant = jnp.floor(jnp.ldexp(x, self.f))
+        trunc = jnp.ldexp(mant, -self.f)
+        est = scale * jnp.sign(v) * trunc
+        codes = (mant.astype(jnp.uint32) << 1) | (v < 0).astype(jnp.uint32)
+        return ext_lane(scale=scale, prob=0.0), (codes,), est
+
+    def _counts(self, header):
+        return (self.dim,)
+
+    def _row_decode(self, lane, bufs, sel):
+        codes = unpack_bits(bufs[0], self.width, self.dim)
+        trunc = jnp.ldexp((codes >> 1).astype(jnp.float32), -self.f)
+        sgn = jnp.where((codes & 1) != 0, jnp.float32(-1.0), jnp.float32(1.0))
+        return (lane[LANE_SCALE] * sgn) * trunc
+
+
+class CompiledSignSGD(CompiledCodec):
+    """Sign plane in jit; the exact-zero side channel is computed on the
+    HOST in the rare nnz > 0 case only — materializing the positions on
+    device costs a d-sized scatter (~35 ms at d=560k on the CPU backend)
+    for a stream that is empty on every real gradient."""
+
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.plan = (StreamPlan("signs", 1, self.dim),
+                     StreamPlan("zeros", 32, self.dim, rare=True))
+
+    def _row_encode(self, v, key, probs):
+        del key, probs
+        v = jnp.asarray(v, jnp.float32)
+        scale = jnp.mean(jnp.abs(v))
+        est = jnp.sign(v) * scale
+        bits = (v > 0).astype(jnp.uint32)
+        nnz = jnp.sum((v == 0.0).astype(jnp.int32))
+        lane = ext_lane(scale=scale, prob=0.0, nnz=nnz)
+        # the zeros stream is NOT part of the payload: `_fetch_rare`
+        # derives it from the gradient row when a packet actually needs it
+        return lane, (bits,), est
+
+    def _fetch_rare(self, i, m, bufs, V):
+        assert self.plan[i].name == "zeros"
+        return np.flatnonzero(
+            np.asarray(V[m]) == 0.0).astype(np.uint32)
+
+    def _counts(self, header):
+        return (self.dim, header.nnz)
+
+    def _decode_sel_for(self, header):
+        # nnz == 0 (every real gradient): no zeros stream, no d-scatter
+        return (0,) if header.nnz == 0 else (0, 1)
+
+    def _row_decode(self, lane, bufs, sel):
+        bits = unpack_bits(bufs[0], 1, self.dim)
+        sgn = jnp.where(bits != 0, jnp.float32(1.0), jnp.float32(-1.0))
+        if len(sel) > 1:
+            nnz = lane[LANE_NNZ].astype(jnp.int32)
+            zeros = unpack_bits(bufs[1], 32, self.dim)
+            valid = jnp.arange(self.dim) < nnz
+            # invalid slots scatter out of range and are dropped under jit
+            sgn = sgn.at[jnp.where(valid, zeros, self.dim)].set(
+                0.0, mode="drop")
+        return sgn * lane[LANE_SCALE]
+
+
+class CompiledNatural(CompiledCodec):
+    def __init__(self, eager):
+        super().__init__(eager)
+        self._offset = eager._EXP_OFFSET
+        self.plan = (StreamPlan("codes", eager.WIDTH, self.dim),)
+
+    def _row_encode(self, v, key, probs):
+        del probs
+        v = jnp.asarray(v, jnp.float32)
+        m, e = jnp.frexp(jnp.where(v == 0.0, 1.0, v))
+        lo = jnp.ldexp(jnp.sign(m) * 0.5, e)
+        hi = jnp.ldexp(jnp.sign(m) * 1.0, e)
+        p_hi = 2.0 * jnp.abs(m) - 1.0
+        take_hi = jax.random.bernoulli(key, jnp.clip(p_hi, 0.0, 1.0))
+        est = jnp.where(v == 0.0, 0.0, jnp.where(take_hi, hi, lo))
+        m2, e2 = jnp.frexp(jnp.where(est == 0.0, 1.0, est))
+        del m2
+        ecode = jnp.where(est == 0.0, 0, e2 + self._offset).astype(jnp.uint32)
+        codes = (ecode << 1) | (est < 0).astype(jnp.uint32)
+        return ext_lane(prob=0.0), (codes,), est
+
+    def _counts(self, header):
+        return (self.dim,)
+
+    def _row_decode(self, lane, bufs, sel):
+        codes = unpack_bits(bufs[0], self.plan[0].width, self.dim)
+        ecode = (codes >> 1).astype(jnp.int32)
+        sgn = jnp.where((codes & 1) != 0, jnp.float32(-0.5), jnp.float32(0.5))
+        out = jnp.ldexp(sgn, ecode - self._offset)
+        return jnp.where(ecode == 0, jnp.float32(0.0), out)
+
+
+# ---------------------------------------------------------------------------
+# MLMC families
+# ---------------------------------------------------------------------------
+
+
+class _CompiledMLMCBase(CompiledCodec):
+    """Shared MLMC lane plumbing: resolve the decode-side p_l exactly as
+    the eager `_MLMCCodecBase._prob_for` does — the shipped header prob
+    when FLAG_EXPLICIT_PROB (or an always-adaptive family) says so, the
+    family's static Lemma-3.3 distribution at the lane's level otherwise.
+    One implementation, so a change to the resolution (clamp constant,
+    normalization) cannot diverge the MLMC families."""
+
+    #: the per-sample-adaptive families always trust the header prob
+    adaptive = False
+
+    def _prob_for(self, lane):
+        if self.adaptive:
+            return lane[LANE_PROB]
+        explicit = lane[LANE_FLAGS].astype(jnp.int32) & FLAG_EXPLICIT_PROB
+        probs = self.comp.static_probs()
+        probs = probs / jnp.sum(probs)
+        level = lane[LANE_LEVEL].astype(jnp.int32)
+        static = jnp.maximum(probs[level - 1], 1e-30)
+        return jnp.where(explicit != 0, lane[LANE_PROB], static)
+
+
+class CompiledMLMCTopK(_CompiledMLMCBase):
+    """Fused (s-)Top-k MLMC encode: ONE argsort feeds both the Lemma-3.4
+    residual-norm ladder (adaptive draws) and the shipped rank segment —
+    the eager path sorts twice (`residual_norms` + `magnitude_ranks`) and
+    scatters a rank vector besides.  Bitwise identical: sorted |v| equals
+    the gathered |v[order]| elementwise, and every downstream f32 op
+    replays in the eager order."""
+
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.adaptive = eager.adaptive
+        self.comp = eager.compressor
+        self.s = self.comp.s
+        self.index_width = eager.index_width
+        self.plan = (StreamPlan("indices", self.index_width, self.s),
+                     StreamPlan("values", 32, self.s, f32=True))
+
+    def _row_encode(self, v, key, probs):
+        from repro.comm.device_wire import rank_segment
+
+        comp, d, s, L = self.comp, self.dim, self.s, self.comp.num_levels
+        v = jnp.asarray(v, jnp.float32)
+        order = jnp.argsort(-jnp.abs(v))
+        explicit = 0
+        if self.adaptive:
+            # the one argsort feeds both the Lemma-3.4 ladder (|v|[order]
+            # equals sort(|v|) descending elementwise) and the segment
+            sorted_abs = jnp.abs(v)[order]
+            sq = jnp.pad(pin_rounding(sorted_abs * sorted_abs),
+                         (0, L * s - d))
+            deltas = jnp.sqrt(jnp.sum(sq.reshape(L, s), axis=-1))
+            total = jnp.sum(deltas)
+            uniform = jnp.full_like(deltas, 1.0 / L)
+            probs = jnp.where(total > 1e-30,
+                              deltas / jnp.maximum(total, 1e-30), uniform)
+        elif probs is None:
+            probs = comp.static_probs()
+        else:
+            explicit = FLAG_EXPLICIT_PROB
+        probs = probs / jnp.sum(probs)
+        idx0 = categorical(key, probs)
+        level = idx0 + 1
+        p_l = jnp.maximum(probs[idx0], 1e-30)
+
+        _, seg, _ = rank_segment(v, idx0, s, pad_idx=d, order=order)
+        nnz = jnp.clip(d - idx0 * s, 0, s)
+        idx = jnp.sort(seg)                     # pad sentinel d sorts last
+        in_use = jnp.arange(s) < nnz
+        vals = jnp.where(in_use, v[jnp.clip(idx, 0, d - 1)], 0.0)
+        idx = jnp.where(in_use, idx, 0)
+        est = jnp.zeros((d,), jnp.float32).at[
+            jnp.where(in_use, idx, d)].add(vals / p_l, mode="drop")
+        lane = ext_lane(prob=p_l, level=level, nnz=nnz, flags=explicit)
+        return lane, (idx.astype(jnp.uint32), vals), est
+
+    def _counts(self, header):
+        return (header.nnz, header.nnz)
+
+    def _row_decode(self, lane, bufs, sel):
+        nnz = lane[LANE_NNZ].astype(jnp.int32)
+        idx = unpack_bits(bufs[0], self.index_width, self.s)
+        vals = jax.lax.bitcast_convert_type(bufs[1], jnp.float32)
+        valid = jnp.arange(self.s) < nnz
+        residual = jnp.zeros((self.dim,), jnp.float32).at[
+            jnp.where(valid, idx, self.dim)].add(
+                jnp.where(valid, vals, 0.0), mode="drop")
+        return residual / self._prob_for(lane)
+
+
+class CompiledMLMCFixed(_CompiledMLMCBase):
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.comp = eager.compressor
+        self.plan = (StreamPlan("plane", 2, self.dim),
+                     StreamPlan("residual", 32, self.dim, f32=True,
+                                rare=True))
+
+    def _row_encode(self, v, key, probs):
+        from repro.core.mlmc import mlmc_estimate
+
+        v = jnp.asarray(v, jnp.float32)
+        est = mlmc_estimate(self.comp, v, key, probs=probs, adaptive=False)
+        scale = _fixed_scale(v)
+        residual = est.residual
+        tern = jnp.sign(residual)
+        plane = (tern + 1.0).astype(jnp.uint32)
+        L = self.comp.num_levels
+        explicit = FLAG_EXPLICIT_PROB if probs is not None else 0
+        flags = jnp.where(est.level >= L,
+                          FLAG_DENSE_FALLBACK | explicit, explicit)
+        lane = ext_lane(scale=scale, prob=est.prob, level=est.level,
+                        flags=flags)
+        return lane, (plane, residual), est.estimate
+
+    def _streams_for(self, header):
+        return (1,) if header.flags & FLAG_DENSE_FALLBACK else (0,)
+
+    def _counts(self, header):
+        return (self.dim,)
+
+    def _row_decode(self, lane, bufs, sel):
+        p = self._prob_for(lane)
+        if sel == (1,):
+            residual = jax.lax.bitcast_convert_type(bufs[0], jnp.float32)
+        else:
+            tern = unpack_bits(bufs[0], 2, self.dim).astype(jnp.float32) - 1.0
+            level = lane[LANE_LEVEL].astype(jnp.int32)
+            residual = (lane[LANE_SCALE] * tern) * \
+                jnp.ldexp(jnp.float32(1.0), -level)
+        return residual / p
+
+
+class CompiledMLMCFloat(_CompiledMLMCBase):
+    def __init__(self, eager):
+        super().__init__(eager)
+        self.comp = eager.compressor
+        self._offset = eager._EXP_OFFSET
+        self.plan = (StreamPlan("base", 11, self.dim),
+                     StreamPlan("plane", 1, self.dim),
+                     StreamPlan("residual", 32, self.dim, f32=True,
+                                rare=True))
+
+    def _row_encode(self, v, key, probs):
+        from repro.core.mlmc import mlmc_estimate
+
+        v = jnp.asarray(v, jnp.float32)
+        est = mlmc_estimate(self.comp, v, key, probs=probs, adaptive=False)
+        m, e = self.comp._mantissa_exp(v)
+        sgn = jnp.sign(m)
+        ecode = (e + self._offset).astype(jnp.uint32)
+        base_codes = (ecode << 2) | (sgn + 1.0).astype(jnp.uint32)
+        bit = jnp.mod(jnp.floor(jnp.ldexp(jnp.abs(m), est.level + 1)),
+                      2.0).astype(jnp.uint32)
+        L = self.comp.num_levels
+        explicit = FLAG_EXPLICIT_PROB if probs is not None else 0
+        flags = jnp.where(est.level >= L,
+                          FLAG_DENSE_FALLBACK | explicit, explicit)
+        lane = ext_lane(prob=est.prob, level=est.level, flags=flags)
+        return lane, (base_codes, bit, est.residual), est.estimate
+
+    def _streams_for(self, header):
+        return (0, 2) if header.flags & FLAG_DENSE_FALLBACK else (0, 1)
+
+    def _counts(self, header):
+        return (self.dim, self.dim)
+
+    def _row_decode(self, lane, bufs, sel):
+        base_codes = unpack_bits(bufs[0], 11, self.dim)
+        sgn = (base_codes & 3).astype(jnp.float32) - 1.0
+        e = (base_codes >> 2).astype(jnp.int32) - self._offset
+        base = jnp.ldexp(sgn * jnp.float32(0.5), e)
+        level = lane[LANE_LEVEL].astype(jnp.int32)
+        if sel == (0, 2):
+            residual = jax.lax.bitcast_convert_type(bufs[1], jnp.float32)
+        else:
+            bit = unpack_bits(bufs[1], 1, self.dim).astype(jnp.float32)
+            residual = jnp.ldexp(sgn * bit, e - (level + 1))
+        return base + residual / self._prob_for(lane)
+
+
+class CompiledMLMCRTN:
+    """Two-stage compiled MLMC-RTN: the stream WIDTH is the sampled level,
+    so jit specializes per level (a <= `num_levels`-entry cache).  Stage A
+    draws the level; stage B packs the level-l grid codes on device; the
+    Elias-gamma correction stream of the ``mlmc_rtn`` wire format is
+    entropy-coded on the host with the SAME numpy helper as the eager
+    codec, so bytes agree by construction.
+
+    Stage A runs EAGERLY (op-by-op, the literal ops of the eager codec):
+    the adaptive Lemma-3.4 ladder — eight `compress(l) - compress(l-1)`
+    norms — keeps drifting 1 ulp under whole-graph jit on the CPU backend
+    no matter where rounding pins are placed (XLA re-fuses around them),
+    and a 1-ulp ladder shifts the p_l header byte.  L = 8 keeps the eager
+    prelude cheap; the O(d)-dominant work (grid codes, corrections,
+    bit-packing) is all in the jitted stage B."""
+
+    def __init__(self, eager: MLMCRTNCodec):
+        self.eager = eager
+        self.name, self.dim = eager.name, eager.dim
+        self.comp = eager.compressor
+        self.adaptive = eager.adaptive
+        self._body_cache: dict = {}
+        self._dec_cache: dict = {}
+
+    @property
+    def compressor(self):
+        return self.comp
+
+    # ---- stage A: the level draw (eager, see class docstring) -------------
+
+    def _draw_row(self, v, key, probs):
+        v = jnp.asarray(v, jnp.float32)
+        if self.adaptive:
+            probs = adaptive_probs(self.comp, v)
+        elif probs is None:
+            probs = self.comp.static_probs()
+        probs = probs / jnp.sum(probs)
+        idx = categorical(key, probs)
+        p_l = jnp.maximum(probs[idx], 1e-30)
+        c = jnp.maximum(jnp.max(jnp.abs(v)), _EPS)
+        return int(idx) + 1, p_l, c
+
+    # ---- stage B: level-specialized encode body ---------------------------
+
+    @staticmethod
+    def _traced_level(level: int):
+        """Static wire level as an un-foldable traced f32 scalar: constant
+        folding would let XLA turn the grid division into a reciprocal
+        multiply, 1 ulp off the eager delta the bytes encode."""
+        return opt_barrier(jnp.asarray(level, jnp.float32))
+
+    def _body_fn(self, level: int):
+        if level not in self._body_cache:
+            comp, d, L = self.comp, self.dim, self.comp.num_levels
+
+            def codes_at(v, lvl, c):
+                delta, m = rtn_grid(lvl, c)
+                q = jnp.clip(jnp.round(v / jnp.maximum(delta, _EPS)), -m, m)
+                return q, m, delta
+
+            def body(v, p_l, c):
+                v = jnp.asarray(v, jnp.float32)
+                lvl_t = self._traced_level(level)
+                residual = comp.residual(v, lvl_t.astype(jnp.int32))
+                estimate = comp.base(v) + residual / p_l
+                if level >= L:
+                    return (jax.lax.bitcast_convert_type(
+                        residual.astype(jnp.float32), jnp.uint32),
+                        jnp.zeros((d,), jnp.int32), estimate)
+                q_l, m_l, delta_l = codes_at(v, lvl_t, c)
+                qwords = pack_bits((q_l + m_l).astype(jnp.uint32),
+                                   max(level, 1))
+                corr = jnp.zeros((d,), jnp.int32)
+                if level > 1:
+                    vals_l = delta_l * q_l
+                    prev_t = self._traced_level(level - 1)
+                    q_prev, _, _ = codes_at(v, prev_t, c)
+                    q_hat, _, _ = codes_at(vals_l, prev_t, c)
+                    corr = (q_prev - q_hat).astype(jnp.int32)
+                return qwords, corr, estimate
+
+            self._body_cache[level] = jax.jit(body)
+        return self._body_cache[level]
+
+    # ---- public surface ----------------------------------------------------
+
+    def encode(self, v, rng, probs=None) -> EncodeResult:
+        level, p_l, c = self._draw_row(v, rng, probs)
+        pkt, est = self._finish_row(v, level, p_l, c, probs is not None)
+        return EncodeResult(pkt, np.asarray(est))
+
+    def _finish_row(self, v, level: int, p_l, c, explicit_probs: bool):
+        L = self.comp.num_levels
+        qwords, corr, est = self._body_fn(level)(v, p_l, c)
+        flags = FLAG_EXPLICIT_PROB if (explicit_probs and
+                                       not self.adaptive) else 0
+        hdr_kw = dict(level=level, scale=float(np.float32(c)),
+                      prob=float(np.float32(p_l)))
+        if level >= L:
+            hdr = Header(self.name, self.dim,
+                         flags=FLAG_DENSE_FALLBACK | flags, **hdr_kw)
+            return Packet(hdr, (Stream("residual", np.asarray(qwords), 32,
+                                       self.dim),)), est
+        streams = [Stream("q", np.asarray(qwords), max(level, 1), self.dim)]
+        nnz = 0
+        if level > 1:
+            corr_np = np.asarray(corr)
+            if self.eager.entropy_corr:
+                words, nbits, nnz = gamma_signed_encode(corr_np)
+                streams.append(Stream("corr", words, 1, nbits))
+            else:
+                streams.append(Stream(
+                    "corr",
+                    np.asarray(pack_bits(
+                        jnp.asarray(corr_np + 1, jnp.uint32), 2)),
+                    2, self.dim))
+        hdr = Header(self.name, self.dim, nnz=nnz, flags=flags, **hdr_kw)
+        return Packet(hdr, tuple(streams)), est
+
+    def encode_batch(self, worker_grads, keys, probs=None) -> list[Packet]:
+        V = jnp.asarray(worker_grads, jnp.float32)
+        out = []
+        for m in range(V.shape[0]):
+            p_row = probs[m] if probs is not None else None
+            level, p_l, c = self._draw_row(V[m], keys[m], p_row)
+            out.append(self._finish_row(V[m], level, p_l, c,
+                                        probs is not None)[0])
+        return out
+
+    def _decode_fn(self, level: int):
+        if level not in self._dec_cache:
+            d, L = self.dim, self.comp.num_levels
+
+            def dec(qwords, corr, p, c):
+                if level >= L:
+                    residual = jax.lax.bitcast_convert_type(qwords,
+                                                            jnp.float32)
+                    return residual / p
+                delta_l, m_l = rtn_grid(self._traced_level(level), c)
+                q_l = unpack_bits(qwords, max(level, 1),
+                                  d).astype(jnp.float32) - m_l
+                vals_l = pin_rounding(delta_l * q_l)
+                if level <= 1:
+                    residual = vals_l - jnp.float32(0.0)
+                else:
+                    delta_p, m_p = rtn_grid(self._traced_level(level - 1), c)
+                    q_hat = jnp.clip(jnp.round(
+                        vals_l / jnp.maximum(delta_p, _EPS)), -m_p, m_p)
+                    q_prev = q_hat + corr.astype(jnp.float32)
+                    residual = vals_l - pin_rounding(delta_p * q_prev)
+                return residual / p
+
+            self._dec_cache[level] = jax.jit(dec)
+        return self._dec_cache[level]
+
+    def _corr_plane(self, packet: Packet) -> np.ndarray:
+        s = packet.streams[1]
+        if self.eager.entropy_corr:
+            return gamma_signed_decode(s.words, s.count, self.dim)
+        plain = np.asarray(unpack_bits(jnp.asarray(s.words), 2, self.dim))
+        return plain.astype(np.int32) - 1
+
+    def decode_device(self, packet: Packet):
+        h = packet.header
+        level = h.level
+        corr = np.zeros((self.dim,), np.int32)
+        if not (h.flags & FLAG_DENSE_FALLBACK) and level > 1:
+            corr = self._corr_plane(packet)
+        qwords = packet.streams[0].words
+        if h.flags & FLAG_DENSE_FALLBACK:
+            level = max(level, self.comp.num_levels)
+        return self._decode_fn(level)(qwords, corr, np.float32(h.prob),
+                                      np.float32(h.scale))
+
+    def decode(self, packet: Packet) -> np.ndarray:
+        return np.asarray(self.decode_device(packet))
+
+    def decode_mean(self, packets: list[Packet]):
+        rows = jnp.stack([self.decode_device(p) for p in packets])
+        return jnp.mean(rows, axis=0)
+
+    def decode_stack(self, packets: list[Packet]):
+        return jnp.stack([self.decode_device(p) for p in packets])
+
+    # ---- shared bit accounting --------------------------------------------
+
+    def nominal_bits(self):
+        return self.eager.nominal_bits()
+
+    def header_bits(self, packet):
+        return self.eager.header_bits(packet)
+
+    def measured_bits(self, packet):
+        return self.eager.measured_bits(packet)
+
+    def reconcile_bounds(self, packet):
+        return self.eager.reconcile_bounds(packet)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_BY_EAGER = {
+    "DenseCodec": CompiledDense,
+    "TopKCodec": CompiledTopK,
+    "EF21InnovationCodec": CompiledTopK,
+    "RandKCodec": CompiledRandK,
+    "QSGDCodec": CompiledQSGD,
+    "RTNCodec": CompiledRTN,
+    "FixedPointCodec": CompiledFixedPoint,
+    "SignSGDCodec": CompiledSignSGD,
+    "NaturalCodec": CompiledNatural,
+    "MLMCTopKCodec": CompiledMLMCTopK,
+    "MLMCFixedCodec": CompiledMLMCFixed,
+    "MLMCFloatCodec": CompiledMLMCFloat,
+    "MLMCRTNCodec": CompiledMLMCRTN,
+}
+
+
+def compile_codec(eager: WireCodec):
+    """Wrap an eager `WireCodec` in its compiled pipeline."""
+    cls = _BY_EAGER.get(type(eager).__name__)
+    if cls is None:
+        raise ValueError(f"no compiled pipeline for {type(eager).__name__}")
+    return cls(eager)
+
+
+@functools.lru_cache(maxsize=32)
+def _cached(name: str, dim: int, kw: tuple):
+    return compile_codec(make_codec(name, dim, **dict(kw)))
+
+
+def make_compiled_codec(name: str, dim: int, **kw):
+    """`make_codec` + `compile_codec`, cached per (codec, dim, params) so
+    repeated aggregator builds (benchmarks, tests) reuse compiled jits.
+
+    The cache is bounded (LRU, 32 entries) because each instance pins its
+    jit executables and persistent staging buffers: long sweeps over many
+    (codec, dim) combinations evict cold instances instead of growing for
+    the process lifetime (an aggregator keeps its own reference, so
+    eviction never invalidates a live wire)."""
+    return _cached(name, dim, tuple(sorted(kw.items())))

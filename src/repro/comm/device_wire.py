@@ -112,6 +112,29 @@ def topk_segment_words(d: int, s: int, value_bits: int = 16) -> int:
     return packed_words(s, _index_bits(d)) + value_words(s, value_bits)
 
 
+def rank_segment(v: Array, idx0: Array, s: int, *, pad_idx: int,
+                 order: Array | None = None) -> tuple[Array, Array, Array]:
+    """ONE argsort -> the MLMC (s-)Top-k level segment.
+
+    Returns ``(order, seg_idx, valid)``: the full magnitude order (largest
+    |v| first — reusable for the residual-norm ladder and value gathers;
+    pass a precomputed ``order`` to share the argsort), the original
+    positions of magnitude ranks ``[idx0*s, (idx0+1)*s)`` (entries beyond
+    ``d`` filled with ``pad_idx``), and the in-range mask.  Shared by the
+    device wire (``pad_idx = d - 1``: the packed index must stay in range,
+    values are masked instead) and the compiled byte pipeline
+    (``pad_idx = d``: an out-of-range sentinel that sorts after every real
+    position)."""
+    d = v.shape[0]
+    L = -(-d // s)
+    if order is None:
+        order = jnp.argsort(-jnp.abs(v))
+    so = jnp.pad(order, (0, L * s - d), constant_values=pad_idx)
+    seg_idx = jax.lax.dynamic_slice(so, (idx0 * s,), (s,))
+    valid = jnp.arange(s) + idx0 * s < d
+    return order, seg_idx, valid
+
+
 def pack_topk_segment(seg_vals: Array, seg_idx: Array, d: int,
                       value_bits: int = 16) -> Array:
     """One MLMC Top-k segment (s values + s positions) as packed words:
@@ -410,12 +433,10 @@ class MLMCTopKDeviceCodec(DeviceCodec):
                             adaptive=self.adaptive and probs is None)
         idx0 = est.level - 1
         L = self.compressor.num_levels
-        order = jnp.argsort(-jnp.abs(v))
+        order, seg_idx, valid = rank_segment(v, idx0, s, pad_idx=d - 1)
         sv = jnp.pad(v[order], (0, L * s - d))
-        so = jnp.pad(order, (0, L * s - d), constant_values=d - 1)
         seg_vals = jax.lax.dynamic_slice(sv, (idx0 * s,), (s,)) / est.prob
-        seg_idx = jax.lax.dynamic_slice(so, (idx0 * s,), (s,))
-        seg_vals = jnp.where(jnp.arange(s) + idx0 * s < d, seg_vals, 0.0)
+        seg_vals = jnp.where(valid, seg_vals, 0.0)
         pkt = DevicePacket(
             pack_topk_segment(seg_vals, seg_idx, d, self.value_bits),
             header_lane(prob=est.prob, level=est.level))

@@ -349,7 +349,8 @@ class TcpStarTransport:
                 f"link for rank {r} delivered a frame from rank {sender}")
         return frame
 
-    def exchange(self, payloads: list[bytes]) -> list[bytes]:
+    def exchange(self, payloads: list[bytes],
+                 on_payload=None) -> list[bytes]:
         """Ship THIS rank's payload.  Rank 0 returns all ``world`` payloads
         in rank order; workers return ``[]`` (the aggregate comes back via
         `broadcast_payload`).
@@ -358,7 +359,13 @@ class TcpStarTransport:
         from all workers interleave as their bytes arrive, so one slow or
         large rank no longer serializes the ranks behind it (the former
         rank-by-rank drain blocked on rank 1 before reading rank 2's
-        already-delivered frame)."""
+        already-delivered frame).
+
+        ``on_payload(rank, payload)`` is invoked on the server the moment
+        each rank's frame COMPLETES (rank 0's own payload first), while the
+        reactor is still waiting on the remaining uplinks — the aggregation
+        layer uses it to parse, stage, and dispatch the decode of each
+        packet during network wait instead of after the full drain."""
         if len(payloads) != 1:
             raise ValueError(
                 "multihost exchange ships exactly one payload per rank per "
@@ -369,12 +376,14 @@ class TcpStarTransport:
         if self.is_server:
             out: list[bytes | None] = [local] + [None] * (self.world - 1)
             self.last_arrival_order = []
+            if on_payload is not None:
+                on_payload(0, local)
             pending = set(self._conns)
             # frames already sitting in the buffers (pipelined last round)
             for r in sorted(pending):
                 frame = self._bufs[r].next_frame()
                 if frame is not None:
-                    self._finish_payload(out, r, frame)
+                    self._finish_payload(out, r, frame, on_payload)
                     pending.discard(r)
             with selectors.DefaultSelector() as sel:
                 for r in pending:
@@ -389,7 +398,7 @@ class TcpStarTransport:
                         self._bufs[r].feed(data)
                         frame = self._bufs[r].next_frame()
                         if frame is not None:
-                            self._finish_payload(out, r, frame)
+                            self._finish_payload(out, r, frame, on_payload)
                             pending.discard(r)
                             sel.unregister(key.fileobj)
             self.stats.bytes_up += sum(len(p) for p in out)
@@ -401,7 +410,8 @@ class TcpStarTransport:
         self.stats.wall_time_s += time.perf_counter() - t0
         return []
 
-    def _finish_payload(self, out: list, r: int, frame) -> None:
+    def _finish_payload(self, out: list, r: int, frame,
+                        on_payload=None) -> None:
         ftype, sender, _, data = frame
         if ftype != PAYLOAD:
             if ftype == GOODBYE:
@@ -415,6 +425,8 @@ class TcpStarTransport:
         out[r] = data
         self.last_arrival_order.append(r)
         self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
+        if on_payload is not None:
+            on_payload(r, data)
 
     def broadcast_payload(self, data: bytes | None) -> bytes:
         """Rank 0 passes the direction blob and sends it down every link;

@@ -202,6 +202,17 @@ class Packet:
 LANE_SCALE, LANE_PROB, LANE_LEVEL, LANE_META = 0, 1, 2, 3
 HEADER_LANE_LEN = 4
 
+#: extended lane slots used by the COMPILED byte-wire pipeline
+#: (`repro.comm.compiled`): the jitted `encode_arrays` returns one fixed
+#: (EXT_LANE_LEN,) f32 lane per packet carrying every `Header` field, so the
+#: host builds the byte header from a single fetched row without touching
+#: the payload.  Slots 0-3 are identical to the device lane (append-only);
+#: nnz/flags ride as exact f32 integers (< 2^24, like level).  This lane is
+#: host-internal — it never crosses a network; the serialized byte header
+#: (`Packet.to_bytes`) remains the wire format.
+LANE_NNZ, LANE_FLAGS = 4, 5
+EXT_LANE_LEN = 6
+
 
 def header_lane(*, scale=0.0, prob=1.0, level=0, meta=0.0):
     """Build the fixed (HEADER_LANE_LEN,) f32 header lane of a DevicePacket.
@@ -225,6 +236,30 @@ def lane_to_header(codec: str, dim: int, lane: np.ndarray, *,
     return Header(codec, dim, level=int(lane[LANE_LEVEL]), nnz=nnz,
                   scale=float(lane[LANE_SCALE]), prob=float(lane[LANE_PROB]),
                   flags=flags)
+
+
+def ext_lane(*, scale=0.0, prob=1.0, level=0, meta=0.0, nnz=0, flags=0):
+    """Build the fixed (EXT_LANE_LEN,) f32 extended lane of the compiled
+    codec pipeline.  jit-traceable: any argument may be a traced scalar."""
+    import jax.numpy as jnp
+
+    return jnp.stack([
+        jnp.asarray(scale, jnp.float32),
+        jnp.asarray(prob, jnp.float32),
+        jnp.asarray(level, jnp.float32),
+        jnp.asarray(meta, jnp.float32),
+        jnp.asarray(nnz, jnp.float32),
+        jnp.asarray(flags, jnp.float32),
+    ])
+
+
+def ext_lane_to_header(codec: str, dim: int, lane: np.ndarray) -> Header:
+    """One fetched extended-lane row -> the byte-wire `Header` (float slots
+    keep their exact f32 bit patterns; int slots are exact f32 integers)."""
+    lane = np.asarray(lane, np.float32)
+    return Header(codec, dim, level=int(lane[LANE_LEVEL]),
+                  nnz=int(lane[LANE_NNZ]), scale=float(lane[LANE_SCALE]),
+                  prob=float(lane[LANE_PROB]), flags=int(lane[LANE_FLAGS]))
 
 
 def f32_stream(name: str, values: np.ndarray) -> Stream:

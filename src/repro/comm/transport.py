@@ -44,8 +44,15 @@ class TransportStats:
 class Transport(Protocol):
     stats: TransportStats
 
-    def exchange(self, payloads: list[bytes]) -> list[bytes]:
-        """Deliver every worker's serialized packet to the server."""
+    def exchange(self, payloads: list[bytes],
+                 on_payload=None) -> list[bytes]:
+        """Deliver every worker's serialized packet to the server.
+
+        ``on_payload(index, payload)`` — when given — is invoked at the
+        aggregation point for each delivered payload AS IT BECOMES
+        AVAILABLE (in-process transports: immediately, in order; the tcp
+        star: as each rank's uplink frame completes), so the server can
+        parse/stage/decode one message while still waiting on the others."""
         ...
 
     def broadcast(self, nbytes: int, workers: int) -> None:
@@ -61,10 +68,14 @@ class LoopbackTransport:
 
     stats: TransportStats = dataclasses.field(default_factory=TransportStats)
 
-    def exchange(self, payloads: list[bytes]) -> list[bytes]:
+    def exchange(self, payloads: list[bytes],
+                 on_payload=None) -> list[bytes]:
         self.stats.rounds += 1
         self.stats.bytes_up += sum(len(p) for p in payloads)
         self.stats.wire_bytes += sum(len(p) for p in payloads)
+        if on_payload is not None:
+            for i, pay in enumerate(payloads):
+                on_payload(i, pay)
         return list(payloads)
 
     def broadcast(self, nbytes: int, workers: int) -> None:
@@ -81,9 +92,13 @@ class SimulatedTransport:
     cost: CostModel = dataclasses.field(default_factory=CostModel)
     stats: TransportStats = dataclasses.field(default_factory=TransportStats)
 
-    def exchange(self, payloads: list[bytes]) -> list[bytes]:
+    def exchange(self, payloads: list[bytes],
+                 on_payload=None) -> list[bytes]:
         sizes = [len(p) for p in payloads]
         self.stats.observe(sizes, self.topology, self.cost)
+        if on_payload is not None:
+            for i, pay in enumerate(payloads):
+                on_payload(i, pay)
         return list(payloads)
 
     def broadcast(self, nbytes: int, workers: int) -> None:

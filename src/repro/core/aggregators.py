@@ -168,6 +168,7 @@ def make_aggregator(
     ema_rho: float = 0.25,
     wire: str = "abstract",
     transport=None,
+    compiled: bool = True,
 ) -> Aggregator:
     """Build an aggregator for gradients of flat dimension ``dim``.
 
@@ -189,6 +190,11 @@ def make_aggregator(
 
     ``ema_rho`` is the ladder-EMA momentum of the stateful
     ``mlmc_adaptive_*`` family (1.0 = per-sample Lemma 3.4).
+
+    ``compiled`` (packed wire only) selects the jit-compiled codec fast
+    path (`repro.comm.compiled`, default) vs the original eager codecs —
+    byte-identical packets either way; the flag exists for verification
+    and A-B wire benchmarks (`benchmarks/bench_wire.py`).
     """
     if wire == "packed":
         from repro.comm import packed_aggregator
@@ -197,7 +203,7 @@ def make_aggregator(
             name, dim, transport=transport, k_fraction=k_fraction, s=s,
             rtn_level=rtn_level, qsgd_levels=qsgd_levels,
             momentum_beta=momentum_beta, fixed_levels=fixed_levels,
-            ema_rho=ema_rho)
+            ema_rho=ema_rho, compiled=compiled)
     if wire == "device":
         from repro.comm.device_wire import device_aggregator
 

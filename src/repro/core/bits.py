@@ -47,27 +47,40 @@ def topk_mlmc_bits(d: int, s: int = 1, value_bits: int = 32,
 
 
 def rtn_mlmc_bits(d: int, level, num_levels: int = 8,
-                  header_bits: int = 64):
+                  header_bits: int = 64, corr_bits=None):
     """Honest adaptive MLMC-RTN wire cost for a SAMPLED level (App. G.2).
 
     The RTN residual ``C^l - C^{l-1}`` has no sparse/bit-plane closed form
     (§3.2: no importance-sampling interpretation), so the wire ships the
     level-l grid codes (``max(l, 1)`` bits/entry) plus, for ``l > 1``, a
-    {-1,0,+1} refinement correction (2 bits/entry); the top level
-    (``C^L = id``) ships the dense f32 residual.  This replaces the former
-    2d fixed-point-analogy entry, which was optimistic for every ``l > 1``
-    — the deviation `repro.comm.codec.MLMCRTNCodec` measured.
+    {-1,0,+1} refinement correction; the top level (``C^L = id``) ships
+    the dense f32 residual.  This replaces the former 2d
+    fixed-point-analogy entry, which was optimistic for every ``l > 1`` —
+    the deviation `repro.comm.codec.MLMCRTNCodec` measured.
 
-    ``level`` may be a traced jnp scalar (the adaptive Alg. 3 draw); the
-    result is then a traced f32 scalar.  Wrap in ``float()`` for a concrete
-    level."""
+    ``corr_bits`` books the correction stream: ``None`` charges the flat
+    2-bit plane (the closed-form upper bound the abstract aggregator uses
+    and the `mlmc_adaptive_rtn` wire still ships); a number books the
+    MEASURED Elias-gamma stream of the entropy-coded ``mlmc_rtn`` wire
+    (`repro.comm.codec.gamma_signed_encode`, <= 2d by construction) —
+    only valid for a concrete ``level``.
+
+    ``level`` may be a traced jnp scalar (the adaptive Alg. 3 draw) when
+    ``corr_bits`` is None; the result is then a traced f32 scalar.  Wrap
+    in ``float()`` for a concrete level."""
+    hdr = header_bits + math.ceil(math.log2(max(num_levels, 2)))
+    if corr_bits is not None:
+        lvl = int(level)
+        if lvl >= num_levels:
+            return 32.0 * d + hdr
+        return float(max(lvl, 1)) * d + \
+            (float(corr_bits) if lvl > 1 else 0.0) + hdr
     import jax.numpy as jnp
 
     lvl = jnp.asarray(level, jnp.float32)
     per_entry = jnp.where(
         lvl >= num_levels, 32.0,
         jnp.maximum(lvl, 1.0) + jnp.where(lvl > 1.0, 2.0, 0.0))
-    hdr = header_bits + math.ceil(math.log2(max(num_levels, 2)))
     return per_entry * d + hdr
 
 

@@ -35,7 +35,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Array, Compressor, MultilevelCompressor, PRNGKey
+from repro.core.types import Array, Compressor, MultilevelCompressor, \
+    PRNGKey, pin_rounding
 
 _EPS = 1e-30
 
@@ -89,7 +90,12 @@ class FixedPointMultilevel(MultilevelCompressor):
         x = jnp.minimum(jnp.abs(v) / scale, _BELOW_ONE)
         bit = jnp.mod(jnp.floor(_ldexp(x, l)), 2.0)           # b_l ∈ {0,1}
         plane = scale * jnp.sign(v) * _ldexp(bit, -l)         # sign·b_l·2^-l
-        top = v - self.compress(v, self.num_levels - 1)
+        # pin_rounding keeps compress()'s product rounded before the
+        # subtraction: XLA would otherwise contract the trailing multiply
+        # into an FMA under jit, making jitted residuals differ from eager
+        # ones by 1 ulp — breaking the byte-wire contract (the compiled
+        # codec pipeline ships this residual verbatim on top-level draws)
+        top = v - pin_rounding(self.compress(v, self.num_levels - 1))
         return jnp.where(l >= self.num_levels, top, plane)
 
     def residual_norms(self, v: Array) -> Array:

@@ -19,7 +19,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Array, Compressor, MultilevelCompressor, PRNGKey
+from repro.core.types import Array, Compressor, MultilevelCompressor, \
+    PRNGKey, pin_rounding
 
 _EPS = 1e-30
 
@@ -54,11 +55,25 @@ class RTNMultilevel(MultilevelCompressor):
 
     def residual(self, v: Array, l: Array | int) -> Array:
         l = jnp.asarray(l, jnp.int32)
-        return self.compress(v, l) - self.compress(v, l - 1)
+        # pin each grid value's rounding before the subtraction — XLA
+        # would otherwise contract `delta*q - delta'*q'` into FMAs under
+        # jit and jitted residuals drift 1 ulp off the eager ones the byte
+        # wire (and its golden fixtures) are built from
+        return pin_rounding(self.compress(v, l)) - \
+            pin_rounding(self.compress(v, l - 1))
 
     def residual_norms(self, v: Array) -> Array:
         ls = jnp.arange(1, self.num_levels + 1, dtype=jnp.int32)
-        return jax.vmap(lambda l: jnp.linalg.norm(self.residual(v, l)))(ls)
+
+        def one(l: Array) -> Array:
+            r = self.residual(v, l)
+            # pinned replica of jnp.linalg.norm's sqrt(sum(x*x)): keeps the
+            # squares rounded before the reduction so the jitted ladder —
+            # and hence every Lemma-3.4 probability shipped in a packet
+            # header — is bit-identical to the eager one
+            return jnp.sqrt(jnp.sum(pin_rounding(r * r)))
+
+        return jax.vmap(one)(ls)
 
     def static_probs(self) -> Array:
         # RTN error roughly halves per extra bit -> geometric p_l ∝ 2^{-l}

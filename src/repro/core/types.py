@@ -37,6 +37,56 @@ Array = jax.Array
 PRNGKey = jax.Array
 
 
+def _register_barrier_batching() -> None:
+    """`jax.lax.optimization_barrier` has no vmap batching rule in the
+    pinned jax (0.4.x); the barrier is operand-wise identity, so batching
+    is a pass-through.  Registered once at import (idempotent)."""
+    from jax._src.lax import lax as _lax
+    from jax.interpreters import batching
+
+    prim = getattr(_lax, "optimization_barrier_p", None)
+    if prim is None or prim in batching.primitive_batchers:
+        return
+
+    def rule(args, dims, **params):
+        outs = prim.bind(*args)
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        return outs, dims
+
+    batching.primitive_batchers[prim] = rule
+
+
+_register_barrier_batching()
+
+
+def opt_barrier(x: Array) -> Array:
+    """Identity that XLA may not constant-fold or move computations across.
+    Used by the compiled codec pipeline to keep a STATIC level from being
+    folded into the grid math (a constant divisor lets XLA rewrite the
+    division as a reciprocal multiply, 1 ulp off the eager delta).
+
+    NOTE: this does NOT stop FMA contraction on the CPU backend — a
+    multiply feeding an add/subtract still fuses straight through the
+    barrier.  Use :func:`pin_rounding` for that."""
+    return jax.lax.optimization_barrier(x)
+
+
+def pin_rounding(x: Array) -> Array:
+    """Pin the f32 rounding of ``x`` before it meets an add/subtract.
+
+    XLA CPU contracts ``v - x*y`` into an FMA under jit (keeping the
+    product's excess precision), so jitted results drift 1 ulp off the
+    eager op-by-op ones — breaking the byte-exact wire contract the codecs
+    and golden fixtures rely on.  `opt_barrier`, double bitcasts, and the
+    fast-math XLA flags all fail to stop the contraction on the pinned
+    jax; a data-dependent select does: contraction cannot reach through a
+    ``select``, and ``x == x`` is not foldable.  Value-preserving for every
+    input including NaN (the false branch ``x + 1`` is NaN exactly when
+    taken)."""
+    return jnp.where(x == x, x, x + 1)
+
+
 class Compressor(abc.ABC):
     """A (possibly biased) single-level compressor ``C : R^d -> R^d``.
 

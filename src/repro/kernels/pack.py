@@ -100,34 +100,46 @@ def _num_words(count: int, width: int) -> int:
 
 
 def pack_bits(codes: Array, width: int) -> Array:
-    """Pack (N,) unsigned codes of ``width`` bits into ceil(N/F) uint32 words
-    (word-major: word w holds codes [w*F, (w+1)*F))."""
+    """Pack unsigned codes of ``width`` bits into uint32 words (word-major:
+    word w holds codes [w*F, (w+1)*F)).
+
+    Accepts ``(N,)`` -> ``(ceil(N/F),)`` or a batch ``(B, N)`` ->
+    ``(B, ceil(N/F))``.  The batched form folds B into the Pallas row grid —
+    ONE kernel launch packs every row, which is how the compiled codec
+    pipeline (`repro.comm.compiled`) packs all M workers' streams per step —
+    and each row's words are bit-identical to the 1D call on that row."""
     codes = jnp.asarray(codes, jnp.uint32)
-    n = codes.shape[0]
+    n = codes.shape[-1]
     fields = fields_per_word(width)
     if fields == 1:
         return codes
     n_words = _num_words(n, width)
     rows = max(1, -(-n_words // 128))
-    padded = jnp.pad(codes, (0, rows * 128 * fields - n))
-    planar = padded.reshape(rows, 128, fields).transpose(0, 2, 1) \
-                   .reshape(rows, fields * 128)
+    batch = codes.shape[:-1]
+    pad = [(0, 0)] * len(batch) + [(0, rows * 128 * fields - n)]
+    padded = jnp.pad(codes, pad)
+    planar = padded.reshape(*batch, rows, 128, fields) \
+                   .swapaxes(-1, -2).reshape(-1, fields * 128)
     words = pack_words_2d(planar, width=width, interpret=_interpret())
-    return words.reshape(-1)[:n_words]
+    return words.reshape(*batch, rows * 128)[..., :n_words]
 
 
 def unpack_bits(words: Array, width: int, count: int) -> Array:
-    """Inverse of :func:`pack_bits`: (W,) words -> (count,) uint32 codes."""
+    """Inverse of :func:`pack_bits`: ``(W,)`` words -> ``(count,)`` uint32
+    codes, or batched ``(B, W)`` -> ``(B, count)`` (one kernel launch)."""
     words = jnp.asarray(words, jnp.uint32)
     fields = fields_per_word(width)
     if fields == 1:
-        return words[:count]
-    n_words = words.shape[0]
+        return words[..., :count]
+    n_words = words.shape[-1]
     rows = max(1, -(-n_words // 128))
-    w2d = jnp.pad(words, (0, rows * 128 - n_words)).reshape(rows, 128)
+    batch = words.shape[:-1]
+    pad = [(0, 0)] * len(batch) + [(0, rows * 128 - n_words)]
+    w2d = jnp.pad(words, pad).reshape(-1, 128)
     planar = unpack_words_2d(w2d, width=width, interpret=_interpret())
-    codes = planar.reshape(rows, fields, 128).transpose(0, 2, 1).reshape(-1)
-    return codes[:count]
+    codes = planar.reshape(*batch, rows, fields, 128) \
+                  .swapaxes(-1, -2).reshape(*batch, rows * fields * 128)
+    return codes[..., :count]
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +185,8 @@ def pack_planes(codes: Array, width: int) -> Array:
     lo_w, hi_w = planes
     lo = codes & jnp.uint32((1 << lo_w) - 1)
     hi = codes >> jnp.uint32(lo_w)
-    return jnp.concatenate([pack_bits(lo, lo_w), pack_bits(hi, hi_w)])
+    return jnp.concatenate([pack_bits(lo, lo_w), pack_bits(hi, hi_w)],
+                           axis=-1)
 
 
 def unpack_planes(words: Array, width: int, count: int) -> Array:
@@ -184,6 +197,6 @@ def unpack_planes(words: Array, width: int, count: int) -> Array:
         return unpack_bits(words, width, count)
     lo_w, hi_w = planes
     n_lo = _num_words(count, lo_w)
-    lo = unpack_bits(words[:n_lo], lo_w, count)
-    hi = unpack_bits(words[n_lo:], hi_w, count)
+    lo = unpack_bits(words[..., :n_lo], lo_w, count)
+    hi = unpack_bits(words[..., n_lo:], hi_w, count)
     return lo | (hi << jnp.uint32(lo_w))

@@ -53,9 +53,14 @@ class Trainer:
       optimizer: from repro.optim (default SGD, as in the paper).
       ema_rho: ladder-EMA momentum of the stateful `mlmc_adaptive_*` family.
       wire: aggregation substrate — "abstract" (in-memory estimates),
-        "packed" (host-side byte packets through a Transport), or "device"
-        (jit-native fixed-shape packed packets, repro.comm.device_wire;
-        the whole step stays jitted like the abstract path).
+        "packed" (byte packets through a Transport, encoded/decoded by the
+        COMPILED codec pipeline of repro.comm.compiled: byte-identical to
+        the eager codecs with the compression math fully jitted), or
+        "device" (jit-native fixed-shape packed packets,
+        repro.comm.device_wire; the whole step stays jitted like the
+        abstract path).
+      wire_compiled: packed wire only — False falls back to the eager
+        codecs (byte-identical; A-B wire benchmarks).
     """
 
     def __init__(self, loss_fn: Callable, params: PyTree, *,
@@ -64,7 +69,8 @@ class Trainer:
                  k_fraction: float = 0.01, s: int = 0,
                  momentum_beta: float = 0.1, qsgd_levels: int = 2,
                  rtn_level: int = 4, ema_rho: float = 0.25,
-                 wire: str = "abstract", transport=None):
+                 wire: str = "abstract", transport=None,
+                 wire_compiled: bool = True):
         self.loss_fn = loss_fn
         self.m = num_workers
         flat, self.unravel = ravel_pytree(params)
@@ -77,7 +83,7 @@ class Trainer:
             s=s or max(1, int(round(k_fraction * self.dim))),
             momentum_beta=momentum_beta, qsgd_levels=qsgd_levels,
             rtn_level=rtn_level, ema_rho=ema_rho, wire=wire,
-            transport=transport)
+            transport=transport, compiled=wire_compiled)
         self.opt_state = self.optimizer.init(self.flat_params)
         #: first-class aggregator state — empty for stateless methods,
         #: threaded through every step and checkpointed with params
@@ -135,8 +141,12 @@ class Trainer:
         return step
 
     def _build_packed_step(self):
-        """Packed wire: jitted grads + host-side encode/ship/decode + jitted
-        apply (serialization cannot live under jit).
+        """Packed wire: jitted grads + the COMPILED codec pipeline
+        (`repro.comm.compiled`: one vmapped jitted encode, one device_get,
+        byte framing, one fused decode+mean) + jitted apply — only the
+        serialization itself stays on the host.  The apply donates the old
+        params/optimizer buffers, so XLA recycles their storage for the new
+        ones instead of allocating fresh arrays every step.
 
         On a multihost transport every rank runs this same step over the
         same global (M, b, ...) batch stream but slices out ITS OWN worker
@@ -146,7 +156,9 @@ class Trainer:
         ranks.  Stateful methods keep rank-local CommState rows (rank 0
         additionally mirrors every worker's EF21 innovation state)."""
         agg, opt, grads_of = self.agg, self.optimizer, self._grad_fn()
-        apply_jit = jax.jit(opt.apply)
+        # donate (opt_state, flat_params): fit() rebinds both to the
+        # returned successors every step, so the old buffers are dead
+        apply_jit = jax.jit(opt.apply, donate_argnums=(1, 2))
         rank, tp = self.rank, self.transport
 
         def step(flat_params, opt_state, comm_state, batch, rng):

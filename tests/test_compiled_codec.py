@@ -1,0 +1,404 @@
+"""Compiled codec pipeline (`repro.comm.compiled`) — the jit fast path.
+
+The load-bearing assertions of this PR:
+
+* BYTE EQUALITY — for every registry codec, the compiled
+  ``encode_arrays``-based pipeline emits packets byte-identical to the
+  eager `WireCodec.encode` (the golden fixtures keep guarding the eager
+  side, so compiled == eager == committed bytes), including the MLMC
+  dense-fallback variants and the level-specialized RTN bodies;
+* batched (vmapped) encodes equal single-row encodes bit-for-bit — the
+  invariant that keeps a TCP rank (batch of 1) bitwise comparable to the
+  in-process loop (batch of M);
+* the fused ``decode_mean`` equals the eager stack-and-mean;
+* the Elias-gamma correction stream round-trips and never exceeds its 2d
+  worst-case bound;
+* RETRACE GUARD — three trainer steps on each wire (packed / device /
+  tcp-loopback) lower exactly once: zero new jit lowerings after step 0.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax._src.test_util as jtu
+
+from repro.comm import Packet, make_codec, make_compiled_codec
+from repro.comm.codec import gamma_signed_decode, gamma_signed_encode
+from repro.core.aggregators import ALL_AGGREGATORS
+
+jax.config.update("jax_platform_name", "cpu")
+
+D = 257            # deliberately not a multiple of 128 or any field count
+M = 4
+CODEC_KW = dict(k_fraction=0.05, s=4)
+
+#: forced-level sweeps only make sense where explicit probs steer the draw
+#: (the per-sample-adaptive families ignore the probs argument)
+FORCIBLE = ("mlmc_fixed", "mlmc_float", "mlmc_adaptive_rtn")
+
+
+def _grad(d=D, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (d,)) * jnp.exp(-0.02 * jnp.arange(d))
+
+
+@pytest.fixture(scope="module")
+def grad():
+    return _grad()
+
+
+def _pair(name, d=D):
+    return (make_codec(name, d, **CODEC_KW),
+            make_compiled_codec(name, d, **CODEC_KW))
+
+
+def _assert_same_encode(eager, comp, v, key, probs=None):
+    e = (eager.encode(v, key, probs=probs) if probs is not None
+         else eager.encode(v, key))
+    c = (comp.encode(v, key, probs=probs) if probs is not None
+         else comp.encode(v, key))
+    assert e.packet.to_bytes() == c.packet.to_bytes(), \
+        (eager.name, e.packet.header, c.packet.header)
+    np.testing.assert_array_equal(np.asarray(c.estimate),
+                                  np.asarray(e.estimate))
+    np.testing.assert_array_equal(comp.decode(e.packet),
+                                  eager.decode(e.packet))
+    return e
+
+
+# ---------------------------------------------------------------------------
+# byte-equality battery
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_AGGREGATORS)
+def test_compiled_bytes_match_eager(name, grad):
+    """encode_arrays -> byte framing produces EXACTLY the eager bytes."""
+    eager, comp = _pair(name)
+    for trial in range(4):
+        key = jax.random.fold_in(jax.random.PRNGKey(1), trial)
+        _assert_same_encode(eager, comp, grad, key)
+
+
+@pytest.mark.parametrize("name", FORCIBLE)
+def test_compiled_forced_levels(name, grad):
+    """Every sampled level — including the dense top-level fallback whose
+    payload is the raw residual — stays byte-identical."""
+    eager, comp = _pair(name)
+    L = eager.compressor.num_levels
+    levels = sorted({1, 2, 3, L - 1, L} & set(range(1, L + 1)))
+    for lvl in levels:
+        probs = jnp.full((L,), 1e-9).at[lvl - 1].set(1.0)
+        e = _assert_same_encode(eager, comp, grad, jax.random.PRNGKey(5),
+                                probs=probs)
+        assert e.packet.header.level == lvl
+
+
+def test_compiled_mlmc_rtn_levels(grad):
+    """The per-sample-adaptive RTN family: sweep keys until several levels
+    (ideally including the dense fallback) have been seen."""
+    eager, comp = _pair("mlmc_rtn")
+    seen = set()
+    for t in range(200):
+        key = jax.random.PRNGKey(1000 + t)
+        lvl = eager.encode(grad, key).packet.header.level
+        if lvl in seen:
+            continue
+        seen.add(lvl)
+        _assert_same_encode(eager, comp, grad, key)
+        if len(seen) >= 5:
+            break
+    assert len(seen) >= 3, f"only levels {seen} sampled"
+
+
+def test_compiled_zero_and_negzero(grad):
+    """Exact zeros (sign = 0 side channels) survive the compiled path."""
+    v = jnp.asarray(np.array([0.0, -1.5, 0.0, 2.5, -0.0, 1e-8] * 20,
+                             np.float32))
+    for name in ("signsgd", "qsgd", "natural", "mlmc_fixed", "mlmc_float"):
+        eager = make_codec(name, v.shape[0], **CODEC_KW)
+        comp = make_compiled_codec(name, v.shape[0], **CODEC_KW)
+        _assert_same_encode(eager, comp, v, jax.random.PRNGKey(4))
+
+
+# ---------------------------------------------------------------------------
+# batched encode / fused decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_AGGREGATORS)
+def test_batch_rows_match_single_and_eager(name):
+    """One vmapped batch encode == M single-row encodes == eager, byte for
+    byte — what keeps tcp ranks (M=1) bitwise equal to loopback (M=4)."""
+    eager, comp = _pair(name)
+    V = jnp.stack([_grad(seed=3 + i) for i in range(M)])
+    keys = jax.random.split(jax.random.PRNGKey(9), M)
+    pkts = comp.encode_batch(V, keys)
+    for m in range(M):
+        single = comp.encode(V[m], keys[m]).packet.to_bytes()
+        assert pkts[m].to_bytes() == single, (name, m)
+        assert single == eager.encode(V[m], keys[m]).packet.to_bytes(), \
+            (name, m)
+    fused = comp.decode_mean(pkts)
+    ref = jnp.mean(jnp.stack([jnp.asarray(eager.decode(p)) for p in pkts]),
+                   axis=0)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+
+
+def test_explicit_probs_batch_matches_single():
+    """The stateful EMA family's explicit-prob packets: batched encode with
+    per-worker Lemma-3.4 rows equals the per-row encode (the multihost
+    parity surface)."""
+    for name in ("mlmc_adaptive_topk", "mlmc_adaptive_stopk",
+                 "mlmc_adaptive_rtn"):
+        eager, comp = _pair(name)
+        L = eager.compressor.num_levels
+        V = jnp.stack([_grad(seed=13 + i) for i in range(M)])
+        keys = jax.random.split(jax.random.PRNGKey(17), M)
+        probs = jax.nn.softmax(
+            jax.random.normal(jax.random.PRNGKey(23), (M, L)))
+        pkts = comp.encode_batch(V, keys, probs=probs)
+        for m in range(M):
+            ref = eager.encode(V[m], keys[m], probs=probs[m])
+            assert pkts[m].to_bytes() == ref.packet.to_bytes(), (name, m)
+            assert pkts[m].header.flags & 2   # FLAG_EXPLICIT_PROB shipped
+
+
+# ---------------------------------------------------------------------------
+# Elias-gamma correction stream
+# ---------------------------------------------------------------------------
+
+
+def test_gamma_stream_roundtrip_and_bound():
+    rs = np.random.RandomState(0)
+    for _ in range(120):
+        d = int(rs.randint(1, 1500))
+        dens = float(rs.choice([0.0, 0.01, 0.25, 0.5, 1.0]))
+        corr = rs.choice([-1, 0, 1], size=d,
+                         p=[dens / 2, 1 - dens, dens / 2])
+        words, nbits, n = gamma_signed_encode(corr)
+        assert n == int(np.count_nonzero(corr))
+        # worst case: sum_i (2 floor(log2 g_i) + 2) <= 2 sum_i g_i <= 2d
+        assert nbits <= 2 * d
+        assert words.size == -(-nbits // 32)
+        np.testing.assert_array_equal(gamma_signed_decode(words, nbits, d),
+                                      corr)
+
+
+def test_gamma_stream_rejects_corruption_loudly():
+    """A corrupt-but-frame-valid gamma stream (bit flips survive
+    `Packet.from_bytes`'s geometry checks) must raise a descriptive
+    ValueError — rank 0's TCP server decodes these, and PR 3's contract is
+    loud rejection, never a raw IndexError."""
+    d = 64
+    # unary run that never terminates
+    with pytest.raises(ValueError, match="never terminates"):
+        gamma_signed_decode(np.zeros((1,), np.uint32), 5, d)
+    # truncated final record: gamma(3) needs 3 bits + sign, give it 3
+    corr = np.zeros((d,), np.int64)
+    corr[2] = 1
+    words, nbits, _ = gamma_signed_encode(corr)
+    with pytest.raises(ValueError, match="stream has"):
+        gamma_signed_decode(words, nbits - 1, d)
+    # gap overruns the plane
+    with pytest.raises(ValueError, match="dim-1 plane"):
+        gamma_signed_decode(words, nbits, 1)
+
+
+def test_gamma_stream_shrinks_the_rtn_packet(grad):
+    """The entropy-coded corr stream must never exceed the flat 2-bit plane
+    it replaced, and the measured bits reconcile with the
+    corr_bits-aware ledger."""
+    from repro.core import bits as bitcost
+
+    eager, _ = _pair("mlmc_rtn")
+    for t in range(60):
+        res = eager.encode(grad, jax.random.PRNGKey(400 + t))
+        h = res.packet.header
+        if not 1 < h.level < eager.compressor.num_levels:
+            continue
+        corr = res.packet.streams[1]
+        assert corr.width == 1
+        assert corr.used_bits <= 2 * D
+        lo, hi = eager.reconcile_bounds(res.packet)
+        assert lo <= eager.measured_bits(res.packet) <= hi
+        booked = bitcost.rtn_mlmc_bits(D, h.level, corr_bits=corr.used_bits,
+                                       num_levels=8)
+        flat = float(bitcost.rtn_mlmc_bits(D, h.level, num_levels=8))
+        assert booked <= flat
+        return
+    pytest.skip("no mid-level draw in 60 keys")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: odd dims round-trip
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # pragma: no cover - dev extra not installed
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(name=st.sampled_from(ALL_AGGREGATORS),
+           dim=st.sampled_from([1, 2, 3, 31, 63, 127, 130, 255, 419]),
+           seed=st.integers(0, 2**16))
+    def test_compiled_roundtrip_odd_dims(name, dim, seed):
+        """Byte equality + lossless round-trip at awkward dims (1, primes,
+        just-past-word-boundary sizes) — the padding/slicing edge cases of
+        the fixed-shape buffers."""
+        eager = make_codec(name, dim, **CODEC_KW)
+        comp = make_compiled_codec(name, dim, **CODEC_KW)
+        v = _grad(d=dim, seed=seed)
+        key = jax.random.PRNGKey(seed + 1)
+        e = eager.encode(v, key)
+        c = comp.encode(v, key)
+        assert e.packet.to_bytes() == c.packet.to_bytes()
+        wire = Packet.from_bytes(c.packet.to_bytes())
+        np.testing.assert_array_equal(comp.decode(wire),
+                                      np.asarray(c.estimate))
+
+
+# ---------------------------------------------------------------------------
+# retrace guard: 3 trainer steps per wire, zero lowerings after step 0
+# ---------------------------------------------------------------------------
+
+_RG = dict(d=48, b=4, world=3, seed=11)
+
+
+def _rg_trainer(wire, transport=None, method="mlmc_topk"):
+    from repro.optim import sgd
+    from repro.train import Trainer
+
+    d = _RG["d"]
+    params = {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+    def loss_fn(p, batch):
+        return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
+
+    return Trainer(loss_fn, params, num_workers=_RG["world"], method=method,
+                   optimizer=sgd(0.1), k_fraction=0.25, wire=wire,
+                   transport=transport)
+
+
+def _rg_batches():
+    d, b, world = _RG["d"], _RG["b"], _RG["world"]
+    key = jax.random.PRNGKey(7)
+    wkey, key = jax.random.split(key)
+    w_true = jax.random.normal(wkey, (d,))
+    while True:
+        key, kx = jax.random.split(key)
+        x = jax.random.normal(kx, (world, b, d))
+        yield {"x": x, "y": x @ w_true}
+
+
+@pytest.mark.parametrize("wire", ["packed", "device"])
+def test_no_retrace_after_first_step(wire):
+    """Steady-state steps must not lower a single new jit: the compiled
+    pipeline's caches are keyed on static shapes only."""
+    trainer = _rg_trainer(wire)
+    data = _rg_batches()
+    trainer.fit(data, steps=1, seed=_RG["seed"])          # warmup/compile
+    with jtu.count_jit_and_pmap_lowerings() as count:
+        trainer.fit(data, steps=2, seed=_RG["seed"] + 1)
+    assert count[0] == 0, f"{wire}: {count[0]} new lowerings after step 0"
+
+
+def test_no_retrace_tcp_loopback():
+    """Same guard over a real in-process TCP star: rank 0 + worker threads
+    each run 1 warmup step, then 2 counted steps with ZERO new lowerings
+    anywhere in the process."""
+    import socket
+
+    from repro.comm.multihost import TcpStarTransport
+
+    try:
+        probe = socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        probe.close()
+    except OSError:
+        pytest.skip("localhost sockets unavailable")
+
+    world = _RG["world"]
+    server = TcpStarTransport.listen(port=0, world=world, timeout=15.0)
+    tps = {0: server}
+
+    def join(r):
+        tps[r] = TcpStarTransport.connect("127.0.0.1", server.port, rank=r,
+                                          world=world, timeout=15.0)
+
+    joiners = [threading.Thread(target=join, args=(r,))
+               for r in range(1, world)]
+    for t in joiners:
+        t.start()
+    server.accept_workers()
+    for t in joiners:
+        t.join()
+
+    trainers = {r: _rg_trainer("packed", transport=tps[r])
+                for r in range(world)}
+    streams = {r: _rg_batches() for r in range(world)}
+    errors = []
+
+    def run(r, steps, seed):
+        try:
+            trainers[r].fit(streams[r], steps=steps, seed=seed)
+        except Exception as exc:            # pragma: no cover - diagnostics
+            errors.append((r, exc))
+
+    def round_of_steps(steps, seed):
+        threads = [threading.Thread(target=run, args=(r, steps, seed))
+                   for r in range(1, world)]
+        for t in threads:
+            t.start()
+        run(0, steps, seed)
+        for t in threads:
+            t.join()
+
+    try:
+        round_of_steps(1, _RG["seed"])                    # warmup/compile
+        assert not errors, errors
+        with jtu.count_jit_and_pmap_lowerings() as count:
+            round_of_steps(2, _RG["seed"] + 1)
+        assert not errors, errors
+        assert count[0] == 0, \
+            f"tcp: {count[0]} new lowerings after step 0"
+    finally:
+        for tp in tps.values():
+            tp.close()
+
+
+# ---------------------------------------------------------------------------
+# compiled aggregator == eager aggregator (same bytes -> same training)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_aggregator_compiled_equals_eager():
+    """`packed_aggregator(compiled=True)` must reproduce the eager-codec
+    aggregation bit-for-bit: direction AND measured bits."""
+    from repro.comm import packed_aggregator
+
+    V = jnp.stack([_grad(seed=31 + i) for i in range(M)])
+    for name in ("mlmc_topk", "mlmc_topk_static", "qsgd", "ef21",
+                 "mlmc_adaptive_topk", "signsgd"):
+        fast = packed_aggregator(name, D, **CODEC_KW, compiled=True)
+        slow = packed_aggregator(name, D, **CODEC_KW, compiled=False)
+        st_f, st_s = fast.init(M, D), slow.init(M, D)
+        for t in range(3):
+            key = jax.random.fold_in(jax.random.PRNGKey(3), t)
+            of = fast.step(st_f, V, key)
+            os_ = slow.step(st_s, V, key)
+            st_f, st_s = of.state, os_.state
+            np.testing.assert_array_equal(np.asarray(of.direction),
+                                          np.asarray(os_.direction),
+                                          err_msg=f"{name} step {t}")
+            assert float(of.bits) == float(os_.bits), (name, t)
