@@ -38,6 +38,10 @@ from benchmarks.common import run_methods, small_lm_config
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT_PATH = REPO_ROOT / "BENCH_wire.json"
+#: every run also records a comm-stack trace (spans + MLMC estimator
+#: telemetry) — CI validates it against the checked-in schema, converts
+#: it with the Perfetto exporter, and uploads it as a build artifact
+TRACE_PATH = REPO_ROOT / "TRACE_wire.jsonl"
 
 #: the BENCH_adaptive sizes, for record-to-record comparability
 SIZES = {
@@ -131,6 +135,9 @@ def _codec_micro(dim: int) -> dict:
 
 
 def main(smoke: bool = False) -> dict:
+    from repro import obs
+
+    telemetry = obs.install(obs.Telemetry(sample_every=5))
     steps = 3 if smoke else 12
     sizes = ("small",) if smoke else ("small", "wide")
     record = {
@@ -153,18 +160,33 @@ def main(smoke: bool = False) -> dict:
         print(f"# bench_wire {size_name} ratio packed/static = "
               f"{entry['packed_vs_static_ratio']} "
               f"({time.time() - t0:.1f}s)", flush=True)
+    keep = False
     if smoke and OUT_PATH.exists():
         try:
-            if not json.loads(OUT_PATH.read_text()).get("smoke", True):
-                # never clobber a committed FULL perf record with a smoke
-                # run (CI runs --smoke on every push to test this path)
-                print(f"# smoke run: kept existing full record {OUT_PATH}")
-                return record
+            # never clobber a committed FULL perf record with a smoke
+            # run (CI runs --smoke on every push to test this path)
+            keep = not json.loads(OUT_PATH.read_text()).get("smoke", True)
         except (json.JSONDecodeError, OSError):
             pass
-    OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
-    print(f"# wrote {OUT_PATH}")
+    if keep:
+        print(f"# smoke run: kept existing full record {OUT_PATH}")
+    else:
+        OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {OUT_PATH}")
+    _write_trace(telemetry)
     return record
+
+
+def _write_trace(telemetry) -> None:
+    from repro import obs
+
+    events = obs.export.telemetry_events(telemetry)
+    errors = obs.export.validate_events(events)
+    if errors:                    # pragma: no cover - schema regression
+        raise SystemExit(f"trace schema violations: {errors[:5]}")
+    obs.export.write_jsonl(TRACE_PATH, events)
+    print(f"# wrote {TRACE_PATH} ({len(events)} events, schema OK)")
+    obs.install(None)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ so stateful EF21 trains over tcp bit-for-bit equal to loopback.
 from __future__ import annotations
 
 import struct
+import time
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,7 @@ from repro.comm.codec import WireCodec, make_codec
 from repro.comm.multihost import is_multihost_transport
 from repro.comm.packets import Packet
 from repro.comm.transport import LoopbackTransport, Transport
+from repro.obs import trace as obs
 from repro.core.adaptive import ladder_ema_update, probs_from_ladder
 from repro.core.error_feedback import ef21_targets
 from repro.core.types import (
@@ -82,6 +84,36 @@ def _decode_mean(codec, packets: list[Packet]) -> Array:
                                for p in packets]), axis=0)
 
 
+def _codec_impl(codec) -> str:
+    return "compiled" if _is_compiled(codec) else "eager"
+
+
+def _record_mlmc_draws(tel, codec, packets) -> None:
+    """MLMC estimator telemetry: every shipped packet's sampled (level,
+    p_l) straight from the wire header — the empirical side of the
+    level-draw histogram.  The theoretical ladder is recorded once per
+    method from ``compressor.static_probs()`` (the static Lemma-3.3
+    distribution; the adaptive family overwrites it with its actual
+    per-step Lemma-3.4 rows at each sampling point)."""
+    name = getattr(codec, "name", "")
+    if not name.startswith("mlmc"):
+        return
+    for p in packets:
+        tel.mlmc.record_draw(name, p.header.level, p.header.prob)
+    comp = getattr(codec, "compressor", None)
+    if comp is not None and tel.mlmc.expected_probs(name) is None:
+        tel.mlmc.record_expected(name, np.asarray(comp.static_probs()))
+
+
+def _record_bias_proxy(tel, name: str, direction, worker_grads) -> None:
+    """Running empirical-mean-vs-dense-gradient bias proxy (sampled: the
+    dense mean costs one jnp reduction, so the disabled path never pays
+    it and the enabled path pays it every ``sample_every`` rounds)."""
+    if tel.should_sample(f"bias:{name}"):
+        dense = np.asarray(jnp.mean(worker_grads, axis=0))
+        tel.mlmc.record_bias(name, np.asarray(direction), dense)
+
+
 class PackedAggregate:
     """Stateless packed-wire aggregator: encode -> ship -> decode -> mean.
     The CommState passes through unchanged.
@@ -100,13 +132,31 @@ class PackedAggregate:
 
         if state is None:
             state = empty_comm_state()
+        tel = obs.active()
+        name, impl = getattr(self.codec, "name", "?"), _codec_impl(self.codec)
         m = worker_grads.shape[0]
         keys = jax.random.split(rng, m)
+        t0 = time.perf_counter() if tel.enabled else 0.0
         packets_out = _encode_round(self.codec, worker_grads, keys)
-        delivered = self.transport.exchange(
-            [p.to_bytes() for p in packets_out])
+        if tel.enabled:
+            tel.trace.complete("comm/encode", t0, codec=name, impl=impl)
+            tel.observe("codec_encode_s", time.perf_counter() - t0,
+                        codec=name, impl=impl)
+            t0 = time.perf_counter()
+        payloads = [p.to_bytes() for p in packets_out]
+        if tel.enabled:
+            tel.trace.complete("comm/serialize", t0, codec=name,
+                               nbytes=sum(len(b) for b in payloads))
+        delivered = self.transport.exchange(payloads)
         packets = [Packet.from_bytes(b) for b in delivered]
+        t0 = time.perf_counter() if tel.enabled else 0.0
         direction = _decode_mean(self.codec, packets)
+        if tel.enabled:
+            tel.trace.complete("comm/decode_mean", t0, codec=name, impl=impl)
+            tel.observe("codec_decode_s", time.perf_counter() - t0,
+                        codec=name, impl=impl)
+            _record_mlmc_draws(tel, self.codec, packets)
+            _record_bias_proxy(tel, name, direction, worker_grads)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         # account the dense model-update broadcast on the downlink
         self.transport.broadcast(4 * self.codec.dim, m)
@@ -141,17 +191,41 @@ class PackedAdaptiveMLMC:
         m = worker_grads.shape[0]
         if state is None:
             state = self.init(m, worker_grads.shape[1])
+        tel = obs.active()
+        name, impl = getattr(self.codec, "name", "?"), _codec_impl(self.codec)
         keys = jax.random.split(rng, m)
+        t0 = time.perf_counter() if tel.enabled else 0.0
         deltas = jnp.stack([self.compressor.residual_norms(worker_grads[i])
                             for i in range(m)])
         ema = ladder_ema_update(state.ladder_ema, deltas, self.rho, state.step)
         probs = probs_from_ladder(ema)
         packets_out = _encode_round(self.codec, worker_grads, keys,
                                     probs=probs)
+        if tel.enabled:
+            tel.trace.complete("comm/encode", t0, codec=name, impl=impl)
+            tel.observe("codec_encode_s", time.perf_counter() - t0,
+                        codec=name, impl=impl)
+            # the EMA residual-norm ladder trajectory, every worker's row
+            if tel.should_sample(f"ladder:{name}"):
+                step = int(state.step)
+                ema_np, probs_np = np.asarray(ema), np.asarray(probs)
+                for i in range(m):
+                    tel.mlmc.record_ladder(name, i, ema_np[i], step=step)
+                # the adaptive family's ACTUAL Lemma-3.4 ladder (mean over
+                # workers) is the expected distribution its draws follow
+                tel.mlmc.record_expected(name, probs_np.mean(axis=0))
         delivered = self.transport.exchange(
             [p.to_bytes() for p in packets_out])
         packets = [Packet.from_bytes(b) for b in delivered]
+        t0 = time.perf_counter() if tel.enabled else 0.0
         direction = _decode_mean(self.codec, packets)
+        if tel.enabled:
+            tel.trace.complete("comm/decode_mean", t0, codec=name, impl=impl)
+            tel.observe("codec_decode_s", time.perf_counter() - t0,
+                        codec=name, impl=impl)
+            for p in packets:
+                tel.mlmc.record_draw(name, p.header.level, p.header.prob)
+            _record_bias_proxy(tel, name, direction, worker_grads)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         self.transport.broadcast(4 * self.codec.dim, m)
         new_state = state._replace(step=state.step + 1, ladder_ema=ema)
@@ -184,6 +258,74 @@ def unpack_direction(raw: bytes, dim: int) -> tuple[np.ndarray, float]:
         raise ValueError(f"direction blob for dim {d} / {len(raw)} bytes, "
                          f"expected dim {dim}")
     return np.frombuffer(raw, np.float32, d, _DIR_HEADER_BYTES), bits
+
+
+#: STATE frame payload: one rank's client-side CommState rows — the EMA
+#: ladder row of `mlmc_adaptive_*` and the momentum row of `ef21_sgdm` —
+#: gathered to rank 0 at checkpoint time (`Trainer.sync_comm_state`) so a
+#: rank-0 checkpoint captures EVERY rank's client-side state, closing the
+#: caveat documented on `MultihostPackedAdaptive` / `MultihostPackedEF21`.
+_STATE_MAGIC = b"RCS1"
+_STATE_FMT = "<4sBII"    # magic, rank, ladder length, momentum length
+_STATE_HEADER_BYTES = struct.calcsize(_STATE_FMT)    # 13
+
+
+def pack_comm_state_row(state: CommState, rank: int) -> bytes:
+    """Serialize rank's client-side rows of a `CommState` (raw f32 bit
+    patterns, so a gathered row restores bitwise)."""
+    ladder = np.zeros((0,), np.float32)
+    if getattr(state.ladder_ema, "ndim", 0) == 2 \
+            and rank < state.ladder_ema.shape[0]:
+        ladder = np.ascontiguousarray(np.asarray(state.ladder_ema[rank]),
+                                      np.float32)
+    momentum = np.zeros((0,), np.float32)
+    if getattr(state.momentum, "ndim", 0) == 2 \
+            and rank < state.momentum.shape[0]:
+        momentum = np.ascontiguousarray(np.asarray(state.momentum[rank]),
+                                        np.float32)
+    return struct.pack(_STATE_FMT, _STATE_MAGIC, rank, ladder.size,
+                       momentum.size) + ladder.tobytes() + momentum.tobytes()
+
+
+def unpack_comm_state_row(raw: bytes) -> tuple[int, np.ndarray, np.ndarray]:
+    """Inverse of `pack_comm_state_row`: (rank, ladder_row, momentum_row)
+    — either row may be empty (stateless / no-momentum methods)."""
+    if len(raw) < _STATE_HEADER_BYTES:
+        raise ValueError(f"truncated STATE row: {len(raw)} bytes")
+    magic, rank, nl, nm = struct.unpack_from(_STATE_FMT, raw, 0)
+    if magic != _STATE_MAGIC:
+        raise ValueError(f"bad STATE magic {magic!r}")
+    if len(raw) != _STATE_HEADER_BYTES + 4 * (nl + nm):
+        raise ValueError(f"STATE row of {len(raw)} bytes, expected "
+                         f"{_STATE_HEADER_BYTES + 4 * (nl + nm)} "
+                         f"(ladder {nl}, momentum {nm})")
+    ladder = np.frombuffer(raw, np.float32, nl, _STATE_HEADER_BYTES)
+    momentum = np.frombuffer(raw, np.float32, nm,
+                             _STATE_HEADER_BYTES + 4 * nl)
+    return rank, ladder, momentum
+
+
+def fold_comm_state_rows(state: CommState, rows: list[bytes]) -> CommState:
+    """Fold gathered STATE rows into a full `CommState` (rank 0's
+    checkpoint view: its own mirrors plus every client's rows)."""
+    ladder, momentum = state.ladder_ema, state.momentum
+    for raw in rows:
+        r, lad, mom = unpack_comm_state_row(raw)
+        if lad.size:
+            if getattr(ladder, "ndim", 0) != 2 or \
+                    lad.size != ladder.shape[1] or r >= ladder.shape[0]:
+                raise ValueError(
+                    f"STATE ladder row from rank {r} ({lad.size} levels) "
+                    f"does not fit ladder_ema {getattr(ladder, 'shape', ())}")
+            ladder = ladder.at[r].set(jnp.asarray(lad))
+        if mom.size:
+            if getattr(momentum, "ndim", 0) != 2 or \
+                    mom.size != momentum.shape[1] or r >= momentum.shape[0]:
+                raise ValueError(
+                    f"STATE momentum row from rank {r} ({mom.size} dims) "
+                    f"does not fit momentum {getattr(momentum, 'shape', ())}")
+            momentum = momentum.at[r].set(jnp.asarray(mom))
+    return state._replace(ladder_ema=ladder, momentum=momentum)
 
 
 def _require_multihost(transport, who: str):
@@ -224,8 +366,16 @@ class MultihostPackedAggregate:
             state = empty_comm_state()
         tp = self.transport
         _require_one_worker(worker_grads)
+        tel = obs.active()
         keys = jax.random.split(rng, tp.world)
+        t0 = time.perf_counter() if tel.enabled else 0.0
         enc = self.codec.encode(worker_grads[0], keys[tp.rank])
+        if tel.enabled:
+            tel.trace.complete("comm/encode", t0, pid=tp.rank,
+                               codec=getattr(self.codec, "name", "?"),
+                               impl=_codec_impl(self.codec))
+            if tp.rank != 0:   # rank 0 records all draws in _serve_round
+                _record_mlmc_draws(tel, self.codec, [enc.packet])
         direction, bits = _serve_round(tp, self.codec,
                                        enc.packet.to_bytes())
         return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
@@ -264,13 +414,20 @@ def _serve_round(tp, codec, local_payload: bytes) -> tuple[Array, float]:
     broadcast frame, and the trainer consumes the device array directly
     (the former eager path round-tripped every decoded estimate
     host -> device -> host before the trainer ever saw the direction)."""
+    tel = obs.active()
+    name, impl = getattr(codec, "name", "?"), _codec_impl(codec)
     if tp.rank == 0:
+        t0 = time.perf_counter() if tel.enabled else 0.0
         packets, rows = _drain_decoding(tp, codec, local_payload)
         if rows is not None:
             direction = jnp.mean(jnp.stack(rows), axis=0)
         else:
             direction = jnp.mean(jnp.stack(
                 [jnp.asarray(codec.decode(p)) for p in packets]), axis=0)
+        if tel.enabled:
+            tel.trace.complete("comm/serve_round", t0, pid=0, codec=name,
+                               impl=impl, world=tp.world)
+            _record_mlmc_draws(tel, codec, packets)
         bits = float(sum(codec.measured_bits(p) for p in packets))
         tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
     else:
@@ -288,15 +445,16 @@ class MultihostPackedAdaptive:
     Same f32 row ops as the in-process loop, so directions and bytes match
     loopback bit-for-bit.
 
-    Checkpoint caveat (unlike `MultihostPackedEF21`, whose server mirror is
-    complete): rank 0 cannot reconstruct the other workers' ladders from
-    the compressed segments, so a rank-0 checkpoint holds only row 0 — a
-    restored tcp world's other rows restart at zero, which the probability
-    normalization turns into the per-sample Lemma-3.4 optimum on their
-    first post-restore step (``rho * fresh`` cancels in
-    ``probs_from_ladder``); the EMA then rebuilds.  Unbiasedness is never
-    affected (Lemma 3.2).  Shipping the tiny (L,) rows on a dedicated
-    STATE frame is a noted ROADMAP follow-up."""
+    Checkpointing: rank 0 cannot reconstruct the other workers' ladders
+    from the compressed segments (it only ever sees the sampled ``p_l``),
+    so before saving, `Trainer.sync_comm_state` gathers every rank's
+    (L,) EMA row over the dedicated STATE frame
+    (`TcpStarTransport.gather_state` + `pack_comm_state_row`) and folds
+    them into rank 0's ``ladder_ema`` — a rank-0 checkpoint then restores
+    a tcp world bitwise (the restore-and-continue spawn test in
+    ``tests/test_multihost.py``).  Without the sync a restored world's
+    other rows restart at zero; unbiasedness is never affected (Lemma
+    3.2), only the EMA warm-start."""
 
     def __init__(self, codec, compressor, rho: float, transport):
         _require_multihost(transport, "MultihostPackedAdaptive")
@@ -316,13 +474,26 @@ class MultihostPackedAdaptive:
         _require_one_worker(worker_grads)
         if state is None:
             state = self.init(tp.world, worker_grads.shape[1])
+        tel = obs.active()
         keys = jax.random.split(rng, tp.world)
         r = tp.rank
+        t0 = time.perf_counter() if tel.enabled else 0.0
         deltas = self.compressor.residual_norms(worker_grads[0])
         row = ladder_ema_update(state.ladder_ema[r], deltas, self.rho,
                                 state.step)
         probs = probs_from_ladder(row)
         enc = self.codec.encode(worker_grads[0], keys[r], probs=probs)
+        if tel.enabled:
+            name = getattr(self.codec, "name", "?")
+            tel.trace.complete("comm/encode", t0, pid=r, codec=name,
+                               impl=_codec_impl(self.codec))
+            if r != 0:   # rank 0 records every rank's draw in _serve_round
+                tel.mlmc.record_draw(name, enc.packet.header.level,
+                                     enc.packet.header.prob)
+            if tel.should_sample(f"ladder:{name}:{r}"):
+                tel.mlmc.record_ladder(name, r, np.asarray(row),
+                                       step=int(state.step))
+                tel.mlmc.record_expected(name, np.asarray(probs))
         direction, bits = _serve_round(tp, self.codec, enc.packet.to_bytes())
         new_state = state._replace(step=state.step + 1,
                                    ladder_ema=state.ladder_ema.at[r].set(row))
@@ -353,17 +524,25 @@ class PackedEF21:
         del rng  # the EF21 compressors (Top-k / sign) are deterministic
         if state is None:
             state = self.init(*worker_grads.shape)
+        tel = obs.active()
+        name, impl = getattr(self.codec, "name", "?"), _codec_impl(self.codec)
         target, mom = ef21_targets(state, worker_grads, self.beta)
         innovations = target - state.g_workers
         m = innovations.shape[0]
+        t0 = time.perf_counter() if tel.enabled else 0.0
         if _is_compiled(self.codec):
             packets_out = self.codec.encode_batch(innovations)
         else:
             packets_out = [self.codec.encode(innovations[i], None).packet
                            for i in range(m)]
+        if tel.enabled:
+            tel.trace.complete("comm/encode", t0, codec=name, impl=impl)
+            tel.observe("codec_encode_s", time.perf_counter() - t0,
+                        codec=name, impl=impl)
         delivered = self.transport.exchange(
             [p.to_bytes() for p in packets_out])
         packets = [Packet.from_bytes(b) for b in delivered]
+        t0 = time.perf_counter() if tel.enabled else 0.0
         if _is_compiled(self.codec):
             c = self.codec.decode_stack(packets)
         else:
@@ -371,6 +550,16 @@ class PackedEF21:
                            for p in packets])
         g_workers = state.g_workers + c
         g_server = state.g_server + jnp.mean(c, axis=0)
+        if tel.enabled:
+            tel.trace.complete("comm/decode_fold", t0, codec=name, impl=impl)
+            tel.observe("codec_decode_s", time.perf_counter() - t0,
+                        codec=name, impl=impl)
+            # innovation norms ||C(target_i - g_i)|| contract as the
+            # mirrors converge — the EF21 health signal
+            if tel.should_sample(f"innovation:{name}"):
+                tel.mlmc.record_innovation(
+                    name, np.asarray(jnp.linalg.norm(c, axis=1)),
+                    step=int(state.step))
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
         self.transport.broadcast(4 * self.codec.dim, m)
         new_state = state._replace(step=state.step + 1, g_workers=g_workers,
@@ -396,14 +585,14 @@ class MultihostPackedEF21:
     on non-server ranks (only rank 0 owns the full ``g_workers`` mirror —
     checkpoint on rank 0, like the launcher does).
 
-    Checkpoint caveat for ``beta < 1`` (EF21-SGDM): the MOMENTUM rows are
+    Checkpointing for ``beta < 1`` (EF21-SGDM): the MOMENTUM rows are
     client-side by construction — rank 0 cannot derive ``v_i`` from the
-    compressed innovation ``c_i`` — so a rank-0 checkpoint carries only
-    momentum row 0; a restored tcp world's other workers restart their
-    momentum EMA from their next gradient.  Plain EF21 (``beta = 1``) has
-    no momentum and its rank-0 state IS complete.  Shipping the momentum
-    rows on a STATE frame shares the ROADMAP follow-up with
-    `MultihostPackedAdaptive`'s ladder rows."""
+    compressed innovation ``c_i`` — so before saving,
+    `Trainer.sync_comm_state` gathers every rank's momentum row over the
+    STATE frame and folds them into rank 0's state, making the rank-0
+    checkpoint complete (same mechanism as `MultihostPackedAdaptive`'s
+    ladder rows).  Plain EF21 (``beta = 1``) has no momentum and its
+    rank-0 state is complete without the sync."""
 
     def __init__(self, codec: WireCodec, beta: float, transport):
         _require_multihost(transport, "MultihostPackedEF21")
@@ -423,16 +612,23 @@ class MultihostPackedEF21:
         if state is None:
             state = self.init(tp.world, worker_grads.shape[1])
         r = tp.rank
+        tel = obs.active()
+        name, impl = getattr(self.codec, "name", "?"), _codec_impl(self.codec)
         own = state._replace(g_workers=state.g_workers[r:r + 1],
                              momentum=state.momentum[r:r + 1])
         target, mom_r = ef21_targets(own, worker_grads, self.beta)
         innovation = (target - own.g_workers)[0]
+        t0 = time.perf_counter() if tel.enabled else 0.0
         enc = self.codec.encode(innovation, None)
         raw = enc.packet.to_bytes()
+        if tel.enabled:
+            tel.trace.complete("comm/encode", t0, pid=r, codec=name,
+                               impl=impl)
 
         if tp.rank == 0:
             # server: decode ALL innovations -> replicate the worker mirror
             # (each uplink's decode dispatches as its frame completes)
+            t0 = time.perf_counter() if tel.enabled else 0.0
             packets, rows = _drain_decoding(tp, self.codec, raw)
             if rows is not None:
                 c = jnp.stack(rows)
@@ -441,6 +637,13 @@ class MultihostPackedEF21:
                                for p in packets])
             g_workers = state.g_workers + c
             g_server = state.g_server + jnp.mean(c, axis=0)
+            if tel.enabled:
+                tel.trace.complete("comm/serve_round", t0, pid=0, codec=name,
+                                   impl=impl, world=tp.world)
+                if tel.should_sample(f"innovation:{name}"):
+                    tel.mlmc.record_innovation(
+                        name, np.asarray(jnp.linalg.norm(c, axis=1)),
+                        step=int(state.step))
             bits = float(sum(self.codec.measured_bits(p) for p in packets))
             tp.broadcast_payload(pack_direction(np.asarray(g_server), bits))
         else:
@@ -465,19 +668,26 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
                       k_fraction: float = 0.01, s: int = 1,
                       rtn_level: int = 4, qsgd_levels: int = 2,
                       momentum_beta: float = 0.1, fixed_levels: int = 24,
-                      ema_rho: float = 0.25, compiled: bool = True):
+                      ema_rho: float = 0.25, compiled: bool | None = None):
     """Build the packed-wire `Aggregator` for a registry name (the
     ``wire="packed"`` branch of `repro.core.aggregators.make_aggregator`).
 
-    ``compiled=True`` (default) routes every encode/decode through the
-    jit-compiled fast path (`repro.comm.compiled`): byte-identical packets,
-    but the per-worker eager op dispatch is replaced by one vmapped encode,
-    one device_get, and one fused decode+mean per step.  ``compiled=False``
-    keeps the original eager codecs (verification / A-B benchmarks)."""
+    ``compiled=None`` (default) picks the measured-faster pipeline per
+    codec (`repro.comm.compiled.default_compiled`): the jit-compiled fast
+    path for every codec except the EF21 family, whose compiled encode
+    benchmarks slower than the eager one.  ``compiled=True`` forces the
+    jit-compiled path — byte-identical packets, the per-worker eager op
+    dispatch replaced by one vmapped encode, one device_get, and one
+    fused decode+mean per step — and ``compiled=False`` forces the eager
+    codecs (verification / A-B benchmarks)."""
     from repro.core.aggregators import Aggregator
 
     codec_kw = dict(k_fraction=k_fraction, s=s, rtn_level=rtn_level,
                     qsgd_levels=qsgd_levels, fixed_levels=fixed_levels)
+    if compiled is None:
+        from repro.comm.compiled import default_compiled
+
+        compiled = default_compiled(name)
     if compiled:
         from repro.comm.compiled import make_compiled_codec
 

@@ -47,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +81,7 @@ from repro.core.adaptive import adaptive_probs
 from repro.core.bitwise import _BELOW_ONE, _fixed_scale
 from repro.core.types import categorical, opt_barrier, pin_rounding
 from repro.kernels.pack import fields_per_word, pack_bits, unpack_bits
+from repro.obs import trace as obs
 
 Array = jax.Array
 
@@ -238,6 +240,8 @@ class CompiledCodec:
         """All M workers through one vmapped jitted encode + ONE device_get
         (rare streams — dense MLMC fallbacks, exact-zero side channels —
         are fetched per affected row only)."""
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
         if keys is None:   # deterministic codecs (top-k innovations)
             keys = jnp.zeros((worker_grads.shape[0], 2), jnp.uint32)
         if probs is not None:
@@ -245,15 +249,26 @@ class CompiledCodec:
         else:
             lanes, bufs, _ = self._encode_fn(False)(worker_grads, keys)
         hot = [i for i, p in enumerate(self.plan) if not p.rare]
+        if tel.enabled:
+            tel.trace.complete("codec/encode_dispatch", t0, cat="codec",
+                               codec=self.name)
+            t0 = time.perf_counter()
         fetched = jax.device_get((lanes, [bufs[i] for i in hot]))
         lanes_np, hot_np = fetched
         hot_map = dict(zip(hot, hot_np))
+        if tel.enabled:
+            tel.trace.complete("codec/device_get", t0, cat="codec",
+                               codec=self.name)
+            t0 = time.perf_counter()
         packets = []
         for m in range(lanes_np.shape[0]):
             packets.append(self._finish_packet(
                 lanes_np[m],
                 lambda i, m=m: hot_map[i][m],
                 lambda i, m=m: self._fetch_rare(i, m, bufs, worker_grads)))
+        if tel.enabled:
+            tel.trace.complete("codec/frame_packets", t0, cat="codec",
+                               codec=self.name, packets=len(packets))
         return packets
 
     def encode(self, v: Array, rng, probs=None) -> EncodeResult:
@@ -336,6 +351,8 @@ class CompiledCodec:
         so back-to-back dispatches never alias: jax zero-copies aligned
         numpy buffers on CPU, and the tcp server decodes uplinks as they
         arrive without waiting on the previous dispatch."""
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
         sel = self._decode_sel_for(packet.header)
         lanes = self._lane_from_header(packet.header)[None]
         bufs = []
@@ -343,7 +360,11 @@ class CompiledCodec:
             b = np.zeros((1, self.plan[i].max_words), np.uint32)
             b[0, : s.words.size] = s.words
             bufs.append(b)
-        return self._decode_fn(sel, mean=False)(lanes, *bufs)[0]
+        out = self._decode_fn(sel, mean=False)(lanes, *bufs)[0]
+        if tel.enabled:
+            tel.trace.complete("codec/decode_dispatch", t0, cat="codec",
+                               codec=self.name)
+        return out
 
     def decode(self, packet: Packet) -> np.ndarray:
         """Eager-compatible decode (numpy out), via the jitted path."""
@@ -354,29 +375,41 @@ class CompiledCodec:
         staging.  Mixed stream variants (e.g. one worker's MLMC draw hit
         the dense fallback) fall back to per-packet decodes + the same
         mean, which keeps the result elementwise identical."""
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
         sels = {self._decode_sel_for(p.header) for p in packets}
         if len(sels) != 1:
             rows = jnp.stack([self.decode_device(p) for p in packets])
-            return jnp.mean(rows, axis=0)
-        sel = sels.pop()
-        with self._stage_lock:
-            lanes, bufs = self._stage_packets(packets, sel)
-            out = self._decode_fn(sel, mean=True)(lanes, *bufs)
-            self._inflight[(len(packets), sel)] = out
+            out = jnp.mean(rows, axis=0)
+        else:
+            sel = sels.pop()
+            with self._stage_lock:
+                lanes, bufs = self._stage_packets(packets, sel)
+                out = self._decode_fn(sel, mean=True)(lanes, *bufs)
+                self._inflight[(len(packets), sel)] = out
+        if tel.enabled:
+            tel.trace.complete("codec/decode_mean", t0, cat="codec",
+                               codec=self.name, packets=len(packets))
         return out
 
     def decode_stack(self, packets: list[Packet]) -> Array:
         """All packets' estimates as one (M, d) device array (one jit when
         the packets share a stream variant) — the EF21 server fold needs
         every worker's innovation, not just their mean."""
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
         sels = {self._decode_sel_for(p.header) for p in packets}
         if len(sels) != 1:
-            return jnp.stack([self.decode_device(p) for p in packets])
-        sel = sels.pop()
-        with self._stage_lock:
-            lanes, bufs = self._stage_packets(packets, sel)
-            out = self._decode_fn(sel, mean=False)(lanes, *bufs)
-            self._inflight[(len(packets), sel)] = out
+            out = jnp.stack([self.decode_device(p) for p in packets])
+        else:
+            sel = sels.pop()
+            with self._stage_lock:
+                lanes, bufs = self._stage_packets(packets, sel)
+                out = self._decode_fn(sel, mean=False)(lanes, *bufs)
+                self._inflight[(len(packets), sel)] = out
+        if tel.enabled:
+            tel.trace.complete("codec/decode_stack", t0, cat="codec",
+                               codec=self.name, packets=len(packets))
         return out
 
     # ---- shared bit accounting (the packets are the same bytes) ------------
@@ -1049,6 +1082,23 @@ _BY_EAGER = {
     "MLMCFloatCodec": CompiledMLMCFloat,
     "MLMCRTNCodec": CompiledMLMCRTN,
 }
+
+
+#: Registry names whose COMPILED encode measured SLOWER than the eager
+#: codec (``BENCH_wire.json`` "codec_us"): the EF21 innovation encode is
+#: 224ms compiled vs 180ms eager at the small size and 1.08s vs 0.92s at
+#: the wide size (its deterministic top-k has no per-level jit work to
+#: amortize the staging round-trip).  `default_compiled` routes these to
+#: the eager variant when the caller leaves ``compiled=None``; the bytes
+#: are identical either way, so this is purely a latency default.  An
+#: explicit ``compiled=True/False`` always wins.
+COMPILED_DEFAULT_OFF = frozenset({"ef21", "ef21_sgdm"})
+
+
+def default_compiled(name: str) -> bool:
+    """The measured-faster pipeline for a registry name: True = compiled
+    (every codec except `COMPILED_DEFAULT_OFF`)."""
+    return name not in COMPILED_DEFAULT_OFF
 
 
 def compile_codec(eager: WireCodec):

@@ -19,6 +19,10 @@ Frame protocol (all little-endian, append-only like the packet header):
 * ``PAYLOAD``   worker -> server, one serialized `Packet` per round.
 * ``DIRECTION`` server -> workers, the aggregated direction blob
   (see `repro.comm.aggregate`).
+* ``STATE``     worker -> server, one rank's client-side `CommState` rows
+  (`repro.comm.aggregate.pack_comm_state_row`), gathered by
+  `gather_state` at checkpoint time so a rank-0 checkpoint captures
+  every rank's EMA ladder / momentum rows.
 
 Stats semantics (cross-transport comparability is the point):
 
@@ -43,6 +47,7 @@ import struct
 import time
 
 from repro.comm.transport import TransportStats
+from repro.obs import trace as obs
 
 FRAME_MAGIC = b"RCMH"
 _FRAME_FMT = "<4sBBHI"                 # magic, type, rank, world, payload len
@@ -51,6 +56,7 @@ FRAME_HEADER_BYTES = struct.calcsize(_FRAME_FMT)   # 12
 #: frame types (append-only)
 HELLO, WELCOME, GOODBYE, PAYLOAD, DIRECTION = 1, 2, 3, 4, 5
 SCALAR, SCALAR_MEAN = 6, 7     # loss-telemetry allreduce (8-byte f64)
+STATE = 8                      # checkpoint gather of client CommState rows
 
 #: a real worker HELLOs immediately after connecting; give a stray peer
 #: (port scanner, health check) at most this long before refusing it
@@ -206,6 +212,10 @@ class TcpStarTransport:
         #: COMPLETED on the server (fan-in observability; regression surface
         #: for the selectors reactor — a slow rank lands last, not first)
         self.last_arrival_order: list[int] = []
+        # per-round fan-in timing (server): round start + completion lags,
+        # feeding the straggler timeline in `repro.obs`
+        self._round_t0 = 0.0
+        self._round_lags: list[float] = []
 
     # ---- construction ------------------------------------------------------
 
@@ -373,9 +383,12 @@ class TcpStarTransport:
         t0 = time.perf_counter()
         self.stats.rounds += 1
         local = payloads[0]
+        tel = obs.active()
         if self.is_server:
             out: list[bytes | None] = [local] + [None] * (self.world - 1)
             self.last_arrival_order = []
+            self._round_t0 = t0
+            self._round_lags = []
             if on_payload is not None:
                 on_payload(0, local)
             pending = set(self._conns)
@@ -403,11 +416,27 @@ class TcpStarTransport:
                             sel.unregister(key.fileobj)
             self.stats.bytes_up += sum(len(p) for p in out)
             self.stats.wall_time_s += time.perf_counter() - t0
+            if tel.enabled:
+                # fan-in straggler skew: first to last uplink completion
+                lags = self._round_lags
+                tel.trace.complete(
+                    "wire/exchange", t0, cat="wire", pid=0,
+                    nbytes=sum(len(p) for p in out),
+                    arrival_order=list(self.last_arrival_order),
+                    fanin_skew_s=(max(lags) - min(lags)) if lags else 0.0)
+                if lags:
+                    tel.observe("wire_fanin_skew_s", max(lags) - min(lags),
+                                transport="tcp")
             return out
         sent = send_frame(self._sock, PAYLOAD, self.rank, self.world, local)
         self.stats.bytes_up += len(local)
         self.stats.wire_bytes += sent
         self.stats.wall_time_s += time.perf_counter() - t0
+        if tel.enabled:
+            tel.trace.complete("wire/exchange", t0, cat="wire",
+                               pid=self.rank, nbytes=len(local))
+            tel.count("wire_bytes_up", sent, transport="tcp",
+                      link=f"rank{self.rank}")
         return []
 
     def _finish_payload(self, out: list, r: int, frame,
@@ -425,6 +454,18 @@ class TcpStarTransport:
         out[r] = data
         self.last_arrival_order.append(r)
         self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
+        tel = obs.active()
+        if tel.enabled:
+            # one instant per completed uplink: the straggler timeline
+            lag = time.perf_counter() - self._round_t0
+            self._round_lags.append(lag)
+            tel.instant("wire/frame_arrival", cat="wire", pid=0,
+                        rank=r, nbytes=len(data),
+                        arrival_index=len(self.last_arrival_order) - 1,
+                        lag_s=lag)
+            tel.observe("wire_arrival_lag_s", lag, link=f"rank{r}")
+            tel.count("wire_bytes_up", FRAME_HEADER_BYTES + len(data),
+                      transport="tcp", link=f"rank{r}")
         if on_payload is not None:
             on_payload(r, data)
 
@@ -437,6 +478,7 @@ class TcpStarTransport:
         included, so it runs slightly above loopback's modeled bare
         ``4 * dim`` update; ``wire_bytes`` counts socket bytes only."""
         t0 = time.perf_counter()
+        tel = obs.active()
         if self.is_server:
             if data is None:
                 raise ValueError("rank 0 must provide the broadcast payload")
@@ -445,11 +487,21 @@ class TcpStarTransport:
                     self._conns[r], DIRECTION, 0, self.world, data)
             self.stats.bytes_down += len(data) * self.world
             self.stats.wall_time_s += time.perf_counter() - t0
+            if tel.enabled:
+                tel.trace.complete("wire/broadcast", t0, cat="wire", pid=0,
+                                   nbytes=len(data) * self.world)
+                tel.count("wire_bytes_down", len(data) * self.world,
+                          transport="tcp", link="all")
             return data
         _, _, _, data = recv_frame(self._sock, expect=DIRECTION)
         self.stats.bytes_down += len(data)
         self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
         self.stats.wall_time_s += time.perf_counter() - t0
+        if tel.enabled:
+            tel.trace.complete("wire/broadcast", t0, cat="wire",
+                               pid=self.rank, nbytes=len(data))
+            tel.count("wire_bytes_down", FRAME_HEADER_BYTES + len(data),
+                      transport="tcp", link=f"rank{self.rank}")
         return data
 
     def broadcast(self, nbytes: int, workers: int) -> None:
@@ -485,6 +537,28 @@ class TcpStarTransport:
             mean = struct.unpack("<d", data)[0]
         self.stats.wall_time_s += time.perf_counter() - t0
         return mean
+
+    def gather_state(self, payload: bytes) -> list[bytes]:
+        """Checkpoint-time gather: every rank ships one STATE frame (its
+        client-side `CommState` rows); rank 0 returns all ``world``
+        payloads in rank order, workers return ``[]``.  Runs between
+        training rounds over the same buffered links as the SCALAR frames
+        (a worker may have pipelined frames ahead of it), so it needs no
+        barrier of its own.  Booked in ``wire_bytes`` only — checkpoint
+        plumbing, not gradient payload."""
+        t0 = time.perf_counter()
+        if self.is_server:
+            out: list[bytes | None] = [payload] + [None] * (self.world - 1)
+            for r in sorted(self._conns):
+                _, _, _, data = self._buffered_frame_from(r, STATE)
+                out[r] = data
+                self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
+            self.stats.wall_time_s += time.perf_counter() - t0
+            return out
+        self.stats.wire_bytes += send_frame(
+            self._sock, STATE, self.rank, self.world, payload)
+        self.stats.wall_time_s += time.perf_counter() - t0
+        return []
 
     # ---- lifecycle ---------------------------------------------------------
 

@@ -18,9 +18,11 @@ transports), so a real network backend only has to implement `exchange`.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Protocol, runtime_checkable
 
 from repro.comm.topology import CostModel, Topology, make_topology
+from repro.obs import trace as obs
 
 
 @dataclasses.dataclass
@@ -70,18 +72,26 @@ class LoopbackTransport:
 
     def exchange(self, payloads: list[bytes],
                  on_payload=None) -> list[bytes]:
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
+        total = sum(len(p) for p in payloads)
         self.stats.rounds += 1
-        self.stats.bytes_up += sum(len(p) for p in payloads)
-        self.stats.wire_bytes += sum(len(p) for p in payloads)
+        self.stats.bytes_up += total
+        self.stats.wire_bytes += total
         if on_payload is not None:
             for i, pay in enumerate(payloads):
                 on_payload(i, pay)
+        if tel.enabled:
+            tel.trace.complete("wire/exchange", t0, cat="wire",
+                               nbytes=total, transport="loopback")
+            tel.count("wire_bytes_up", total, transport="loopback")
         return list(payloads)
 
     def broadcast(self, nbytes: int, workers: int) -> None:
         total = nbytes * workers
         self.stats.bytes_down += total
         self.stats.wire_bytes += total
+        obs.active().count("wire_bytes_down", total, transport="loopback")
 
 
 @dataclasses.dataclass
@@ -94,11 +104,18 @@ class SimulatedTransport:
 
     def exchange(self, payloads: list[bytes],
                  on_payload=None) -> list[bytes]:
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
         sizes = [len(p) for p in payloads]
         self.stats.observe(sizes, self.topology, self.cost)
         if on_payload is not None:
             for i, pay in enumerate(payloads):
                 on_payload(i, pay)
+        if tel.enabled:
+            name = type(self.topology).__name__
+            tel.trace.complete("wire/exchange", t0, cat="wire",
+                               nbytes=sum(sizes), transport=name)
+            tel.count("wire_bytes_up", sum(sizes), transport=name)
         return list(payloads)
 
     def broadcast(self, nbytes: int, workers: int) -> None:
@@ -107,6 +124,8 @@ class SimulatedTransport:
         self.stats.wire_bytes += total
         # mirror the uplink incast: all W copies leave one server egress NIC
         self.stats.sim_time_s += self.cost.xfer_time(total, messages=1)
+        obs.active().count("wire_bytes_down", total,
+                           transport=type(self.topology).__name__)
 
 
 def _reject_unused(name: str, kw: dict) -> None:

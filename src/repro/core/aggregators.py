@@ -168,7 +168,7 @@ def make_aggregator(
     ema_rho: float = 0.25,
     wire: str = "abstract",
     transport=None,
-    compiled: bool = True,
+    compiled: bool | None = None,
 ) -> Aggregator:
     """Build an aggregator for gradients of flat dimension ``dim``.
 
@@ -192,9 +192,12 @@ def make_aggregator(
     ``mlmc_adaptive_*`` family (1.0 = per-sample Lemma 3.4).
 
     ``compiled`` (packed wire only) selects the jit-compiled codec fast
-    path (`repro.comm.compiled`, default) vs the original eager codecs —
-    byte-identical packets either way; the flag exists for verification
-    and A-B wire benchmarks (`benchmarks/bench_wire.py`).
+    path (`repro.comm.compiled`) vs the original eager codecs — None
+    (default) picks the measured-faster pipeline per codec
+    (`repro.comm.compiled.default_compiled`: compiled for everything but
+    the EF21 family).  Byte-identical packets either way; the explicit
+    flag exists for verification and A-B wire benchmarks
+    (`benchmarks/bench_wire.py`).
     """
     if wire == "packed":
         from repro.comm import packed_aggregator

@@ -25,12 +25,62 @@ import sys
 from repro.comm.multihost import MAX_WORLD, pick_free_port
 
 
+def _pop_flag(args: list[str], flag: str) -> tuple[str, list[str]]:
+    """Remove ``flag value`` / ``flag=value`` from ``args``; return
+    (value, remaining) — value is "" when the flag is absent."""
+    out, value, i = [], "", 0
+    while i < len(args):
+        a = args[i]
+        if a == flag and i + 1 < len(args):
+            value = args[i + 1]
+            i += 2
+            continue
+        if a.startswith(flag + "="):
+            value = a.split("=", 1)[1]
+            i += 1
+            continue
+        out.append(a)
+        i += 1
+    return value, out
+
+
+def _rank_trace_path(base: str, rank: int) -> str:
+    root, ext = os.path.splitext(base)
+    return f"{root}.rank{rank}{ext or '.jsonl'}"
+
+
+def _merge_traces(world: int, trace: str, perfetto: str) -> None:
+    """Fold the per-rank JSONL logs into the user-requested artifacts:
+    one merged, ts-sorted JSONL and/or one Chrome trace JSON with a
+    Perfetto track per rank."""
+    from repro.obs import export
+
+    base = trace or perfetto
+    per_rank = [_rank_trace_path(base, r) for r in range(world)]
+    events = export.merge_events(
+        *(export.read_jsonl(p) for p in per_rank if os.path.exists(p)))
+    if trace:
+        n = export.write_jsonl(trace, events)
+        print(f"multihost: merged {n} events from {world} ranks -> {trace}")
+    if perfetto:
+        names = {r: f"rank {r}" + (" (server)" if r == 0 else "")
+                 for r in range(world)}
+        n = export.write_chrome_trace(perfetto, events, process_names=names)
+        print(f"multihost: {n} trace events -> {perfetto} "
+              "(open in https://ui.perfetto.dev)")
+
+
 def launch_world(world: int, train_args: list[str], *,
                  coordinator: str | None = None) -> int:
     """Spawn ``world`` ranks of `repro.launch.train`; returns the first
     nonzero exit code (0 if all ranks succeeded).  A failing rank tears
     the remaining ones down rather than leaving them blocked on a dead
-    socket."""
+    socket.
+
+    ``--trace``/``--trace-perfetto`` in the forwarded args are rewritten
+    to per-rank JSONL logs (``out.rankR.jsonl``) and merged into the
+    requested artifact(s) after all ranks exit 0 — the Perfetto view then
+    shows one track per rank with the server's fan-in on track 0."""
     if not 2 <= world <= MAX_WORLD:
         raise ValueError(f"world must be in [2, {MAX_WORLD}], got {world}")
     reserved = {"--rank", "--world", "--coordinator", "--transport",
@@ -39,6 +89,8 @@ def launch_world(world: int, train_args: list[str], *,
         if arg.split("=", 1)[0] in reserved:
             raise ValueError(f"{arg!r} is set by the launcher; drop it from "
                              "the forwarded args")
+    trace, train_args = _pop_flag(train_args, "--trace")
+    perfetto, train_args = _pop_flag(train_args, "--trace-perfetto")
     coordinator = coordinator or f"127.0.0.1:{pick_free_port()}"
     env = dict(os.environ)
     # make `-m repro.launch.train` importable in the children no matter how
@@ -54,12 +106,17 @@ def launch_world(world: int, train_args: list[str], *,
                    "--wire", "packed", "--transport", "tcp",
                    "--rank", str(rank), "--world", str(world),
                    "--coordinator", coordinator, *train_args]
+            if trace or perfetto:
+                cmd += ["--trace",
+                        _rank_trace_path(trace or perfetto, rank)]
             procs.append(subprocess.Popen(cmd, env=env))
         rc = 0
         for p in procs:
             rc = rc or p.wait()
             if rc:
                 break
+        if rc == 0 and (trace or perfetto):
+            _merge_traces(world, trace, perfetto)
         return rc
     finally:
         for p in procs:

@@ -74,6 +74,18 @@ def main() -> None:
     ap.add_argument("--mesh-shape", default="1,2,2",
                     help="mesh-mode pod,data,model sizes")
     ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--trace", default="",
+                    help="record comm-stack telemetry (spans, wire "
+                         "metrics, MLMC estimator telemetry) to this "
+                         "JSONL event log (sim mode)")
+    ap.add_argument("--trace-perfetto", default="",
+                    help="additionally write the Chrome trace-event JSON "
+                         "(open in https://ui.perfetto.dev or "
+                         "chrome://tracing; one track per rank)")
+    ap.add_argument("--trace-sample-every", type=int, default=10,
+                    help="sampling period of the expensive estimator "
+                         "metrics (ladder rows, innovation norms, bias "
+                         "proxy); spans/counters are never sampled")
     args = ap.parse_args()
 
     import jax
@@ -122,10 +134,17 @@ def main() -> None:
             print(f"note: --transport {args.transport} has no effect with "
                   f"--wire {args.wire} (only --wire packed ships host "
                   "bytes through a Transport)")
+        telemetry = None
+        if args.trace or args.trace_perfetto:
+            from repro import obs
+
+            telemetry = obs.Telemetry(
+                rank=rank, sample_every=args.trace_sample_every)
         trainer = Trainer(loss_fn, params, num_workers=args.workers,
                           method=args.method, optimizer=sgd(args.lr),
                           k_fraction=args.k_fraction, ema_rho=args.ema_rho,
-                          wire=args.wire, transport=transport)
+                          wire=args.wire, transport=transport,
+                          telemetry=telemetry)
         who = (f" rank={rank}/{args.workers}"
                if transport is not None and args.transport == "tcp" else "")
         print(f"sim: {cfg.name} M={args.workers} method={args.method} "
@@ -142,20 +161,41 @@ def main() -> None:
             print(f"wire: {st.rounds} rounds, {st.bytes_up/1e6:.3f} MB up, "
                   f"{st.bytes_down/1e6:.3f} MB down, {clock} "
                   f"({args.transport})")
-            if hasattr(transport, "close"):
-                transport.close()
-        if args.checkpoint and rank != 0:
-            print("note: --checkpoint skipped on worker ranks (params are "
-                  "identical; rank 0 writes — it holds the FULL g_workers "
-                  "mirror for ef21/ef21_sgdm, but only its own rows of "
-                  "the mlmc_adaptive_* EMA ladder and the ef21_sgdm "
-                  "momentum: restored tcp workers re-seed those rows)")
-        elif args.checkpoint:
-            # one bundle: params + opt_state + CommState, so stateful runs
-            # (EF21 mirrors, adaptive EMA ladders) resume exactly
-            trainer.save_checkpoint(args.checkpoint,
-                                    {"arch": cfg.name, "steps": args.steps})
-            print(f"checkpoint -> {args.checkpoint}")
+        if args.checkpoint:
+            # STATE-frame collective: gather every rank's client-side
+            # CommState rows to rank 0 so the bundle is complete (a no-op
+            # off tcp); EVERY rank participates, then rank 0 writes
+            trainer.sync_comm_state()
+            if rank != 0:
+                print("note: --checkpoint written by rank 0 only (params "
+                      "are identical; this rank shipped its CommState rows "
+                      "on the STATE frame, so the rank-0 bundle restores "
+                      "the whole world)")
+            else:
+                # one bundle: params + opt_state + CommState, so stateful
+                # runs (EF21 mirrors, adaptive EMA ladders) resume exactly
+                trainer.save_checkpoint(
+                    args.checkpoint, {"arch": cfg.name, "steps": args.steps})
+                print(f"checkpoint -> {args.checkpoint}")
+        if transport is not None and hasattr(transport, "close"):
+            transport.close()
+        if telemetry is not None:
+            from repro import obs
+
+            if args.trace:
+                n = obs.export.write_jsonl(args.trace, telemetry)
+                print(f"trace: {n} events -> {args.trace}")
+            if args.trace_perfetto:
+                n = obs.export.write_chrome_trace(
+                    args.trace_perfetto, telemetry)
+                print(f"trace: {n} trace events -> {args.trace_perfetto} "
+                      "(open in https://ui.perfetto.dev)")
+            bias = {m: e["bias_proxy"]
+                    for m, e in telemetry.mlmc.summary().items()
+                    if "bias_proxy" in e}
+            if bias:
+                print(f"bias proxy (||mean dir - mean dense||/||mean "
+                      f"dense||): {bias}")
         return
 
     # --- mesh mode ---------------------------------------------------------

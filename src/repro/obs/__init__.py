@@ -1,0 +1,52 @@
+"""repro.obs — end-to-end comm-stack telemetry.
+
+Spans + counters + MLMC estimator metrics, recorded host-side with zero
+effect on jit lowering, exported as JSONL / Chrome trace (Perfetto) /
+Prometheus text.
+
+Typical use::
+
+    from repro import obs
+
+    tel = obs.Telemetry(rank=0)
+    obs.install(tel)                    # Trainer(telemetry=tel) does this
+    ...
+    obs.export.write_jsonl("run.jsonl", tel)
+    obs.export.write_chrome_trace("run.json", tel)
+
+Instrumented call sites go through ``obs.active()`` — a disabled
+singleton until something installs a bundle, so an uninstrumented run
+pays two attribute loads per site and records nothing.
+"""
+
+from repro.obs import export
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    MLMCTelemetry,
+)
+from repro.obs.trace import (
+    DEFAULT_SAMPLE_EVERY,
+    SpanRecorder,
+    Telemetry,
+    active,
+    enabled,
+    install,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "MLMCTelemetry",
+    "SpanRecorder",
+    "Telemetry",
+    "DEFAULT_SAMPLE_EVERY",
+    "active",
+    "enabled",
+    "install",
+    "export",
+]

@@ -1,0 +1,255 @@
+"""Exporters for recorded telemetry: JSONL, Chrome trace JSON, Prometheus.
+
+* `write_jsonl` — one JSON object per line, each a Chrome-trace-shaped
+  event (`repro.obs.trace` buffers them in that shape already); a final
+  ``ph="M"`` metadata event named ``repro_summary`` carries the metric
+  snapshot and the MLMC estimator roll-up.
+* `chrome_trace` / `write_chrome_trace` — the Perfetto-viewable JSON
+  (``{"traceEvents": [...]}``): one *process* track per rank (``pid`` =
+  rank, labeled via ``process_name`` metadata), threads as sub-tracks,
+  encode/serialize/socket/decode/aggregate spans as nested slices.
+* `prometheus_text` — text-format dump of the `MetricsRegistry`.
+* `validate_events` — checks events against the checked-in JSON schema
+  (``trace_schema.json``, an append-only surface like the golden
+  packets).  The validator is a deliberately tiny local subset of JSON
+  Schema — the container must not need a jsonschema dependency.
+
+The module doubles as a CLI (used by CI and the multihost launcher)::
+
+    python -m repro.obs.export run.rank0.jsonl run.rank1.jsonl \
+        --jsonl merged.jsonl --perfetto run.json --validate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+#: the checked-in trace-event schema (append-only surface)
+SCHEMA_PATH = os.path.join(os.path.dirname(__file__), "trace_schema.json")
+
+
+def load_schema() -> dict:
+    with open(SCHEMA_PATH, encoding="utf-8") as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# event assembly
+# ---------------------------------------------------------------------------
+
+
+def summary_event(telemetry) -> dict:
+    """The trailing metadata event bundling metrics + MLMC telemetry."""
+    return {"ph": "M", "name": "repro_summary", "cat": "meta",
+            "ts": telemetry.trace.now_us(), "pid": telemetry.rank, "tid": 0,
+            "args": {"metrics": telemetry.metrics.snapshot(),
+                     "mlmc": telemetry.mlmc.summary(),
+                     "dropped_events": telemetry.trace.dropped}}
+
+
+def telemetry_events(telemetry) -> list[dict]:
+    """All buffered events + the summary metadata event."""
+    return telemetry.trace.events() + [summary_event(telemetry)]
+
+
+# ---------------------------------------------------------------------------
+# JSONL
+# ---------------------------------------------------------------------------
+
+
+def write_jsonl(path, events) -> int:
+    """One event per line; accepts a `Telemetry` or an event list.
+    Returns the number of events written."""
+    if not isinstance(events, list):
+        events = telemetry_events(events)
+    with open(path, "w", encoding="utf-8") as f:
+        for ev in events:
+            f.write(json.dumps(ev, separators=(",", ":")) + "\n")
+    return len(events)
+
+
+def read_jsonl(path) -> list[dict]:
+    out = []
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: not JSON: {e}") from e
+    return out
+
+
+def merge_events(*event_lists) -> list[dict]:
+    """Concatenate per-rank event lists into one timeline (stable
+    ts-sort; every event already carries its own pid = rank)."""
+    merged = [ev for evs in event_lists for ev in evs]
+    merged.sort(key=lambda ev: ev.get("ts", 0.0))
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace JSON (Perfetto / chrome://tracing)
+# ---------------------------------------------------------------------------
+
+
+def chrome_trace(events, *, process_names: dict[int, str] | None = None) -> dict:
+    """Wrap events in the Chrome trace-event container, prepending
+    ``process_name`` metadata so each rank renders as a named track."""
+    if not isinstance(events, list):
+        events = telemetry_events(events)
+    pids = sorted({int(ev.get("pid", 0)) for ev in events})
+    names = process_names or {}
+    meta = [{"ph": "M", "name": "process_name", "pid": p, "tid": 0, "ts": 0,
+             "args": {"name": names.get(p, f"rank {p}")}} for p in pids]
+    meta += [{"ph": "M", "name": "process_sort_index", "pid": p, "tid": 0,
+              "ts": 0, "args": {"sort_index": p}} for p in pids]
+    return {"traceEvents": meta + list(events), "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path, events, *,
+                       process_names: dict[int, str] | None = None) -> int:
+    doc = chrome_trace(events, process_names=process_names)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, separators=(",", ":"))
+    return len(doc["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text format
+# ---------------------------------------------------------------------------
+
+
+def _prom_name(name: str) -> str:
+    return "repro_" + "".join(c if c.isalnum() or c == "_" else "_"
+                              for c in name)
+
+
+def _prom_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def prometheus_text(metrics_or_telemetry) -> str:
+    """Prometheus exposition-format dump of a `MetricsRegistry` snapshot
+    (or the registry inside a `Telemetry`)."""
+    snap = metrics_or_telemetry
+    if hasattr(snap, "metrics"):
+        snap = snap.metrics
+    if hasattr(snap, "snapshot"):
+        snap = snap.snapshot()
+    lines, typed = [], set()
+    for m in snap:
+        name = _prom_name(m["name"])
+        if name not in typed:
+            lines.append(f"# TYPE {name} {m['kind']}")
+            typed.add(name)
+        if m["kind"] == "histogram":
+            cum = 0
+            for bound, c in zip(m["buckets"] + [float("inf")], m["counts"]):
+                cum += c
+                lb = dict(m["labels"], le=("+Inf" if bound == float("inf")
+                                           else repr(bound)))
+                lines.append(f"{name}_bucket{_prom_labels(lb)} {cum}")
+            lines.append(f"{name}_sum{_prom_labels(m['labels'])} {m['sum']}")
+            lines.append(f"{name}_count{_prom_labels(m['labels'])} "
+                         f"{m['count']}")
+        else:
+            lines.append(f"{name}{_prom_labels(m['labels'])} {m['value']}")
+    return "\n".join(lines) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# schema validation (tiny local JSON-Schema subset — no dependency)
+# ---------------------------------------------------------------------------
+
+_TYPES = {"object": dict, "array": list, "string": str, "boolean": bool,
+          "number": (int, float), "integer": int}
+
+
+def _check(value, schema: dict, path: str, errors: list[str]) -> None:
+    t = schema.get("type")
+    if t is not None:
+        py = _TYPES[t]
+        ok = isinstance(value, py) and not (
+            t in ("number", "integer") and isinstance(value, bool))
+        if t == "number":
+            ok = ok or (isinstance(value, int) and not isinstance(value, bool))
+        if not ok:
+            errors.append(f"{path}: expected {t}, got "
+                          f"{type(value).__name__}")
+            return
+    if "enum" in schema and value not in schema["enum"]:
+        errors.append(f"{path}: {value!r} not in {schema['enum']}")
+    if t == "object":
+        for req in schema.get("required", ()):
+            if req not in value:
+                errors.append(f"{path}: missing required field {req!r}")
+        for k, sub in schema.get("properties", {}).items():
+            if k in value:
+                _check(value[k], sub, f"{path}.{k}", errors)
+
+
+def validate_events(events, schema: dict | None = None) -> list[str]:
+    """Validate each event against the trace-event schema; returns the
+    list of violations (empty = valid)."""
+    schema = schema or load_schema()
+    errors: list[str] = []
+    for i, ev in enumerate(events):
+        _check(ev, schema, f"event[{i}]", errors)
+    return errors
+
+
+# ---------------------------------------------------------------------------
+# CLI — merge / validate / convert (used by CI and the multihost launcher)
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.export",
+        description="merge, validate, and convert recorded JSONL traces")
+    ap.add_argument("inputs", nargs="+", help="JSONL trace file(s)")
+    ap.add_argument("--jsonl", default="", help="write merged JSONL here")
+    ap.add_argument("--perfetto", default="",
+                    help="write Chrome trace-event JSON here")
+    ap.add_argument("--prometheus", default="",
+                    help="write a Prometheus text dump of the summary "
+                         "metrics here")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate every event against the checked-in "
+                         "schema (exit 1 on violation)")
+    args = ap.parse_args(argv)
+    events = merge_events(*[read_jsonl(p) for p in args.inputs])
+    print(f"obs.export: {len(events)} events from {len(args.inputs)} file(s)")
+    if args.validate:
+        errors = validate_events(events)
+        for e in errors[:20]:
+            print(f"  SCHEMA {e}")
+        if errors:
+            raise SystemExit(f"obs.export: {len(errors)} schema violations")
+        print("obs.export: schema OK")
+    if args.jsonl:
+        write_jsonl(args.jsonl, events)
+        print(f"obs.export: wrote {args.jsonl}")
+    if args.perfetto:
+        n = write_chrome_trace(args.perfetto, events)
+        print(f"obs.export: wrote {args.perfetto} ({n} trace events)")
+    if args.prometheus:
+        metrics = []
+        for ev in events:
+            if ev.get("ph") == "M" and ev.get("name") == "repro_summary":
+                metrics.extend(ev.get("args", {}).get("metrics", []))
+        with open(args.prometheus, "w", encoding="utf-8") as f:
+            f.write(prometheus_text(metrics))
+        print(f"obs.export: wrote {args.prometheus}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""Counters, gauges, histograms — plus the MLMC estimator telemetry.
+
+Two halves:
+
+* `MetricsRegistry` — generic labeled counters/gauges/histograms for the
+  comm stack: wire bytes up/down per link, encode/decode latency per
+  codec, step wall time.  Prometheus-flavoured naming, exported by
+  `repro.obs.export.prometheus_text`.
+* `MLMCTelemetry` — the paper-specific estimator metrics: per-step
+  level-draw histograms vs the theoretical ``p_l`` ladder (Lemma 3.3 /
+  3.4), adaptive EMA residual-norm trajectories, EF21 innovation norms,
+  and a running empirical-mean-vs-dense-gradient bias proxy (the
+  quantity Lemma 3.2 says converges to zero for MLMC and does NOT for
+  plain biased compressors).
+
+Everything here is pure host-side Python over numpy scalars/arrays — no
+jax ops, so recording can never add a jit lowering (the retrace-guard
+tests in ``tests/test_obs.py`` pin this down).  All containers are
+thread-safe (the tcp server thread and the trainer thread both record)
+and bounded (trajectory deques), so a long run cannot grow without
+limit.
+"""
+
+from __future__ import annotations
+
+import bisect
+import threading
+from collections import deque
+
+import numpy as np
+
+#: default histogram buckets for latencies in SECONDS (10us .. 10s)
+DEFAULT_LATENCY_BUCKETS = (
+    1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0, 3.0, 10.0)
+
+#: default buckets for byte sizes (64B .. 256MB)
+DEFAULT_BYTES_BUCKETS = tuple(float(64 * 4 ** i) for i in range(12))
+
+#: bounded length of every trajectory deque (ladders, innovations, ...)
+TRAJECTORY_MAXLEN = 4096
+
+
+class Counter:
+    """Monotone float counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def add(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Gauge:
+    """Last-value-wins gauge."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Fixed-bucket histogram (cumulative counts at export time, like
+    Prometheus; stored as per-bucket counts internally)."""
+
+    __slots__ = ("bounds", "counts", "total", "n")
+
+    def __init__(self, bounds=DEFAULT_LATENCY_BUCKETS):
+        self.bounds = tuple(float(b) for b in bounds)
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.total = 0.0
+        self.n = 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.counts[bisect.bisect_left(self.bounds, v)] += 1
+        self.total += v
+        self.n += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class MetricsRegistry:
+    """Thread-safe (name, labels) -> metric store.
+
+    ``registry.counter("wire_bytes_up", transport="tcp").add(n)`` — the
+    metric is created on first touch, like prometheus_client, so call
+    sites never pre-declare anything."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict[tuple, tuple[str, str, dict, object]] = {}
+
+    def _get(self, kind: str, cls, name: str, labels: dict, *args):
+        key = (kind, name, _label_key(labels))
+        with self._lock:
+            hit = self._metrics.get(key)
+            if hit is None:
+                hit = (kind, name, dict(labels), cls(*args))
+                self._metrics[key] = hit
+            return hit[3]
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", Gauge, name, labels)
+
+    def histogram(self, name: str, *, buckets=DEFAULT_LATENCY_BUCKETS,
+                  **labels) -> Histogram:
+        return self._get("histogram", Histogram, name, labels, buckets)
+
+    def snapshot(self) -> list[dict]:
+        """Export view: one dict per metric, JSON-serializable."""
+        with self._lock:
+            items = list(self._metrics.values())
+        out = []
+        for kind, name, labels, m in items:
+            d = {"kind": kind, "name": name, "labels": labels}
+            if kind == "histogram":
+                d.update(buckets=list(m.bounds), counts=list(m.counts),
+                         sum=m.total, count=m.n)
+            else:
+                d["value"] = m.value
+            out.append(d)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# MLMC estimator telemetry
+# ---------------------------------------------------------------------------
+
+
+class MLMCTelemetry:
+    """Estimator-level telemetry for the paper's statistical claims.
+
+    * ``record_draw`` — every shipped MLMC packet's sampled level (and the
+      ``p_l`` it was drawn with); ``level_histogram`` folds these into the
+      empirical level distribution to compare against the theoretical
+      ladder (``record_expected``, from ``compressor.static_probs()`` or
+      the adaptive per-sample distribution).
+    * ``record_ladder`` — the Alg.-3 EMA residual-norm row of one worker
+      (a trajectory deque per (method, worker)).
+    * ``record_innovation`` — EF21 per-worker innovation norms
+      ``||C(target_i - g_i)||`` (contracts as the mirrors converge).
+    * ``record_bias`` — accumulates the shipped direction and the dense
+      gradient mean; ``bias_proxy`` is the relative distance of their
+      running means — the empirical-mean-vs-dense-gradient bias proxy
+      (→ 0 for unbiased estimators by Lemma 3.2).
+    """
+
+    def __init__(self, maxlen: int = TRAJECTORY_MAXLEN):
+        self._lock = threading.Lock()
+        self._maxlen = maxlen
+        self._draws: dict[str, dict[int, int]] = {}
+        self._expected: dict[str, np.ndarray] = {}
+        self._ladders: dict[tuple[str, int], deque] = {}
+        self._innovations: dict[str, deque] = {}
+        self._bias: dict[str, dict] = {}
+
+    # -- level draws --------------------------------------------------------
+
+    def record_draw(self, method: str, level: int, prob: float) -> None:
+        with self._lock:
+            hist = self._draws.setdefault(method, {})
+            hist[int(level)] = hist.get(int(level), 0) + 1
+
+    def record_expected(self, method: str, probs) -> None:
+        p = np.asarray(probs, np.float64).ravel()
+        s = p.sum()
+        with self._lock:
+            self._expected[method] = p / s if s > 0 else p
+
+    def level_histogram(self, method: str) -> dict[int, float]:
+        """Empirical level frequencies (1-based levels, sums to 1)."""
+        with self._lock:
+            hist = dict(self._draws.get(method, {}))
+        n = sum(hist.values())
+        return {lvl: c / n for lvl, c in sorted(hist.items())} if n else {}
+
+    def draw_count(self, method: str) -> int:
+        with self._lock:
+            return sum(self._draws.get(method, {}).values())
+
+    def expected_probs(self, method: str) -> np.ndarray | None:
+        with self._lock:
+            p = self._expected.get(method)
+        return None if p is None else p.copy()
+
+    # -- adaptive EMA ladder trajectories -----------------------------------
+
+    def record_ladder(self, method: str, worker: int, row, step=None) -> None:
+        row = np.asarray(row, np.float64).ravel().copy()
+        with self._lock:
+            dq = self._ladders.setdefault(
+                (method, int(worker)), deque(maxlen=self._maxlen))
+            dq.append((None if step is None else int(step), row))
+
+    def ladder_trajectory(self, method: str,
+                          worker: int) -> list[tuple[int | None, np.ndarray]]:
+        with self._lock:
+            return list(self._ladders.get((method, int(worker)), ()))
+
+    # -- EF21 innovation norms ----------------------------------------------
+
+    def record_innovation(self, method: str, norms, step=None) -> None:
+        norms = np.asarray(norms, np.float64).ravel().copy()
+        with self._lock:
+            dq = self._innovations.setdefault(
+                method, deque(maxlen=self._maxlen))
+            dq.append((None if step is None else int(step), norms))
+
+    def innovation_trajectory(self, method: str):
+        with self._lock:
+            return list(self._innovations.get(method, ()))
+
+    # -- bias proxy ---------------------------------------------------------
+
+    def record_bias(self, method: str, direction, dense_mean) -> None:
+        d = np.asarray(direction, np.float64).ravel()
+        g = np.asarray(dense_mean, np.float64).ravel()
+        with self._lock:
+            acc = self._bias.get(method)
+            if acc is None or acc["dir"].shape != d.shape:
+                acc = {"n": 0, "dir": np.zeros_like(d), "dense": np.zeros_like(g)}
+                self._bias[method] = acc
+            acc["n"] += 1
+            acc["dir"] += d
+            acc["dense"] += g
+
+    def bias_proxy(self, method: str) -> float | None:
+        """``||mean(direction) - mean(dense)|| / (||mean(dense)|| + eps)``
+        over everything recorded so far; None before the first sample."""
+        with self._lock:
+            acc = self._bias.get(method)
+            if acc is None or not acc["n"]:
+                return None
+            md = acc["dir"] / acc["n"]
+            mg = acc["dense"] / acc["n"]
+        return float(np.linalg.norm(md - mg) /
+                     (np.linalg.norm(mg) + 1e-12))
+
+    # -- export -------------------------------------------------------------
+
+    def summary(self) -> dict:
+        """JSON-serializable roll-up (trajectories: last entry + length)."""
+        with self._lock:
+            methods = set(self._draws) | set(self._expected) | \
+                set(self._innovations) | set(self._bias) | \
+                {m for (m, _w) in self._ladders}
+            ladder_keys = list(self._ladders)
+        out = {}
+        for m in sorted(methods):
+            entry: dict = {}
+            hist = self.level_histogram(m)
+            if hist:
+                entry["level_histogram"] = {str(k): v for k, v in hist.items()}
+                entry["draws"] = self.draw_count(m)
+            exp = self.expected_probs(m)
+            if exp is not None:
+                entry["expected_probs"] = [float(x) for x in exp]
+            bias = self.bias_proxy(m)
+            if bias is not None:
+                entry["bias_proxy"] = bias
+            traj = self.innovation_trajectory(m)
+            if traj:
+                step, norms = traj[-1]
+                entry["innovation_last"] = {
+                    "step": step, "norms": [float(x) for x in norms],
+                    "points": len(traj)}
+            workers = sorted(w for (mm, w) in ladder_keys if mm == m)
+            if workers:
+                rows = {}
+                for w in workers:
+                    t = self.ladder_trajectory(m, w)
+                    if t:
+                        step, row = t[-1]
+                        rows[str(w)] = {"step": step,
+                                        "ema": [float(x) for x in row],
+                                        "points": len(t)}
+                entry["ladder_last"] = rows
+            out[m] = entry
+        return out

@@ -1,0 +1,259 @@
+"""Low-overhead span/event recorder + the `Telemetry` facade.
+
+Design constraints (all pinned by ``tests/test_obs.py``):
+
+* **No-op when disabled.**  The disabled path is a couple of attribute
+  loads — ``active().span(...)`` returns one shared null context manager
+  and touches no locks, no clocks, no dicts.
+* **Zero effect on jit lowering.**  Recording is pure host Python over
+  floats; the instrumented modules only ever call it OUTSIDE traced
+  code, so enabling/disabling telemetry can never change what XLA sees
+  (the PR-5 retrace-guard harness re-runs with telemetry on and off).
+* **Thread-safe buffer.**  The tcp server reactor and the training loop
+  record concurrently; events append under one lock into a bounded
+  list (drops are counted, never silently lost).
+* **Perfetto-ready timestamps.**  ``ts`` is ``epoch + perf_counter`` in
+  microseconds: monotonic within a process, and approximately aligned
+  ACROSS the ranks a localhost launcher spawns — which is what lines the
+  per-rank tracks up so fan-in straggler skew is visible in one view.
+  Durations are pure ``perf_counter`` differences.
+
+Event dicts use the Chrome trace-event field names directly (``ph``,
+``name``, ``cat``, ``ts``, ``dur``, ``pid``, ``tid``, ``args``) so the
+JSONL log and the Perfetto export are the same objects —
+``repro.obs.export`` only wraps/validates them.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.obs.metrics import MetricsRegistry, MLMCTelemetry
+
+#: hard cap on buffered events; beyond it events are counted as dropped
+MAX_EVENTS = 1_000_000
+
+#: default sampling period for the EXPENSIVE estimator metrics (ladder
+#: rows, innovation norms, bias proxy); spans/counters are never sampled
+DEFAULT_SAMPLE_EVERY = 10
+
+
+class _NullSpan:
+    """Shared do-nothing context manager for the disabled path."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """One live span: stamps ts on __enter__, emits on __exit__."""
+
+    __slots__ = ("_rec", "name", "cat", "pid", "args", "_t0")
+
+    def __init__(self, rec, name, cat, pid, args):
+        self._rec = rec
+        self.name = name
+        self.cat = cat
+        self.pid = pid
+        self.args = args
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        rec = self._rec
+        t1 = time.perf_counter()
+        ev = {"ph": "X", "name": self.name, "cat": self.cat,
+              "ts": (rec._epoch_s + self._t0) * 1e6,
+              "dur": (t1 - self._t0) * 1e6,
+              "pid": rec.default_pid if self.pid is None else self.pid,
+              "tid": rec._tid()}
+        if self.args:
+            ev["args"] = self.args
+        rec._emit(ev)
+        return False
+
+
+class SpanRecorder:
+    """Thread-safe bounded buffer of Chrome-trace-shaped events."""
+
+    def __init__(self, enabled: bool = True, *, pid: int = 0,
+                 max_events: int = MAX_EVENTS):
+        self.enabled = enabled
+        self.default_pid = pid
+        self.max_events = max_events
+        self.dropped = 0
+        self._lock = threading.Lock()
+        self._events: list[dict] = []
+        # time.time() anchor: lines per-rank tracks up across processes
+        self._epoch_s = time.time() - time.perf_counter()
+        self._tids: dict[int, int] = {}
+
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        with self._lock:
+            tid = self._tids.get(ident)
+            if tid is None:
+                tid = self._tids[ident] = len(self._tids)
+            return tid
+
+    def now_us(self) -> float:
+        """Current aligned timestamp in microseconds."""
+        return (self._epoch_s + time.perf_counter()) * 1e6
+
+    def _emit(self, ev: dict) -> None:
+        with self._lock:
+            if len(self._events) < self.max_events:
+                self._events.append(ev)
+            else:
+                self.dropped += 1
+
+    def span(self, name: str, *, cat: str = "comm", pid: int | None = None,
+             **args):
+        """``with rec.span("encode", codec="topk"): ...`` — a complete
+        ("X") event covering the block."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, pid, args)
+
+    def complete(self, name: str, t0_perf: float, *, cat: str = "comm",
+                 pid: int | None = None, **args) -> None:
+        """Emit a complete ("X") event for a block that started at
+        ``t0_perf`` (a ``time.perf_counter()`` stamp) and ends now — for
+        call sites that time manually instead of nesting a ``with``."""
+        if not self.enabled:
+            return
+        t1 = time.perf_counter()
+        ev = {"ph": "X", "name": name, "cat": cat,
+              "ts": (self._epoch_s + t0_perf) * 1e6,
+              "dur": (t1 - t0_perf) * 1e6,
+              "pid": self.default_pid if pid is None else pid,
+              "tid": self._tid()}
+        if args:
+            ev["args"] = args
+        self._emit(ev)
+
+    def instant(self, name: str, *, cat: str = "comm",
+                pid: int | None = None, ts: float | None = None, **args):
+        """A point-in-time ("i") event — e.g. one rank's frame arrival."""
+        if not self.enabled:
+            return
+        ev = {"ph": "i", "name": name, "cat": cat,
+              "ts": self.now_us() if ts is None else ts,
+              "pid": self.default_pid if pid is None else pid,
+              "tid": self._tid(), "s": "t"}
+        if args:
+            ev["args"] = args
+        self._emit(ev)
+
+    def counter(self, name: str, value: float, *, cat: str = "comm",
+                pid: int | None = None, series: str = "value"):
+        """A Chrome counter ("C") sample — renders as a track in Perfetto."""
+        if not self.enabled:
+            return
+        self._emit({"ph": "C", "name": name, "cat": cat, "ts": self.now_us(),
+                    "pid": self.default_pid if pid is None else pid,
+                    "tid": self._tid(), "args": {series: float(value)}})
+
+    def events(self) -> list[dict]:
+        """Snapshot copy of the buffered events."""
+        with self._lock:
+            return list(self._events)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self.dropped = 0
+
+
+class Telemetry:
+    """One bundle of trace + metrics + MLMC telemetry.
+
+    The instrumented modules reach the active bundle via `active()` —
+    `Trainer(telemetry=...)` installs it — and guard every record with
+    ``tel.enabled``, so a disabled bundle costs two attribute loads per
+    site.  ``sample_every`` gates only the EXPENSIVE estimator metrics
+    (ladder rows, innovation norms, bias proxy) through
+    `should_sample`; spans, counters and level draws are always
+    recorded when enabled."""
+
+    def __init__(self, enabled: bool = True, *, rank: int = 0,
+                 sample_every: int = DEFAULT_SAMPLE_EVERY,
+                 max_events: int = MAX_EVENTS):
+        self.enabled = enabled
+        self.rank = rank
+        self.sample_every = max(1, int(sample_every))
+        self.trace = SpanRecorder(enabled, pid=rank, max_events=max_events)
+        self.metrics = MetricsRegistry()
+        self.mlmc = MLMCTelemetry()
+        self._ticks: dict[str, int] = {}
+        self._tick_lock = threading.Lock()
+
+    # -- recording shortcuts -------------------------------------------------
+
+    def span(self, name: str, **kw):
+        if not self.enabled:
+            return _NULL_SPAN
+        return self.trace.span(name, **kw)
+
+    def instant(self, name: str, **kw) -> None:
+        if self.enabled:
+            self.trace.instant(name, **kw)
+
+    def count(self, name: str, value: float = 1.0, **labels) -> None:
+        if self.enabled:
+            self.metrics.counter(name, **labels).add(value)
+
+    def observe(self, name: str, value: float, *, buckets=None,
+                **labels) -> None:
+        if self.enabled:
+            kw = {} if buckets is None else {"buckets": buckets}
+            self.metrics.histogram(name, **kw, **labels).observe(value)
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        if self.enabled:
+            self.metrics.gauge(name, **labels).set(value)
+
+    def should_sample(self, key: str) -> bool:
+        """Every ``sample_every``-th call per key (first call included);
+        always False when disabled — call sites skip their numpy/jnp work
+        entirely on the disabled path."""
+        if not self.enabled:
+            return False
+        with self._tick_lock:
+            n = self._ticks.get(key, 0)
+            self._ticks[key] = n + 1
+        return n % self.sample_every == 0
+
+
+#: the always-off bundle every module sees until something installs one
+_DISABLED = Telemetry(enabled=False)
+_active: Telemetry = _DISABLED
+
+
+def active() -> Telemetry:
+    """The currently installed `Telemetry` (a disabled singleton by
+    default — callers need no None check)."""
+    return _active
+
+
+def install(telemetry: Telemetry | None) -> Telemetry:
+    """Install ``telemetry`` as the process-wide active bundle (None
+    restores the disabled default).  Returns the now-active bundle."""
+    global _active
+    _active = telemetry if telemetry is not None else _DISABLED
+    return _active
+
+
+def enabled() -> bool:
+    return _active.enabled

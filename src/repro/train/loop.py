@@ -20,6 +20,7 @@ For the mesh-collective realization of the same algorithms see
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Iterator
 
 import jax
@@ -28,6 +29,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.aggregators import Aggregator, make_aggregator
 from repro.core.types import CommState
+from repro.obs import trace as obs
 from repro.optim.optimizers import Optimizer, sgd
 
 PyTree = Any
@@ -59,8 +61,16 @@ class Trainer:
         "device" (jit-native fixed-shape packed packets,
         repro.comm.device_wire; the whole step stays jitted like the
         abstract path).
-      wire_compiled: packed wire only — False falls back to the eager
-        codecs (byte-identical; A-B wire benchmarks).
+      wire_compiled: packed wire only — None (default) picks the
+        measured-faster pipeline per codec
+        (`repro.comm.compiled.default_compiled`); True forces the
+        jit-compiled fast path, False the eager codecs (byte-identical
+        either way; A-B wire benchmarks).
+      telemetry: a `repro.obs.Telemetry` bundle to record per-step spans,
+        wire metrics, and MLMC estimator telemetry into.  Installed
+        process-wide (`repro.obs.install`) so the comm stack's
+        instrumentation sees it; None leaves the currently active bundle
+        (a disabled no-op by default) in place.
     """
 
     def __init__(self, loss_fn: Callable, params: PyTree, *,
@@ -70,7 +80,10 @@ class Trainer:
                  momentum_beta: float = 0.1, qsgd_levels: int = 2,
                  rtn_level: int = 4, ema_rho: float = 0.25,
                  wire: str = "abstract", transport=None,
-                 wire_compiled: bool = True):
+                 wire_compiled: bool | None = None,
+                 telemetry: obs.Telemetry | None = None):
+        if telemetry is not None:
+            obs.install(telemetry)
         self.loss_fn = loss_fn
         self.m = num_workers
         flat, self.unravel = ravel_pytree(params)
@@ -184,22 +197,53 @@ class Trainer:
         """batches yields pytrees whose leaves are (M, b, ...)."""
         hist = History()
         rng = jax.random.PRNGKey(seed)
+        tel = obs.active()
+        window_t0, window_step = time.perf_counter(), 0
         for t in range(steps):
             rng, sub = jax.random.split(rng)
             batch = next(batches)
+            t0 = time.perf_counter()
             (self.flat_params, self.opt_state, self.comm_state, loss,
              bits) = self._step(self.flat_params, self.opt_state,
                                 self.comm_state, batch, sub)
             self.total_bits += float(bits)
+            if tel.enabled:
+                tel.trace.complete("train/step", t0, cat="train", step=t,
+                                   method=self.method)
+                tel.observe("train_step_s", time.perf_counter() - t0,
+                            method=self.method)
+                tel.count("train_bits", float(bits), method=self.method)
             hist.steps.append(t)
             hist.loss.append(float(loss))
             hist.bits.append(self.total_bits)
             if eval_fn and eval_every and (t + 1) % eval_every == 0:
                 hist.eval_loss.append(float(eval_fn(self.params)))
             if log_every and (t + 1) % log_every == 0:
-                print(f"  step {t+1:4d} loss={float(loss):.4f} "
-                      f"Gbits={self.total_bits/1e9:.3f}", flush=True)
+                now = time.perf_counter()
+                steps_per_s = (t + 1 - window_step) / max(now - window_t0,
+                                                          1e-9)
+                window_t0, window_step = now, t + 1
+                self._log_step(tel, t + 1, float(loss), float(bits),
+                               steps_per_s)
         return hist
+
+    def _log_step(self, tel, step: int, loss: float, bits: float,
+                  steps_per_s: float) -> None:
+        """The structured telemetry log line (loss, bits/step, wire bytes,
+        steps/s) — emitted through `repro.obs` AND printed in the familiar
+        human-readable console form."""
+        tp = self.transport
+        wire_bytes = tp.stats.wire_bytes if tp is not None else 0
+        tel.instant("train/log", cat="train", step=step, loss=loss,
+                    bits_per_step=bits, total_gbits=self.total_bits / 1e9,
+                    wire_bytes=wire_bytes, steps_per_s=steps_per_s)
+        if tel.enabled:
+            tel.gauge("train_loss", loss, method=self.method)
+            tel.gauge("train_steps_per_s", steps_per_s, method=self.method)
+        wire = f" wire={wire_bytes/1e6:.2f}MB" if tp is not None else ""
+        print(f"  step {step:4d} loss={loss:.4f} "
+              f"Gbits={self.total_bits/1e9:.3f}"
+              f"{wire} steps/s={steps_per_s:.2f}", flush=True)
 
     @property
     def params(self) -> PyTree:
@@ -207,10 +251,35 @@ class Trainer:
 
     # ---- checkpointing -----------------------------------------------------
 
+    def sync_comm_state(self) -> CommState:
+        """Multihost checkpoint collective: gather every rank's client-side
+        `CommState` rows (adaptive EMA ladder, EF21-SGDM momentum) to rank 0
+        over the STATE frame and fold them into rank 0's state, so the
+        rank-0 checkpoint captures the WHOLE world's client state.  EVERY
+        rank must call this at the same point between rounds (workers ship
+        their row and return their state unchanged).  A no-op on
+        non-multihost transports — safe to call unconditionally before
+        `save_checkpoint`."""
+        rank = self.rank
+        if rank is None:
+            return self.comm_state
+        from repro.comm.aggregate import (
+            fold_comm_state_rows,
+            pack_comm_state_row,
+        )
+
+        rows = self.transport.gather_state(
+            pack_comm_state_row(self.comm_state, rank))
+        if rank == 0:
+            self.comm_state = fold_comm_state_rows(self.comm_state, rows)
+        return self.comm_state
+
     def save_checkpoint(self, path, metadata: dict | None = None) -> None:
         """Persist params + opt_state + CommState in one bundle, so
         stateful runs (EF21 mirrors, adaptive EMA ladders) resume exactly
-        — previously the comm state was silently dropped."""
+        — previously the comm state was silently dropped.  On a multihost
+        transport, call `sync_comm_state` (on every rank) first so the
+        rank-0 bundle includes the other ranks' client-side rows."""
         from repro import checkpoint
 
         meta = dict(metadata or {})

@@ -382,6 +382,37 @@ def test_no_retrace_tcp_loopback():
 # ---------------------------------------------------------------------------
 
 
+def test_per_codec_compiled_default_table():
+    """``compiled=None`` routes each codec to its measured-faster pipeline
+    (BENCH_wire.json: the EF21 family's compiled encode is slower than
+    eager), and the explicit flag still overrides in both directions."""
+    from repro.comm import packed_aggregator
+    from repro.comm.aggregate import _is_compiled
+    from repro.comm.compiled import COMPILED_DEFAULT_OFF, default_compiled
+    from repro.core.aggregators import ALL_AGGREGATORS, make_aggregator
+
+    assert COMPILED_DEFAULT_OFF == {"ef21", "ef21_sgdm"}
+    for name in ALL_AGGREGATORS:
+        assert default_compiled(name) == (name not in COMPILED_DEFAULT_OFF)
+
+    def codec_of(agg):
+        return agg.fn.codec if hasattr(agg.fn, "codec") else agg.codec
+
+    for name, want in (("ef21", False), ("ef21_sgdm", False),
+                       ("signsgd_ef", True), ("mlmc_topk", True),
+                       ("mlmc_adaptive_topk", True)):
+        agg = packed_aggregator(name, D, **CODEC_KW)
+        assert _is_compiled(codec_of(agg)) == want, name
+        forced = packed_aggregator(name, D, **CODEC_KW, compiled=not want)
+        assert _is_compiled(codec_of(forced)) == (not want), name
+    # the table threads through make_aggregator (what Trainer uses)
+    via_make = make_aggregator("ef21", D, **CODEC_KW, wire="packed")
+    assert not _is_compiled(codec_of(via_make))
+    via_make = make_aggregator("ef21", D, **CODEC_KW, wire="packed",
+                               compiled=True)
+    assert _is_compiled(codec_of(via_make))
+
+
 def test_packed_aggregator_compiled_equals_eager():
     """`packed_aggregator(compiled=True)` must reproduce the eager-codec
     aggregation bit-for-bit: direction AND measured bits."""

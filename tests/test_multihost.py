@@ -567,3 +567,211 @@ def test_launch_world_rejects_reserved_flags_in_any_form():
                 ["--steps", "2", "--wire=packed"]):
         with pytest.raises(ValueError, match="set by the launcher"):
             launch_world(2, bad)
+
+
+# ---------------------------------------------------------------------------
+# STATE frame: rank-0 checkpoints capture every rank's CommState rows
+# ---------------------------------------------------------------------------
+
+
+def test_comm_state_row_roundtrip_and_errors():
+    from repro.comm.aggregate import (
+        _STATE_HEADER_BYTES,
+        fold_comm_state_rows,
+        pack_comm_state_row,
+        unpack_comm_state_row,
+    )
+    from repro.core.aggregators import make_aggregator
+
+    d, world = 32, 3
+    agg = make_aggregator("ef21_sgdm", d, k_fraction=0.25, wire="packed")
+    st = agg.init(world, d)
+    # give rank 1 a distinctive momentum row, then round-trip it (the
+    # ladder stays the family's empty (0, 0) placeholder)
+    st = st._replace(
+        momentum=st.momentum.at[1].set(np.arange(d, dtype=np.float32)))
+    raw = pack_comm_state_row(st, 1)
+    r, ladder, momentum = unpack_comm_state_row(raw)
+    assert (r, ladder.size) == (1, 0)
+    assert np.array_equal(momentum, np.asarray(st.momentum[1]))
+    # folding rank 1's row into a FRESH state reproduces it bitwise
+    fresh = fold_comm_state_rows(agg.init(world, d), [raw])
+    assert np.array_equal(np.asarray(fresh.momentum[1]),
+                          np.asarray(st.momentum[1]))
+    # same round-trip for the adaptive family's EMA ladder row
+    adaptive = make_aggregator("mlmc_adaptive_topk", d, k_fraction=0.25,
+                               wire="packed")
+    ast = adaptive.init(world, d)
+    ast = ast._replace(ladder_ema=ast.ladder_ema.at[1].add(0.5))
+    r, ladder, momentum = unpack_comm_state_row(pack_comm_state_row(ast, 1))
+    assert (r, momentum.size) == (1, 0)
+    assert np.array_equal(ladder, np.asarray(ast.ladder_ema[1]))
+    afresh = fold_comm_state_rows(
+        adaptive.init(world, d), [pack_comm_state_row(ast, 1)])
+    assert np.array_equal(np.asarray(afresh.ladder_ema[1]),
+                          np.asarray(ast.ladder_ema[1]))
+    # rows for a method with no client-side state are empty but valid
+    stateless = make_aggregator("mlmc_topk", d, k_fraction=0.25,
+                                wire="packed").init(world, d)
+    empty = pack_comm_state_row(stateless, 2)
+    assert len(empty) == _STATE_HEADER_BYTES
+    r, ladder, momentum = unpack_comm_state_row(empty)
+    assert (r, ladder.size, momentum.size) == (2, 0, 0)
+    with pytest.raises(ValueError, match="truncated STATE row"):
+        unpack_comm_state_row(raw[:4])
+    with pytest.raises(ValueError, match="bad STATE magic"):
+        unpack_comm_state_row(b"XXXX" + raw[4:])
+    with pytest.raises(ValueError, match="expected"):
+        unpack_comm_state_row(raw + b"extra")
+    # a row whose width doesn't fit the target state is rejected
+    wrong = make_aggregator("ef21_sgdm", d + 1, k_fraction=0.25,
+                            wire="packed").init(world, d + 1)
+    with pytest.raises(ValueError, match="does not fit"):
+        fold_comm_state_rows(wrong, [raw])
+
+
+@needs_sockets
+def test_gather_state_rank_ordered():
+    """The STATE-frame collective: rank 0 receives [own, rank1, .., rankN]
+    in rank order regardless of arrival order; workers get []."""
+    world = 3
+    tps = _connect_world(world)
+    rows = {r: f"row-{r}".encode() * (r + 1) for r in range(world)}
+    out = {}
+
+    def worker(r):
+        out[r] = tps[r].gather_state(rows[r])
+
+    threads = [threading.Thread(target=worker, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    got = tps[0].gather_state(rows[0])
+    for t in threads:
+        t.join()
+    assert got == [rows[0], rows[1], rows[2]]
+    assert out[1] == [] and out[2] == []
+    # checkpoint plumbing is booked as wire bytes, not gradient payload
+    assert tps[0].stats.wire_bytes == sum(
+        FRAME_HEADER_BYTES + len(rows[r]) for r in (1, 2))
+    assert tps[0].stats.bytes_up == 0 and tps[0].stats.rounds == 0
+    for t in tps.values():
+        t.close()
+
+
+@needs_sockets
+@pytest.mark.parametrize("method", ["ef21_sgdm", "mlmc_adaptive_topk"])
+def test_sync_comm_state_completes_rank0_state(method):
+    """After training over tcp, each rank holds only ITS OWN client-side
+    rows (EMA ladder / SGDM momentum).  `Trainer.sync_comm_state` gathers
+    them over the STATE frame: rank 0's folded CommState must equal the
+    loopback run's full state BITWISE — the checkpoint-completeness gap
+    this PR closes."""
+    ref = _toy_trainer(None, "packed", method)
+    ref.fit(_toy_batches(), steps=_TOY["steps"], seed=_TOY["seed"])
+
+    world = _TOY["world"]
+    tps = _connect_world(world)
+    states = {}
+
+    def run_rank(r):
+        tr = _toy_trainer(tps[r], "packed", method)
+        tr.fit(_toy_batches(), steps=_TOY["steps"], seed=_TOY["seed"])
+        states[r] = tr.sync_comm_state()
+
+    threads = [threading.Thread(target=run_rank, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    run_rank(0)
+    for t in threads:
+        t.join()
+
+    want = ref.comm_state
+    got = states[0]
+    assert np.array_equal(np.asarray(got.ladder_ema),
+                          np.asarray(want.ladder_ema))
+    assert np.array_equal(np.asarray(got.momentum),
+                          np.asarray(want.momentum))
+    if method.startswith("ef21"):
+        assert np.array_equal(np.asarray(got.g_workers),
+                              np.asarray(want.g_workers))
+    # a worker's state is unchanged by the gather (it only ships its row)
+    if method == "mlmc_adaptive_topk":
+        assert np.array_equal(np.asarray(states[1].ladder_ema[1]),
+                              np.asarray(want.ladder_ema[1]))
+    for t in tps.values():
+        t.close()
+
+
+def _tcp_ckpt_rank_main(rank, port, q, method, ckpt_path):
+    """Spawned rank: phase-A training + STATE-frame sync + rank-0 save."""
+    try:
+        from repro.comm import make_transport as mk
+
+        transport = mk("tcp", rank=rank, world=_TOY["world"],
+                       coordinator=f"127.0.0.1:{port}", timeout=120.0)
+        tr = _toy_trainer(transport, "packed", method)
+        tr.fit(_toy_batches(), steps=_TOY["steps"], seed=_TOY["seed"])
+        tr.sync_comm_state()
+        if rank == 0:
+            tr.save_checkpoint(ckpt_path)
+        transport.close()
+        q.put((rank, None))
+    except Exception as e:        # pragma: no cover - surfaced by the parent
+        q.put((rank, repr(e)))
+
+
+@pytest.mark.slow
+@needs_sockets
+@pytest.mark.parametrize("method", ["ef21_sgdm", "mlmc_adaptive_topk"])
+def test_tcp_checkpoint_restores_and_continues_bitwise(method, tmp_path):
+    """The acceptance check: a 3-rank SPAWNED tcp world trains phase A,
+    syncs CommState over the STATE frame, and rank 0 checkpoints; a fresh
+    in-process trainer restores that bundle and continues phase B,
+    matching an uninterrupted loopback run BIT-FOR-BIT.  Without the
+    gathered worker rows the restored EMA ladder / momentum would re-seed
+    and the continuation would diverge."""
+    import itertools
+    import multiprocessing as mp
+
+    steps, seed = _TOY["steps"], _TOY["seed"]
+    ref = _toy_trainer(None, "packed", method)
+    stream = _toy_batches()
+    ref.fit(stream, steps=steps, seed=seed)
+    phase_a_ladder = np.asarray(ref.comm_state.ladder_ema).copy()
+    phase_a_momentum = np.asarray(ref.comm_state.momentum).copy()
+    ref.fit(stream, steps=steps, seed=seed + 1)      # phase B, same stream
+    want = np.asarray(ref.flat_params).tobytes()
+
+    ckpt = str(tmp_path / "world.npz")
+    ctx = mp.get_context("spawn")
+    port = pick_free_port()
+    q = ctx.Queue()
+    procs = [ctx.Process(target=_tcp_ckpt_rank_main,
+                         args=(r, port, q, method, ckpt))
+             for r in range(_TOY["world"])]
+    for p in procs:
+        p.start()
+    try:
+        for _ in range(_TOY["world"]):
+            rank, err = q.get(timeout=300)
+            assert err is None, f"rank {rank} failed: {err}"
+        for p in procs:
+            p.join(timeout=60)
+    finally:
+        for p in procs:
+            if p.is_alive():      # pragma: no cover - cleanup on failure
+                p.terminate()
+
+    resumed = _toy_trainer(None, "packed", method)
+    resumed.load_checkpoint(ckpt)
+    # the restored CommState holds EVERY rank's rows, bitwise
+    assert np.array_equal(np.asarray(resumed.comm_state.ladder_ema),
+                          phase_a_ladder)
+    assert np.array_equal(np.asarray(resumed.comm_state.momentum),
+                          phase_a_momentum)
+    cont = _toy_batches()
+    resumed.fit(itertools.islice(cont, steps, None), steps=steps,
+                seed=seed + 1)
+    assert np.asarray(resumed.flat_params).tobytes() == want

@@ -1,0 +1,421 @@
+"""`repro.obs` — the comm-stack telemetry subsystem.
+
+Pins the subsystem's design constraints:
+
+* recording units (spans / counters / histograms / MLMC estimator
+  telemetry) and their thread-safety + boundedness;
+* exporters: JSONL round-trip, Chrome trace-event JSON (per-rank
+  process tracks), Prometheus text, and the checked-in append-only
+  trace-event schema;
+* statistical fidelity — the level-draw histogram recorded from real
+  packed-wire rounds matches the theoretical ``p_l`` ladder
+  (Lemma 3.3) within sampling error;
+* ZERO cost when disabled: the disabled path adds no jit lowerings to
+  the PR-5 retrace-guard harness, and the ENABLED path (sample_every=1,
+  so every expensive estimator metric fires) adds none either — all
+  recording is host-side Python.
+"""
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax._src.test_util as jtu
+
+from repro.obs import export
+from repro.obs.metrics import (
+    DEFAULT_LATENCY_BUCKETS,
+    Histogram,
+    MetricsRegistry,
+    MLMCTelemetry,
+)
+from repro.obs.trace import _NULL_SPAN, SpanRecorder, Telemetry
+from repro.obs import trace as obs
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _restore_active_telemetry():
+    """Never leak an installed bundle into other test modules."""
+    yield
+    obs.install(None)
+
+
+# ---------------------------------------------------------------------------
+# recording units
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_telemetry_is_inert():
+    tel = Telemetry(enabled=False)
+    assert tel.span("x") is _NULL_SPAN      # one shared null context manager
+    with tel.span("x", codec="topk"):
+        pass
+    tel.instant("i", v=1)
+    tel.count("c", 2.0)
+    tel.observe("h", 0.5)
+    tel.gauge("g", 3.0)
+    assert not tel.should_sample("k") and not tel.should_sample("k")
+    assert tel.trace.events() == []
+    assert tel.metrics.snapshot() == []
+    # the module default is a disabled singleton; install(None) restores it
+    assert obs.active() is obs._DISABLED
+    assert not obs.enabled()
+    installed = obs.install(Telemetry())
+    assert obs.active() is installed and obs.enabled()
+    obs.install(None)
+    assert obs.active() is obs._DISABLED
+
+
+def test_span_recorder_event_shapes():
+    rec = SpanRecorder(pid=3)
+    with rec.span("comm/encode", codec="topk"):
+        pass
+    import time
+    rec.complete("comm/decode", time.perf_counter(), cat="comm", n=2)
+    rec.instant("wire/frame_arrival", rank=1)
+    rec.counter("wire_bytes", 128.0)
+    evs = rec.events()
+    assert [e["ph"] for e in evs] == ["X", "X", "i", "C"]
+    span = evs[0]
+    assert span["name"] == "comm/encode" and span["pid"] == 3
+    assert span["dur"] >= 0 and span["args"] == {"codec": "topk"}
+    assert evs[2]["s"] == "t" and evs[2]["args"] == {"rank": 1}
+    assert evs[3]["args"] == {"value": 128.0}
+    # everything is JSON-serializable as recorded
+    json.dumps(evs)
+    assert export.validate_events(evs) == []
+    rec.clear()
+    assert rec.events() == [] and rec.dropped == 0
+
+
+def test_span_recorder_bounded_buffer_counts_drops():
+    rec = SpanRecorder(max_events=3)
+    for i in range(5):
+        rec.instant(f"e{i}")
+    assert len(rec.events()) == 3 and rec.dropped == 2
+
+
+def test_span_recorder_thread_ids_are_stable_and_distinct():
+    rec = SpanRecorder()
+    main_tid = rec._tid()
+    assert rec._tid() == main_tid
+    seen = {}
+    gate = threading.Barrier(3)    # concurrent threads: no ident reuse
+
+    def worker(k):
+        seen[k] = rec._tid()
+        gate.wait()
+
+    ts = [threading.Thread(target=worker, args=(k,)) for k in range(3)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(set(seen.values()) | {main_tid}) == 4
+
+
+def test_metrics_registry_labels_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("wire_bytes_up", transport="tcp").add(10)
+    reg.counter("wire_bytes_up", transport="tcp").add(5)
+    reg.counter("wire_bytes_up", transport="loopback").add(1)
+    reg.gauge("train_loss").set(0.25)
+    reg.histogram("lat", buckets=(0.1, 1.0)).observe(0.5)
+    snap = {(m["kind"], m["name"], tuple(sorted(m["labels"].items()))): m
+            for m in reg.snapshot()}
+    assert snap[("counter", "wire_bytes_up",
+                 (("transport", "tcp"),))]["value"] == 15
+    assert snap[("counter", "wire_bytes_up",
+                 (("transport", "loopback"),))]["value"] == 1
+    assert snap[("gauge", "train_loss", ())]["value"] == 0.25
+    h = snap[("histogram", "lat", ())]
+    assert h["counts"] == [0, 1, 0] and h["sum"] == 0.5 and h["count"] == 1
+
+
+def test_histogram_bucketing_and_mean():
+    h = Histogram(bounds=(1.0, 10.0))
+    for v in (0.5, 1.0, 5.0, 100.0):
+        h.observe(v)
+    # bisect_left: the bound itself lands in ITS bucket (le semantics)
+    assert h.counts == [2, 1, 1]
+    assert h.mean == pytest.approx((0.5 + 1.0 + 5.0 + 100.0) / 4)
+    assert Histogram().bounds == DEFAULT_LATENCY_BUCKETS
+
+
+def test_mlmc_telemetry_draws_ladders_innovations_bias():
+    t = MLMCTelemetry(maxlen=4)
+    for lvl in (1, 1, 1, 2):
+        t.record_draw("m", lvl, 0.5)
+    t.record_expected("m", [2.0, 1.0, 1.0])        # normalized on record
+    assert t.level_histogram("m") == {1: 0.75, 2: 0.25}
+    assert t.draw_count("m") == 4
+    np.testing.assert_allclose(t.expected_probs("m"), [0.5, 0.25, 0.25])
+    assert t.level_histogram("other") == {} and t.draw_count("other") == 0
+    assert t.expected_probs("other") is None
+
+    for step in range(6):                          # maxlen=4 bounds it
+        t.record_ladder("m", 1, [1.0, float(step)], step=step)
+        t.record_innovation("e", [0.1 * step], step=step)
+    traj = t.ladder_trajectory("m", 1)
+    assert len(traj) == 4 and traj[-1][0] == 5
+    assert len(t.innovation_trajectory("e")) == 4
+
+    assert t.bias_proxy("m") is None
+    g = np.arange(8.0)
+    t.record_bias("m", g, g)
+    assert t.bias_proxy("m") == pytest.approx(0.0, abs=1e-12)
+    t.record_bias("m", g + 2.0, g)                 # mean dir drifts off dense
+    assert t.bias_proxy("m") > 0
+
+    s = t.summary()
+    json.dumps(s)                                  # JSON-able roll-up
+    assert s["m"]["level_histogram"] == {"1": 0.75, "2": 0.25}
+    assert s["m"]["draws"] == 4
+    assert s["m"]["ladder_last"]["1"]["points"] == 4
+    assert s["e"]["innovation_last"]["step"] == 5
+    assert "bias_proxy" in s["m"]
+
+
+def test_should_sample_period_per_key():
+    tel = Telemetry(sample_every=3)
+    hits = [tel.should_sample("a") for _ in range(7)]
+    assert hits == [True, False, False, True, False, False, True]
+    assert tel.should_sample("b")                  # keys tick independently
+
+
+# ---------------------------------------------------------------------------
+# exporters + schema
+# ---------------------------------------------------------------------------
+
+
+def _small_telemetry() -> Telemetry:
+    tel = Telemetry(rank=2)
+    with tel.span("comm/encode", codec="topk"):
+        pass
+    tel.instant("train/log", cat="train", loss=1.0)
+    tel.count("wire_bytes_up", 64, transport="tcp")
+    tel.observe("codec_encode_s", 0.02, codec="topk")
+    tel.mlmc.record_draw("mlmc_topk", 1, 0.5)
+    return tel
+
+
+def test_jsonl_roundtrip_and_summary_event(tmp_path):
+    tel = _small_telemetry()
+    path = tmp_path / "t.jsonl"
+    n = export.write_jsonl(path, tel)
+    back = export.read_jsonl(path)
+    assert len(back) == n == len(tel.trace.events()) + 1
+    assert export.validate_events(back) == []
+    summary = back[-1]
+    assert summary["ph"] == "M" and summary["name"] == "repro_summary"
+    assert summary["pid"] == 2
+    kinds = {m["name"] for m in summary["args"]["metrics"]}
+    assert {"wire_bytes_up", "codec_encode_s"} <= kinds
+    assert summary["args"]["mlmc"]["mlmc_topk"]["draws"] == 1
+    (tmp_path / "bad.jsonl").write_text('{"ph": "X"}\nnot json\n')
+    with pytest.raises(ValueError, match="bad.jsonl:2"):
+        export.read_jsonl(tmp_path / "bad.jsonl")
+
+
+def test_merge_events_sorts_by_ts():
+    a = [{"ph": "i", "name": "a", "ts": 5.0, "pid": 0, "tid": 0}]
+    b = [{"ph": "i", "name": "b", "ts": 1.0, "pid": 1, "tid": 0},
+         {"ph": "i", "name": "c", "ts": 9.0, "pid": 1, "tid": 0}]
+    assert [e["name"] for e in export.merge_events(a, b)] == ["b", "a", "c"]
+
+
+def test_chrome_trace_has_one_named_track_per_rank():
+    events = [{"ph": "X", "name": "s", "ts": 1.0, "dur": 2.0,
+               "pid": p, "tid": 0} for p in (0, 2)]
+    doc = export.chrome_trace(events, process_names={0: "rank 0 (server)"})
+    assert doc["displayTimeUnit"] == "ms"
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    names = {e["pid"]: e["args"]["name"] for e in meta
+             if e["name"] == "process_name"}
+    assert names == {0: "rank 0 (server)", 2: "rank 2"}
+    sort = {e["pid"]: e["args"]["sort_index"] for e in meta
+            if e["name"] == "process_sort_index"}
+    assert sort == {0: 0, 2: 2}
+    assert doc["traceEvents"][-len(events):] == events
+
+
+def test_prometheus_text_format():
+    tel = _small_telemetry()
+    text = export.prometheus_text(tel)
+    assert '# TYPE repro_wire_bytes_up counter' in text
+    assert 'repro_wire_bytes_up{transport="tcp"} 64' in text
+    assert '# TYPE repro_codec_encode_s histogram' in text
+    assert 'le="+Inf"' in text
+    assert 'repro_codec_encode_s_count{codec="topk"} 1' in text
+    # cumulative buckets are monotone
+    cums = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+            if line.startswith("repro_codec_encode_s_bucket")]
+    assert cums == sorted(cums) and cums[-1] == 1
+
+
+def test_schema_validation_catches_violations():
+    ok = {"ph": "X", "name": "s", "ts": 1.0, "dur": 2.0, "pid": 0, "tid": 0}
+    assert export.validate_events([ok]) == []
+    bad = [{"ph": "Z", "name": "s", "ts": 1.0, "pid": 0, "tid": 0},
+           {"ph": "X", "ts": 1.0, "pid": 0, "tid": 0},
+           {"ph": "X", "name": "s", "ts": "late", "pid": 0, "tid": 0}]
+    errors = export.validate_events(bad)
+    assert len(errors) == 3
+    assert any("not in" in e for e in errors)          # bad ph enum
+    assert any("missing required field 'name'" in e for e in errors)
+    assert any("expected number" in e for e in errors)
+
+
+def test_checked_in_schema_is_the_wire_surface():
+    """The schema file is append-only, like the golden packets: the core
+    required fields and phase codes must never disappear."""
+    schema = export.load_schema()
+    assert set(schema["required"]) == {"ph", "name", "ts", "pid", "tid"}
+    assert {"X", "i", "C", "M"} <= set(schema["properties"]["ph"]["enum"])
+
+
+def test_export_cli_merges_validates_and_converts(tmp_path):
+    tels = []
+    for rank in (0, 1):
+        tel = Telemetry(rank=rank)
+        with tel.span("comm/encode"):
+            pass
+        tel.count("wire_bytes_up", 10 * (rank + 1), transport="tcp")
+        p = tmp_path / f"r{rank}.jsonl"
+        export.write_jsonl(p, tel)
+        tels.append(p)
+    merged = tmp_path / "m.jsonl"
+    perfetto = tmp_path / "m.json"
+    prom = tmp_path / "m.prom"
+    export.main([str(tels[0]), str(tels[1]), "--jsonl", str(merged),
+                 "--perfetto", str(perfetto), "--prometheus", str(prom),
+                 "--validate"])
+    events = export.read_jsonl(merged)
+    assert {e["pid"] for e in events} == {0, 1}
+    doc = json.loads(perfetto.read_text())
+    assert {e["pid"] for e in doc["traceEvents"]} == {0, 1}
+    assert "repro_wire_bytes_up" in prom.read_text()
+    # a schema violation makes the CLI exit nonzero
+    (tmp_path / "bad.jsonl").write_text('{"ph": "Z", "ts": 0}\n')
+    with pytest.raises(SystemExit, match="schema violations"):
+        export.main([str(tmp_path / "bad.jsonl"), "--validate"])
+
+
+# ---------------------------------------------------------------------------
+# statistical fidelity: empirical level draws vs the p_l ladder
+# ---------------------------------------------------------------------------
+
+
+def test_level_draws_match_theoretical_ladder():
+    """Real packed-wire rounds with telemetry installed: the recorded
+    level-draw histogram must match `compressor.static_probs()` (the
+    Lemma-3.3 ladder, auto-recorded as expected_probs) within sampling
+    error, and every draw must be booked (M per round).  Uses the
+    static-ladder family — the per-sample-adaptive ones draw from the
+    Lemma-3.4 distribution instead, which is exactly what this telemetry
+    exists to make visible."""
+    from repro.comm import packed_aggregator
+
+    tel = obs.install(Telemetry(sample_every=1))
+    d, m, rounds = 64, 4, 120
+    agg = packed_aggregator("mlmc_topk_static", d, k_fraction=0.1, s=4)
+    st = agg.init(m, d)
+    V = jnp.stack([jax.random.normal(jax.random.PRNGKey(40 + i), (d,))
+                   for i in range(m)])
+    for t in range(rounds):
+        st = agg.step(st, V, jax.random.fold_in(jax.random.PRNGKey(9), t)).state
+    n = rounds * m
+    assert tel.mlmc.draw_count("mlmc_topk_static") == n
+    expected = tel.mlmc.expected_probs("mlmc_topk_static")
+    np.testing.assert_allclose(
+        expected, np.asarray(agg.fn.codec.compressor.static_probs()),
+        rtol=1e-6)
+    hist = tel.mlmc.level_histogram("mlmc_topk_static")
+    for lvl, p in enumerate(expected, start=1):
+        tol = 5 * np.sqrt(p * (1 - p) / n) + 1e-3     # 5 sigma + slack
+        assert abs(hist.get(lvl, 0.0) - p) < tol, \
+            f"level {lvl}: {hist.get(lvl, 0.0):.3f} vs p_l {p:.3f}"
+
+
+# ---------------------------------------------------------------------------
+# retrace guard: telemetry must never add a jit lowering
+# ---------------------------------------------------------------------------
+
+_RG = dict(d=48, b=4, world=3, seed=11)
+
+
+def _rg_trainer(telemetry=None):
+    from repro.optim import sgd
+    from repro.train import Trainer
+
+    d = _RG["d"]
+    params = {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+    def loss_fn(p, batch):
+        return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
+
+    return Trainer(loss_fn, params, num_workers=_RG["world"],
+                   method="mlmc_adaptive_topk", optimizer=sgd(0.1),
+                   k_fraction=0.25, wire="packed", telemetry=telemetry)
+
+
+def _rg_batches():
+    d, b, world = _RG["d"], _RG["b"], _RG["world"]
+    key = jax.random.PRNGKey(7)
+    wkey, key = jax.random.split(key)
+    w_true = jax.random.normal(wkey, (d,))
+    while True:
+        key, kx = jax.random.split(key)
+        x = jax.random.normal(kx, (world, b, d))
+        yield {"x": x, "y": x @ w_true}
+
+
+@pytest.mark.parametrize("enabled", [False, True],
+                         ids=["disabled", "enabled"])
+def test_telemetry_adds_no_jit_lowerings(enabled):
+    """The PR-5 retrace harness with telemetry off AND on (sample_every=1,
+    so the sampled estimator metrics — ladder rows, bias proxy — fire on
+    every counted step): zero new lowerings after step 0 either way.  The
+    sampled jnp reductions lower once at warmup and then hit the cache."""
+    tel = Telemetry(sample_every=1) if enabled else None
+    trainer = _rg_trainer(tel)
+    data = _rg_batches()
+    trainer.fit(data, steps=1, seed=_RG["seed"])          # warmup/compile
+    with jtu.count_jit_and_pmap_lowerings() as count:
+        trainer.fit(data, steps=2, seed=_RG["seed"] + 1)
+    assert count[0] == 0, \
+        f"telemetry {'on' if enabled else 'off'}: {count[0]} new lowerings"
+    if enabled:
+        assert tel.mlmc.draw_count("mlmc_adaptive_topk") == 3 * _RG["world"]
+        assert len(tel.mlmc.ladder_trajectory("mlmc_adaptive_topk", 0)) == 3
+
+
+@pytest.mark.slow
+def test_enabled_telemetry_overhead_within_budget():
+    """Steady-state step-time overhead of ENABLED telemetry at the default
+    sampling period stays within the ISSUE's 5% budget (median over many
+    steps; generous absolute slack absorbs CI timer noise)."""
+    import time
+
+    def steady_median(tel):
+        trainer = _rg_trainer(tel)
+        data = _rg_batches()
+        trainer.fit(data, steps=3, seed=_RG["seed"])      # warmup
+        times = []
+        for _ in range(40):
+            t0 = time.perf_counter()
+            trainer.fit(data, steps=1, seed=_RG["seed"] + 1)
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    off = steady_median(None)
+    on = steady_median(Telemetry())
+    assert on <= off * 1.05 + 2e-4, \
+        f"telemetry overhead {on / off - 1:+.1%} (off={off*1e3:.2f}ms, " \
+        f"on={on*1e3:.2f}ms)"
