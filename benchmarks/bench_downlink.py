@@ -1,0 +1,131 @@
+"""Downlink-compression benchmark — uplink-only vs bidirectional.
+
+The PR-7 downlink ships the server direction as a DIANA-shift compressed
+RCD2 blob instead of the raw f32 broadcast.  This benchmark trains the
+same model both ways at the two BENCH_wire sizes and reports, per entry:
+
+* ``bytes_down_per_step`` straight from the transport's stats ledger (the
+  loopback transport books the raw f32 broadcast for uplink-only and the
+  real framed blob size for bidirectional — the same booking the tcp star
+  applies to actual socket traffic);
+* ``steps_per_s`` and ``final_loss`` so the bytes saving is read next to
+  its convergence cost (the acceptance gate: compressed downlink bytes
+  below the f32 baseline at equal final-loss tolerance).
+
+Emits ``BENCH_downlink.json`` at the REPO ROOT:
+
+    PYTHONPATH=src python -m benchmarks.bench_downlink            # full
+    PYTHONPATH=src python -m benchmarks.bench_downlink --smoke    # CI tier
+
+The smoke tier never clobbers a committed full record (same contract as
+``bench_wire`` / ``bench_adaptive``).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+
+from benchmarks.common import BENCH_WORKERS, small_lm_config
+from repro.data import LMTask, lm_batches
+from repro.models import build_model
+from repro.optim import sgd
+from repro.train import Trainer
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_downlink.json"
+
+SIZES = {
+    "small": dict(layers=2, d_model=128),
+    "wide": dict(layers=2, d_model=256),
+}
+
+#: the two sides of the comparison: identical uplink (packed mlmc_topk),
+#: downlink raw f32 broadcast vs DIANA-shift compressed Top-k
+METHODS = {
+    "uplink_only": dict(method="mlmc_topk", k_fraction=0.02, wire="packed"),
+    "bidirectional": dict(method="mlmc_topk", k_fraction=0.02, wire="packed",
+                          downlink="topk"),
+}
+
+
+def _run_one(cfg, kw: dict, steps: int, *, workers: int, seed: int = 0):
+    model = build_model(cfg)
+    task = LMTask(vocab=cfg.vocab_size, seq=32)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    def loss_fn(p, batch):
+        return model.loss(p, batch, remat=False)[0]
+
+    trainer = Trainer(loss_fn, params, num_workers=workers,
+                      optimizer=sgd(0.05), **kw)
+    data = lm_batches(task, workers, 4, seed=seed)
+    t0 = time.time()
+    hist = trainer.fit(data, steps=steps, seed=seed + 1)
+    wall = time.time() - t0
+    stats = trainer.transport.stats
+    return {
+        "dim": trainer.dim,
+        "steps_per_s": round(len(hist.loss) / max(wall, 1e-9), 3),
+        "final_loss": round(hist.loss[-1], 6),
+        "bytes_up_per_step": stats.bytes_up // max(steps, 1),
+        "bytes_down_per_step": stats.bytes_down // max(steps, 1),
+    }
+
+
+def _size_entry(size_name: str, steps: int) -> dict:
+    cfg = small_lm_config(**SIZES[size_name])
+    out = {label: _run_one(cfg, kw, steps, workers=BENCH_WORKERS)
+           for label, kw in METHODS.items()}
+    up, bi = out["uplink_only"], out["bidirectional"]
+    # the uplink-only broadcast IS the f32 baseline: 4*dim bytes per rank
+    assert up["bytes_down_per_step"] == 4 * up["dim"] * BENCH_WORKERS
+    return {
+        "trainer": out,
+        # acceptance: compressed downlink bytes below the f32 baseline...
+        "down_bytes_ratio": round(bi["bytes_down_per_step"]
+                                  / max(up["bytes_down_per_step"], 1), 4),
+        # ...at equal final-loss tolerance (reader-side judgement call;
+        # both numbers are in the record)
+        "final_loss_delta": round(bi["final_loss"] - up["final_loss"], 6),
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    steps = 3 if smoke else 12
+    sizes = ("small",) if smoke else ("small", "wide")
+    record = {"benchmark": "downlink", "smoke": smoke, "steps": steps,
+              "workers": BENCH_WORKERS, "sizes": {}}
+    for size_name in sizes:
+        t0 = time.time()
+        entry = _size_entry(size_name, steps)
+        record["sizes"][size_name] = entry
+        for label, r in entry["trainer"].items():
+            print(f"bench_downlink/{size_name}/{label},"
+                  f"{1e6 / max(r['steps_per_s'], 1e-9):.0f},"
+                  f"down_Bps={r['bytes_down_per_step']};"
+                  f"final_loss={r['final_loss']:.4f}")
+        print(f"# bench_downlink {size_name} down-bytes ratio = "
+              f"{entry['down_bytes_ratio']} ({time.time() - t0:.1f}s)",
+              flush=True)
+    keep = False
+    if smoke and OUT_PATH.exists():
+        try:
+            # never clobber a committed FULL perf record with a smoke run
+            keep = not json.loads(OUT_PATH.read_text()).get("smoke", True)
+        except (json.JSONDecodeError, OSError):
+            pass
+    if keep:
+        print(f"# smoke run: kept existing full record {OUT_PATH}")
+    else:
+        OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {OUT_PATH}")
+    return record
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

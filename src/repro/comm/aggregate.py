@@ -123,15 +123,21 @@ class PackedAggregate:
     worker's packed buffers, one `device_get` lands them on the host for
     byte framing, and one fused jit decodes + means all M packets."""
 
-    def __init__(self, codec: WireCodec, transport: Transport | None = None):
+    def __init__(self, codec: WireCodec, transport: Transport | None = None,
+                 downlink: "Downlink | None" = None):
         self.codec = codec
         self.transport = transport or LoopbackTransport()
+        self.downlink = downlink
+
+    def init(self, num_workers: int, dim: int) -> CommState:
+        del num_workers
+        return empty_comm_state(dim if self.downlink is not None else 0)
 
     def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
         from repro.core.aggregators import AggregateOut
 
         if state is None:
-            state = empty_comm_state()
+            state = self.init(*worker_grads.shape)
         tel = obs.active()
         name, impl = getattr(self.codec, "name", "?"), _codec_impl(self.codec)
         m = worker_grads.shape[0]
@@ -158,8 +164,14 @@ class PackedAggregate:
             _record_mlmc_draws(tel, self.codec, packets)
             _record_bias_proxy(tel, name, direction, worker_grads)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
-        # account the dense model-update broadcast on the downlink
-        self.transport.broadcast(4 * self.codec.dim, m)
+        if self.downlink is not None:
+            direction, state, dbits = _downlink_round(
+                self.downlink, direction, state, rng, self.transport, m)
+            state = state._replace(step=state.step + 1)
+            bits += dbits
+        else:
+            # account the dense model-update broadcast on the downlink
+            self.transport.broadcast(4 * self.codec.dim, m)
         return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
 
 
@@ -175,15 +187,18 @@ class PackedAdaptiveMLMC:
     ops and stays bitwise comparable (see `MultihostPackedAdaptive`)."""
 
     def __init__(self, codec, compressor, rho: float,
-                 transport: Transport | None = None):
+                 transport: Transport | None = None,
+                 downlink: "Downlink | None" = None):
         self.codec = codec
         self.compressor = compressor
         self.rho = rho
         self.transport = transport or LoopbackTransport()
+        self.downlink = downlink
 
     def init(self, num_workers: int, dim: int) -> CommState:
-        del dim
-        return adaptive_comm_state(num_workers, self.compressor.num_levels)
+        return adaptive_comm_state(
+            num_workers, self.compressor.num_levels,
+            dim if self.downlink is not None else 0)
 
     def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
         from repro.core.aggregators import AggregateOut
@@ -227,8 +242,13 @@ class PackedAdaptiveMLMC:
                 tel.mlmc.record_draw(name, p.header.level, p.header.prob)
             _record_bias_proxy(tel, name, direction, worker_grads)
         bits = float(sum(self.codec.measured_bits(p) for p in packets))
-        self.transport.broadcast(4 * self.codec.dim, m)
         new_state = state._replace(step=state.step + 1, ladder_ema=ema)
+        if self.downlink is not None:
+            direction, new_state, dbits = _downlink_round(
+                self.downlink, direction, new_state, rng, self.transport, m)
+            bits += dbits
+        else:
+            self.transport.broadcast(4 * self.codec.dim, m)
         return AggregateOut(direction, new_state,
                             jnp.asarray(bits, jnp.float32))
 
@@ -260,6 +280,101 @@ def unpack_direction(raw: bytes, dim: int) -> tuple[np.ndarray, float]:
     return np.frombuffer(raw, np.float32, d, _DIR_HEADER_BYTES), bits
 
 
+#: the DIRECTION_ENC frame payload (compressed downlink): same 16-byte
+#: header shape as RCD1 (magic, dim, uplink bits) followed by ONE
+#: serialized `Packet` the downlink codec decodes against the receiving
+#: rank's DIANA shift.  Append-only next to RCD1: receivers dispatch on
+#: the magic, old readers reject RCD2 loudly (bad magic), never silently.
+_DIRE_MAGIC = b"RCD2"
+_DIRE_FMT = "<4sId"
+_DIRE_HEADER_BYTES = struct.calcsize(_DIRE_FMT)    # 16
+
+
+def pack_encoded_direction(pkt_bytes: bytes, dim: int, bits: float) -> bytes:
+    """Serialize one compressed-downlink blob: RCD2 header + packet bytes.
+    ``bits`` carries the round's measured UPLINK bits (every rank returns
+    the same `AggregateOut.bits`, so the server ships its sum along)."""
+    return struct.pack(_DIRE_FMT, _DIRE_MAGIC, dim, float(bits)) + pkt_bytes
+
+
+def unpack_encoded_direction(raw: bytes, dim: int) -> tuple[bytes, float]:
+    """Inverse of `pack_encoded_direction` -> (packet bytes, uplink bits)."""
+    if len(raw) < _DIRE_HEADER_BYTES:
+        raise ValueError(f"truncated encoded-direction blob: {len(raw)} bytes")
+    magic, d, bits = struct.unpack_from(_DIRE_FMT, raw, 0)
+    if magic != _DIRE_MAGIC:
+        raise ValueError(f"bad encoded-direction magic {magic!r}")
+    if d != dim:
+        raise ValueError(f"encoded direction for dim {d}, expected {dim}")
+    return raw[_DIRE_HEADER_BYTES:], bits
+
+
+#: fold_in tag deriving the downlink draw key from the per-step rng —
+#: distinct from the uplink's `jax.random.split` fan so the downlink
+#: codec's stochasticity (if any) never correlates with a worker's draw
+_DOWNLINK_FOLD = 0x0D0C
+
+
+class Downlink:
+    """DIANA-style compressed server->worker direction (the Shifted
+    Compression Framework / "On Biased Compression" downlink).
+
+    Every rank mirrors a shift vector ``h`` in ``CommState.shift``.  Per
+    round the server encodes ``delta = direction - h`` with an ordinary
+    wire codec, ships the packet, and EVERY rank (server included) applies
+
+        direction~ = h + decode(packet)
+        h         <- h + alpha * decode(packet)
+
+    so params and shifts stay identical across ranks, and the shifted
+    compression error contracts as the direction stabilizes.  The
+    round-trip math is byte-for-byte the same on the in-process loopback
+    aggregators and the tcp star (`Packet` serialization is lossless), so
+    compressed-downlink tcp training equals loopback bit-for-bit."""
+
+    def __init__(self, codec, alpha: float = 0.5):
+        self.codec = codec
+        self.alpha = float(alpha)
+        self.dim = codec.dim
+        self.name = getattr(codec, "name", "?")
+
+    def key(self, rng):
+        """The downlink draw key — identical derivation on every rank."""
+        return jax.random.fold_in(rng, _DOWNLINK_FOLD)
+
+    def encode(self, direction: Array, shift: Array, key):
+        """Server side: -> (packet, decoded delta_hat, measured bits)."""
+        delta = direction - shift
+        pkt = self.codec.encode(delta, key).packet
+        return pkt, self.decode(pkt), float(self.codec.measured_bits(pkt))
+
+    def decode(self, pkt: Packet) -> Array:
+        return jnp.asarray(self.codec.decode(pkt))
+
+    def apply(self, shift: Array, delta_hat: Array) -> tuple[Array, Array]:
+        """-> (direction~, new shift) — the same eager f32 ops everywhere."""
+        return shift + delta_hat, shift + self.alpha * delta_hat
+
+
+def _downlink_round(downlink, direction, state, rng, transport, world):
+    """One loopback downlink round: encode against the shift, book the
+    REAL blob size on the transport, return the decoded direction and the
+    state with the advanced shift.  -> (direction~, state, downlink_bits)"""
+    tel = obs.active()
+    t0 = time.perf_counter() if tel.enabled else 0.0
+    pkt, delta_hat, dbits = downlink.encode(direction, state.shift,
+                                            downlink.key(rng))
+    blob_len = _DIRE_HEADER_BYTES + len(pkt.to_bytes())
+    if tel.enabled:
+        tel.trace.complete("wire/downlink_encode", t0, codec=downlink.name,
+                           nbytes=blob_len)
+        tel.observe("downlink_encode_s", time.perf_counter() - t0,
+                    codec=downlink.name)
+    transport.broadcast(blob_len, world)
+    direction, shift = downlink.apply(state.shift, delta_hat)
+    return direction, state._replace(shift=shift), dbits
+
+
 #: STATE frame payload: one rank's client-side CommState rows — the EMA
 #: ladder row of `mlmc_adaptive_*` and the momentum row of `ef21_sgdm` —
 #: gathered to rank 0 at checkpoint time (`Trainer.sync_comm_state`) so a
@@ -269,10 +384,18 @@ _STATE_MAGIC = b"RCS1"
 _STATE_FMT = "<4sBII"    # magic, rank, ladder length, momentum length
 _STATE_HEADER_BYTES = struct.calcsize(_STATE_FMT)    # 13
 
+#: RCS2 appends the rank's downlink-shift mirror to the row (append-only
+#: next to RCS1: `unpack_comm_state_row` still reads RCS1 rows — a shift
+#: of length 0 — so pre-downlink checkpoint gathers stay restorable)
+_STATE2_MAGIC = b"RCS2"
+_STATE2_FMT = "<4sBIII"  # magic, rank, ladder, momentum, shift lengths
+_STATE2_HEADER_BYTES = struct.calcsize(_STATE2_FMT)    # 17
+
 
 def pack_comm_state_row(state: CommState, rank: int) -> bytes:
     """Serialize rank's client-side rows of a `CommState` (raw f32 bit
-    patterns, so a gathered row restores bitwise)."""
+    patterns, so a gathered row restores bitwise).  Rows are written in
+    the RCS2 format (ladder + momentum + downlink shift)."""
     ladder = np.zeros((0,), np.float32)
     if getattr(state.ladder_ema, "ndim", 0) == 2 \
             and rank < state.ladder_ema.shape[0]:
@@ -283,34 +406,61 @@ def pack_comm_state_row(state: CommState, rank: int) -> bytes:
             and rank < state.momentum.shape[0]:
         momentum = np.ascontiguousarray(np.asarray(state.momentum[rank]),
                                         np.float32)
-    return struct.pack(_STATE_FMT, _STATE_MAGIC, rank, ladder.size,
-                       momentum.size) + ladder.tobytes() + momentum.tobytes()
+    shift = np.ascontiguousarray(np.asarray(state.shift), np.float32) \
+        if getattr(state.shift, "ndim", 0) == 1 else np.zeros((0,), np.float32)
+    return struct.pack(_STATE2_FMT, _STATE2_MAGIC, rank, ladder.size,
+                       momentum.size, shift.size) + ladder.tobytes() + \
+        momentum.tobytes() + shift.tobytes()
 
 
-def unpack_comm_state_row(raw: bytes) -> tuple[int, np.ndarray, np.ndarray]:
-    """Inverse of `pack_comm_state_row`: (rank, ladder_row, momentum_row)
-    — either row may be empty (stateless / no-momentum methods)."""
+def unpack_comm_state_row(raw: bytes
+                          ) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    """Inverse of `pack_comm_state_row`:
+    (rank, ladder_row, momentum_row, shift) — any row may be empty
+    (stateless / no-momentum / uplink-only methods).  Reads both the RCS2
+    format and legacy RCS1 rows (no shift)."""
     if len(raw) < _STATE_HEADER_BYTES:
         raise ValueError(f"truncated STATE row: {len(raw)} bytes")
-    magic, rank, nl, nm = struct.unpack_from(_STATE_FMT, raw, 0)
-    if magic != _STATE_MAGIC:
+    magic = raw[:4]
+    if magic == _STATE2_MAGIC:
+        if len(raw) < _STATE2_HEADER_BYTES:
+            raise ValueError(f"truncated STATE row: {len(raw)} bytes")
+        _, rank, nl, nm, ns = struct.unpack_from(_STATE2_FMT, raw, 0)
+        header = _STATE2_HEADER_BYTES
+    elif magic == _STATE_MAGIC:
+        _, rank, nl, nm = struct.unpack_from(_STATE_FMT, raw, 0)
+        ns, header = 0, _STATE_HEADER_BYTES
+    else:
         raise ValueError(f"bad STATE magic {magic!r}")
-    if len(raw) != _STATE_HEADER_BYTES + 4 * (nl + nm):
+    if len(raw) != header + 4 * (nl + nm + ns):
         raise ValueError(f"STATE row of {len(raw)} bytes, expected "
-                         f"{_STATE_HEADER_BYTES + 4 * (nl + nm)} "
-                         f"(ladder {nl}, momentum {nm})")
-    ladder = np.frombuffer(raw, np.float32, nl, _STATE_HEADER_BYTES)
-    momentum = np.frombuffer(raw, np.float32, nm,
-                             _STATE_HEADER_BYTES + 4 * nl)
-    return rank, ladder, momentum
+                         f"{header + 4 * (nl + nm + ns)} "
+                         f"(ladder {nl}, momentum {nm}, shift {ns})")
+    ladder = np.frombuffer(raw, np.float32, nl, header)
+    momentum = np.frombuffer(raw, np.float32, nm, header + 4 * nl)
+    shift = np.frombuffer(raw, np.float32, ns, header + 4 * (nl + nm))
+    return rank, ladder, momentum, shift
 
 
 def fold_comm_state_rows(state: CommState, rows: list[bytes]) -> CommState:
     """Fold gathered STATE rows into a full `CommState` (rank 0's
-    checkpoint view: its own mirrors plus every client's rows)."""
+    checkpoint view: its own mirrors plus every client's rows).  Shift
+    rows are validated against rank 0's own mirror — the shift is
+    replicated by construction, so a mismatching row is a desync bug,
+    not data to fold."""
     ladder, momentum = state.ladder_ema, state.momentum
     for raw in rows:
-        r, lad, mom = unpack_comm_state_row(raw)
+        r, lad, mom, shf = unpack_comm_state_row(raw)
+        if shf.size:
+            own = np.asarray(state.shift)
+            if shf.size != own.size:
+                raise ValueError(
+                    f"STATE shift row from rank {r} ({shf.size} dims) does "
+                    f"not fit shift {own.shape}")
+            if not np.array_equal(shf, own):
+                raise ValueError(
+                    f"STATE shift row from rank {r} diverged from the "
+                    "server's mirror — downlink shifts must stay replicated")
         if lad.size:
             if getattr(ladder, "ndim", 0) != 2 or \
                     lad.size != ladder.shape[1] or r >= ladder.shape[0]:
@@ -354,16 +504,22 @@ class MultihostPackedAggregate:
     worker order of `PackedAggregate`), and the direction crosses the wire
     as raw f32 bit patterns."""
 
-    def __init__(self, codec: WireCodec, transport):
+    def __init__(self, codec: WireCodec, transport,
+                 downlink: "Downlink | None" = None):
         _require_multihost(transport, "MultihostPackedAggregate")
         self.codec = codec
         self.transport = transport
+        self.downlink = downlink
+
+    def init(self, num_workers: int, dim: int) -> CommState:
+        del num_workers
+        return empty_comm_state(dim if self.downlink is not None else 0)
 
     def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
         from repro.core.aggregators import AggregateOut
 
         if state is None:
-            state = empty_comm_state()
+            state = self.init(self.transport.world, worker_grads.shape[1])
         tp = self.transport
         _require_one_worker(worker_grads)
         tel = obs.active()
@@ -376,8 +532,13 @@ class MultihostPackedAggregate:
                                impl=_codec_impl(self.codec))
             if tp.rank != 0:   # rank 0 records all draws in _serve_round
                 _record_mlmc_draws(tel, self.codec, [enc.packet])
-        direction, bits = _serve_round(tp, self.codec,
-                                       enc.packet.to_bytes())
+        dl = self.downlink
+        direction, bits, shift = _serve_round(
+            tp, self.codec, enc.packet.to_bytes(), downlink=dl,
+            shift=state.shift if dl is not None else None,
+            key=dl.key(rng) if dl is not None else None)
+        if dl is not None:
+            state = state._replace(step=state.step + 1, shift=shift)
         return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
 
 
@@ -402,18 +563,22 @@ def _drain_decoding(tp, codec, local_payload: bytes):
     return packets, (rows if compiled else None)
 
 
-def _serve_round(tp, codec, local_payload: bytes) -> tuple[Array, float]:
+def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
+                 shift=None, key=None) -> tuple[Array, float, Array | None]:
     """One multihost aggregation round: ship this rank's payload, decode +
-    mean on rank 0, broadcast the f32 direction.  Returns the direction and
-    the measured uplink bits (identical on every rank).  EF21 does NOT
+    mean on rank 0, broadcast the direction.  Returns ``(direction, bits,
+    new_shift)`` — bits (uplink + downlink where compressed) identical on
+    every rank, ``new_shift`` None without a downlink.  EF21 does NOT
     route through here — its server must also fold the decoded innovations
     into the state mirror, so `MultihostPackedEF21` runs its own loop.
 
-    The direction crosses the host boundary exactly once on rank 0: the
-    decoded mean lives on device, `np.asarray` fetches it once for the
-    broadcast frame, and the trainer consumes the device array directly
-    (the former eager path round-tripped every decoded estimate
-    host -> device -> host before the trainer ever saw the direction)."""
+    Without a downlink the direction crosses as raw f32 bit patterns
+    (`pack_direction`).  With one, rank 0 encodes ``direction - shift``
+    through the downlink codec, ships the RCD2 blob on the DIRECTION_ENC
+    frame, and every rank — server included — applies the DECODED delta
+    against its mirrored shift, so the post-round direction and shift are
+    identical (and bitwise equal to the loopback aggregators, which run
+    the same round trip in-process)."""
     tel = obs.active()
     name, impl = getattr(codec, "name", "?"), _codec_impl(codec)
     if tp.rank == 0:
@@ -429,12 +594,31 @@ def _serve_round(tp, codec, local_payload: bytes) -> tuple[Array, float]:
                                impl=impl, world=tp.world)
             _record_mlmc_draws(tel, codec, packets)
         bits = float(sum(codec.measured_bits(p) for p in packets))
-        tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
-    else:
-        tp.exchange([local_payload])
-        vec, bits = unpack_direction(tp.broadcast_payload(None), codec.dim)
-        direction = jnp.asarray(vec)
-    return direction, bits
+        if downlink is None:
+            tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
+            return direction, bits, None
+        t0 = time.perf_counter() if tel.enabled else 0.0
+        pkt, delta_hat, dbits = downlink.encode(direction, shift, key)
+        blob = pack_encoded_direction(pkt.to_bytes(), codec.dim, bits)
+        if tel.enabled:
+            tel.trace.complete("wire/downlink_encode", t0, pid=0,
+                               codec=downlink.name, nbytes=len(blob))
+            tel.observe("downlink_encode_s", time.perf_counter() - t0,
+                        codec=downlink.name)
+        tp.broadcast_payload(blob, encoded=True)
+        direction, new_shift = downlink.apply(shift, delta_hat)
+        return direction, bits + dbits, new_shift
+    tp.exchange([local_payload])
+    raw = tp.broadcast_payload(None)
+    if downlink is None:
+        vec, bits = unpack_direction(raw, codec.dim)
+        return jnp.asarray(vec), bits, None
+    pkt_bytes, bits = unpack_encoded_direction(raw, codec.dim)
+    pkt = Packet.from_bytes(pkt_bytes)
+    delta_hat = downlink.decode(pkt)
+    dbits = float(downlink.codec.measured_bits(pkt))
+    direction, new_shift = downlink.apply(shift, delta_hat)
+    return direction, bits + dbits, new_shift
 
 
 class MultihostPackedAdaptive:
@@ -456,16 +640,19 @@ class MultihostPackedAdaptive:
     other rows restart at zero; unbiasedness is never affected (Lemma
     3.2), only the EMA warm-start."""
 
-    def __init__(self, codec, compressor, rho: float, transport):
+    def __init__(self, codec, compressor, rho: float, transport,
+                 downlink: "Downlink | None" = None):
         _require_multihost(transport, "MultihostPackedAdaptive")
         self.codec = codec
         self.compressor = compressor
         self.rho = rho
         self.transport = transport
+        self.downlink = downlink
 
     def init(self, num_workers: int, dim: int) -> CommState:
-        del dim
-        return adaptive_comm_state(num_workers, self.compressor.num_levels)
+        return adaptive_comm_state(
+            num_workers, self.compressor.num_levels,
+            dim if self.downlink is not None else 0)
 
     def __call__(self, worker_grads: Array, rng, state: CommState | None = None):
         from repro.core.aggregators import AggregateOut
@@ -494,9 +681,15 @@ class MultihostPackedAdaptive:
                 tel.mlmc.record_ladder(name, r, np.asarray(row),
                                        step=int(state.step))
                 tel.mlmc.record_expected(name, np.asarray(probs))
-        direction, bits = _serve_round(tp, self.codec, enc.packet.to_bytes())
+        dl = self.downlink
+        direction, bits, shift = _serve_round(
+            tp, self.codec, enc.packet.to_bytes(), downlink=dl,
+            shift=state.shift if dl is not None else None,
+            key=dl.key(rng) if dl is not None else None)
         new_state = state._replace(step=state.step + 1,
                                    ladder_ema=state.ladder_ema.at[r].set(row))
+        if dl is not None:
+            new_state = new_state._replace(shift=shift)
         return AggregateOut(direction, new_state,
                             jnp.asarray(bits, jnp.float32))
 
@@ -664,11 +857,30 @@ class MultihostPackedEF21:
                             jnp.asarray(bits, jnp.float32))
 
 
+def _make_packed_codec(name: str, dim: int, compiled: bool | None,
+                       codec_kw: dict):
+    """One packed-wire codec: the per-codec compiled default unless the
+    caller forces a pipeline (shared by uplink, downlink, and the
+    per-bucket `WirePlan` construction)."""
+    if compiled is None:
+        from repro.comm.compiled import default_compiled
+
+        compiled = default_compiled(name)
+    if compiled:
+        from repro.comm.compiled import make_compiled_codec
+
+        return make_compiled_codec(name, dim, **codec_kw)
+    return make_codec(name, dim, **codec_kw)
+
+
 def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None,
                       k_fraction: float = 0.01, s: int = 1,
                       rtn_level: int = 4, qsgd_levels: int = 2,
                       momentum_beta: float = 0.1, fixed_levels: int = 24,
-                      ema_rho: float = 0.25, compiled: bool | None = None):
+                      ema_rho: float = 0.25, compiled: bool | None = None,
+                      downlink: str | None = None,
+                      downlink_alpha: float = 0.5,
+                      bucket_size: int | None = None):
     """Build the packed-wire `Aggregator` for a registry name (the
     ``wire="packed"`` branch of `repro.core.aggregators.make_aggregator`).
 
@@ -679,23 +891,36 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
     jit-compiled path — byte-identical packets, the per-worker eager op
     dispatch replaced by one vmapped encode, one device_get, and one
     fused decode+mean per step — and ``compiled=False`` forces the eager
-    codecs (verification / A-B benchmarks)."""
+    codecs (verification / A-B benchmarks).
+
+    ``downlink`` names a registry codec for the server->worker direction
+    (DIANA-style shift compression — see `Downlink`); ``bucket_size``
+    carves the gradient into fixed-shape buckets encoded independently
+    through a shared per-bucket `WirePlan`
+    (`repro.comm.plan.BucketedPackedAggregate`), so the trainer can
+    overlap per-bucket encodes with the remaining backward."""
     from repro.core.aggregators import Aggregator
 
     codec_kw = dict(k_fraction=k_fraction, s=s, rtn_level=rtn_level,
                     qsgd_levels=qsgd_levels, fixed_levels=fixed_levels)
-    if compiled is None:
-        from repro.comm.compiled import default_compiled
+    dl = None
+    if downlink is not None:
+        dl = Downlink(_make_packed_codec(downlink, dim, compiled, codec_kw),
+                      downlink_alpha)
+    if bucket_size is not None:
+        from repro.comm.plan import bucketed_packed_aggregator
 
-        compiled = default_compiled(name)
-    if compiled:
-        from repro.comm.compiled import make_compiled_codec
-
-        codec = make_compiled_codec(name, dim, **codec_kw)
-    else:
-        codec = make_codec(name, dim, **codec_kw)
+        return bucketed_packed_aggregator(
+            name, dim, bucket_size=bucket_size, transport=transport,
+            compiled=compiled, downlink=dl, codec_kw=codec_kw)
+    codec = _make_packed_codec(name, dim, compiled, codec_kw)
     multihost = is_multihost_transport(transport)
     if name in ("ef21", "ef21_sgdm", "signsgd_ef"):
+        if dl is not None:
+            raise ValueError(
+                "downlink compression does not compose with the EF21 "
+                "family: its direction IS the server innovation state "
+                "g, which every rank already reconstructs incrementally")
         beta = momentum_beta if name == "ef21_sgdm" else 1.0
         cls = MultihostPackedEF21 if multihost else PackedEF21
         ef = cls(codec, beta, transport)
@@ -703,8 +928,12 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
     if name in ("mlmc_adaptive_topk", "mlmc_adaptive_stopk",
                 "mlmc_adaptive_rtn"):
         cls = MultihostPackedAdaptive if multihost else PackedAdaptiveMLMC
-        ad = cls(codec, codec.compressor, ema_rho, transport)
+        ad = cls(codec, codec.compressor, ema_rho, transport, downlink=dl)
         return Aggregator(name, ad, init=ad.init, stateful=True)
     if multihost:
-        return Aggregator(name, MultihostPackedAggregate(codec, transport))
-    return Aggregator(name, PackedAggregate(codec, transport))
+        ag = MultihostPackedAggregate(codec, transport, downlink=dl)
+    else:
+        ag = PackedAggregate(codec, transport, downlink=dl)
+    if dl is not None:
+        return Aggregator(name, ag, init=ag.init, stateful=True)
+    return Aggregator(name, ag)

@@ -77,7 +77,7 @@ from repro.comm.packets import (
     ext_lane,
     ext_lane_to_header,
 )
-from repro.core.adaptive import adaptive_probs
+from repro.core.adaptive import _EPS as _ADAPTIVE_EPS
 from repro.core.bitwise import _BELOW_ONE, _fixed_scale
 from repro.core.types import categorical, opt_barrier, pin_rounding
 from repro.kernels.pack import fields_per_word, pack_bits, unpack_bits
@@ -872,13 +872,18 @@ class CompiledMLMCRTN:
     entropy-coded on the host with the SAME numpy helper as the eager
     codec, so bytes agree by construction.
 
-    Stage A runs EAGERLY (op-by-op, the literal ops of the eager codec):
-    the adaptive Lemma-3.4 ladder — eight `compress(l) - compress(l-1)`
-    norms — keeps drifting 1 ulp under whole-graph jit on the CPU backend
-    no matter where rounding pins are placed (XLA re-fuses around them),
-    and a 1-ulp ladder shifts the p_l header byte.  L = 8 keeps the eager
-    prelude cheap; the O(d)-dominant work (grid codes, corrections,
-    bit-packing) is all in the jitted stage B."""
+    Stage A's O(d*L) work — the adaptive Lemma-3.4 ladder (eight
+    `compress(l) - compress(l-1)` norms) and the max-|v| scale — is JITTED
+    with the levels UNROLLED as barrier-protected static scalars: the
+    former eager stage A existed because `residual_norms`'s vmap over a
+    *batched* level drifts 1 ulp under whole-graph jit (XLA specializes
+    the batched grid math differently), but an unrolled ladder whose
+    static levels pass through `opt_barrier` (so the per-level grid
+    division cannot constant-fold into a reciprocal multiply) replays the
+    eager bytes exactly — verified over the randomized battery in
+    ``tests/test_compiled_codec.py`` and the golden fixtures.  Only the
+    O(L)-element tail (normalize, categorical, p_l pick) stays eager:
+    fusing it into the same jit re-drifts the p_l header byte."""
 
     def __init__(self, eager: MLMCRTNCodec):
         self.eager = eager
@@ -887,23 +892,53 @@ class CompiledMLMCRTN:
         self.adaptive = eager.adaptive
         self._body_cache: dict = {}
         self._dec_cache: dict = {}
+        self._stage_a = None
 
     @property
     def compressor(self):
         return self.comp
 
-    # ---- stage A: the level draw (eager, see class docstring) -------------
+    # ---- stage A: the level draw (jitted ladder, see class docstring) -----
+
+    def _stage_a_fn(self):
+        """Jitted (ladder, scale) for the Lemma-3.4 draw: the unrolled
+        residual-norm ladder (adaptive only — a zero-row placeholder
+        otherwise) and the RTN clip scale c, in ONE jit dispatch."""
+        if self._stage_a is None:
+            comp, adaptive = self.comp, self.adaptive
+            L = comp.num_levels
+
+            def stage_a(v):
+                v = jnp.asarray(v, jnp.float32)
+                if adaptive:
+                    norms = []
+                    for l in range(1, L + 1):
+                        lt = opt_barrier(jnp.asarray(l, jnp.int32))
+                        r = comp.residual(v, lt)
+                        norms.append(jnp.sqrt(jnp.sum(pin_rounding(r * r))))
+                    ladder = jnp.stack(norms)
+                else:
+                    ladder = jnp.zeros((L,), jnp.float32)
+                return ladder, jnp.maximum(jnp.max(jnp.abs(v)), _EPS)
+
+            self._stage_a = jax.jit(stage_a)
+        return self._stage_a
 
     def _draw_row(self, v, key, probs):
-        v = jnp.asarray(v, jnp.float32)
+        ladder, c = self._stage_a_fn()(v)
         if self.adaptive:
-            probs = adaptive_probs(self.comp, v)
+            # the eager tail of core.adaptive.adaptive_probs, applied to
+            # the jitted ladder (same ops, same order)
+            total = jnp.sum(ladder)
+            uniform = jnp.full_like(ladder, 1.0 / ladder.shape[0])
+            probs = jnp.where(total > _ADAPTIVE_EPS,
+                              ladder / jnp.maximum(total, _ADAPTIVE_EPS),
+                              uniform)
         elif probs is None:
             probs = self.comp.static_probs()
         probs = probs / jnp.sum(probs)
         idx = categorical(key, probs)
         p_l = jnp.maximum(probs[idx], 1e-30)
-        c = jnp.maximum(jnp.max(jnp.abs(v)), _EPS)
         return int(idx) + 1, p_l, c
 
     # ---- stage B: level-specialized encode body ---------------------------

@@ -544,7 +544,8 @@ DEVICE_WIRE_METHODS = ("dense", "qsgd", "rtn", "signsgd", "mlmc_fixed",
 
 
 def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,
-                      ema_rho: float = 0.25, **codec_kw):
+                      ema_rho: float = 0.25, downlink: str | None = None,
+                      downlink_alpha: float = 0.5, **codec_kw):
     """The ``wire="device"`` branch of `make_aggregator`: every worker
     gradient is encoded to a fixed-shape `DevicePacket`, "shipped" as plain
     arrays, decoded, and averaged — all inside one jit, with bits accounted
@@ -554,7 +555,16 @@ def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,
     like the abstract substrate: EF21/EF21-SGDM keep their worker mirrors,
     and `mlmc_adaptive_*` keeps the EMA residual-norm ladders, whose
     sampled p_l/level ride the packets' f32 header lane (no host
-    callbacks anywhere)."""
+    callbacks anywhere).
+
+    ``downlink`` names a second device codec for the server→worker
+    direction: the mean is encoded as ``direction - shift`` against a
+    DIANA-style server shift in ``CommState.shift`` (updated by
+    ``shift += downlink_alpha * delta_hat``), entirely inside the jit;
+    bits then include the downlink packet's operand size.  Supported for
+    the stateless families only — EF21's direction IS the server mirror g
+    (already an innovation stream), and the adaptive family's ladder rows
+    stay whole-gradient."""
     from repro.core.adaptive import ladder_ema_update, probs_from_ladder
     from repro.core.aggregators import AggregateOut, Aggregator
     from repro.core.error_feedback import ef21_targets
@@ -562,6 +572,11 @@ def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,
         empty_comm_state
 
     codec = make_device_codec(name, dim, **codec_kw)
+    if downlink is not None and name in ("ef21", "ef21_sgdm",
+                                         "mlmc_adaptive_topk",
+                                         "mlmc_adaptive_stopk"):
+        raise ValueError(f"downlink compression does not compose with the "
+                         f"stateful device family {name!r}")
 
     if name in ("ef21", "ef21_sgdm"):
         beta = 1.0 if name == "ef21" else momentum_beta
@@ -620,9 +635,16 @@ def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,
 
         return Aggregator(name, agg, init=init, stateful=True)
 
+    down_codec = (make_device_codec(downlink, dim, **codec_kw)
+                  if downlink is not None else None)
+
+    def init(num_workers, d):
+        del num_workers
+        return empty_comm_state(d if down_codec is not None else 0)
+
     def agg(worker_grads, rng, state):
         if state is None:
-            state = empty_comm_state()
+            state = init(worker_grads.shape[0], dim)
         m = worker_grads.shape[0]
         keys = jax.random.split(rng, m)
 
@@ -632,6 +654,24 @@ def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,
 
         decoded = jax.vmap(one)(worker_grads, keys)
         bits = jnp.asarray(m * codec.operand_bits(), jnp.float32)
-        return AggregateOut(jnp.mean(decoded, axis=0), state, bits)
+        direction = jnp.mean(decoded, axis=0)
+        if down_codec is None:
+            return AggregateOut(direction, state, bits)
+        # DIANA-shift downlink: encode the mean's innovation vs the
+        # mirrored server shift; every rank decodes the same packet, so
+        # the same fold keeps all mirrors identical (_DOWNLINK_FOLD
+        # matches the packed wire's key derivation).
+        from repro.comm.aggregate import _DOWNLINK_FOLD
 
+        dkey = jax.random.fold_in(rng, _DOWNLINK_FOLD)
+        dpkt, _ = down_codec.encode(direction - state.shift, dkey)
+        delta_hat = down_codec.decode(dpkt)
+        new_state = state._replace(
+            step=state.step + 1,
+            shift=state.shift + downlink_alpha * delta_hat)
+        bits = bits + jnp.asarray(down_codec.operand_bits(), jnp.float32)
+        return AggregateOut(state.shift + delta_hat, new_state, bits)
+
+    if down_codec is not None:
+        return Aggregator(name, agg, init=init, stateful=True)
     return Aggregator(name, agg)

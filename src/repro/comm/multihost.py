@@ -19,18 +19,32 @@ Frame protocol (all little-endian, append-only like the packet header):
 * ``PAYLOAD``   worker -> server, one serialized `Packet` per round.
 * ``DIRECTION`` server -> workers, the aggregated direction blob
   (see `repro.comm.aggregate`).
+* ``DIRECTION_ENC`` server -> workers, the COMPRESSED direction blob: a
+  16-byte RCD2 header followed by one serialized `Packet` the downlink
+  codec decodes against the rank's mirrored DIANA shift
+  (`repro.comm.aggregate.pack_encoded_direction`).
 * ``STATE``     worker -> server, one rank's client-side `CommState` rows
   (`repro.comm.aggregate.pack_comm_state_row`), gathered by
   `gather_state` at checkpoint time so a rank-0 checkpoint captures
-  every rank's EMA ladder / momentum rows.
+  every rank's EMA ladder / momentum / downlink-shift rows.
 
 Stats semantics (cross-transport comparability is the point):
 
-* ``bytes_up`` / ``bytes_down`` count *payload* bytes.  On rank 0 — the
-  aggregation point, the vantage the in-process transports model — they
-  cover all ``world`` ranks including rank 0's loopback contribution, so
-  identical traffic books identical numbers on `LoopbackTransport` and
+* ``bytes_up`` counts *payload* bytes.  On rank 0 — the aggregation
+  point, the vantage the in-process transports model — it covers all
+  ``world`` ranks including rank 0's loopback contribution, so identical
+  uplink traffic books identical numbers on `LoopbackTransport` and
   here; worker ranks see only their own link and book only that.
+* ``bytes_down`` on rank 0 books only the ``world - 1`` REAL socket
+  sends of each broadcast, frame headers included — rank 0's in-process
+  loopback copy never crosses a wire and is no longer counted (it used
+  to be booked as ``payload * world``, silently inflating every
+  compressed-downlink ratio by ``world/(world-1)``).  A worker books its
+  own received payload.  `LoopbackTransport` keeps its modeled
+  ``payload * world`` accounting, so the documented cross-transport
+  relation is ``tcp_down == (world-1)/world * loopback_down`` plus the
+  per-send frame-header bytes (regression-tested in
+  ``tests/test_multihost.py``).
 * ``wire_bytes`` counts what actually crossed a socket on this process
   (frame headers included): the honest per-link measurement.
 
@@ -57,6 +71,7 @@ FRAME_HEADER_BYTES = struct.calcsize(_FRAME_FMT)   # 12
 HELLO, WELCOME, GOODBYE, PAYLOAD, DIRECTION = 1, 2, 3, 4, 5
 SCALAR, SCALAR_MEAN = 6, 7     # loss-telemetry allreduce (8-byte f64)
 STATE = 8                      # checkpoint gather of client CommState rows
+DIRECTION_ENC = 9              # compressed (DIANA-shift) direction blob
 
 #: a real worker HELLOs immediately after connecting; give a stray peer
 #: (port scanner, health check) at most this long before refusing it
@@ -469,37 +484,51 @@ class TcpStarTransport:
         if on_payload is not None:
             on_payload(r, data)
 
-    def broadcast_payload(self, data: bytes | None) -> bytes:
+    def broadcast_payload(self, data: bytes | None, *,
+                          encoded: bool = False) -> bytes:
         """Rank 0 passes the direction blob and sends it down every link;
         workers pass ``None`` and receive it.  Returns the blob on every
-        rank.  ``bytes_down`` books blob * world (rank 0's loopback copy
-        included, like the in-process transports count every worker) — but
-        the blob is the MEASURED direction wire format, 16-byte header
-        included, so it runs slightly above loopback's modeled bare
-        ``4 * dim`` update; ``wire_bytes`` counts socket bytes only."""
+        rank.  ``encoded=True`` ships the blob on the ``DIRECTION_ENC``
+        frame (a compressed RCD2 direction the receiver decodes against
+        its DIANA shift — see `repro.comm.aggregate`); workers accept
+        either frame type and dispatch on the blob's magic.
+
+        ``bytes_down`` books only the ``world - 1`` REAL socket sends
+        (frame headers included) on rank 0 — its own in-process loopback
+        copy never crosses a wire; a worker books its received payload.
+        ``wire_bytes`` counts socket bytes on this process as always."""
         t0 = time.perf_counter()
         tel = obs.active()
+        ftype = DIRECTION_ENC if encoded else DIRECTION
         if self.is_server:
             if data is None:
                 raise ValueError("rank 0 must provide the broadcast payload")
+            sent = 0
             for r in sorted(self._conns):
-                self.stats.wire_bytes += send_frame(
-                    self._conns[r], DIRECTION, 0, self.world, data)
-            self.stats.bytes_down += len(data) * self.world
+                sent += send_frame(self._conns[r], ftype, 0, self.world, data)
+            self.stats.wire_bytes += sent
+            self.stats.bytes_down += sent
             self.stats.wall_time_s += time.perf_counter() - t0
             if tel.enabled:
                 tel.trace.complete("wire/broadcast", t0, cat="wire", pid=0,
-                                   nbytes=len(data) * self.world)
-                tel.count("wire_bytes_down", len(data) * self.world,
-                          transport="tcp", link="all")
+                                   nbytes=sent, encoded=encoded)
+                tel.count("wire_bytes_down", sent, transport="tcp",
+                          link="all")
             return data
-        _, _, _, data = recv_frame(self._sock, expect=DIRECTION)
+        got, _, _, data = recv_frame(self._sock)
+        if got not in (DIRECTION, DIRECTION_ENC):
+            if got == GOODBYE:
+                raise ConnectionError(
+                    f"peer said goodbye: {data.decode(errors='replace')}")
+            raise ConnectionError(f"expected a direction frame "
+                                  f"({DIRECTION}/{DIRECTION_ENC}), got {got}")
         self.stats.bytes_down += len(data)
         self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
         self.stats.wall_time_s += time.perf_counter() - t0
         if tel.enabled:
             tel.trace.complete("wire/broadcast", t0, cat="wire",
-                               pid=self.rank, nbytes=len(data))
+                               pid=self.rank, nbytes=len(data),
+                               encoded=got == DIRECTION_ENC)
             tel.count("wire_bytes_down", FRAME_HEADER_BYTES + len(data),
                       transport="tcp", link=f"rank{self.rank}")
         return data

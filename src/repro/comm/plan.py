@@ -1,0 +1,371 @@
+"""Per-bucket wire plans — fixed-shape gradient buckets with shared codecs.
+
+Every wire used to compress the WHOLE gradient as one flat d-vector after
+the full backward finished, so the measured 0.16-1.1 s encode at d≈0.5-1.9M
+(`BENCH_wire.json` codec_us) serialized strictly after compute.  A
+`WirePlan` carves the flat dimension into fixed-shape buckets (the classic
+DDP bucket trick) so that:
+
+* each bucket can be encoded AS ITS BACKWARD SEGMENT COMPLETES — the
+  `grad_tap` custom-vjp hook in `repro.train.step` streams per-leaf
+  cotangents to a `GradBucketStreamer` during the backward pass, and the
+  streamer dispatches each bucket's encode the moment its last leaf lands,
+  overlapping encode/serialize with the remaining compute;
+* equal-size buckets SHARE one codec instance: the plan's per-size cache
+  delegates to the process-wide per-(codec, dim) LRU behind
+  `repro.comm.compiled.make_compiled_codec`, so the packed and device
+  wires (and every plan over the same bucket size) reuse the same jitted
+  encode/decode programs instead of compiling one program per bucket.
+
+Estimator semantics: each bucket is an INDEPENDENT compression of its
+slice — for the MLMC families that means an independent Lemma-3.2 level
+draw per bucket (key = ``fold_in(worker_key, bucket_index)``), which stays
+unbiased per bucket and therefore unbiased for the concatenation.  The
+bucketed bytes are bitwise identical to encoding each slice through a
+standalone flat codec of the bucket's size with the same key (the
+bucket-plan parity battery in ``tests/test_plan.py``).
+"""
+
+from __future__ import annotations
+
+import queue
+import struct
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.packets import Packet
+from repro.comm.transport import LoopbackTransport
+from repro.obs import trace as obs
+
+Array = jax.Array
+
+#: bucketed uplink container: all of one worker's per-bucket packets in one
+#: transport payload — magic, bucket count, then (u32 length | bytes) each
+_BUCKETS_MAGIC = b"RCBW"
+_BUCKETS_FMT = "<4sI"
+_BUCKETS_HEADER_BYTES = struct.calcsize(_BUCKETS_FMT)    # 8
+
+
+def pack_bucket_payload(parts: list[bytes]) -> bytes:
+    out = [struct.pack(_BUCKETS_FMT, _BUCKETS_MAGIC, len(parts))]
+    for p in parts:
+        out.append(struct.pack("<I", len(p)))
+        out.append(p)
+    return b"".join(out)
+
+
+def unpack_bucket_payload(raw: bytes) -> list[bytes]:
+    if len(raw) < _BUCKETS_HEADER_BYTES:
+        raise ValueError(f"truncated bucket payload: {len(raw)} bytes")
+    magic, count = struct.unpack_from(_BUCKETS_FMT, raw, 0)
+    if magic != _BUCKETS_MAGIC:
+        raise ValueError(f"bad bucket-payload magic {magic!r}")
+    parts, off = [], _BUCKETS_HEADER_BYTES
+    for _ in range(count):
+        if off + 4 > len(raw):
+            raise ValueError("truncated bucket payload: missing length")
+        (n,) = struct.unpack_from("<I", raw, off)
+        off += 4
+        if off + n > len(raw):
+            raise ValueError("truncated bucket payload: short packet")
+        parts.append(raw[off:off + n])
+        off += n
+    if off != len(raw):
+        raise ValueError(f"trailing garbage in bucket payload: "
+                         f"{len(raw) - off} bytes")
+    return parts
+
+
+def bucket_ranges(dim: int, bucket_size: int) -> tuple[tuple[int, int], ...]:
+    """Carve ``[0, dim)`` into contiguous buckets of ``bucket_size`` (the
+    last bucket takes the remainder)."""
+    if bucket_size < 1:
+        raise ValueError(f"bucket_size must be >= 1, got {bucket_size}")
+    return tuple((s, min(s + bucket_size, dim))
+                 for s in range(0, dim, bucket_size))
+
+
+class WirePlan:
+    """The per-bucket codec plan shared by the packed and device wires.
+
+    ``factory(size) -> codec`` builds one codec for a bucket size —
+    `repro.comm.aggregate._make_packed_codec` for the byte wire,
+    `repro.comm.device_wire.make_device_codec` for the device wire.  The
+    plan calls it once per DISTINCT size (all full buckets share one
+    instance, and the compiled pipeline's process-wide LRU shares the
+    jitted programs across plans and wires on top of that)."""
+
+    def __init__(self, name: str, dim: int, bucket_size: int, factory):
+        self.name = name
+        self.dim = dim
+        self.bucket_size = int(bucket_size)
+        self.ranges = bucket_ranges(dim, self.bucket_size)
+        self.num_buckets = len(self.ranges)
+        self._factory = factory
+        self._by_size: dict[int, object] = {}
+
+    def codec(self, b: int):
+        start, stop = self.ranges[b]
+        size = stop - start
+        if size not in self._by_size:
+            self._by_size[size] = self._factory(size)
+        return self._by_size[size]
+
+    def bucket_key(self, worker_key, b: int):
+        """The bucket's draw key: an independent MLMC level draw per
+        bucket, deterministically derived so every substrate (batched,
+        streamed, flat-slice reference) replays the identical draw."""
+        return jax.random.fold_in(worker_key, b)
+
+    def encode_bucket(self, v: Array, worker_key, b: int) -> Packet:
+        """Encode ONE worker's bucket ``b`` of the flat gradient ``v``
+        (or of the bucket slice itself when ``v`` is already sliced)."""
+        start, stop = self.ranges[b]
+        sl = v if v.shape[0] == stop - start else v[start:stop]
+        return self.codec(b).encode(sl, self.bucket_key(worker_key, b)).packet
+
+    def encode_round(self, worker_grads: Array, keys) -> list[list[Packet]]:
+        """All workers, all buckets -> ``packets[b][w]`` (one vmapped
+        encode per bucket on the compiled pipeline)."""
+        out = []
+        for b, (start, stop) in enumerate(self.ranges):
+            codec = self.codec(b)
+            bkeys = jax.vmap(lambda k, _b=b: jax.random.fold_in(k, _b))(keys)
+            if hasattr(codec, "encode_batch"):
+                out.append(codec.encode_batch(worker_grads[:, start:stop],
+                                              bkeys))
+            else:
+                out.append([codec.encode(worker_grads[i, start:stop],
+                                         bkeys[i]).packet
+                            for i in range(worker_grads.shape[0])])
+        return out
+
+    def decode_mean(self, bucket_packets: list[list[Packet]]) -> Array:
+        """Mean of the decoded estimates, concatenated across buckets."""
+        parts = []
+        for b, pkts in enumerate(bucket_packets):
+            codec = self.codec(b)
+            if hasattr(codec, "decode_mean"):
+                parts.append(codec.decode_mean(pkts))
+            else:
+                parts.append(jnp.mean(jnp.stack(
+                    [jnp.asarray(codec.decode(p)) for p in pkts]), axis=0))
+        return jnp.concatenate(parts)
+
+    def measured_bits(self, bucket_packets: list[list[Packet]]) -> float:
+        return float(sum(self.codec(b).measured_bits(p)
+                         for b, pkts in enumerate(bucket_packets)
+                         for p in pkts))
+
+
+class GradBucketStreamer:
+    """Assembles per-worker flat gradients from backward-pass taps and
+    encodes each bucket THE MOMENT its last leaf cotangent lands.
+
+    The `grad_tap` hook (`repro.train.step`) fires one host callback per
+    (worker, leaf) during the backward pass; `push` only enqueues (the
+    XLA thread must not stall), and a dedicated encoder thread fills the
+    per-worker flat buffers, tracks per-bucket completion, and dispatches
+    the plan's encode for every completed bucket while the rest of the
+    backward still runs.  `finish` drains the queue, fills any bucket the
+    taps never delivered from the returned gradients (correctness never
+    depends on the callbacks firing), and returns ``packets[b][w]``."""
+
+    def __init__(self, plan: WirePlan, num_workers: int,
+                 leaf_offsets: list[int], leaf_sizes: list[int]):
+        self.plan = plan
+        self.m = num_workers
+        self.offsets = list(leaf_offsets)
+        self.sizes = list(leaf_sizes)
+        self._q: queue.Queue = queue.Queue()
+        self._round = 0
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="bucket-encoder")
+        self._thread.start()
+
+    def begin(self, rng) -> None:
+        """Reset for one aggregation round; must see the SAME per-step rng
+        the aggregator receives (keys replay the non-streamed path)."""
+        with self._lock:
+            self._round += 1
+            self._keys = jax.random.split(rng, self.m)
+            self._bufs = [np.zeros((self.plan.dim,), np.float32)
+                          for _ in range(self.m)]
+            self._remaining = [[stop - start
+                                for start, stop in self.plan.ranges]
+                               for _ in range(self.m)]
+            self._packets: list[list[Packet | None]] = \
+                [[None] * self.plan.num_buckets for _ in range(self.m)]
+
+    def push(self, leaf_idx: int, wid, ct) -> None:
+        """The tap callback: runs on the XLA execution thread — enqueue
+        and return.  It must not touch the values (`int(wid)` /
+        `np.asarray(ct)` block on the CPU client's thread pool, which is
+        busy running the computation that is waiting for this callback:
+        deadlock); the encoder thread does every host conversion."""
+        self._q.put((self._round, leaf_idx, wid, ct))
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                self._consume(*item)
+            except Exception:        # pragma: no cover - keep draining
+                pass
+            finally:
+                self._q.task_done()
+
+    def _consume(self, rnd: int, leaf_idx: int, w, ct) -> None:
+        # host conversions happen HERE, off the XLA thread — waiting for
+        # the value is harmless on this thread, fatal on the callback's
+        w = int(w)
+        ct = np.asarray(ct)
+        with self._lock:
+            if rnd != self._round or not 0 <= w < self.m:
+                return                     # stale round / foreign tap
+            off, size = self.offsets[int(leaf_idx)], self.sizes[int(leaf_idx)]
+            self._bufs[w][off:off + size] = np.ravel(ct)
+            tel = obs.active()
+            for b, (start, stop) in enumerate(self.plan.ranges):
+                overlap = min(stop, off + size) - max(start, off)
+                if overlap <= 0 or self._packets[w][b] is not None:
+                    continue
+                self._remaining[w][b] -= overlap
+                if self._remaining[w][b] == 0:
+                    t0 = time.perf_counter() if tel.enabled else 0.0
+                    self._packets[w][b] = self.plan.encode_bucket(
+                        jnp.asarray(self._bufs[w][start:stop]),
+                        self._keys[w], b)
+                    if tel.enabled:
+                        tel.trace.complete(
+                            "wire/bucket_encode", t0, cat="wire", bucket=b,
+                            worker=w, codec=self.plan.name, nbytes=stop - start)
+
+    def finish(self, worker_grads: Array) -> list[list[Packet]]:
+        """Drain the tap queue, backfill buckets the taps missed from the
+        returned gradients, and return ``packets[b][w]``."""
+        self._q.join()
+        with self._lock:
+            grads_np = None
+            for w in range(self.m):
+                for b in range(self.plan.num_buckets):
+                    if self._packets[w][b] is None:
+                        if grads_np is None:
+                            grads_np = np.asarray(worker_grads)
+                        self._packets[w][b] = self.plan.encode_bucket(
+                            jnp.asarray(grads_np[w]), self._keys[w], b)
+            return [[self._packets[w][b] for w in range(self.m)]
+                    for b in range(self.plan.num_buckets)]
+
+
+class BucketedPackedAggregate:
+    """The bucketed realization of `PackedAggregate`: every worker's
+    gradient ships as ``num_buckets`` independent packets (one container
+    payload per worker), decoded and meaned per bucket, concatenated into
+    the direction.  Stateless uplink; composes with a `Downlink`
+    (DIANA-shift compressed direction) exactly like the flat aggregator.
+
+    The trainer's streamed path (`step_streamed`) consumes a
+    `GradBucketStreamer` whose per-bucket encodes already ran DURING the
+    backward pass; `__call__` is the self-contained batch path (same
+    bytes — the parity battery covers both)."""
+
+    def __init__(self, plan: WirePlan, transport=None, downlink=None):
+        self.plan = plan
+        self.dim = plan.dim
+        self.transport = transport or LoopbackTransport()
+        self.downlink = downlink
+
+    def init(self, num_workers: int, dim: int):
+        from repro.core.types import empty_comm_state
+
+        del num_workers
+        return empty_comm_state(dim if self.downlink is not None else 0)
+
+    def __call__(self, worker_grads: Array, rng, state=None):
+        m = worker_grads.shape[0]
+        keys = jax.random.split(rng, m)
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
+        bucket_packets = self.plan.encode_round(worker_grads, keys)
+        if tel.enabled:
+            tel.trace.complete("comm/encode", t0, codec=self.plan.name,
+                               impl="bucketed", buckets=self.plan.num_buckets)
+        return self._finish(bucket_packets, rng, state, m)
+
+    def step_streamed(self, streamer: GradBucketStreamer,
+                      worker_grads: Array, rng, state=None):
+        bucket_packets = streamer.finish(worker_grads)
+        return self._finish(bucket_packets, rng, state,
+                            worker_grads.shape[0])
+
+    def _finish(self, bucket_packets, rng, state, m):
+        from repro.comm.aggregate import _downlink_round
+        from repro.core.aggregators import AggregateOut
+
+        if state is None:
+            state = self.init(m, self.dim)
+        payloads = [pack_bucket_payload(
+            [bucket_packets[b][w].to_bytes()
+             for b in range(self.plan.num_buckets)]) for w in range(m)]
+        delivered = self.transport.exchange(payloads)
+        arrived: list[list[Packet]] = [[] for _ in self.plan.ranges]
+        for raw in delivered:
+            for b, part in enumerate(unpack_bucket_payload(raw)):
+                arrived[b].append(Packet.from_bytes(part))
+        tel = obs.active()
+        t0 = time.perf_counter() if tel.enabled else 0.0
+        direction = self.plan.decode_mean(arrived)
+        if tel.enabled:
+            tel.trace.complete("comm/decode_mean", t0, codec=self.plan.name,
+                               impl="bucketed")
+        bits = self.plan.measured_bits(arrived)
+        if self.downlink is not None:
+            direction, state, dbits = _downlink_round(
+                self.downlink, direction, state, rng, self.transport, m)
+            state = state._replace(step=state.step + 1)
+            bits += dbits
+        else:
+            self.transport.broadcast(4 * self.dim, m)
+        return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
+
+
+def bucketed_packed_aggregator(name: str, dim: int, *, bucket_size: int,
+                               transport=None, compiled=None, downlink=None,
+                               codec_kw=None):
+    """The ``bucket_size=`` branch of `packed_aggregator`."""
+    from repro.comm.aggregate import _make_packed_codec
+    from repro.comm.multihost import is_multihost_transport
+    from repro.core.aggregators import Aggregator
+
+    if name in ("ef21", "ef21_sgdm", "signsgd_ef", "mlmc_adaptive_topk",
+                "mlmc_adaptive_stopk", "mlmc_adaptive_rtn"):
+        raise ValueError(
+            f"bucketed streaming does not support the stateful family "
+            f"{name!r} yet — its per-worker state rows are defined over "
+            "the whole flat gradient")
+    if is_multihost_transport(transport):
+        raise ValueError("bucketed streaming is in-process only for now; "
+                         "the tcp star ships one flat packet per rank")
+    kw = dict(codec_kw or {})
+
+    def factory(size):
+        skw = dict(kw)
+        # dim-derived knobs must scale with the bucket, or every bucket
+        # ships the FULL gradient's budget: the MLMC segment length ``s``
+        # defaults to round(k_fraction * dim) in the Trainer, and keeping
+        # it flat-sized made 9 buckets cost ~7x the flat packet's bits
+        if skw.get("s", 0) > 1:
+            skw["s"] = max(1, int(round(skw["s"] * size / dim)))
+        return _make_packed_codec(name, size, compiled, skw)
+
+    plan = WirePlan(name, dim, bucket_size, factory)
+    ag = BucketedPackedAggregate(plan, transport, downlink=downlink)
+    if downlink is not None:
+        return Aggregator(name, ag, init=ag.init, stateful=True)
+    return Aggregator(name, ag)

@@ -169,6 +169,9 @@ def make_aggregator(
     wire: str = "abstract",
     transport=None,
     compiled: bool | None = None,
+    downlink: str | None = None,
+    downlink_alpha: float = 0.5,
+    bucket_size: int | None = None,
 ) -> Aggregator:
     """Build an aggregator for gradients of flat dimension ``dim``.
 
@@ -191,6 +194,18 @@ def make_aggregator(
     ``ema_rho`` is the ladder-EMA momentum of the stateful
     ``mlmc_adaptive_*`` family (1.0 = per-sample Lemma 3.4).
 
+    ``downlink`` (packed & device wires) names a second codec for the
+    server→worker direction: rank 0 encodes ``direction - shift`` against
+    a DIANA-style server shift mirrored by every rank (``CommState.shift``,
+    updated by ``shift += downlink_alpha * delta_hat``), so the downlink
+    payload is compressed instead of raw f32.  ``None`` (default) keeps
+    the uplink-only full broadcast.
+
+    ``bucket_size`` (packed wire, loopback only) carves the flat gradient
+    into fixed-shape buckets (`repro.comm.plan.WirePlan`) encoded
+    independently — the substrate for the trainer's backward-overlap
+    streaming (`repro.train.step.grad_tap`).
+
     ``compiled`` (packed wire only) selects the jit-compiled codec fast
     path (`repro.comm.compiled`) vs the original eager codecs — None
     (default) picks the measured-faster pipeline per codec
@@ -206,19 +221,28 @@ def make_aggregator(
             name, dim, transport=transport, k_fraction=k_fraction, s=s,
             rtn_level=rtn_level, qsgd_levels=qsgd_levels,
             momentum_beta=momentum_beta, fixed_levels=fixed_levels,
-            ema_rho=ema_rho, compiled=compiled)
+            ema_rho=ema_rho, compiled=compiled, downlink=downlink,
+            downlink_alpha=downlink_alpha, bucket_size=bucket_size)
     if wire == "device":
         from repro.comm.device_wire import device_aggregator
 
         if transport is not None:
             raise ValueError("wire='device' ships arrays through the mesh, "
                              "not a host Transport")
+        if bucket_size is not None:
+            raise ValueError("bucket_size is a packed-wire option; the "
+                             "device wire's operands are already fixed-shape")
         return device_aggregator(
             name, dim, k_fraction=k_fraction, s=s, rtn_level=rtn_level,
             qsgd_levels=qsgd_levels, fixed_levels=fixed_levels,
-            momentum_beta=momentum_beta, ema_rho=ema_rho)
+            momentum_beta=momentum_beta, ema_rho=ema_rho,
+            downlink=downlink, downlink_alpha=downlink_alpha)
     if wire != "abstract":
         raise ValueError(f"unknown wire mode {wire!r}")
+    if downlink is not None or bucket_size is not None:
+        raise ValueError("downlink/bucket_size require a real wire "
+                         "(wire='packed' or 'device'); the abstract wire "
+                         "has no server→worker payload to compress")
     k = max(1, int(round(k_fraction * dim)))
 
     if name == "dense":

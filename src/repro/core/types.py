@@ -197,27 +197,36 @@ class CommState(NamedTuple):
     momentum: Array     # (M, d) EF21-SGDM momentum v_i;        (0, 0) unused
     ladder_ema: Array   # (M, L) adaptive-MLMC EMA of residual-norm
     #                            ladders (Lemma 3.4);           (0, 0) unused
+    shift: Array        # (d,)   DIANA-style downlink server shift h
+    #                            (mirrored by every rank);      (0,)   unused
 
 
-def empty_comm_state() -> CommState:
-    """The stateless aggregators' state: same treedef, zero-sized leaves."""
+def empty_comm_state(shift_dim: int = 0) -> CommState:
+    """The stateless aggregators' state: same treedef, zero-sized leaves.
+
+    ``shift_dim`` sizes the downlink server-shift mirror: 0 (the default)
+    for uplink-only runs, ``d`` when the server→worker direction is itself
+    compressed against a DIANA-style shift (see `repro.comm.aggregate`)."""
     z2 = jnp.zeros((0, 0), jnp.float32)
     return CommState(step=jnp.zeros((), jnp.int32), g_workers=z2,
                      g_server=jnp.zeros((0,), jnp.float32), momentum=z2,
-                     ladder_ema=z2)
+                     ladder_ema=z2,
+                     shift=jnp.zeros((shift_dim,), jnp.float32))
 
 
-def ef21_comm_state(num_workers: int, dim: int) -> CommState:
+def ef21_comm_state(num_workers: int, dim: int,
+                    shift_dim: int = 0) -> CommState:
     """Zero-innovation EF21 start: g_i = g = v_i = 0 (Richtárik et al.)."""
     z = jnp.zeros((num_workers, dim), jnp.float32)
-    return empty_comm_state()._replace(
+    return empty_comm_state(shift_dim)._replace(
         g_workers=z, g_server=jnp.zeros((dim,), jnp.float32), momentum=z)
 
 
-def adaptive_comm_state(num_workers: int, num_levels: int) -> CommState:
+def adaptive_comm_state(num_workers: int, num_levels: int,
+                        shift_dim: int = 0) -> CommState:
     """Cold-start adaptive MLMC: the EMA ladder seeds from the first step's
     fresh residual norms (see `repro.core.adaptive.ladder_ema_update`)."""
-    return empty_comm_state()._replace(
+    return empty_comm_state(shift_dim)._replace(
         ladder_ema=jnp.zeros((num_workers, num_levels), jnp.float32))
 
 

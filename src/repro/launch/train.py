@@ -69,6 +69,17 @@ def main() -> None:
                     help="tcp: host:port of rank 0's rendezvous socket")
     ap.add_argument("--rendezvous-timeout", type=float, default=60.0,
                     help="tcp: seconds to wait for all ranks to join")
+    ap.add_argument("--downlink", default="",
+                    help="compress the server->worker direction with this "
+                         "registry codec (DIANA shift; packed + device "
+                         "wires; empty = raw f32 broadcast)")
+    ap.add_argument("--downlink-alpha", type=float, default=0.5,
+                    help="shift learning rate of the downlink's DIANA "
+                         "update h <- h + alpha * decode(delta)")
+    ap.add_argument("--bucket-size", type=int, default=0,
+                    help="carve the packed wire into fixed-shape buckets "
+                         "of this many params, encoded during backward "
+                         "(0 = one flat packet; loopback packed only)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduce the architecture to smoke size")
     ap.add_argument("--mesh-shape", default="1,2,2",
@@ -144,6 +155,9 @@ def main() -> None:
                           method=args.method, optimizer=sgd(args.lr),
                           k_fraction=args.k_fraction, ema_rho=args.ema_rho,
                           wire=args.wire, transport=transport,
+                          downlink=args.downlink or None,
+                          downlink_alpha=args.downlink_alpha,
+                          bucket_size=args.bucket_size or None,
                           telemetry=telemetry)
         who = (f" rank={rank}/{args.workers}"
                if transport is not None and args.transport == "tcp" else "")

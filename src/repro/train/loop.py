@@ -66,6 +66,16 @@ class Trainer:
         (`repro.comm.compiled.default_compiled`); True forces the
         jit-compiled fast path, False the eager codecs (byte-identical
         either way; A-B wire benchmarks).
+      downlink: packed/device wires — registry name of a SECOND codec for
+        the server→worker direction (DIANA-style shift compression; see
+        `repro.comm.aggregate.Downlink`).  None keeps the raw f32
+        broadcast.  downlink_alpha is the shift learning rate.
+      bucket_size: packed wire, loopback only — carve the flat gradient
+        into fixed-shape buckets (`repro.comm.plan.WirePlan`) and encode
+        each bucket DURING the backward pass the moment its last param
+        leaf's gradient lands (`repro.train.step.grad_tap`), overlapping
+        encode/serialize with the remaining compute.  None keeps the
+        one-flat-packet fast path.
       telemetry: a `repro.obs.Telemetry` bundle to record per-step spans,
         wire metrics, and MLMC estimator telemetry into.  Installed
         process-wide (`repro.obs.install`) so the comm stack's
@@ -81,6 +91,8 @@ class Trainer:
                  rtn_level: int = 4, ema_rho: float = 0.25,
                  wire: str = "abstract", transport=None,
                  wire_compiled: bool | None = None,
+                 downlink: str | None = None, downlink_alpha: float = 0.5,
+                 bucket_size: int | None = None,
                  telemetry: obs.Telemetry | None = None):
         if telemetry is not None:
             obs.install(telemetry)
@@ -91,12 +103,15 @@ class Trainer:
         self.flat_params = flat.astype(jnp.float32)
         self.optimizer = optimizer or sgd(0.05)
         self.wire = wire
+        self.bucket_size = bucket_size
         self.agg: Aggregator = make_aggregator(
             method, self.dim, k_fraction=k_fraction,
             s=s or max(1, int(round(k_fraction * self.dim))),
             momentum_beta=momentum_beta, qsgd_levels=qsgd_levels,
             rtn_level=rtn_level, ema_rho=ema_rho, wire=wire,
-            transport=transport, compiled=wire_compiled)
+            transport=transport, compiled=wire_compiled,
+            downlink=downlink, downlink_alpha=downlink_alpha,
+            bucket_size=bucket_size)
         self.opt_state = self.optimizer.init(self.flat_params)
         #: first-class aggregator state — empty for stateless methods,
         #: threaded through every step and checkpointed with params
@@ -109,8 +124,12 @@ class Trainer:
                 f"num_workers={self.m}; pass the GLOBAL worker count (every "
                 "rank sees the same (M, b, ...) batch stream and computes "
                 "its own shard)")
-        self._step = (self._build_packed_step() if wire == "packed"
-                      else self._build_step())
+        if wire == "packed" and bucket_size is not None:
+            self._step = self._build_bucketed_step()
+        elif wire == "packed":
+            self._step = self._build_packed_step()
+        else:
+            self._step = self._build_step()
 
     @property
     def transport(self):
@@ -188,6 +207,48 @@ class Trainer:
                 # with, the in-process f32 jnp.mean)
                 loss = tp.allreduce_scalar(float(loss))
             return (new_flat, new_opt, out.state, loss, out.bits)
+
+        return step
+
+    def _build_bucketed_step(self):
+        """Bucketed packed wire with comm/compute overlap: every param leaf
+        is wrapped in a `grad_tap` whose backward streams the leaf's
+        cotangent to a `GradBucketStreamer`, which encodes each wire bucket
+        the moment its last leaf lands — so the per-bucket encodes run
+        CONCURRENTLY with the rest of the backward pass instead of strictly
+        after it.  Bytes are identical to the non-streamed bucketed path
+        (and per bucket to a flat codec of the bucket's size): the taps are
+        value-preserving identities, and `GradBucketStreamer.finish`
+        backfills any bucket the callbacks missed from the returned grads,
+        so correctness never depends on the overlap actually firing."""
+        from repro.comm.plan import GradBucketStreamer
+        from repro.train.step import leaf_layout, tap_params
+
+        opt, bucketed = self.optimizer, self.agg.fn
+        offsets, sizes = leaf_layout(self.params)
+        streamer = GradBucketStreamer(bucketed.plan, self.m, offsets, sizes)
+        self._streamer = streamer     # stable sink: one instance, no retrace
+        loss_fn, unravel, m = self.loss_fn, self.unravel, self.m
+
+        @jax.jit
+        def grads_of(flat_params, batch):
+            def worker_loss(p_flat, wid, wb):
+                return loss_fn(
+                    tap_params(p_flat, wid, streamer.push, unravel), wb)
+
+            wids = jnp.arange(m, dtype=jnp.float32)
+            return jax.vmap(jax.value_and_grad(worker_loss),
+                            in_axes=(None, 0, 0))(flat_params, wids, batch)
+
+        apply_jit = jax.jit(opt.apply, donate_argnums=(1, 2))
+
+        def step(flat_params, opt_state, comm_state, batch, rng):
+            streamer.begin(rng)   # same rng the aggregator keys derive from
+            losses, grads = grads_of(flat_params, batch)
+            out = bucketed.step_streamed(streamer, grads, rng, comm_state)
+            new_flat, new_opt = apply_jit(out.direction, opt_state,
+                                          flat_params)
+            return (new_flat, new_opt, out.state, jnp.mean(losses), out.bits)
 
         return step
 

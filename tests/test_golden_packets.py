@@ -87,6 +87,116 @@ def test_golden_packet_still_decodes(name):
     assert est.shape == (GOLDEN_DIM,)
 
 
+#: frozen copy of the tcp star's frame-type table and wire magics at the
+#: PR-7 snapshot.  Both are append-only compatibility surfaces: existing
+#: numbers/magics must never change; new frame types take the next free
+#: number, new blob formats take a fresh 4-byte magic.
+FROZEN_FRAME_TYPES = {
+    "HELLO": 1, "WELCOME": 2, "GOODBYE": 3, "PAYLOAD": 4, "DIRECTION": 5,
+    "SCALAR": 6, "SCALAR_MEAN": 7, "STATE": 8, "DIRECTION_ENC": 9,
+}
+FROZEN_WIRE_MAGICS = {
+    "direction_enc": b"RCD2", "state_row_v1": b"RCS1", "state_row_v2": b"RCS2",
+    "bucket_container": b"RCBW",
+}
+
+#: deterministic downlink-fixture inputs (immutable: part of the snapshot)
+GOLDEN_DOWNLINK = ("topk", "qsgd")
+GOLDEN_SHIFT_SCALE = 0.125
+GOLDEN_STATE_RANK = 2
+
+
+def golden_shift() -> jax.Array:
+    return GOLDEN_SHIFT_SCALE * jnp.sin(jnp.arange(GOLDEN_DIM, dtype=jnp.float32))
+
+
+def encode_golden_downlink(name: str) -> bytes:
+    """Deterministic RCD2 blob: the server-side half of one downlink round
+    (encode `direction - shift`, frame it) with pinned inputs."""
+    from repro.comm.aggregate import Downlink, pack_encoded_direction
+
+    codec = make_codec(name, GOLDEN_DIM, **GOLDEN_CODEC_KW)
+    down = Downlink(codec, alpha=0.5)
+    key = down.key(jax.random.PRNGKey(GOLDEN_KEY_SEED))
+    pkt, _, _ = down.encode(golden_grad(), golden_shift(), key)
+    return pack_encoded_direction(pkt.to_bytes(), GOLDEN_DIM, 1234.5)
+
+
+def encode_golden_state_row() -> bytes:
+    """Deterministic RCS2 row: a shift-bearing CommState gathered from
+    GOLDEN_STATE_RANK (ladder/momentum empty — the downlink-only shape)."""
+    from repro.comm.aggregate import pack_comm_state_row
+    from repro.core.types import empty_comm_state
+
+    state = empty_comm_state(GOLDEN_DIM)._replace(shift=golden_shift())
+    return pack_comm_state_row(state, GOLDEN_STATE_RANK)
+
+
+@pytest.mark.parametrize("name", GOLDEN_DOWNLINK)
+def test_golden_downlink_blob_bytes(name):
+    path = GOLDEN_DIR / f"downlink_{name}.bin"
+    assert path.exists(), \
+        f"missing golden fixture {path}; run tests/test_golden_packets.py --regen"
+    assert encode_golden_downlink(name) == path.read_bytes(), (
+        f"downlink_{name}: RCD2 blob differs from the committed snapshot — "
+        "the downlink wire format changed. If intentional, add a new magic "
+        "next to RCD2 and regenerate.")
+
+
+@pytest.mark.parametrize("name", GOLDEN_DOWNLINK)
+def test_golden_downlink_blob_roundtrips(name):
+    """The committed blob must unpack, decode, and advance the shift the
+    same way on any receiver: direction~ and new shift are pure f32 ops on
+    the decoded delta, so equality of decode(pkt) is the whole contract."""
+    from repro.comm.aggregate import Downlink, unpack_encoded_direction
+
+    raw = (GOLDEN_DIR / f"downlink_{name}.bin").read_bytes()
+    pkt_bytes, bits = unpack_encoded_direction(raw, GOLDEN_DIM)
+    assert bits == 1234.5
+    codec = make_codec(name, GOLDEN_DIM, **GOLDEN_CODEC_KW)
+    delta_hat = Downlink(codec).decode(Packet.from_bytes(pkt_bytes))
+    assert delta_hat.shape == (GOLDEN_DIM,)
+    assert bool(jnp.all(jnp.isfinite(delta_hat)))
+
+
+def test_golden_state_row_bytes():
+    path = GOLDEN_DIR / "state_row_shift.bin"
+    assert path.exists(), \
+        f"missing golden fixture {path}; run tests/test_golden_packets.py --regen"
+    assert encode_golden_state_row() == path.read_bytes(), (
+        "state_row_shift: RCS2 row differs from the committed snapshot — "
+        "the checkpoint-gather format changed. If intentional, add RCS3 and "
+        "regenerate.")
+
+
+def test_golden_state_row_roundtrips():
+    import numpy as np
+
+    from repro.comm.aggregate import unpack_comm_state_row
+
+    raw = (GOLDEN_DIR / "state_row_shift.bin").read_bytes()
+    rank, ladder, momentum, shift = unpack_comm_state_row(raw)
+    assert rank == GOLDEN_STATE_RANK
+    assert ladder.size == 0 and momentum.size == 0
+    assert np.array_equal(shift, np.asarray(golden_shift(), np.float32))
+
+
+def test_frame_types_and_magics_append_only():
+    """tcp frame-type numbers and 4-byte blob magics are frozen: peers on
+    the old protocol must keep parsing every committed frame forever."""
+    from repro.comm import aggregate, multihost, plan
+
+    for name, num in FROZEN_FRAME_TYPES.items():
+        assert getattr(multihost, name) == num, \
+            f"frame type {name} changed from {num}"
+    assert aggregate._DIRE_MAGIC == FROZEN_WIRE_MAGICS["direction_enc"]
+    assert aggregate._STATE_MAGIC == FROZEN_WIRE_MAGICS["state_row_v1"]
+    assert aggregate._STATE2_MAGIC == FROZEN_WIRE_MAGICS["state_row_v2"]
+    assert plan._BUCKETS_MAGIC == FROZEN_WIRE_MAGICS["bucket_container"]
+    magics = list(FROZEN_WIRE_MAGICS.values())
+    assert len(magics) == len(set(magics)), "duplicate wire magics"
+
+
 def test_codec_ids_append_only():
     """Wire codec ids are a compatibility surface: frozen entries immutable,
     new entries only above the frozen range, ids unique."""
@@ -148,6 +258,13 @@ def _regen():
         raw = encode_golden(name)
         (GOLDEN_DIR / f"{name}.bin").write_bytes(raw)
         print(f"wrote golden_packets/{name}.bin ({len(raw)} bytes)")
+    for name in GOLDEN_DOWNLINK:
+        raw = encode_golden_downlink(name)
+        (GOLDEN_DIR / f"downlink_{name}.bin").write_bytes(raw)
+        print(f"wrote golden_packets/downlink_{name}.bin ({len(raw)} bytes)")
+    raw = encode_golden_state_row()
+    (GOLDEN_DIR / "state_row_shift.bin").write_bytes(raw)
+    print(f"wrote golden_packets/state_row_shift.bin ({len(raw)} bytes)")
 
 
 if __name__ == "__main__":

@@ -49,7 +49,7 @@ needs_sockets = pytest.mark.skipif(not _sockets_available(),
 _TOY = dict(d=48, b=4, world=3, steps=4, seed=11, data_seed=7)
 
 
-def _toy_trainer(transport, wire, method="mlmc_topk"):
+def _toy_trainer(transport, wire, method="mlmc_topk", **kw):
     import jax.numpy as jnp
 
     from repro.optim import sgd
@@ -63,7 +63,7 @@ def _toy_trainer(transport, wire, method="mlmc_topk"):
 
     return Trainer(loss_fn, params, num_workers=_TOY["world"],
                    method=method, optimizer=sgd(0.1), k_fraction=0.25,
-                   wire=wire, transport=transport)
+                   wire=wire, transport=transport, **kw)
 
 
 def _toy_batches():
@@ -174,11 +174,13 @@ def test_tcp_star_exchange_and_broadcast():
     assert got[1] == blob and got[2] == blob
 
     st = tps[0].stats
-    # bytes_up/bytes_down book payload bytes for ALL ranks (loopback
-    # semantics); wire_bytes books measured socket bytes incl. framing
+    # bytes_up books payload bytes for ALL ranks (loopback semantics);
+    # bytes_down books only the world-1 REAL socket sends, frame headers
+    # included — rank 0's in-process copy of the direction never crosses
+    # the wire and must not inflate downlink ratios
     assert st.rounds == 1
     assert st.bytes_up == sum(len(p) for p in payloads.values())
-    assert st.bytes_down == len(blob) * world
+    assert st.bytes_down == (FRAME_HEADER_BYTES + len(blob)) * (world - 1)
     assert st.wire_bytes == sum(
         FRAME_HEADER_BYTES + len(payloads[r]) for r in (1, 2)) + \
         2 * (FRAME_HEADER_BYTES + len(blob))
@@ -318,10 +320,18 @@ def test_multihost_aggregate_matches_loopback_bitwise():
         assert float(outs[r].bits) == float(out_ref.bits)
     # identical traffic books identical payload bytes on both transports
     assert tps[0].stats.bytes_up == ref.transport.stats.bytes_up
-    # downlink is MEASURED: world copies of the direction blob, whose
-    # 16-byte header sits above loopback's modeled bare 4*dim update
-    assert tps[0].stats.bytes_down == (16 + 4 * d) * world
+    # downlink is MEASURED and honest: only the world-1 real socket sends
+    # of the direction blob (16-byte RCD1 header + 4*dim payload + frame
+    # header each); loopback still models a bare 4*dim update per worker.
+    # The documented relation: tcp books (world-1)/world of loopback's
+    # payload volume, plus per-send blob+frame headers.
+    blob = 16 + 4 * d
+    assert tps[0].stats.bytes_down == (FRAME_HEADER_BYTES + blob) * (world - 1)
     assert ref.transport.stats.bytes_down == 4 * d * world
+    per_send_overhead = FRAME_HEADER_BYTES + 16
+    assert tps[0].stats.bytes_down == \
+        (world - 1) * ref.transport.stats.bytes_down // world + \
+        (world - 1) * per_send_overhead
     for t in tps.values():
         t.close()
 
@@ -390,6 +400,72 @@ def test_multihost_stateful_matches_loopback_bitwise(method):
         w1_state = outs[1][1]
         assert np.array_equal(np.asarray(w1_state.g_workers[1]),
                               np.asarray(st.g_workers[1]))
+    assert tps[0].stats.bytes_up == ref.fn.transport.stats.bytes_up
+    for t in tps.values():
+        t.close()
+
+
+@needs_sockets
+@pytest.mark.parametrize("downlink", ["topk", "qsgd"])
+def test_multihost_downlink_matches_loopback_bitwise(downlink):
+    """Compressed downlink over tcp: rank 0 ships the DIANA-encoded
+    direction on the DIRECTION_ENC frame, every rank decodes and updates
+    its mirrored shift, and across multiple steps of evolving shift the
+    directions, bits, and shift mirrors equal the in-process loopback run
+    BIT-FOR-BIT — while booking strictly fewer downlink bytes than the
+    raw f32 broadcast."""
+    import jax
+
+    from repro.core.aggregators import make_aggregator
+
+    d, world, steps = 129, 3, 4
+    grads = jax.random.normal(jax.random.PRNGKey(1), (world, d))
+    kw = dict(k_fraction=0.1, s=4, downlink=downlink, wire="packed")
+
+    ref = make_aggregator("mlmc_topk", d, **kw)
+    st = ref.init(world, d)
+    ref_outs = []
+    for t in range(steps):
+        o = ref.step(st, grads, jax.random.fold_in(jax.random.PRNGKey(5), t))
+        st = o.state
+        ref_outs.append(o)
+    assert bool(np.any(np.asarray(st.shift) != 0.0))
+
+    tps = _connect_world(world)
+    outs = {}
+
+    def run_rank(r):
+        agg = make_aggregator("mlmc_topk", d, transport=tps[r], **kw)
+        state = agg.init(world, d)
+        res = []
+        for t in range(steps):
+            o = agg.step(state, grads[r:r + 1],
+                         jax.random.fold_in(jax.random.PRNGKey(5), t))
+            state = o.state
+            res.append(o)
+        outs[r] = (res, state)
+
+    threads = [threading.Thread(target=run_rank, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    run_rank(0)
+    for t in threads:
+        t.join()
+
+    for r in range(world):
+        res, state = outs[r]
+        for t in range(steps):
+            assert np.array_equal(np.asarray(res[t].direction),
+                                  np.asarray(ref_outs[t].direction)), (r, t)
+            assert float(res[t].bits) == float(ref_outs[t].bits), (r, t)
+        # every rank's shift mirror equals loopback's bitwise
+        assert np.array_equal(np.asarray(state.shift), np.asarray(st.shift)), r
+        assert int(state.step) == steps
+    # honest compression: tcp downlink bytes strictly below the raw f32
+    # broadcast's would-be booking under the same world-1 send accounting
+    raw_down = (FRAME_HEADER_BYTES + 16 + 4 * d) * (world - 1) * steps
+    assert 0 < tps[0].stats.bytes_down < raw_down
     assert tps[0].stats.bytes_up == ref.fn.transport.stats.bytes_up
     for t in tps.values():
         t.close()
@@ -575,8 +651,12 @@ def test_launch_world_rejects_reserved_flags_in_any_form():
 
 
 def test_comm_state_row_roundtrip_and_errors():
+    import struct
+
     from repro.comm.aggregate import (
-        _STATE_HEADER_BYTES,
+        _STATE_FMT,
+        _STATE_MAGIC,
+        _STATE2_HEADER_BYTES,
         fold_comm_state_rows,
         pack_comm_state_row,
         unpack_comm_state_row,
@@ -591,8 +671,8 @@ def test_comm_state_row_roundtrip_and_errors():
     st = st._replace(
         momentum=st.momentum.at[1].set(np.arange(d, dtype=np.float32)))
     raw = pack_comm_state_row(st, 1)
-    r, ladder, momentum = unpack_comm_state_row(raw)
-    assert (r, ladder.size) == (1, 0)
+    r, ladder, momentum, shift = unpack_comm_state_row(raw)
+    assert (r, ladder.size, shift.size) == (1, 0, 0)
     assert np.array_equal(momentum, np.asarray(st.momentum[1]))
     # folding rank 1's row into a FRESH state reproduces it bitwise
     fresh = fold_comm_state_rows(agg.init(world, d), [raw])
@@ -603,20 +683,45 @@ def test_comm_state_row_roundtrip_and_errors():
                                wire="packed")
     ast = adaptive.init(world, d)
     ast = ast._replace(ladder_ema=ast.ladder_ema.at[1].add(0.5))
-    r, ladder, momentum = unpack_comm_state_row(pack_comm_state_row(ast, 1))
-    assert (r, momentum.size) == (1, 0)
+    r, ladder, momentum, shift = unpack_comm_state_row(
+        pack_comm_state_row(ast, 1))
+    assert (r, momentum.size, shift.size) == (1, 0, 0)
     assert np.array_equal(ladder, np.asarray(ast.ladder_ema[1]))
     afresh = fold_comm_state_rows(
         adaptive.init(world, d), [pack_comm_state_row(ast, 1)])
     assert np.array_equal(np.asarray(afresh.ladder_ema[1]),
                           np.asarray(ast.ladder_ema[1]))
+    # downlink shift mirrors ride the RCS2 row; the fold validates them
+    # against rank 0's copy (every rank must hold the identical shift)
+    dl = make_aggregator("mlmc_topk", d, k_fraction=0.25, wire="packed",
+                         downlink="topk")
+    import jax.numpy as jnp
+
+    dst = dl.init(world, d)._replace(
+        shift=jnp.asarray(np.linspace(-1.0, 1.0, d), jnp.float32))
+    r, ladder, momentum, shift = unpack_comm_state_row(
+        pack_comm_state_row(dst, 2))
+    assert (r, ladder.size, momentum.size) == (2, 0, 0)
+    assert np.array_equal(shift, np.asarray(dst.shift))
+    folded = fold_comm_state_rows(dst, [pack_comm_state_row(dst, 2)])
+    assert np.array_equal(np.asarray(folded.shift), np.asarray(dst.shift))
+    diverged = dst._replace(shift=dst.shift.at[0].add(1.0))
+    with pytest.raises(ValueError, match="diverged"):
+        fold_comm_state_rows(dst, [pack_comm_state_row(diverged, 2)])
     # rows for a method with no client-side state are empty but valid
     stateless = make_aggregator("mlmc_topk", d, k_fraction=0.25,
                                 wire="packed").init(world, d)
     empty = pack_comm_state_row(stateless, 2)
-    assert len(empty) == _STATE_HEADER_BYTES
-    r, ladder, momentum = unpack_comm_state_row(empty)
-    assert (r, ladder.size, momentum.size) == (2, 0, 0)
+    assert len(empty) == _STATE2_HEADER_BYTES
+    r, ladder, momentum, shift = unpack_comm_state_row(empty)
+    assert (r, ladder.size, momentum.size, shift.size) == (2, 0, 0, 0)
+    # legacy RCS1 rows (pre-downlink checkpoints) still read back
+    mom = np.asarray(st.momentum[1], np.float32)
+    legacy = struct.pack(_STATE_FMT, _STATE_MAGIC, 1, 0, mom.size) + \
+        mom.tobytes()
+    r, ladder, momentum, shift = unpack_comm_state_row(legacy)
+    assert (r, ladder.size, shift.size) == (1, 0, 0)
+    assert np.array_equal(momentum, mom)
     with pytest.raises(ValueError, match="truncated STATE row"):
         unpack_comm_state_row(raw[:4])
     with pytest.raises(ValueError, match="bad STATE magic"):
@@ -771,6 +876,93 @@ def test_tcp_checkpoint_restores_and_continues_bitwise(method, tmp_path):
                           phase_a_ladder)
     assert np.array_equal(np.asarray(resumed.comm_state.momentum),
                           phase_a_momentum)
+    cont = _toy_batches()
+    resumed.fit(itertools.islice(cont, steps, None), steps=steps,
+                seed=seed + 1)
+    assert np.asarray(resumed.flat_params).tobytes() == want
+
+
+def _tcp_downlink_rank_main(rank, port, q, ckpt_path):
+    """Spawned rank: compressed-downlink phase-A training + STATE sync +
+    rank-0 save; reports final params so the parent checks cross-rank
+    parity."""
+    try:
+        from repro.comm import make_transport as mk
+
+        transport = mk("tcp", rank=rank, world=_TOY["world"],
+                       coordinator=f"127.0.0.1:{port}", timeout=120.0)
+        tr = _toy_trainer(transport, "packed", downlink="topk")
+        tr.fit(_toy_batches(), steps=_TOY["steps"], seed=_TOY["seed"])
+        tr.sync_comm_state()
+        if rank == 0:
+            tr.save_checkpoint(ckpt_path)
+        params = np.asarray(tr.flat_params).tobytes()
+        shift = np.asarray(tr.comm_state.shift).tobytes()
+        down = transport.stats.bytes_down
+        transport.close()
+        q.put((rank, None, params, shift, down))
+    except Exception as e:        # pragma: no cover - surfaced by the parent
+        q.put((rank, repr(e), None, None, 0))
+
+
+@pytest.mark.slow
+@needs_sockets
+def test_tcp_downlink_checkpoint_restores_and_continues_bitwise(tmp_path):
+    """The compressed-downlink acceptance check: a 3-rank SPAWNED tcp
+    world trains with the DIANA-shift downlink, every rank's params AND
+    shift mirror equal the loopback run bit-for-bit, rank 0's checkpoint
+    carries the shift via the STATE frame, and a restored trainer
+    continues phase B matching an uninterrupted loopback run exactly.
+    The tcp downlink also books measurably fewer bytes than the raw f32
+    broadcast would."""
+    import itertools
+    import multiprocessing as mp
+
+    steps, seed, world = _TOY["steps"], _TOY["seed"], _TOY["world"]
+    ref = _toy_trainer(None, "packed", downlink="topk")
+    stream = _toy_batches()
+    ref.fit(stream, steps=steps, seed=seed)
+    phase_a_params = np.asarray(ref.flat_params).tobytes()
+    phase_a_shift = np.asarray(ref.comm_state.shift).copy()
+    assert bool(np.any(phase_a_shift != 0.0))
+    ref.fit(stream, steps=steps, seed=seed + 1)      # phase B, same stream
+    want = np.asarray(ref.flat_params).tobytes()
+
+    ckpt = str(tmp_path / "downlink.npz")
+    ctx = mp.get_context("spawn")
+    port = pick_free_port()
+    q = ctx.Queue()
+    procs = [ctx.Process(target=_tcp_downlink_rank_main,
+                         args=(r, port, q, ckpt))
+             for r in range(world)]
+    for p in procs:
+        p.start()
+    try:
+        downs = {}
+        for _ in range(world):
+            rank, err, params, shift, down = q.get(timeout=300)
+            assert err is None, f"rank {rank} failed: {err}"
+            assert params == phase_a_params, f"rank {rank} params diverged"
+            assert shift == phase_a_shift.tobytes(), \
+                f"rank {rank} shift mirror diverged"
+            downs[rank] = down
+        for p in procs:
+            p.join(timeout=60)
+    finally:
+        for p in procs:
+            if p.is_alive():      # pragma: no cover - cleanup on failure
+                p.terminate()
+
+    # honest, compressed downlink booking on the real wire
+    from repro.comm.multihost import FRAME_HEADER_BYTES
+
+    raw_down = (FRAME_HEADER_BYTES + 16 + 4 * _TOY["d"]) * (world - 1) * steps
+    assert 0 < downs[0] < raw_down
+
+    resumed = _toy_trainer(None, "packed", downlink="topk")
+    resumed.load_checkpoint(ckpt)
+    assert np.array_equal(np.asarray(resumed.comm_state.shift),
+                          phase_a_shift)
     cont = _toy_batches()
     resumed.fit(itertools.islice(cont, steps, None), steps=steps,
                 seed=seed + 1)

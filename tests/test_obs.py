@@ -280,6 +280,48 @@ def test_checked_in_schema_is_the_wire_surface():
     assert {"X", "i", "C", "M"} <= set(schema["properties"]["ph"]["enum"])
 
 
+def test_downlink_and_bucket_spans_recorded_and_valid():
+    """PR 7's comm-stack spans — ``wire/downlink_encode`` from the
+    DIANA-shift server encode and ``wire/bucket_encode`` from the
+    backward-pass streamer — must come out of the REAL code paths with
+    their documented args and validate against the checked-in schema."""
+    from repro.comm.plan import GradBucketStreamer, WirePlan
+    from repro.comm.aggregate import _make_packed_codec
+    from repro.core.aggregators import make_aggregator
+
+    tel = obs.install(Telemetry(sample_every=1))
+    dim, m = 96, 2
+    rng = jax.random.PRNGKey(0)
+    grads = jax.random.normal(rng, (m, dim), jnp.float32)
+
+    ag = make_aggregator("mlmc_topk", dim, k_fraction=0.1, wire="packed",
+                         downlink="topk")
+    ag(grads, rng, ag.init(m, dim))
+
+    plan = WirePlan("mlmc_topk", dim, 48,
+                    lambda size: _make_packed_codec(
+                        "mlmc_topk", size, None, dict(k_fraction=0.1)))
+    streamer = GradBucketStreamer(plan, m, [0], [dim])
+    streamer.begin(rng)
+    for w in range(m):
+        streamer.push(0, jnp.float32(w), grads[w])
+    streamer.finish(grads)
+
+    events = export.telemetry_events(tel)
+    assert export.validate_events(events) == []
+    by_name = {}
+    for ev in events:
+        by_name.setdefault(ev["name"], []).append(ev)
+    (down,) = by_name["wire/downlink_encode"]
+    assert down["ph"] == "X" and down["args"]["codec"] == "topk"
+    assert down["args"]["nbytes"] > 0
+    buckets = by_name["wire/bucket_encode"]
+    assert len(buckets) == m * plan.num_buckets
+    assert {(e["args"]["bucket"], e["args"]["worker"]) for e in buckets} \
+        == {(b, w) for b in range(plan.num_buckets) for w in range(m)}
+    assert all(e["args"]["codec"] == "mlmc_topk" for e in buckets)
+
+
 def test_export_cli_merges_validates_and_converts(tmp_path):
     tels = []
     for rank in (0, 1):

@@ -1,0 +1,217 @@
+"""Bucket-plan battery: `repro.comm.plan` parity, framing, and streaming.
+
+The bucketed wire's whole correctness story is ONE invariant: encoding
+bucket ``b`` of a flat gradient through a `WirePlan` is bitwise identical
+to encoding that slice through a standalone flat codec of the bucket's
+size with the same folded key (``fold_in(worker_key, b)``).  Everything
+else — the batched `encode_round`, the backward-pass `GradBucketStreamer`,
+the `BucketedPackedAggregate` batch and streamed paths — must reproduce
+those same bytes, so tcp-less substrate swaps can never change training.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.aggregate import _make_packed_codec
+from repro.comm.packets import Packet
+from repro.comm.plan import (
+    BucketedPackedAggregate,
+    GradBucketStreamer,
+    WirePlan,
+    bucket_ranges,
+    bucketed_packed_aggregator,
+    pack_bucket_payload,
+    unpack_bucket_payload,
+)
+from repro.core.aggregators import make_aggregator
+
+DIM = 300
+BUCKET = 128          # -> buckets of 128, 128, 44: two shared, one odd
+WORKERS = 3
+CODEC_KW = dict(k_fraction=0.1, s=4)
+
+#: the stateless packed codecs the bucketed wire supports (the stateful
+#: families are rejected by construction — tested below)
+PLAN_CODECS = ("mlmc_topk", "mlmc_topk_static", "mlmc_stopk", "qsgd",
+               "signsgd", "mlmc_rtn")
+
+
+def _plan(name: str, dim: int = DIM, bucket: int = BUCKET) -> WirePlan:
+    return WirePlan(name, dim, bucket,
+                    lambda size: _make_packed_codec(name, size, None,
+                                                    dict(CODEC_KW)))
+
+
+def _grads(dim: int = DIM, m: int = WORKERS) -> jax.Array:
+    g = jax.random.normal(jax.random.PRNGKey(3), (m, dim), jnp.float32)
+    return g * jnp.exp(-5.0 * jnp.arange(dim) / dim)
+
+
+def test_bucket_ranges_cover_and_validate():
+    assert bucket_ranges(DIM, BUCKET) == ((0, 128), (128, 256), (256, 300))
+    assert bucket_ranges(5, 100) == ((0, 5),)
+    with pytest.raises(ValueError, match="bucket_size"):
+        bucket_ranges(DIM, 0)
+
+
+@pytest.mark.parametrize("name", PLAN_CODECS)
+def test_bucketed_encode_matches_flat_codec_bitwise(name):
+    """THE invariant: plan bytes == flat-codec-of-bucket-size bytes."""
+    plan = _plan(name)
+    grads = _grads()
+    keys = jax.random.split(jax.random.PRNGKey(11), WORKERS)
+    packets = plan.encode_round(grads, keys)
+    for b, (start, stop) in enumerate(plan.ranges):
+        flat = _make_packed_codec(name, stop - start, None, dict(CODEC_KW))
+        for w in range(WORKERS):
+            ref = flat.encode(grads[w, start:stop],
+                              jax.random.fold_in(keys[w], b)).packet
+            assert packets[b][w].to_bytes() == ref.to_bytes(), \
+                (name, b, w)
+
+
+@pytest.mark.parametrize("name", ("mlmc_topk", "qsgd"))
+def test_streamer_matches_batch_encode_bitwise(name):
+    """Taps arriving leaf-by-leaf (any order, any interleaving) produce
+    the same packets as the one-shot `encode_round`."""
+    plan = _plan(name)
+    grads = _grads()
+    rng = jax.random.PRNGKey(7)
+    keys = jax.random.split(rng, WORKERS)
+    want = plan.encode_round(grads, keys)
+
+    # a synthetic 4-leaf layout straddling every bucket boundary
+    offsets, sizes = [0, 100, 180, 260], [100, 80, 80, 40]
+    streamer = GradBucketStreamer(plan, WORKERS, offsets, sizes)
+    streamer.begin(rng)
+    order = [(leaf, w) for w in range(WORKERS) for leaf in range(4)]
+    for leaf, w in reversed(order):        # worst-case arrival order
+        off, size = offsets[leaf], sizes[leaf]
+        streamer.push(leaf, jnp.float32(w), grads[w, off:off + size])
+    got = streamer.finish(grads)
+    for b in range(plan.num_buckets):
+        for w in range(WORKERS):
+            assert got[b][w].to_bytes() == want[b][w].to_bytes(), (b, w)
+
+
+def test_streamer_backfills_missing_taps():
+    """Correctness must not depend on the callbacks firing at all."""
+    plan = _plan("mlmc_topk")
+    grads = _grads()
+    rng = jax.random.PRNGKey(7)
+    want = plan.encode_round(grads, jax.random.split(rng, WORKERS))
+    streamer = GradBucketStreamer(plan, WORKERS, [0], [DIM])
+    streamer.begin(rng)                    # no pushes at all
+    got = streamer.finish(grads)
+    for b in range(plan.num_buckets):
+        for w in range(WORKERS):
+            assert got[b][w].to_bytes() == want[b][w].to_bytes(), (b, w)
+
+
+def test_bucketed_aggregate_batch_equals_streamed():
+    plan = _plan("mlmc_topk")
+    grads = _grads()
+    rng = jax.random.PRNGKey(19)
+    agg = BucketedPackedAggregate(_plan("mlmc_topk"))
+    batch = agg(grads, rng)
+    streamer = GradBucketStreamer(plan, WORKERS, [0], [DIM])
+    streamer.begin(rng)
+    streamed = BucketedPackedAggregate(plan).step_streamed(
+        streamer, grads, rng)
+    assert np.array_equal(np.asarray(batch.direction),
+                          np.asarray(streamed.direction))
+    assert float(batch.bits) == float(streamed.bits)
+    assert float(batch.bits) > 0
+
+
+def test_bucketed_downlink_advances_shift():
+    ag = make_aggregator("mlmc_topk", DIM, k_fraction=0.1, wire="packed",
+                         bucket_size=BUCKET, downlink="topk")
+    state = ag.init(WORKERS, DIM)
+    assert state.shift.shape == (DIM,)
+    out = ag(_grads(), jax.random.PRNGKey(2), state)
+    assert out.state.step == 1
+    assert float(jnp.sum(jnp.abs(out.state.shift))) > 0
+    assert out.direction.shape == (DIM,)
+
+
+def test_bucket_payload_roundtrip_and_framing_errors():
+    parts = [b"alpha", b"", b"\x00" * 9]
+    raw = pack_bucket_payload(parts)
+    assert unpack_bucket_payload(raw) == parts
+    with pytest.raises(ValueError, match="magic"):
+        unpack_bucket_payload(b"XXXX" + raw[4:])
+    with pytest.raises(ValueError, match="truncated"):
+        unpack_bucket_payload(raw[:3])
+    with pytest.raises(ValueError, match="truncated"):
+        unpack_bucket_payload(raw[:-2])
+    with pytest.raises(ValueError, match="trailing"):
+        unpack_bucket_payload(raw + b"!")
+
+
+def test_plan_shares_codec_across_equal_buckets():
+    plan = _plan("mlmc_topk")
+    assert plan.codec(0) is plan.codec(1)      # both 128-wide
+    assert plan.codec(2) is not plan.codec(0)  # the 44-wide remainder
+
+
+def test_bucketed_rejects_stateful_families_and_multihost():
+    with pytest.raises(ValueError, match="stateful"):
+        bucketed_packed_aggregator("ef21", DIM, bucket_size=BUCKET)
+    with pytest.raises(ValueError, match="in-process"):
+        bucketed_packed_aggregator(
+            "mlmc_topk", DIM, bucket_size=BUCKET,
+            transport=_FakeMultihost())
+
+
+class _FakeMultihost:
+    """Quacks like a `TcpStarTransport` for the rejection check."""
+    world = 3
+
+    def broadcast_payload(self, data):
+        raise AssertionError("must be rejected before any traffic")
+
+
+def test_make_aggregator_routes_and_rejects_bucket_size():
+    ag = make_aggregator("mlmc_topk", DIM, k_fraction=0.1, wire="packed",
+                         bucket_size=BUCKET)
+    out = ag(_grads(), jax.random.PRNGKey(0))
+    assert out.direction.shape == (DIM,)
+    with pytest.raises(ValueError, match="bucket_size"):
+        make_aggregator("mlmc_topk", DIM, k_fraction=0.1, bucket_size=BUCKET)
+    with pytest.raises(ValueError, match="bucket_size"):
+        make_aggregator("mlmc_topk", DIM, k_fraction=0.1, wire="device",
+                        bucket_size=BUCKET)
+
+
+def test_decode_mean_matches_flat_reference():
+    """Per-bucket decode_mean concatenated == decoding every packet with
+    the flat bucket codec and averaging by hand."""
+    plan = _plan("qsgd")
+    grads = _grads()
+    keys = jax.random.split(jax.random.PRNGKey(23), WORKERS)
+    packets = plan.encode_round(grads, keys)
+    direction = np.asarray(plan.decode_mean(packets))
+    ref = []
+    for b, (start, stop) in enumerate(plan.ranges):
+        flat = _make_packed_codec("qsgd", stop - start, None, dict(CODEC_KW))
+        if hasattr(flat, "decode_mean"):
+            ref.append(np.asarray(flat.decode_mean(packets[b])))
+        else:
+            ests = [np.asarray(flat.decode(p)) for p in packets[b]]
+            ref.append(np.mean(np.stack(ests), axis=0))
+    assert np.array_equal(direction, np.concatenate(ref))
+
+
+def test_bucket_packets_parse_standalone():
+    """Every bucket packet is an ordinary self-describing `Packet` — a
+    future tcp bucketed wire can ship them as-is."""
+    plan = _plan("mlmc_topk")
+    packets = plan.encode_round(
+        _grads(), jax.random.split(jax.random.PRNGKey(1), WORKERS))
+    for pkts in packets:
+        for p in pkts:
+            rt = Packet.from_bytes(p.to_bytes())
+            assert rt.to_bytes() == p.to_bytes()
