@@ -1,0 +1,163 @@
+"""Per-leaf codec-policy benchmark — multi-stream aggregation vs the flat wire.
+
+Measures, at the BENCH_wire model sizes:
+
+* trainer steps/s and bits/step of the ``dense_small_tensors`` preset
+  (small leaves dense, matmuls mlmc_topk) on the packed multi-stream RCBW
+  wire and on the abstract per-segment reference, against the flat
+  single-codec ``mlmc_topk`` packed baseline — the acceptance target is
+  the policy wire within 20% of the flat path (its per-segment encodes
+  reuse the same compiled-codec LRU, so the overhead is container framing
+  plus one dispatch per segment);
+* single-round aggregate microbenchmarks (µs/round, flat vs policy) at
+  the small model's gradient dimension.
+
+Emits a machine-readable ``BENCH_policy.json`` at the REPO ROOT so
+successive PRs accumulate a comparable perf record:
+
+    PYTHONPATH=src python -m benchmarks.bench_policy            # full
+    PYTHONPATH=src python -m benchmarks.bench_policy --smoke    # CI tier
+
+The smoke tier (a few steps, one size) exercises the emission path on
+every push without burning minutes and NEVER clobbers a committed full
+record; the weekly full run refreshes the real numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_WORKERS, run_methods, small_lm_config
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_policy.json"
+
+#: the BENCH_wire sizes, for record-to-record comparability
+SIZES = {
+    "small": dict(layers=2, d_model=128),
+    "wide": dict(layers=2, d_model=256),
+}
+
+#: the preset every entry runs (size-ruled: norms/biases dense, matmuls
+#: mlmc_topk) — frozen config surface, see tests/test_golden_packets.py
+PRESET = "dense_small_tensors"
+
+
+def _trainer_entries(size_name: str, steps: int) -> dict:
+    cfg = small_lm_config(**SIZES[size_name])
+    methods = {
+        "mlmc_topk_packed_flat": dict(method="mlmc_topk", k_fraction=0.02,
+                                      wire="packed"),
+        "policy_packed": dict(method="mlmc_topk", k_fraction=0.02,
+                              wire="packed", policy=PRESET),
+        "policy_abstract": dict(method="mlmc_topk", k_fraction=0.02,
+                                policy=PRESET),
+    }
+    results = run_methods(methods, steps=steps, cfg=cfg)
+    out = {}
+    for label, r in results.items():
+        out[label] = {
+            "dim": r["dim"],
+            "steps_per_s": round(len(r["loss"]) / max(r["wall_s"], 1e-9), 3),
+            "final_loss": round(r["final_loss"], 6),
+            "bits_per_step": r["bits"][-1] / max(len(r["bits"]), 1),
+        }
+    flat = out["mlmc_topk_packed_flat"]["steps_per_s"]
+    pol = out["policy_packed"]["steps_per_s"]
+    return {
+        "trainer": out,
+        # acceptance: the multi-stream wire within 20% of the flat path
+        "policy_vs_flat_ratio": round(pol / max(flat, 1e-9), 3),
+    }
+
+
+def _round_us(agg, grads, rng, repeats: int = 5) -> float:
+    jax.block_until_ready(agg(grads, rng, None).direction)   # warmup
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(agg(grads, rng, None).direction)
+        best = min(best, time.perf_counter() - t0)
+    return round(best * 1e6, 1)
+
+
+def _aggregate_micro(dim: int) -> dict:
+    """One aggregation round, flat vs policy, packed and abstract — the
+    per-round cost of the multi-stream container at a model-sized dim."""
+    from repro.comm.policy import CodecPolicy
+    from repro.core.aggregators import make_aggregator
+
+    grads = jax.random.normal(jax.random.PRNGKey(0),
+                              (BENCH_WORKERS, dim), jnp.float32)
+    grads = (grads * jnp.exp(-10.0 * jnp.arange(dim) / dim))
+    rng = jax.random.PRNGKey(1)
+    # a model-shaped 3-segment split (head dense, middle qsgd, tail mlmc)
+    from repro.comm.policy import ResolvedPolicy, Segment
+
+    cut1, cut2 = dim // 16, dim // 4
+    policy = ResolvedPolicy(dim, (
+        Segment("dense@0", "dense", 0, cut1),
+        Segment("qsgd@%d" % cut1, "qsgd", cut1, cut2),
+        Segment("mlmc_topk@%d" % cut2, "mlmc_topk", cut2, dim)))
+    out = {"segments": len(policy.segments)}
+    for wire in ("packed", "abstract"):
+        flat = make_aggregator("mlmc_topk", dim, k_fraction=0.02, wire=wire)
+        pol = make_aggregator("mlmc_topk", dim, k_fraction=0.02, wire=wire,
+                              policy=policy)
+        out[f"{wire}_flat_us"] = _round_us(flat, grads, rng)
+        out[f"{wire}_policy_us"] = _round_us(pol, grads, rng)
+    # the degenerate one-segment policy must cost the flat path exactly
+    uni = make_aggregator("mlmc_topk", dim, k_fraction=0.02, wire="packed",
+                          policy=CodecPolicy.parse({"*": "mlmc_topk"}))
+    out["packed_uniform_policy_us"] = _round_us(uni, grads, rng)
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    steps = 3 if smoke else 12
+    sizes = ("small",) if smoke else ("small", "wide")
+    record = {
+        "benchmark": "policy_multi_stream",
+        "smoke": smoke,
+        "steps": steps,
+        "preset": PRESET,
+        "sizes": {},
+    }
+    for size_name in sizes:
+        t0 = time.time()
+        entry = _trainer_entries(size_name, steps)
+        dim = entry["trainer"]["policy_packed"]["dim"]
+        entry["round_us"] = _aggregate_micro(2048 if smoke else dim)
+        record["sizes"][size_name] = entry
+        for label, r in entry["trainer"].items():
+            print(f"bench_policy/{size_name}/{label},"
+                  f"{1e6 / max(r['steps_per_s'], 1e-9):.0f},"
+                  f"steps_per_s={r['steps_per_s']};"
+                  f"final_loss={r['final_loss']:.4f}")
+        print(f"# bench_policy {size_name} ratio policy/flat = "
+              f"{entry['policy_vs_flat_ratio']} "
+              f"({time.time() - t0:.1f}s)", flush=True)
+    keep = False
+    if smoke and OUT_PATH.exists():
+        try:
+            # never clobber a committed FULL perf record with a smoke
+            # run (CI runs --smoke on every push to test this path)
+            keep = not json.loads(OUT_PATH.read_text()).get("smoke", True)
+        except (json.JSONDecodeError, OSError):
+            pass
+    if keep:
+        print(f"# smoke run: kept existing full record {OUT_PATH}")
+    else:
+        OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {OUT_PATH}")
+    return record
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

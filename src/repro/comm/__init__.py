@@ -14,6 +14,13 @@ that the mesh collectives gather directly — ``wire="device"`` in
 (``make_transport("tcp", rank=..., world=..., coordinator=...)``) that
 moves the packet bytes between OS processes and *measures* per-link bytes
 and wall-clock instead of simulating them.
+
+`policy` layers per-leaf heterogeneity over all of the above: a
+`CodecPolicy` maps pytree leaf paths/sizes to codec names, resolving to
+named (segment, codec) streams that every substrate — abstract, packed,
+device, tcp — encodes independently (``make_aggregator(...,
+policy=...)``); a one-segment policy degenerates bit-for-bit to the
+single-codec path.
 """
 
 from repro.comm.aggregate import (
@@ -40,6 +47,13 @@ from repro.comm.device_wire import (
     make_device_codec,
 )
 from repro.comm.packets import Header, Packet, Stream, header_lane
+from repro.comm.policy import (
+    POLICY_PRESETS,
+    CodecPolicy,
+    PolicyRule,
+    ResolvedPolicy,
+    Segment,
+)
 from repro.kernels.pack import pack_bits, pack_planes, unpack_bits, \
     unpack_planes
 from repro.comm.topology import (
@@ -56,11 +70,13 @@ from repro.comm.transport import (
 )
 
 __all__ = [
-    "CompiledCodec", "CostModel", "DEVICE_WIRE_METHODS", "DeviceCodec",
-    "DevicePacket", "EncodeResult", "Header", "LoopbackTransport",
-    "MultihostPackedAdaptive", "MultihostPackedAggregate",
-    "MultihostPackedEF21", "PackedAdaptiveMLMC",
-    "PackedAggregate", "PackedEF21", "Packet",
+    "CodecPolicy", "CompiledCodec", "CostModel", "DEVICE_WIRE_METHODS",
+    "DeviceCodec", "DevicePacket", "EncodeResult", "Header",
+    "LoopbackTransport", "MultihostPackedAdaptive",
+    "MultihostPackedAggregate", "MultihostPackedEF21",
+    "POLICY_PRESETS", "PackedAdaptiveMLMC",
+    "PackedAggregate", "PackedEF21", "Packet", "PolicyRule",
+    "ResolvedPolicy", "Segment",
     "SimulatedTransport", "Stream", "TcpStarTransport", "Transport",
     "TransportStats", "WireCodec", "compile_codec", "device_aggregator",
     "header_lane", "is_multihost_transport", "make_codec",

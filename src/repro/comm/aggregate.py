@@ -563,8 +563,33 @@ def _drain_decoding(tp, codec, local_payload: bytes):
     return packets, (rows if compiled else None)
 
 
+def _drain_containers(tp, plan, local_payload: bytes):
+    """Server-side drain of RCBW multi-stream containers (the bucketed /
+    policy uplink): each rank's container splits into per-bucket packets
+    the moment its frame completes.  Returns ``arrived[b][r]`` — packets
+    per bucket in rank order, the layout `WirePlan.decode_mean` expects."""
+    from repro.comm.plan import unpack_bucket_payload
+
+    world = tp.world
+    per_rank: list = [None] * world
+
+    def on_payload(r: int, raw: bytes) -> None:
+        per_rank[r] = [Packet.from_bytes(p)
+                       for p in unpack_bucket_payload(raw)]
+
+    tp.exchange([local_payload], on_payload=on_payload)
+    for r, parts in enumerate(per_rank):
+        if parts is not None and len(parts) != plan.num_buckets:
+            raise ValueError(
+                f"rank {r} shipped {len(parts)} bucket packets, plan has "
+                f"{plan.num_buckets}")
+    return [[per_rank[r][b] for r in range(world)]
+            for b in range(plan.num_buckets)]
+
+
 def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
-                 shift=None, key=None) -> tuple[Array, float, Array | None]:
+                 shift=None, key=None,
+                 plan=None) -> tuple[Array, float, Array | None]:
     """One multihost aggregation round: ship this rank's payload, decode +
     mean on rank 0, broadcast the direction.  Returns ``(direction, bits,
     new_shift)`` — bits (uplink + downlink where compressed) identical on
@@ -580,26 +605,39 @@ def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
     identical (and bitwise equal to the loopback aggregators, which run
     the same round trip in-process)."""
     tel = obs.active()
-    name, impl = getattr(codec, "name", "?"), _codec_impl(codec)
+    if plan is not None:
+        dim, name, impl = plan.dim, plan.name, "bucketed"
+    else:
+        dim = codec.dim
+        name, impl = getattr(codec, "name", "?"), _codec_impl(codec)
     if tp.rank == 0:
         t0 = time.perf_counter() if tel.enabled else 0.0
-        packets, rows = _drain_decoding(tp, codec, local_payload)
-        if rows is not None:
-            direction = jnp.mean(jnp.stack(rows), axis=0)
+        if plan is not None:
+            arrived = _drain_containers(tp, plan, local_payload)
+            direction = plan.decode_mean(arrived)
+            bits = plan.measured_bits(arrived)
+            if tel.enabled:
+                tel.trace.complete("comm/serve_round", t0, pid=0, codec=name,
+                                   impl=impl, world=tp.world)
+                plan.record_segments(tel, arrived)
         else:
-            direction = jnp.mean(jnp.stack(
-                [jnp.asarray(codec.decode(p)) for p in packets]), axis=0)
-        if tel.enabled:
-            tel.trace.complete("comm/serve_round", t0, pid=0, codec=name,
-                               impl=impl, world=tp.world)
-            _record_mlmc_draws(tel, codec, packets)
-        bits = float(sum(codec.measured_bits(p) for p in packets))
+            packets, rows = _drain_decoding(tp, codec, local_payload)
+            if rows is not None:
+                direction = jnp.mean(jnp.stack(rows), axis=0)
+            else:
+                direction = jnp.mean(jnp.stack(
+                    [jnp.asarray(codec.decode(p)) for p in packets]), axis=0)
+            if tel.enabled:
+                tel.trace.complete("comm/serve_round", t0, pid=0, codec=name,
+                                   impl=impl, world=tp.world)
+                _record_mlmc_draws(tel, codec, packets)
+            bits = float(sum(codec.measured_bits(p) for p in packets))
         if downlink is None:
             tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
             return direction, bits, None
         t0 = time.perf_counter() if tel.enabled else 0.0
         pkt, delta_hat, dbits = downlink.encode(direction, shift, key)
-        blob = pack_encoded_direction(pkt.to_bytes(), codec.dim, bits)
+        blob = pack_encoded_direction(pkt.to_bytes(), dim, bits)
         if tel.enabled:
             tel.trace.complete("wire/downlink_encode", t0, pid=0,
                                codec=downlink.name, nbytes=len(blob))
@@ -611,9 +649,9 @@ def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
     tp.exchange([local_payload])
     raw = tp.broadcast_payload(None)
     if downlink is None:
-        vec, bits = unpack_direction(raw, codec.dim)
+        vec, bits = unpack_direction(raw, dim)
         return jnp.asarray(vec), bits, None
-    pkt_bytes, bits = unpack_encoded_direction(raw, codec.dim)
+    pkt_bytes, bits = unpack_encoded_direction(raw, dim)
     pkt = Packet.from_bytes(pkt_bytes)
     delta_hat = downlink.decode(pkt)
     dbits = float(downlink.codec.measured_bits(pkt))
@@ -880,7 +918,8 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
                       ema_rho: float = 0.25, compiled: bool | None = None,
                       downlink: str | None = None,
                       downlink_alpha: float = 0.5,
-                      bucket_size: int | None = None):
+                      bucket_size: int | None = None,
+                      policy=None):
     """Build the packed-wire `Aggregator` for a registry name (the
     ``wire="packed"`` branch of `repro.core.aggregators.make_aggregator`).
 
@@ -898,7 +937,12 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
     carves the gradient into fixed-shape buckets encoded independently
     through a shared per-bucket `WirePlan`
     (`repro.comm.plan.BucketedPackedAggregate`), so the trainer can
-    overlap per-bucket encodes with the remaining backward."""
+    overlap per-bucket encodes with the remaining backward.
+
+    ``policy`` (a `ResolvedPolicy`) replaces the single ``name`` codec
+    with policy-driven (segment, codec) streams shipped as one RCBW
+    container per worker (`repro.comm.plan.policy_packed_aggregator`);
+    ``bucket_size`` composes by subdividing the segments."""
     from repro.core.aggregators import Aggregator
 
     codec_kw = dict(k_fraction=k_fraction, s=s, rtn_level=rtn_level,
@@ -907,6 +951,12 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
     if downlink is not None:
         dl = Downlink(_make_packed_codec(downlink, dim, compiled, codec_kw),
                       downlink_alpha)
+    if policy is not None:
+        from repro.comm.plan import policy_packed_aggregator
+
+        return policy_packed_aggregator(
+            policy, dim, transport=transport, compiled=compiled,
+            downlink=dl, codec_kw=codec_kw, bucket_size=bucket_size)
     if bucket_size is not None:
         from repro.comm.plan import bucketed_packed_aggregator
 

@@ -675,3 +675,75 @@ def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,
     if down_codec is not None:
         return Aggregator(name, agg, init=init, stateful=True)
     return Aggregator(name, agg)
+
+
+def policy_device_aggregator(resolved, dim: int, *,
+                             downlink: str | None = None,
+                             downlink_alpha: float = 0.5, **codec_kw):
+    """The device-wire realization of a multi-segment `ResolvedPolicy`
+    (`repro.comm.policy`): per segment, every worker's slice round-trips
+    through the segment's fixed-shape `DeviceCodec` under the draw key
+    ``fold_in(worker_key, segment_index)`` — the identical derivation the
+    abstract, packed, and tcp substrates replay — and the per-segment
+    means concatenate into the direction, all inside one jit.  Bits are
+    the static per-segment operand sizes.  Stateless segment families
+    only (the stateful state rows are whole-gradient)."""
+    from repro.comm.policy import segment_codec_kw
+    from repro.core.aggregators import (AggregateOut, Aggregator,
+                                        STATEFUL_AGGREGATORS)
+    from repro.core.types import empty_comm_state
+
+    if resolved.dim != dim:
+        raise ValueError(f"policy resolved for dim {resolved.dim}, "
+                         f"aggregator dim {dim}")
+    bad = sorted({s.codec for s in resolved.segments
+                  if s.codec in STATEFUL_AGGREGATORS})
+    if bad:
+        raise ValueError(
+            f"policy segments name stateful families {bad}: their "
+            "per-worker CommState rows are defined over the whole flat "
+            "gradient — use a one-segment policy for those")
+    codecs = [make_device_codec(seg.codec, seg.size,
+                                **segment_codec_kw(codec_kw, seg, dim))
+              for seg in resolved.segments]
+    down_codec = (make_device_codec(downlink, dim, **codec_kw)
+                  if downlink is not None else None)
+
+    def init(num_workers, d):
+        del num_workers
+        return empty_comm_state(d if down_codec is not None else 0)
+
+    def agg(worker_grads, rng, state):
+        if state is None:
+            state = init(worker_grads.shape[0], dim)
+        m = worker_grads.shape[0]
+        keys = jax.random.split(rng, m)
+        parts = []
+        for b, seg in enumerate(resolved.segments):
+
+            def one(v, key, _codec=codecs[b], _b=b):
+                packet, _ = _codec.encode(v, jax.random.fold_in(key, _b))
+                return _codec.decode(packet)
+
+            decoded = jax.vmap(one)(worker_grads[:, seg.start:seg.stop],
+                                    keys)
+            parts.append(jnp.mean(decoded, axis=0))
+        direction = jnp.concatenate(parts)
+        bits = jnp.asarray(m * sum(c.operand_bits() for c in codecs),
+                           jnp.float32)
+        if down_codec is None:
+            return AggregateOut(direction, state, bits)
+        from repro.comm.aggregate import _DOWNLINK_FOLD
+
+        dkey = jax.random.fold_in(rng, _DOWNLINK_FOLD)
+        dpkt, _ = down_codec.encode(direction - state.shift, dkey)
+        delta_hat = down_codec.decode(dpkt)
+        new_state = state._replace(
+            step=state.step + 1,
+            shift=state.shift + downlink_alpha * delta_hat)
+        bits = bits + jnp.asarray(down_codec.operand_bits(), jnp.float32)
+        return AggregateOut(state.shift + delta_hat, new_state, bits)
+
+    if down_codec is not None:
+        return Aggregator("policy", agg, init=init, stateful=True)
+    return Aggregator("policy", agg)

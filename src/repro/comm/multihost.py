@@ -77,7 +77,12 @@ DIRECTION_ENC = 9              # compressed (DIANA-shift) direction blob
 #: (port scanner, health check) at most this long before refusing it
 _HELLO_GRACE_S = 2.0
 
-#: handshake token — bump the suffix on any incompatible protocol change
+#: handshake token — bump the suffix on any incompatible protocol change.
+#: The HELLO payload is the token, optionally followed by ``|`` and the
+#: rank's codec-policy fingerprint (`repro.comm.policy.ResolvedPolicy.hash`):
+#: ranks running different per-leaf policies would desync mid-run (their
+#: RCBW containers disagree segment by segment), so the server refuses the
+#: handshake instead.  Old payloads (bare token) parse as "no policy".
 HELLO_TOKEN = b"repro-multihost-v1"
 
 MAX_WORLD = 255            # rank rides in a uint8 frame field
@@ -217,6 +222,7 @@ class TcpStarTransport:
         self.rank = rank
         self.world = world
         self.stats = TransportStats()
+        self._policy_hash = b""      # codec-policy fingerprint (HELLO check)
         self._conns: dict[int, socket.socket] = {}   # server: rank -> socket
         self._bufs: dict[int, _FrameBuffer] = {}     # server: rank -> buffer
         self._sock: socket.socket | None = None      # worker: server link
@@ -236,13 +242,18 @@ class TcpStarTransport:
 
     @classmethod
     def listen(cls, host: str = "127.0.0.1", port: int = 0, *, world: int,
-               timeout: float = 60.0) -> "TcpStarTransport":
+               timeout: float = 60.0,
+               policy_hash: str | None = None) -> "TcpStarTransport":
         """Rank 0, step 1: bind ``host:port`` (0 = ephemeral; the kernel's
         choice lands in ``.port``) without blocking.  Call
-        `accept_workers` to run the rendezvous."""
+        `accept_workers` to run the rendezvous.  ``policy_hash`` is this
+        rank's codec-policy fingerprint — workers whose HELLO carries a
+        different one are refused (fail fast at rendezvous, not desync
+        mid-run)."""
         if not 2 <= world <= MAX_WORLD:
             raise ValueError(f"world must be in [2, {MAX_WORLD}], got {world}")
         t = cls(0, world)
+        t._policy_hash = (policy_hash or "").encode()
         t._listener = socket.create_server((host, port))
         t.port = t._listener.getsockname()[1]
         t._timeout = timeout
@@ -281,8 +292,13 @@ class TcpStarTransport:
                 continue
             conn.settimeout(timeout)     # GOODBYE/WELCOME writes below
             reason = None
-            if token != HELLO_TOKEN:
+            tok, _, peer_policy = token.partition(b"|")
+            if tok != HELLO_TOKEN:
                 reason = f"protocol token mismatch (server {HELLO_TOKEN!r})"
+            elif peer_policy != self._policy_hash:
+                reason = ("policy mismatch: server "
+                          f"{self._policy_hash.decode() or '<none>'}, worker "
+                          f"{peer_policy.decode(errors='replace') or '<none>'}")
             elif w != self.world:
                 reason = f"world mismatch: server {self.world}, worker {w}"
             elif not 1 <= rank < self.world:
@@ -302,18 +318,22 @@ class TcpStarTransport:
 
     @classmethod
     def serve(cls, host: str = "127.0.0.1", port: int = 0, *, world: int,
-              timeout: float = 60.0) -> "TcpStarTransport":
+              timeout: float = 60.0,
+              policy_hash: str | None = None) -> "TcpStarTransport":
         """Rank 0: `listen` + `accept_workers` in one blocking call (the
         ``make_transport("tcp", rank=0, ...)`` path, where the port is
         fixed up front and every worker retries until it is up)."""
-        return cls.listen(host, port, world=world,
-                          timeout=timeout).accept_workers()
+        return cls.listen(host, port, world=world, timeout=timeout,
+                          policy_hash=policy_hash).accept_workers()
 
     @classmethod
     def connect(cls, host: str, port: int, *, rank: int, world: int,
-                timeout: float = 60.0) -> "TcpStarTransport":
+                timeout: float = 60.0,
+                policy_hash: str | None = None) -> "TcpStarTransport":
         """Ranks 1..W-1: dial the coordinator (retrying until ``timeout`` so
-        workers may start before the server) and handshake."""
+        workers may start before the server) and handshake.
+        ``policy_hash`` rides the HELLO payload behind a ``|`` separator;
+        a server running a different policy refuses the handshake."""
         if not 2 <= world <= MAX_WORLD:
             raise ValueError(f"world must be in [2, {MAX_WORLD}], got {world}")
         if not 1 <= rank < world:
@@ -330,8 +350,10 @@ class TcpStarTransport:
                         f"{timeout}s: {e}") from e
                 time.sleep(0.05)
         sock.settimeout(timeout)
+        hello = HELLO_TOKEN + (b"|" + policy_hash.encode()
+                               if policy_hash else b"")
         try:
-            send_frame(sock, HELLO, rank, world, HELLO_TOKEN)
+            send_frame(sock, HELLO, rank, world, hello)
             _, _, w, _ = recv_frame(sock, expect=WELCOME)
         except Exception:
             sock.close()
@@ -341,6 +363,7 @@ class TcpStarTransport:
             raise ConnectionError(f"server runs world={w}, we expect {world}")
         _steady_state(sock)
         t = cls(rank, world)
+        t._policy_hash = (policy_hash or "").encode()
         t._sock = sock
         return t
 
@@ -612,15 +635,19 @@ class TcpStarTransport:
 
 def make_tcp_transport(*, rank: int, world: int,
                        coordinator: str = "127.0.0.1:37737",
-                       timeout: float = 60.0) -> TcpStarTransport:
+                       timeout: float = 60.0,
+                       policy_hash: str | None = None) -> TcpStarTransport:
     """The ``make_transport("tcp", ...)`` branch: rank 0 serves at
-    ``coordinator``, every other rank dials it."""
+    ``coordinator``, every other rank dials it.  ``policy_hash`` (the
+    rank's `ResolvedPolicy.hash`) rides the HELLO handshake so policy
+    mismatches fail at rendezvous."""
     host, port = parse_coordinator(coordinator)
     if rank == 0:
         if port == 0:
             raise ValueError("coordinator port 0 only works single-process; "
                              "pick a concrete port every rank can dial "
                              "(repro.launch.multihost does this for you)")
-        return TcpStarTransport.serve(host, port, world=world, timeout=timeout)
+        return TcpStarTransport.serve(host, port, world=world, timeout=timeout,
+                                      policy_hash=policy_hash)
     return TcpStarTransport.connect(host, port, rank=rank, world=world,
-                                    timeout=timeout)
+                                    timeout=timeout, policy_hash=policy_hash)

@@ -190,6 +190,51 @@ class Packet:
 
 
 # ---------------------------------------------------------------------------
+# multi-stream uplink container (RCBW)
+# ---------------------------------------------------------------------------
+#
+# One worker's per-bucket / per-policy-segment packets in a single transport
+# payload: magic, stream count, then (u32 length | packet bytes) each.  The
+# bucketed plan (`repro.comm.plan`) and the per-leaf policy wire ship one of
+# these per rank per round — in-process and on the tcp star's PAYLOAD frame
+# alike (rank 0 dispatches on the magic).
+
+BUCKETS_MAGIC = b"RCBW"
+_BUCKETS_FMT = "<4sI"
+BUCKETS_HEADER_BYTES = struct.calcsize(_BUCKETS_FMT)    # 8
+
+
+def pack_bucket_payload(parts: list[bytes]) -> bytes:
+    out = [struct.pack(_BUCKETS_FMT, BUCKETS_MAGIC, len(parts))]
+    for p in parts:
+        out.append(struct.pack("<I", len(p)))
+        out.append(p)
+    return b"".join(out)
+
+
+def unpack_bucket_payload(raw: bytes) -> list[bytes]:
+    if len(raw) < BUCKETS_HEADER_BYTES:
+        raise ValueError(f"truncated bucket payload: {len(raw)} bytes")
+    magic, count = struct.unpack_from(_BUCKETS_FMT, raw, 0)
+    if magic != BUCKETS_MAGIC:
+        raise ValueError(f"bad bucket-payload magic {magic!r}")
+    parts, off = [], BUCKETS_HEADER_BYTES
+    for _ in range(count):
+        if off + 4 > len(raw):
+            raise ValueError("truncated bucket payload: missing length")
+        (n,) = struct.unpack_from("<I", raw, off)
+        off += 4
+        if off + n > len(raw):
+            raise ValueError("truncated bucket payload: short packet")
+        parts.append(raw[off:off + n])
+        off += n
+    if off != len(raw):
+        raise ValueError(f"trailing garbage in bucket payload: "
+                         f"{len(raw) - off} bytes")
+    return parts
+
+
+# ---------------------------------------------------------------------------
 # device header lane
 # ---------------------------------------------------------------------------
 #

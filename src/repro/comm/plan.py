@@ -37,47 +37,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.packets import Packet
+from repro.comm.packets import (
+    BUCKETS_HEADER_BYTES,
+    BUCKETS_MAGIC,
+    Packet,
+    pack_bucket_payload,
+    unpack_bucket_payload,
+)
 from repro.comm.transport import LoopbackTransport
 from repro.obs import trace as obs
 
 Array = jax.Array
 
-#: bucketed uplink container: all of one worker's per-bucket packets in one
-#: transport payload — magic, bucket count, then (u32 length | bytes) each
-_BUCKETS_MAGIC = b"RCBW"
-_BUCKETS_FMT = "<4sI"
-_BUCKETS_HEADER_BYTES = struct.calcsize(_BUCKETS_FMT)    # 8
-
-
-def pack_bucket_payload(parts: list[bytes]) -> bytes:
-    out = [struct.pack(_BUCKETS_FMT, _BUCKETS_MAGIC, len(parts))]
-    for p in parts:
-        out.append(struct.pack("<I", len(p)))
-        out.append(p)
-    return b"".join(out)
-
-
-def unpack_bucket_payload(raw: bytes) -> list[bytes]:
-    if len(raw) < _BUCKETS_HEADER_BYTES:
-        raise ValueError(f"truncated bucket payload: {len(raw)} bytes")
-    magic, count = struct.unpack_from(_BUCKETS_FMT, raw, 0)
-    if magic != _BUCKETS_MAGIC:
-        raise ValueError(f"bad bucket-payload magic {magic!r}")
-    parts, off = [], _BUCKETS_HEADER_BYTES
-    for _ in range(count):
-        if off + 4 > len(raw):
-            raise ValueError("truncated bucket payload: missing length")
-        (n,) = struct.unpack_from("<I", raw, off)
-        off += 4
-        if off + n > len(raw):
-            raise ValueError("truncated bucket payload: short packet")
-        parts.append(raw[off:off + n])
-        off += n
-    if off != len(raw):
-        raise ValueError(f"trailing garbage in bucket payload: "
-                         f"{len(raw) - off} bytes")
-    return parts
+#: the RCBW container now lives in `repro.comm.packets` (it is a wire
+#: format, shared with the policy streams); these aliases keep the
+#: historical import surface of this module working
+_BUCKETS_MAGIC = BUCKETS_MAGIC
+_BUCKETS_HEADER_BYTES = BUCKETS_HEADER_BYTES
 
 
 def bucket_ranges(dim: int, bucket_size: int) -> tuple[tuple[int, int], ...]:
@@ -99,21 +75,54 @@ class WirePlan:
     instance, and the compiled pipeline's process-wide LRU shares the
     jitted programs across plans and wires on top of that)."""
 
-    def __init__(self, name: str, dim: int, bucket_size: int, factory):
+    def __init__(self, name: str, dim: int, bucket_size: int | None, factory,
+                 *, segments=None):
         self.name = name
         self.dim = dim
-        self.bucket_size = int(bucket_size)
-        self.ranges = bucket_ranges(dim, self.bucket_size)
+        self.segments = tuple(segments) if segments is not None else None
+        if self.segments is not None:
+            self.bucket_size = 0
+            self.ranges = tuple((s.start, s.stop) for s in self.segments)
+        else:
+            self.bucket_size = int(bucket_size)
+            self.ranges = bucket_ranges(dim, self.bucket_size)
         self.num_buckets = len(self.ranges)
         self._factory = factory
-        self._by_size: dict[int, object] = {}
+        self._by_size: dict = {}
+
+    @classmethod
+    def from_policy(cls, resolved, factory, *, name: str = "policy"):
+        """A plan whose buckets ARE a `ResolvedPolicy`'s segments — the
+        policy-driven multi-stream realization.  ``factory(seg) -> codec``
+        builds one codec per DISTINCT (codec, params, size) triple (shared
+        across same-shaped segments, and the compiled LRU shares the
+        jitted programs under that)."""
+        return cls(name, resolved.dim, None, factory,
+                   segments=resolved.segments)
 
     def codec(self, b: int):
+        if self.segments is not None:
+            seg = self.segments[b]
+            key = (seg.codec, seg.params, seg.size)
+            if key not in self._by_size:
+                self._by_size[key] = self._factory(seg)
+            return self._by_size[key]
         start, stop = self.ranges[b]
         size = stop - start
         if size not in self._by_size:
             self._by_size[size] = self._factory(size)
         return self._by_size[size]
+
+    def segment_label(self, b: int) -> str:
+        """Telemetry label for bucket ``b`` — the policy segment's name,
+        or the positional bucket index for uniform plans."""
+        if self.segments is not None:
+            return self.segments[b].name
+        return f"bucket{b}"
+
+    def codec_name(self, b: int) -> str:
+        return self.segments[b].codec if self.segments is not None \
+            else self.name
 
     def bucket_key(self, worker_key, b: int):
         """The bucket's draw key: an independent MLMC level draw per
@@ -160,6 +169,24 @@ class WirePlan:
         return float(sum(self.codec(b).measured_bits(p)
                          for b, pkts in enumerate(bucket_packets)
                          for p in pkts))
+
+    def segment_bits(self, bucket_packets: list[list[Packet]]) -> list[float]:
+        """Per-bucket measured bits, aligned with ``ranges`` — the policy
+        wire's per-stream byte accounting."""
+        return [float(sum(self.codec(b).measured_bits(p) for p in pkts))
+                for b, pkts in enumerate(bucket_packets)]
+
+    def record_segments(self, tel, bucket_packets) -> None:
+        """Per-segment telemetry: one byte counter per (segment, codec)
+        stream plus the MLMC level draws of each stream's packets."""
+        from repro.comm.aggregate import _record_mlmc_draws
+
+        for b, pkts in enumerate(bucket_packets):
+            codec = self.codec(b)
+            tel.count("wire_segment_bits",
+                      float(sum(codec.measured_bits(p) for p in pkts)),
+                      segment=self.segment_label(b), codec=self.codec_name(b))
+            _record_mlmc_draws(tel, codec, pkts)
 
 
 class GradBucketStreamer:
@@ -288,9 +315,27 @@ class BucketedPackedAggregate:
         return empty_comm_state(dim if self.downlink is not None else 0)
 
     def __call__(self, worker_grads: Array, rng, state=None):
+        from repro.comm.multihost import is_multihost_transport
+
+        tel = obs.active()
+        if is_multihost_transport(self.transport):
+            from repro.comm.aggregate import _require_one_worker
+
+            _require_one_worker(worker_grads)
+            tp = self.transport
+            # same per-step key fan as the flat multihost wire: every rank
+            # derives split(rng, world) and encodes with ITS OWN row, so
+            # the container bytes match the in-process worker order
+            keys = jax.random.split(rng, tp.world)[tp.rank:tp.rank + 1]
+            t0 = time.perf_counter() if tel.enabled else 0.0
+            bucket_packets = self.plan.encode_round(worker_grads, keys)
+            if tel.enabled:
+                tel.trace.complete("comm/encode", t0, pid=tp.rank,
+                                   codec=self.plan.name, impl="bucketed",
+                                   buckets=self.plan.num_buckets)
+            return self._finish_multihost(bucket_packets, rng, state)
         m = worker_grads.shape[0]
         keys = jax.random.split(rng, m)
-        tel = obs.active()
         t0 = time.perf_counter() if tel.enabled else 0.0
         bucket_packets = self.plan.encode_round(worker_grads, keys)
         if tel.enabled:
@@ -300,9 +345,35 @@ class BucketedPackedAggregate:
 
     def step_streamed(self, streamer: GradBucketStreamer,
                       worker_grads: Array, rng, state=None):
+        from repro.comm.multihost import is_multihost_transport
+
+        if is_multihost_transport(self.transport):
+            raise ValueError(
+                "streamed bucketed taps are in-process only (the streamer's "
+                "key fan is per-local-worker); the batch path ships RCBW "
+                "containers over the tcp star — call the aggregator itself")
         bucket_packets = streamer.finish(worker_grads)
         return self._finish(bucket_packets, rng, state,
                             worker_grads.shape[0])
+
+    def _finish_multihost(self, bucket_packets, rng, state):
+        from repro.comm.aggregate import _serve_round
+        from repro.core.aggregators import AggregateOut
+
+        tp = self.transport
+        if state is None:
+            state = self.init(tp.world, self.dim)
+        payload = pack_bucket_payload(
+            [bucket_packets[b][0].to_bytes()
+             for b in range(self.plan.num_buckets)])
+        dl = self.downlink
+        direction, bits, shift = _serve_round(
+            tp, None, payload, downlink=dl,
+            shift=state.shift if dl is not None else None,
+            key=dl.key(rng) if dl is not None else None, plan=self.plan)
+        if dl is not None:
+            state = state._replace(step=state.step + 1, shift=shift)
+        return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
 
     def _finish(self, bucket_packets, rng, state, m):
         from repro.comm.aggregate import _downlink_round
@@ -325,6 +396,8 @@ class BucketedPackedAggregate:
             tel.trace.complete("comm/decode_mean", t0, codec=self.plan.name,
                                impl="bucketed")
         bits = self.plan.measured_bits(arrived)
+        if tel.enabled:
+            self.plan.record_segments(tel, arrived)
         if self.downlink is not None:
             direction, state, dbits = _downlink_round(
                 self.downlink, direction, state, rng, self.transport, m)
@@ -338,9 +411,11 @@ class BucketedPackedAggregate:
 def bucketed_packed_aggregator(name: str, dim: int, *, bucket_size: int,
                                transport=None, compiled=None, downlink=None,
                                codec_kw=None):
-    """The ``bucket_size=`` branch of `packed_aggregator`."""
+    """The ``bucket_size=`` branch of `packed_aggregator`.  Works on both
+    the in-process transports and the tcp star: a multihost rank packs its
+    per-bucket packets into ONE RCBW container per round, rank 0 unpacks
+    every rank's container and decodes + means per bucket."""
     from repro.comm.aggregate import _make_packed_codec
-    from repro.comm.multihost import is_multihost_transport
     from repro.core.aggregators import Aggregator
 
     if name in ("ef21", "ef21_sgdm", "signsgd_ef", "mlmc_adaptive_topk",
@@ -349,9 +424,6 @@ def bucketed_packed_aggregator(name: str, dim: int, *, bucket_size: int,
             f"bucketed streaming does not support the stateful family "
             f"{name!r} yet — its per-worker state rows are defined over "
             "the whole flat gradient")
-    if is_multihost_transport(transport):
-        raise ValueError("bucketed streaming is in-process only for now; "
-                         "the tcp star ships one flat packet per rank")
     kw = dict(codec_kw or {})
 
     def factory(size):
@@ -369,3 +441,38 @@ def bucketed_packed_aggregator(name: str, dim: int, *, bucket_size: int,
     if downlink is not None:
         return Aggregator(name, ag, init=ag.init, stateful=True)
     return Aggregator(name, ag)
+
+
+def policy_packed_aggregator(resolved, dim: int, *, transport=None,
+                             compiled=None, downlink=None, codec_kw=None,
+                             bucket_size: int | None = None):
+    """The ``policy=`` branch of `packed_aggregator`: each policy segment
+    streams through its own codec, and every worker's per-segment packets
+    ship as ONE RCBW multi-stream container per round (in-process and over
+    the tcp star alike).  ``bucket_size`` composes: segments subdivide into
+    at-most-``bucket_size`` buckets so policy streams still overlap
+    encode with the backward pass."""
+    from repro.comm.aggregate import _make_packed_codec
+    from repro.comm.policy import segment_codec_kw
+    from repro.core.aggregators import Aggregator, STATEFUL_AGGREGATORS
+
+    kw = dict(codec_kw or {})
+    bad = sorted({s.codec for s in resolved.segments
+                  if s.codec in STATEFUL_AGGREGATORS})
+    if bad:
+        raise ValueError(
+            f"policy segments name stateful families {bad}: their "
+            "per-worker CommState rows are defined over the whole flat "
+            "gradient — use a one-segment policy for those")
+    if bucket_size is not None:
+        resolved = resolved.subdivide(bucket_size)
+
+    def factory(seg):
+        return _make_packed_codec(seg.codec, seg.size, compiled,
+                                  segment_codec_kw(kw, seg, dim))
+
+    plan = WirePlan.from_policy(resolved, factory)
+    ag = BucketedPackedAggregate(plan, transport, downlink=downlink)
+    if downlink is not None:
+        return Aggregator("policy", ag, init=ag.init, stateful=True)
+    return Aggregator("policy", ag)

@@ -1,0 +1,298 @@
+"""Per-leaf codec policies — rule-based (leaf path/size) -> codec maps.
+
+Every wire used to compress the WHOLE gradient as one flat f32 vector
+under ONE globally chosen codec.  Real models want heterogeneous
+treatment: embeddings and layernorms dense (tiny, precision-critical),
+the big matmuls under ``mlmc_topk`` (the bias/variance trade-off is
+tensor-dependent — "On Biased Compression for Distributed Learning").
+A `CodecPolicy` is an ordered list of first-match-wins rules mapping a
+pytree leaf's path (fnmatch glob) or flat size (``size<=N`` forms) to a
+codec name plus optional per-segment parameter overrides:
+
+    policy = CodecPolicy.parse({"*embed*": "dense",
+                                "*norm*":  "dense",
+                                "*":       "mlmc_topk"})
+    resolved = policy.resolve(params)        # -> ResolvedPolicy
+
+``resolve`` flattens the tree in `ravel_pytree` leaf order, assigns every
+leaf its codec, and merges ADJACENT leaves with identical assignments
+into contiguous `Segment`\\s of the flat gradient — the named leaf-group
+streams every substrate then encodes independently.  Estimator semantics
+are exactly the bucket plan's: each segment is an independent compression
+of its slice with draw key ``fold_in(worker_key, segment_index)``, so a
+per-segment-unbiased family stays unbiased for the concatenation, and the
+bytes are bitwise identical to a standalone flat codec of the segment's
+size on every wire (abstract == packed == device == tcp — the parity
+battery in ``tests/test_policy.py``).
+
+A single-segment policy (``{"*": codec}``) is the DEGENERATE case:
+`make_aggregator` routes it onto the plain single-codec path, bit-for-bit
+identical to not passing a policy at all (golden fixtures unchanged).
+
+``ResolvedPolicy.hash`` is the canonical fingerprint of (dim, segments,
+codecs, params); the tcp HELLO handshake carries it so ranks running
+different policies fail fast at rendezvous instead of desyncing mid-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import hashlib
+import re
+
+import jax
+
+__all__ = [
+    "CodecPolicy", "PolicyRule", "ResolvedPolicy", "Segment",
+    "POLICY_PRESETS", "leaf_paths", "segment_codec_kw",
+]
+
+#: named presets (append-only: frozen by tests/test_golden_packets.py —
+#: existing entries must never change meaning; add new names instead)
+POLICY_PRESETS: dict[str, dict] = {
+    # small tensors (embeddings rows, norms, biases) ship dense; the big
+    # matmuls carry the MLMC estimator.  The 2048 threshold is the paper
+    # configs' layernorm/bias scale — matmul leaves are orders larger.
+    "dense_small_tensors": {"size<=2048": "dense", "*": "mlmc_topk"},
+    # the path-glob flavour of the same idea, for trees with named leaves
+    "dense_embed_norm": {"*embed*": "dense", "*norm*": "dense",
+                         "*": "mlmc_topk"},
+    # the degenerate one-segment policies, for config symmetry
+    "uniform_mlmc_topk": {"*": "mlmc_topk"},
+    "uniform_dense": {"*": "dense"},
+}
+
+_SIZE_RULE = re.compile(r"^size(<=|>=|<|>|==)(\d+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    """One first-match-wins rule: glob ``pattern`` on the leaf path, or a
+    ``size<=N``-style predicate on the leaf's flat element count."""
+
+    pattern: str
+    codec: str
+    params: tuple = ()          # sorted ((key, value), ...) overrides
+
+    def matches(self, path: str, size: int) -> bool:
+        m = _SIZE_RULE.match(self.pattern)
+        if m:
+            op, n = m.group(1), int(m.group(2))
+            return {"<=": size <= n, ">=": size >= n, "<": size < n,
+                    ">": size > n, "==": size == n}[op]
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous ``[start, stop)`` slice of the flat gradient that one
+    codec owns.  ``name`` labels telemetry and error messages."""
+
+    name: str
+    codec: str
+    start: int
+    stop: int
+    params: tuple = ()
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+
+def _leaf_path(key_path) -> str:
+    """``a/0/w``-style path string for one `tree_flatten_with_path` key."""
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:                                   # pragma: no cover - exotic key
+            parts.append(str(k))
+    return "/".join(parts) or "flat"
+
+
+def leaf_paths(tree) -> list[tuple[str, int]]:
+    """``(path, size)`` per leaf, in `ravel_pytree` (= `tree_flatten`)
+    leaf order — the order every wire's flat vector concatenates."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_leaf_path(kp), int(getattr(leaf, "size", 1) or 1))
+            for kp, leaf in flat]
+
+
+def _freeze_params(params) -> tuple:
+    return tuple(sorted((str(k), params[k]) for k in params or {}))
+
+
+class CodecPolicy:
+    """An ordered rule list; see the module docstring for semantics."""
+
+    def __init__(self, rules):
+        self.rules = tuple(rules)
+        if not self.rules:
+            raise ValueError("CodecPolicy needs at least one rule")
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def parse(cls, spec) -> "CodecPolicy":
+        """Accepts a preset name, a ``pattern=codec,pattern=codec`` string,
+        a ``{pattern: codec | (codec, params)}`` dict (insertion order =
+        match order), a rule sequence, or a `CodecPolicy` (returned as-is).
+        """
+        if isinstance(spec, CodecPolicy):
+            return spec
+        if isinstance(spec, str):
+            if spec in POLICY_PRESETS:
+                return cls.parse(POLICY_PRESETS[spec])
+            rules = []
+            for part in spec.split(","):
+                part = part.strip()
+                if not part:
+                    continue
+                pattern, sep, codec = part.rpartition("=")
+                if not sep or not pattern or not codec:
+                    raise ValueError(
+                        f"bad policy rule {part!r}: want 'pattern=codec' "
+                        f"(or a preset name from {sorted(POLICY_PRESETS)})")
+                rules.append(PolicyRule(pattern.strip(), codec.strip()))
+            return cls(rules)
+        if isinstance(spec, dict):
+            rules = []
+            for pattern, target in spec.items():
+                if isinstance(target, str):
+                    rules.append(PolicyRule(pattern, target))
+                else:
+                    codec, params = target
+                    rules.append(PolicyRule(pattern, codec,
+                                            _freeze_params(params)))
+            return cls(rules)
+        return cls(spec)
+
+    # -- matching -----------------------------------------------------------
+
+    def match(self, path: str, size: int) -> PolicyRule:
+        for rule in self.rules:
+            if rule.matches(path, size):
+                return rule
+        raise ValueError(
+            f"policy has no rule matching leaf {path!r} (size {size}); "
+            "add a catch-all '*' rule")
+
+    def leaf_specs(self, tree) -> list[tuple[str, str, dict]]:
+        """Per-leaf ``(path, codec, params)`` in flat leaf order — the
+        mesh wire's per-leaf method map."""
+        return [(path, r.codec, dict(r.params))
+                for path, size in leaf_paths(tree)
+                for r in (self.match(path, size),)]
+
+    # -- resolution ---------------------------------------------------------
+
+    def resolve(self, tree) -> "ResolvedPolicy":
+        """Assign every leaf, then merge ADJACENT identical assignments
+        into contiguous flat-gradient segments."""
+        segments: list[Segment] = []
+        off = 0
+        for path, size in leaf_paths(tree):
+            rule = self.match(path, size)
+            prev = segments[-1] if segments else None
+            if prev is not None and (prev.codec, prev.params) == \
+                    (rule.codec, rule.params):
+                segments[-1] = dataclasses.replace(prev, stop=off + size)
+            else:
+                segments.append(Segment(f"{rule.codec}@{off}", rule.codec,
+                                        off, off + size, rule.params))
+            off += size
+        return ResolvedPolicy(off, tuple(segments))
+
+    def resolve_flat(self, dim: int) -> "ResolvedPolicy":
+        """Resolve against an anonymous flat ``(dim,)`` vector (path
+        ``"flat"``) — benches and wire-level tests without a real tree."""
+        import numpy as np
+
+        return self.resolve(np.zeros((dim,), np.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedPolicy:
+    """A policy applied to one concrete tree: named (segment, codec)
+    streams covering ``[0, dim)`` exactly."""
+
+    dim: int
+    segments: tuple
+
+    def __post_init__(self):
+        off = 0
+        for seg in self.segments:
+            if seg.start != off or seg.stop <= seg.start:
+                raise ValueError(f"segments must tile [0, dim): {seg}")
+            off = seg.stop
+        if off != self.dim:
+            raise ValueError(
+                f"segments cover [0, {off}) but dim is {self.dim}")
+
+    @property
+    def is_uniform(self) -> bool:
+        """True when this is the degenerate one-codec policy — routed
+        onto the plain single-codec path, bit-for-bit unchanged."""
+        return len(self.segments) == 1
+
+    @property
+    def codecs(self) -> tuple:
+        return tuple(dict.fromkeys(s.codec for s in self.segments))
+
+    def canonical(self) -> str:
+        parts = [f"dim={self.dim}"]
+        for s in self.segments:
+            kv = ";".join(f"{k}={v!r}" for k, v in s.params)
+            parts.append(f"{s.start}:{s.stop}:{s.codec}:{kv}")
+        return "|".join(parts)
+
+    @property
+    def hash(self) -> str:
+        """Canonical fingerprint for the tcp HELLO handshake: ranks with
+        differing policies must fail fast at rendezvous."""
+        return hashlib.sha256(self.canonical().encode()).hexdigest()[:16]
+
+    def subdivide(self, bucket_size: int) -> "ResolvedPolicy":
+        """Split every segment into buckets of at most ``bucket_size`` —
+        policy streams composed with the comm/compute-overlap plan."""
+        from repro.comm.plan import bucket_ranges
+
+        out = []
+        for seg in self.segments:
+            for lo, hi in bucket_ranges(seg.size, bucket_size):
+                out.append(dataclasses.replace(
+                    seg, name=f"{seg.name}+{lo}", start=seg.start + lo,
+                    stop=seg.start + hi))
+        return ResolvedPolicy(self.dim, tuple(out))
+
+
+def segment_codec_kw(base_kw: dict, seg: Segment, dim: int) -> dict:
+    """The codec kwargs for one segment: the aggregator-level defaults,
+    overridden by the segment's rule params, with the dim-derived MLMC
+    segment length ``s`` rescaled to the segment (the same rule as the
+    bucket plan: a flat-sized ``s`` would ship the full gradient's budget
+    per segment)."""
+    kw = dict(base_kw)
+    if kw.get("s", 0) > 1:
+        kw["s"] = max(1, int(round(kw["s"] * seg.size / dim)))
+    kw.update(dict(seg.params))
+    return kw
+
+
+def as_resolved(policy, dim: int):
+    """Normalize a user-supplied policy argument (None | preset name |
+    spec string | dict | `CodecPolicy` | `ResolvedPolicy`) to a
+    `ResolvedPolicy` over a flat ``dim``-vector, or None."""
+    if policy is None:
+        return None
+    if isinstance(policy, ResolvedPolicy):
+        if policy.dim != dim:
+            raise ValueError(
+                f"policy resolved for dim {policy.dim}, aggregator dim {dim}")
+        return policy
+    return CodecPolicy.parse(policy).resolve_flat(dim)

@@ -121,6 +121,174 @@ def _per_worker(fn):
     return agg
 
 
+def _stateless_fn(name: str, dim: int, *, k_fraction: float = 0.01,
+                  s: int = 1, rtn_level: int = 4, qsgd_levels: int = 2,
+                  fixed_levels: int = 24):
+    """The per-worker kernel ``f(v, key) -> (estimate, bits)`` of one
+    STATELESS registry family, or None for the stateful families.
+
+    This is the single source of truth shared by the plain abstract
+    aggregator (`_per_worker` lifts it over the worker axis) and the
+    per-segment policy aggregator (which vmaps it per segment with the
+    segment-folded keys) — so a policy segment's math is definitionally
+    identical to a standalone flat aggregator of the segment's size."""
+    k = max(1, int(round(k_fraction * dim)))
+
+    if name == "dense":
+        def f(v, key):
+            del key
+            return v, jnp.asarray(bitcost.dense_bits(dim), jnp.float32)
+        return f
+
+    if name == "topk":  # biased, no correction (may diverge — paper §2.2)
+        comp = TopK(k)
+        def f(v, key):
+            del key
+            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
+        return f
+
+    if name == "randk":
+        comp = RandK(k)
+        def f(v, key):
+            return comp.compress(v, rng=key), jnp.asarray(comp.bits(dim),
+                                                          jnp.float32)
+        return f
+
+    if name == "qsgd":
+        comp = QSGD(qsgd_levels)
+        def f(v, key):
+            return comp.compress(v, rng=key), jnp.asarray(comp.bits(dim),
+                                                          jnp.float32)
+        return f
+
+    if name == "rtn":
+        comp = RTNCompressor(rtn_level)
+        def f(v, key):
+            del key
+            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
+        return f
+
+    if name == "fixed2":  # biased 2-bit fixed-point quantization (Fig. 3)
+        comp = FixedPointCompressor(2)
+        def f(v, key):
+            del key
+            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
+        return f
+
+    if name in ("mlmc_topk", "mlmc_stopk", "mlmc_topk_static"):
+        comp = STopKMultilevel(d=dim, s=mlmc_topk_segment(name, k, s))
+        adaptive = name != "mlmc_topk_static"
+        def f(v, key):
+            est = mlmc_estimate(comp, v, key, adaptive=adaptive)
+            return est.estimate, jnp.asarray(
+                bitcost.topk_mlmc_bits(dim, comp.s), jnp.float32)
+        return f
+
+    if name == "mlmc_fixed":
+        comp = FixedPointMultilevel(num_bits=fixed_levels)
+        def f(v, key):
+            est = mlmc_estimate(comp, v, key, adaptive=False)  # Lemma 3.3 p
+            return est.estimate, jnp.asarray(
+                bitcost.fixed_point_mlmc_bits(dim, comp.num_levels),
+                jnp.float32)
+        return f
+
+    if name == "mlmc_float":
+        comp = FloatingPointMultilevel()
+        def f(v, key):
+            est = mlmc_estimate(comp, v, key, adaptive=False)  # Lemma B.1 p
+            return est.estimate, jnp.asarray(
+                bitcost.floating_point_mlmc_bits(dim, comp.num_levels),
+                jnp.float32)
+        return f
+
+    if name == "mlmc_rtn":
+        comp = RTNMultilevel()
+        def f(v, key):
+            est = mlmc_estimate(comp, v, key, adaptive=True)   # Alg. 3
+            # honest per-draw wire cost ~(l+2) bits/entry, not the former
+            # 2d fixed-point analogy (see bits.rtn_mlmc_bits)
+            return est.estimate, jnp.asarray(
+                bitcost.rtn_mlmc_bits(dim, est.level, comp.num_levels),
+                jnp.float32)
+        return f
+
+    if name == "natural":
+        from repro.core.natural import NaturalCompression
+
+        comp = NaturalCompression()
+        def f(v, key):
+            return comp.compress(v, rng=key), jnp.asarray(comp.bits(dim),
+                                                          jnp.float32)
+        return f
+
+    if name == "signsgd":  # biased, no correction (paper §1.1 baseline)
+        from repro.core.natural import SignSGD
+
+        comp = SignSGD()
+        def f(v, key):
+            del key
+            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
+        return f
+
+    if name in STATEFUL_AGGREGATORS:
+        return None
+    raise ValueError(f"unknown aggregator {name!r}")
+
+
+#: which registry families consume each CODEC-SPECIFIC kwarg.  Passing one
+#: of these explicitly to a family that ignores it raises TypeError (the
+#: same swallowed-kwargs class as the `make_transport` fix): a run
+#: configured with e.g. ``qsgd_levels=8`` under ``rtn`` would otherwise
+#: silently benchmark the default.  ``k_fraction`` and ``s`` are the
+#: universal budget knobs (harmlessly ignored by the non-sparsifying
+#: families, passed blanket-style by every cross-codec battery) and stay
+#: lenient by design.
+CODEC_KW_USERS = {
+    "rtn_level": ("rtn",),
+    "qsgd_levels": ("qsgd",),
+    "fixed_levels": ("mlmc_fixed",),
+    "momentum_beta": ("ef21_sgdm",),
+    "ema_rho": ("mlmc_adaptive_topk", "mlmc_adaptive_stopk",
+                "mlmc_adaptive_rtn"),
+}
+
+#: defaults for the checked kwargs (make_aggregator's signature carries
+#: None sentinels so explicit-vs-default is detectable)
+_CODEC_KW_DEFAULTS = {
+    "rtn_level": 4, "qsgd_levels": 2, "fixed_levels": 24,
+    "momentum_beta": 0.1, "ema_rho": 0.25,
+}
+
+
+def filter_codec_kw(kw: dict, *names: str) -> dict:
+    """Drop the codec-specific entries of ``kw`` that none of ``names``
+    consume (None values are dropped too) — callers that configure one
+    kwarg set for heterogeneous codec names (the Trainer, benches) use
+    this to stay on the right side of the explicit-kwargs check."""
+    used = set()
+    for n in names:
+        if n is None:
+            continue
+        used.update(key for key, users in CODEC_KW_USERS.items()
+                    if n in users)
+    return {key: v for key, v in kw.items() if v is not None and
+            (key not in CODEC_KW_USERS or key in used)}
+
+
+def _check_codec_kw(explicit: dict, names) -> None:
+    consumers = [n for n in names if n]
+    offending = sorted(
+        key for key, v in explicit.items()
+        if v is not None and not any(n in CODEC_KW_USERS[key]
+                                     for n in consumers))
+    if offending:
+        raise TypeError(
+            f"make_aggregator got codec-specific keyword arguments "
+            f"{offending} that none of {sorted(set(consumers))} consume "
+            f"(see CODEC_KW_USERS); they would be silently ignored")
+
+
 def _adaptive_mlmc_aggregator(name: str, dim: int, comp, book,
                               ema_rho: float) -> Aggregator:
     """The stateful Alg.-3 family: per-worker EMA residual-norm ladders in
@@ -161,17 +329,18 @@ def make_aggregator(
     *,
     k_fraction: float = 0.01,
     s: int = 1,
-    rtn_level: int = 4,
-    qsgd_levels: int = 2,
-    momentum_beta: float = 0.1,
-    fixed_levels: int = 24,
-    ema_rho: float = 0.25,
+    rtn_level: int | None = None,
+    qsgd_levels: int | None = None,
+    momentum_beta: float | None = None,
+    fixed_levels: int | None = None,
+    ema_rho: float | None = None,
     wire: str = "abstract",
     transport=None,
     compiled: bool | None = None,
     downlink: str | None = None,
     downlink_alpha: float = 0.5,
     bucket_size: int | None = None,
+    policy=None,
 ) -> Aggregator:
     """Build an aggregator for gradients of flat dimension ``dim``.
 
@@ -213,7 +382,77 @@ def make_aggregator(
     the EF21 family).  Byte-identical packets either way; the explicit
     flag exists for verification and A-B wire benchmarks
     (`benchmarks/bench_wire.py`).
+
+    ``policy`` (any wire) is a per-leaf codec policy — a preset name, a
+    ``pattern=codec`` spec string, a rule dict, or a `CodecPolicy` /
+    `ResolvedPolicy` (`repro.comm.policy`).  A one-segment policy routes
+    onto the plain single-codec path above (``name`` is overridden by the
+    policy's codec — bit-for-bit the no-policy wire); a multi-segment
+    policy aggregates independent (segment, codec) streams with draw keys
+    ``fold_in(worker_key, segment_index)``, identical across the
+    abstract/packed/device/tcp substrates.  Policy segments support the
+    stateless families (the stateful EF21/adaptive state rows are defined
+    over the whole flat gradient — use a one-segment policy for those).
+
+    Explicitly passing a codec-specific kwarg that neither ``name`` nor
+    the downlink/policy codecs consume raises TypeError (see
+    `CODEC_KW_USERS`); ``filter_codec_kw`` pre-filters heterogeneous
+    kwarg sets.
     """
+    explicit = dict(rtn_level=rtn_level, qsgd_levels=qsgd_levels,
+                    momentum_beta=momentum_beta, fixed_levels=fixed_levels,
+                    ema_rho=ema_rho)
+    from repro.comm.policy import as_resolved, segment_codec_kw
+
+    resolved = as_resolved(policy, dim)
+    policy_codecs = () if resolved is None else resolved.codecs
+    _check_codec_kw(explicit, (name, downlink, *policy_codecs)
+                    if resolved is None or not resolved.is_uniform
+                    else (resolved.segments[0].codec, downlink))
+    if resolved is not None and resolved.is_uniform:
+        # the degenerate one-segment policy IS the single-codec path: pass
+        # the ORIGINAL (possibly-sentinel) kwargs through so the recursive
+        # call's explicit-kwargs check sees exactly what the caller wrote,
+        # overridden by the segment's rule params
+        seg = resolved.segments[0]
+        merged = dict(k_fraction=k_fraction, s=s)
+        merged.update(explicit)
+        merged.update(dict(seg.params))
+        return make_aggregator(
+            seg.codec, dim, wire=wire, transport=transport,
+            compiled=compiled, downlink=downlink,
+            downlink_alpha=downlink_alpha, bucket_size=bucket_size,
+            **merged)
+
+    rtn_level, qsgd_levels, momentum_beta, fixed_levels, ema_rho = (
+        _CODEC_KW_DEFAULTS[key] if explicit[key] is None else explicit[key]
+        for key in ("rtn_level", "qsgd_levels", "momentum_beta",
+                    "fixed_levels", "ema_rho"))
+
+    if resolved is not None:
+        base_kw = dict(k_fraction=k_fraction, s=s, rtn_level=rtn_level,
+                       qsgd_levels=qsgd_levels, fixed_levels=fixed_levels)
+        if wire == "packed":
+            from repro.comm import packed_aggregator
+
+            return packed_aggregator(
+                name, dim, transport=transport, compiled=compiled,
+                downlink=downlink, downlink_alpha=downlink_alpha,
+                bucket_size=bucket_size, policy=resolved, **base_kw)
+        if wire == "device":
+            from repro.comm.device_wire import policy_device_aggregator
+
+            if bucket_size is not None:
+                raise ValueError("bucket_size is a packed-wire option")
+            return policy_device_aggregator(
+                resolved, dim, downlink=downlink,
+                downlink_alpha=downlink_alpha, **base_kw)
+        if wire != "abstract":
+            raise ValueError(f"unknown wire mode {wire!r}")
+        if downlink is not None or bucket_size is not None:
+            raise ValueError("downlink/bucket_size require a real wire")
+        return _policy_abstract_aggregator(resolved, dim, base_kw)
+
     if wire == "packed":
         from repro.comm import packed_aggregator
 
@@ -245,79 +484,10 @@ def make_aggregator(
                          "has no server→worker payload to compress")
     k = max(1, int(round(k_fraction * dim)))
 
-    if name == "dense":
-        def f(v, key):
-            del key
-            return v, jnp.asarray(bitcost.dense_bits(dim), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "topk":  # biased, no correction (may diverge — paper §2.2)
-        comp = TopK(k)
-        def f(v, key):
-            del key
-            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "randk":
-        comp = RandK(k)
-        def f(v, key):
-            return comp.compress(v, rng=key), jnp.asarray(comp.bits(dim), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "qsgd":
-        comp = QSGD(qsgd_levels)
-        def f(v, key):
-            return comp.compress(v, rng=key), jnp.asarray(comp.bits(dim), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "rtn":
-        comp = RTNCompressor(rtn_level)
-        def f(v, key):
-            del key
-            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "fixed2":  # biased 2-bit fixed-point quantization (Fig. 3)
-        comp = FixedPointCompressor(2)
-        def f(v, key):
-            del key
-            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name in ("mlmc_topk", "mlmc_stopk", "mlmc_topk_static"):
-        comp = STopKMultilevel(d=dim, s=mlmc_topk_segment(name, k, s))
-        adaptive = name != "mlmc_topk_static"
-        def f(v, key):
-            est = mlmc_estimate(comp, v, key, adaptive=adaptive)
-            return est.estimate, jnp.asarray(
-                bitcost.topk_mlmc_bits(dim, comp.s), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "mlmc_fixed":
-        comp = FixedPointMultilevel(num_bits=fixed_levels)
-        def f(v, key):
-            est = mlmc_estimate(comp, v, key, adaptive=False)  # Lemma 3.3 p
-            return est.estimate, jnp.asarray(
-                bitcost.fixed_point_mlmc_bits(dim, comp.num_levels), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "mlmc_float":
-        comp = FloatingPointMultilevel()
-        def f(v, key):
-            est = mlmc_estimate(comp, v, key, adaptive=False)  # Lemma B.1 p
-            return est.estimate, jnp.asarray(
-                bitcost.floating_point_mlmc_bits(dim, comp.num_levels), jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "mlmc_rtn":
-        comp = RTNMultilevel()
-        def f(v, key):
-            est = mlmc_estimate(comp, v, key, adaptive=True)   # Alg. 3
-            # honest per-draw wire cost ~(l+2) bits/entry, not the former
-            # 2d fixed-point analogy (see bits.rtn_mlmc_bits)
-            return est.estimate, jnp.asarray(
-                bitcost.rtn_mlmc_bits(dim, est.level, comp.num_levels),
-                jnp.float32)
+    f = _stateless_fn(name, dim, k_fraction=k_fraction, s=s,
+                      rtn_level=rtn_level, qsgd_levels=qsgd_levels,
+                      fixed_levels=fixed_levels)
+    if f is not None:
         return Aggregator(name, _per_worker(f))
 
     if name in ("mlmc_adaptive_topk", "mlmc_adaptive_stopk"):
@@ -332,24 +502,6 @@ def make_aggregator(
         def book(est):
             return bitcost.rtn_mlmc_bits(dim, est.level, comp.num_levels)
         return _adaptive_mlmc_aggregator(name, dim, comp, book, ema_rho)
-
-    if name == "natural":
-        from repro.core.natural import NaturalCompression
-
-        comp = NaturalCompression()
-        def f(v, key):
-            return comp.compress(v, rng=key), jnp.asarray(comp.bits(dim),
-                                                          jnp.float32)
-        return Aggregator(name, _per_worker(f))
-
-    if name == "signsgd":  # biased, no correction (paper §1.1 baseline)
-        from repro.core.natural import SignSGD
-
-        comp = SignSGD()
-        def f(v, key):
-            del key
-            return comp.compress(v), jnp.asarray(comp.bits(dim), jnp.float32)
-        return Aggregator(name, _per_worker(f))
 
     if name in ("ef21", "ef21_sgdm", "signsgd_ef"):
         if name == "signsgd_ef":   # sign compression + EF21 correction
@@ -370,6 +522,47 @@ def make_aggregator(
         return Aggregator(name, agg, init=ef.init, stateful=True)
 
     raise ValueError(f"unknown aggregator {name!r}")
+
+
+def _policy_abstract_aggregator(resolved, dim: int, base_kw: dict) -> Aggregator:
+    """The abstract-wire realization of a multi-segment policy: the
+    per-leaf reference every real wire must match bitwise.
+
+    Per segment ``b``, every worker's slice is compressed by the segment's
+    `_stateless_fn` kernel under the draw key ``fold_in(worker_key, b)``
+    (`WirePlan.bucket_key` — the identical derivation the packed, device,
+    and tcp substrates replay), means are concatenated, bits summed.
+    Fully jit/vmap-able; stateless (per-segment-unbiased families stay
+    unbiased for the concatenation, per the bucket-plan argument)."""
+    from repro.comm.policy import segment_codec_kw
+
+    fns = []
+    for seg in resolved.segments:
+        f = _stateless_fn(seg.codec, seg.size,
+                          **segment_codec_kw(base_kw, seg, dim))
+        if f is None:
+            raise ValueError(
+                f"policy segment {seg.name!r}: the stateful family "
+                f"{seg.codec!r} is not supported per-segment — its state "
+                "rows are defined over the whole flat gradient (use a "
+                "one-segment policy)")
+        fns.append(f)
+
+    def agg(worker_grads: Array, rng: PRNGKey, state) -> AggregateOut:
+        if state is None:
+            state = empty_comm_state()
+        m = worker_grads.shape[0]
+        keys = jax.random.split(rng, m)
+        parts, total = [], jnp.float32(0.0)
+        for b, seg in enumerate(resolved.segments):
+            bkeys = jax.vmap(lambda kk, _b=b: jax.random.fold_in(kk, _b))(keys)
+            outs, bb = jax.vmap(fns[b])(
+                worker_grads[:, seg.start:seg.stop], bkeys)
+            parts.append(jnp.mean(outs, axis=0))
+            total = total + jnp.sum(bb)
+        return AggregateOut(jnp.concatenate(parts), state, total)
+
+    return Aggregator("policy", agg)
 
 
 #: append-only (golden-packet fixture keys fold in the registry position)

@@ -78,8 +78,20 @@ def main() -> None:
                          "update h <- h + alpha * decode(delta)")
     ap.add_argument("--bucket-size", type=int, default=0,
                     help="carve the packed wire into fixed-shape buckets "
-                         "of this many params, encoded during backward "
-                         "(0 = one flat packet; loopback packed only)")
+                         "of this many params (0 = one flat packet).  "
+                         "In-process the buckets encode during backward; "
+                         "over tcp they ship batched as one RCBW container "
+                         "per rank")
+    ap.add_argument("--policy", default="",
+                    help="per-leaf codec policy: a preset name "
+                         "(dense_small_tensors, dense_embed_norm, ...) or "
+                         "a 'pattern=codec,pattern=codec' rule string "
+                         "matched against param leaf paths/sizes "
+                         "(repro.comm.policy).  Splits the gradient into "
+                         "per-segment codec streams on every wire; "
+                         "supersedes --method.  Over tcp the resolved "
+                         "policy hash rides the HELLO handshake so "
+                         "mismatched ranks fail fast at rendezvous")
     ap.add_argument("--smoke", action="store_true",
                     help="reduce the architecture to smoke size")
     ap.add_argument("--mesh-shape", default="1,2,2",
@@ -129,6 +141,13 @@ def main() -> None:
         def loss_fn(p, batch):
             return model.loss(p, batch, remat=False)[0]
 
+        policy = None
+        if args.policy:
+            from repro.comm.policy import CodecPolicy
+
+            # resolve HERE (against the real param tree) so the tcp HELLO
+            # can carry the fingerprint before the Trainer exists
+            policy = CodecPolicy.parse(args.policy).resolve(params)
         transport = None
         rank = 0
         if args.wire == "packed":
@@ -138,7 +157,8 @@ def main() -> None:
                 transport = make_transport(
                     "tcp", rank=rank, world=args.workers,
                     coordinator=args.coordinator,
-                    timeout=args.rendezvous_timeout)
+                    timeout=args.rendezvous_timeout,
+                    policy_hash=policy.hash if policy else None)
             else:
                 transport = make_transport(args.transport)
         elif args.transport != "loopback":
@@ -158,11 +178,13 @@ def main() -> None:
                           downlink=args.downlink or None,
                           downlink_alpha=args.downlink_alpha,
                           bucket_size=args.bucket_size or None,
-                          telemetry=telemetry)
+                          policy=policy, telemetry=telemetry)
         who = (f" rank={rank}/{args.workers}"
                if transport is not None and args.transport == "tcp" else "")
+        pol = (f" policy={args.policy}({len(policy.segments)} segs)"
+               if policy is not None else "")
         print(f"sim: {cfg.name} M={args.workers} method={args.method} "
-              f"wire={args.wire}{who} dim={trainer.dim:,}")
+              f"wire={args.wire}{who}{pol} dim={trainer.dim:,}")
         t0 = time.time()
         hist = trainer.fit(data, steps=args.steps, log_every=10)
         print(f"done in {time.time()-t0:.1f}s; final loss "
@@ -240,7 +262,8 @@ def main() -> None:
     fn, _, _ = step_mod.make_train_step(model, mesh, opt, shape=shape,
                                         method=args.method,
                                         k_fraction=args.k_fraction,
-                                        wire=args.wire, ema_rho=args.ema_rho)
+                                        wire=args.wire, ema_rho=args.ema_rho,
+                                        policy=args.policy or None)
     comm_state, _ = step_mod.init_mesh_comm_state(
         model, mesh, method=args.method, k_fraction=args.k_fraction)
     params = model.init(jax.random.PRNGKey(0))

@@ -281,16 +281,77 @@ def _codec_allreduce(flat: Array, ctx: ShardCtx, rng: Array, codec,
     return jnp.mean(ests, axis=0), bits
 
 
+def ef21_topk_allreduce(flat: Array, ctx: ShardCtx, mirror: Array,
+                        server: Array, *, s: int, wire: str = "abstract"
+                        ) -> tuple[Array, Array, Array, Array]:
+    """EF21 (Richtárik et al., 2021) as a mesh collective: each data shard
+    keeps a dense mirror ``g_i`` of its own compressed history plus a
+    replica of the server aggregate ``g = mean_i g_i``, Top-k-compresses
+    the innovation ``grad_i - g_i``, and gathers the sparse innovations
+    over the data axes.  Every shard applies the identical gathered mean
+    to its server replica, so the replicas stay bitwise in sync without a
+    dense collective — the mesh realization of the trainer's
+    ``CommState.g_workers`` / ``g_server``, threaded through the train
+    step exactly the way the adaptive ladder rides (see
+    `repro.train.step.init_mesh_comm_state`).
+
+    The mirror advances by the DECODED innovation — what actually crossed
+    the wire — so the EF21 contraction holds on the lossy ``"device"``
+    substrate (bf16-packed values) just as on the raw f32 gather.
+
+    Returns ``(direction, bits, new_mirror, new_server)``."""
+    d = flat.shape[0]
+    mirror_shape, server_shape = mirror.shape, server.shape
+    mirror = mirror.reshape(d).astype(flat.dtype)
+    server = server.reshape(d).astype(flat.dtype)
+
+    u = flat - mirror
+    _, idx = lax.top_k(jnp.abs(u), s)
+    vals = u[idx]
+
+    if wire == "device":
+        from repro.comm.device_wire import (pack_topk_segment,
+                                            topk_segment_words,
+                                            unpack_topk_segment)
+
+        words = pack_topk_segment(vals, idx, d, 16)
+        g_words = ctx.gather_data_stack(words)                # (M, W) uint32
+        g_vals, g_idx = jax.vmap(
+            lambda w: unpack_topk_segment(w, d, s, 16))(g_words)
+        g_vals, g_idx = g_vals.reshape(-1), g_idx.reshape(-1)
+        # the mirror must track the server's view: use the decoded values
+        own_vals, own_idx = unpack_topk_segment(words, d, s, 16)
+        bits = jnp.asarray(
+            ctx.dp_total * 32.0 * topk_segment_words(d, s, 16), jnp.float32)
+    else:
+        g_vals = ctx.gather_data_stack(vals).reshape(-1)
+        g_idx = ctx.gather_data_stack(idx).reshape(-1)
+        own_vals, own_idx = vals, idx
+        bits = jnp.asarray(ctx.dp_total * bitcost.ef21_bits(d, s),
+                           jnp.float32)
+
+    mean_c = jnp.zeros((d,), flat.dtype).at[g_idx].add(
+        g_vals.astype(flat.dtype)) / ctx.dp_total
+    new_mirror = mirror.at[own_idx].add(own_vals.astype(flat.dtype))
+    new_server = server + mean_c
+    return (new_server, bits, new_mirror.reshape(mirror_shape),
+            new_server.reshape(server_shape))
+
+
 AGG_METHODS = ("dense", "mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd",
-               "mlmc_adaptive_topk")
+               "mlmc_adaptive_topk", "ef21")
 
 #: methods with a `wire="device"` packed-collective branch
 DEVICE_METHODS = ("mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd",
-                  "mlmc_adaptive_topk")
+                  "mlmc_adaptive_topk", "ef21")
 
 #: methods whose mesh collective threads per-shard comm state (see
 #: `repro.train.step.init_mesh_comm_state` for the pytree layout)
-STATEFUL_MESH_METHODS = ("mlmc_adaptive_topk",)
+STATEFUL_MESH_METHODS = ("mlmc_adaptive_topk", "ef21")
+
+#: the error-feedback subset: per-leaf state is (dense mirror, server
+#: replica) instead of the EMA residual-norm ladder
+EF_MESH_METHODS = ("ef21",)
 
 
 def compressed_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
@@ -311,7 +372,7 @@ def compressed_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
     if method in STATEFUL_MESH_METHODS:
         raise ValueError(
             f"{method!r} threads per-shard comm state — call "
-            "stateful_allreduce(flat, ctx, rng, method, ladder, step, ...) "
+            "stateful_allreduce / ef21_topk_allreduce "
             "(repro.train.step.make_train_step wires it up)")
     if method == "mlmc_topk":
         s = max(min_segment, int(round(k_fraction * flat.shape[0])))
@@ -341,4 +402,8 @@ def stateful_allreduce(flat: Array, ctx: ShardCtx, rng: Array, method: str,
         s = adaptive_segment_len(flat.shape[0], k_fraction, min_segment)
         return mlmc_adaptive_topk_allreduce(flat, ctx, rng, ladder, step,
                                             s=s, ema_rho=ema_rho, wire=wire)
+    if method in EF_MESH_METHODS:
+        raise ValueError(
+            f"{method!r} threads (mirror, server) state, not a ladder — "
+            "call ef21_topk_allreduce(flat, ctx, mirror, server, ...)")
     raise ValueError(f"unknown stateful aggregation method {method!r}")

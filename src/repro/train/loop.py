@@ -27,7 +27,11 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.core.aggregators import Aggregator, make_aggregator
+from repro.core.aggregators import (
+    Aggregator,
+    filter_codec_kw,
+    make_aggregator,
+)
 from repro.core.types import CommState
 from repro.obs import trace as obs
 from repro.optim.optimizers import Optimizer, sgd
@@ -70,12 +74,21 @@ class Trainer:
         the server→worker direction (DIANA-style shift compression; see
         `repro.comm.aggregate.Downlink`).  None keeps the raw f32
         broadcast.  downlink_alpha is the shift learning rate.
-      bucket_size: packed wire, loopback only — carve the flat gradient
-        into fixed-shape buckets (`repro.comm.plan.WirePlan`) and encode
-        each bucket DURING the backward pass the moment its last param
-        leaf's gradient lands (`repro.train.step.grad_tap`), overlapping
-        encode/serialize with the remaining compute.  None keeps the
+      bucket_size: packed wire — carve the flat gradient into fixed-shape
+        buckets (`repro.comm.plan.WirePlan`).  In-process, each bucket is
+        encoded DURING the backward pass the moment its last param leaf's
+        gradient lands (`repro.train.step.grad_tap`), overlapping
+        encode/serialize with the remaining compute; on a multihost
+        transport the buckets ship batched as one RCBW container per rank
+        (the backward-overlap taps stay in-process).  None keeps the
         one-flat-packet fast path.
+      policy: a per-leaf codec policy — a preset name, a
+        ``pattern=codec`` spec string, a rule dict, a `CodecPolicy`, or a
+        pre-resolved `ResolvedPolicy` (`repro.comm.policy`).  Resolved
+        against the PARAMS pytree (path globs see real leaf names), it
+        splits the flat gradient into named (segment, codec) streams that
+        every wire encodes independently; ``method`` is superseded.  A
+        one-segment policy is bit-for-bit the plain single-codec path.
       telemetry: a `repro.obs.Telemetry` bundle to record per-step spans,
         wire metrics, and MLMC estimator telemetry into.  Installed
         process-wide (`repro.obs.install`) so the comm stack's
@@ -92,7 +105,7 @@ class Trainer:
                  wire: str = "abstract", transport=None,
                  wire_compiled: bool | None = None,
                  downlink: str | None = None, downlink_alpha: float = 0.5,
-                 bucket_size: int | None = None,
+                 bucket_size: int | None = None, policy=None,
                  telemetry: obs.Telemetry | None = None):
         if telemetry is not None:
             obs.install(telemetry)
@@ -104,14 +117,28 @@ class Trainer:
         self.optimizer = optimizer or sgd(0.05)
         self.wire = wire
         self.bucket_size = bucket_size
+        self.policy = None
+        if policy is not None:
+            from repro.comm.policy import CodecPolicy, ResolvedPolicy
+
+            # resolve against the REAL param tree so path globs see the
+            # leaf names the user wrote rules for
+            self.policy = (policy if isinstance(policy, ResolvedPolicy)
+                           else CodecPolicy.parse(policy).resolve(params))
+        # one blanket kwarg set serves heterogeneous codec names: keep only
+        # the entries some selected codec consumes (make_aggregator raises
+        # on explicitly-passed kwargs its codec would silently ignore)
+        consumers = ((method,) if self.policy is None
+                     else self.policy.codecs) + (downlink,)
+        codec_kw = filter_codec_kw(
+            dict(momentum_beta=momentum_beta, qsgd_levels=qsgd_levels,
+                 rtn_level=rtn_level, ema_rho=ema_rho), *consumers)
         self.agg: Aggregator = make_aggregator(
             method, self.dim, k_fraction=k_fraction,
             s=s or max(1, int(round(k_fraction * self.dim))),
-            momentum_beta=momentum_beta, qsgd_levels=qsgd_levels,
-            rtn_level=rtn_level, ema_rho=ema_rho, wire=wire,
-            transport=transport, compiled=wire_compiled,
+            wire=wire, transport=transport, compiled=wire_compiled,
             downlink=downlink, downlink_alpha=downlink_alpha,
-            bucket_size=bucket_size)
+            bucket_size=bucket_size, policy=self.policy, **codec_kw)
         self.opt_state = self.optimizer.init(self.flat_params)
         #: first-class aggregator state — empty for stateless methods,
         #: threaded through every step and checkpointed with params
@@ -124,9 +151,12 @@ class Trainer:
                 f"num_workers={self.m}; pass the GLOBAL worker count (every "
                 "rank sees the same (M, b, ...) batch stream and computes "
                 "its own shard)")
-        if wire == "packed" and bucket_size is not None:
+        if wire == "packed" and bucket_size is not None and self.rank is None:
+            # in-process bucketed wire: backward-overlap streaming taps
             self._step = self._build_bucketed_step()
         elif wire == "packed":
+            # multihost bucketed runs ship batched RCBW containers through
+            # the plain packed step (the streamed taps are in-process only)
             self._step = self._build_packed_step()
         else:
             self._step = self._build_step()

@@ -31,9 +31,12 @@ from repro.models.ssm import SSDCache
 from repro.optim.optimizers import Optimizer
 from repro.sharding import shard_map
 from repro.sharding.collectives import (
+    EF_MESH_METHODS,
     STATEFUL_MESH_METHODS,
     adaptive_ladder_len,
+    adaptive_segment_len,
     compressed_allreduce,
+    ef21_topk_allreduce,
     stateful_allreduce,
 )
 from repro.sharding.ctx import ShardCtx
@@ -119,15 +122,23 @@ def model_param_specs(model: Model, ctx: ShardCtx) -> PyTree:
 def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
                         method: str, k_fraction: float,
                         wire: str = "abstract", comm: PyTree | None = None,
-                        ema_rho: float = 0.25):
+                        ema_rho: float = 0.25,
+                        leaf_methods: list | None = None):
     """Per-leaf compressed mean over the data axes.
 
     Returns ``(grads, bits)`` for the stateless methods, or
     ``(grads, bits, new_comm)`` when ``comm`` is given — the mesh
     realization of the trainer's `CommState`: ``comm["step"]`` is the round
-    counter and ``comm["ladders"]`` mirrors the grads pytree with one
-    per-shard EMA residual-norm ladder per leaf (the stateful
-    `mlmc_adaptive_*` family; see `init_mesh_comm_state`).
+    counter and either ``comm["ladders"]`` mirrors the grads pytree with
+    one per-shard EMA residual-norm ladder per leaf (the stateful
+    `mlmc_adaptive_*` family) or — for the error-feedback family —
+    ``comm["mirrors"]`` / ``comm["servers"]`` carry each shard's dense
+    EF21 mirror and server replica per leaf (see `init_mesh_comm_state`).
+
+    ``leaf_methods`` (stateless only) is the mesh realization of a
+    per-leaf `repro.comm.policy.CodecPolicy`: a ``(codec, params)`` list
+    in flat leaf order — each leaf's collective dispatches through its own
+    codec instead of the global ``method``.
 
     ``wire="device"`` routes every leaf's collective through the bit-packed
     `repro.comm.device_wire` operands (see `repro.sharding.collectives`)."""
@@ -135,15 +146,27 @@ def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
                 if cfg.fsdp and ctx.dp > 1 else
                 jax.tree.map(lambda _: -1, grads))
     pod_ctx = dataclasses.replace(ctx, data_axis=None, dp=1)
+    ef_mode = comm is not None and "mirrors" in comm
 
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     ax_leaves = jax.tree_util.tree_leaves(fsdp_map)
-    ladder_leaves = (jax.tree_util.tree_leaves(comm["ladders"])
-                     if comm is not None else [None] * len(leaves))
+    if ef_mode:
+        state_a = jax.tree_util.tree_leaves(comm["mirrors"])
+        state_b = jax.tree_util.tree_leaves(comm["servers"])
+    elif comm is not None:
+        state_a = jax.tree_util.tree_leaves(comm["ladders"])
+        state_b = [None] * len(leaves)
+    else:
+        state_a = state_b = [None] * len(leaves)
+    if leaf_methods is not None and len(leaf_methods) != len(leaves):
+        raise ValueError(
+            f"leaf_methods has {len(leaf_methods)} entries for "
+            f"{len(leaves)} gradient leaves")
     keys = jax.random.split(rng, len(leaves))
-    outs, new_ladders = [], []
+    outs, new_a, new_b = [], [], []
     bits = jnp.zeros((), jnp.float32)
-    for leaf, ax, key, ladder in zip(leaves, ax_leaves, keys, ladder_leaves):
+    for i, (leaf, ax, key, sa, sb) in enumerate(
+            zip(leaves, ax_leaves, keys, state_a, state_b)):
         flat = leaf.reshape(-1).astype(jnp.float32)
         leaf_ctx = ctx
         if ax >= 0:
@@ -152,23 +175,38 @@ def aggregate_gradients(grads: PyTree, ctx: ShardCtx, rng, cfg: ModelConfig,
             # compress only the cross-pod hop.
             flat = flat / ctx.dp
             leaf_ctx = pod_ctx
-        if comm is not None:
+        if ef_mode:
+            s = adaptive_segment_len(flat.shape[0], k_fraction)
+            out, b, na, nb = ef21_topk_allreduce(flat, leaf_ctx, sa, sb,
+                                                 s=s, wire=wire)
+            new_a.append(na)
+            new_b.append(nb)
+        elif comm is not None:
             out, b, nl = stateful_allreduce(
-                flat, leaf_ctx, key, method, ladder, comm["step"],
+                flat, leaf_ctx, key, method, sa, comm["step"],
                 k_fraction=k_fraction, ema_rho=ema_rho, wire=wire)
-            new_ladders.append(nl)
+            new_a.append(nl)
         else:
-            out, b = compressed_allreduce(flat, leaf_ctx, key, method,
-                                          k_fraction=k_fraction, wire=wire)
+            leaf_method, leaf_kw = ((method, {}) if leaf_methods is None
+                                    else leaf_methods[i])
+            out, b = compressed_allreduce(
+                flat, leaf_ctx, key, leaf_method,
+                **{"k_fraction": k_fraction, "wire": wire, **leaf_kw})
         outs.append(out.reshape(leaf.shape))
         bits = bits + b
     grads_out = jax.tree_util.tree_unflatten(treedef, outs)
     if comm is None:
         return grads_out, bits
-    new_comm = {"step": comm["step"] + 1,
-                "ladders": jax.tree_util.tree_unflatten(
-                    jax.tree_util.tree_structure(comm["ladders"]),
-                    new_ladders)}
+    if ef_mode:
+        sub = jax.tree_util.tree_structure(comm["mirrors"])
+        new_comm = {"step": comm["step"] + 1,
+                    "mirrors": jax.tree_util.tree_unflatten(sub, new_a),
+                    "servers": jax.tree_util.tree_unflatten(sub, new_b)}
+    else:
+        new_comm = {"step": comm["step"] + 1,
+                    "ladders": jax.tree_util.tree_unflatten(
+                        jax.tree_util.tree_structure(comm["ladders"]),
+                        new_a)}
     return grads_out, bits, new_comm
 
 
@@ -204,8 +242,16 @@ def init_mesh_comm_state(model: Model, mesh, *, method: str,
     FSDP-sharded leaves; a narrower spec would let shard_map (replication
     unchecked under ``check_vma=False``) overwrite one shard's ladder with
     another's.  Leaves that are replicated along an axis simply carry
-    identical rows there — redundant but exact.  For a stateless method
-    returns ``(None, None)``."""
+    identical rows there — redundant but exact.
+
+    The error-feedback family (`EF_MESH_METHODS`, e.g. ``ef21``) threads
+    dense per-shard state instead: ``comm_state["mirrors"]`` /
+    ``comm_state["servers"]`` mirror the param pytree with one zeroed
+    ``(num_devices, d_local)`` row pair per leaf — each shard's EF21
+    mirror ``g_i`` and its replica of the server aggregate (see
+    `repro.sharding.collectives.ef21_topk_allreduce`).
+
+    For a stateless method returns ``(None, None)``."""
     if method not in STATEFUL_MESH_METHODS:
         return None, None
     from repro.launch.mesh import ctx_for_mesh
@@ -219,17 +265,24 @@ def init_mesh_comm_state(model: Model, mesh, *, method: str,
     leaves, treedef = jax.tree_util.tree_flatten(p_abs)
     spec_leaves = jax.tree_util.tree_leaves(
         p_specs, is_leaf=lambda x: isinstance(x, P))
-    ladder_leaves, ladder_specs = [], []
+    state_leaves, state_specs = [], []
     for leaf, spec in zip(leaves, spec_leaves):
         d_local = _local_leaf_size(leaf.shape, spec, mesh)
-        L = adaptive_ladder_len(d_local, k_fraction, min_segment)
-        ladder_leaves.append(jnp.zeros((num_devices, L), jnp.float32))
-        ladder_specs.append(P(all_axes, None))
-    comm = {"step": jnp.zeros((), jnp.int32),
-            "ladders": jax.tree_util.tree_unflatten(treedef, ladder_leaves)}
-    comm_specs = {"step": P(),
-                  "ladders": jax.tree_util.tree_unflatten(treedef,
-                                                          ladder_specs)}
+        if method in EF_MESH_METHODS:
+            rows = d_local
+        else:
+            rows = adaptive_ladder_len(d_local, k_fraction, min_segment)
+        state_leaves.append(jnp.zeros((num_devices, rows), jnp.float32))
+        state_specs.append(P(all_axes, None))
+    state = jax.tree_util.tree_unflatten(treedef, state_leaves)
+    specs = jax.tree_util.tree_unflatten(treedef, state_specs)
+    if method in EF_MESH_METHODS:
+        comm = {"step": jnp.zeros((), jnp.int32), "mirrors": state,
+                "servers": jax.tree.map(jnp.zeros_like, state)}
+        comm_specs = {"step": P(), "mirrors": specs, "servers": specs}
+    else:
+        comm = {"step": jnp.zeros((), jnp.int32), "ladders": state}
+        comm_specs = {"step": P(), "ladders": specs}
     return comm, comm_specs
 
 
@@ -241,17 +294,25 @@ def init_mesh_comm_state(model: Model, mesh, *, method: str,
 def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
                     shape: InputShape, method: str = "mlmc_topk",
                     k_fraction: float = 0.001, remat: bool = True,
-                    wire: str = "abstract", ema_rho: float = 0.25):
+                    wire: str = "abstract", ema_rho: float = 0.25,
+                    policy=None):
     """Returns (jitted_fn, in_specs, out_specs).
 
     Stateless methods: fn(params, opt_state, batch, rng) ->
     (params, opt_state, metrics) — unchanged.
 
-    Stateful methods (`STATEFUL_MESH_METHODS`, e.g. ``mlmc_adaptive_topk``):
-    fn(params, opt_state, comm_state, batch, rng) ->
-    (params, opt_state, comm_state, metrics), with ``comm_state`` built by
-    `init_mesh_comm_state` — the mesh realization of the trainer's
-    first-class CommState (per-shard EMA residual-norm ladders).
+    Stateful methods (`STATEFUL_MESH_METHODS`): fn(params, opt_state,
+    comm_state, batch, rng) -> (params, opt_state, comm_state, metrics),
+    with ``comm_state`` built by `init_mesh_comm_state` — the mesh
+    realization of the trainer's first-class CommState (per-shard EMA
+    residual-norm ladders for ``mlmc_adaptive_topk``; dense mirror +
+    server-replica pairs for ``ef21``).
+
+    ``policy``: a per-leaf `repro.comm.policy.CodecPolicy` (or anything
+    `CodecPolicy.parse` accepts) — each param leaf's collective dispatches
+    through the codec its rule assigns instead of the global ``method``
+    (``method`` is ignored).  Stateless codecs only: the policy's rules
+    must not name a `STATEFUL_MESH_METHODS` member.
 
     ``wire``: collective substrate for the gradient aggregation —
     ``"abstract"`` (raw operands) or ``"device"`` (bit-packed operands)."""
@@ -259,6 +320,27 @@ def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
 
     ctx = ctx_for_mesh(mesh)
     cfg = model.cfg
+    leaf_methods = None
+    if policy is not None:
+        from repro.comm.policy import CodecPolicy
+        from repro.sharding.collectives import AGG_METHODS
+
+        if method in STATEFUL_MESH_METHODS:
+            raise ValueError(
+                f"policy= cannot combine with stateful method {method!r}; "
+                "pass a stateless base method (it is superseded per leaf)")
+        specs = CodecPolicy.parse(policy).leaf_specs(model.abstract_params())
+        for path, codec, params in specs:
+            if codec not in AGG_METHODS:
+                raise ValueError(
+                    f"policy assigns leaf {path!r} codec {codec!r}, not a "
+                    f"mesh collective (one of {AGG_METHODS})")
+            if codec in STATEFUL_MESH_METHODS:
+                raise ValueError(
+                    f"policy assigns leaf {path!r} the stateful collective "
+                    f"{codec!r} — per-leaf policies are stateless-only on "
+                    "the mesh wire")
+        leaf_methods = [(codec, params) for _, codec, params in specs]
     p_specs = model_param_specs(model, ctx)
     o_specs = optimizer.state_specs(p_specs)
     b_specs = make_batch_specs(cfg, shape, ctx, "train")
@@ -298,7 +380,8 @@ def make_train_step(model: Model, mesh, optimizer: Optimizer, *,
         def local_step(params, opt_state, batch, rng):
             (loss, metrics), grads = grads_and_metrics(params, batch)
             grads, bits = aggregate_gradients(grads, ctx, rng, cfg, method,
-                                              k_fraction, wire)
+                                              k_fraction, wire,
+                                              leaf_methods=leaf_methods)
             new_params, new_opt = optimizer.apply(grads, opt_state, params)
             return new_params, new_opt, out_metrics(loss, metrics, bits)
 

@@ -302,6 +302,116 @@ def check_stateful():
     print("PASS stateful_train_step")
 
 
+def check_ef21_policy():
+    """Mesh EF21 + per-leaf policy battery on the 8-device mesh:
+
+    * `ef21_topk_allreduce` converges on a fixed gradient (mirror -> local
+      gradient geometrically, so the direction -> the exact mean) on both
+      wires, the server replica stays bitwise synced across shards and
+      equal to the mean of the mirrors, and the device wire ships fewer
+      bits (bf16-packed innovation values);
+    * a full sharded train step with ``method="ef21"`` threads the
+      (mirrors, servers) comm state exactly the way the adaptive ladder
+      rides — state advances, at least one TP-sharded leaf's mirror varies
+      across the model axis;
+    * ``policy=`` on `make_train_step` dispatches per-leaf codecs (small
+      leaves dense, matmuls mlmc_topk) and rejects stateful assignments.
+    """
+    from repro.sharding.collectives import ef21_topk_allreduce
+    from repro.train.step import init_mesh_comm_state
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    ctx = ctx_for_mesh(mesh)
+    d, s = 512, 32
+    decay = jnp.exp(-0.02 * jnp.arange(d))
+    g = jax.random.normal(jax.random.PRNGKey(0), (2, 2, d)) * decay
+    target = np.asarray(g.mean((0, 1)))
+
+    def build(wire):
+        def body(gs, mirror, server):
+            return ef21_topk_allreduce(gs.reshape(-1), ctx, mirror, server,
+                                       s=s, wire=wire)
+        return jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P("pod", "data", None), P(("pod", "data"), None),
+                      P(("pod", "data"), None)),
+            out_specs=(P(), P(), P(("pod", "data"), None),
+                       P(("pod", "data"), None)),
+            check_vma=False))
+
+    bits_by_wire = {}
+    for wire in ("abstract", "device"):
+        mirror = jnp.zeros((4, d), jnp.float32)
+        server = jnp.zeros((4, d), jnp.float32)
+        fn = build(wire)
+        for _ in range(40):
+            out, bits, mirror, server = fn(g, mirror, server)
+        rel = np.linalg.norm(np.asarray(out) - target) \
+            / np.linalg.norm(target)
+        assert rel < 1e-4, (wire, rel)
+        srv = np.asarray(server)
+        assert np.all(srv == srv[0]), "server replicas desynced"
+        assert np.allclose(srv[0], np.asarray(mirror).mean(0),
+                           atol=1e-5), "server != mean(mirrors)"
+        bits_by_wire[wire] = float(bits)
+        print(f"PASS ef21_mesh_{wire} rel={rel:.2e} bits={float(bits):.0f}")
+    assert bits_by_wire["device"] < bits_by_wire["abstract"]
+
+    # end-to-end: ef21 train step with threaded (mirrors, servers) state
+    cfg = dataclasses.replace(
+        reduce_for_smoke([c for c in ASSIGNED if c.name == "qwen3-4b"][0]))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 8, 32
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    opt = sgd(1e-2)
+    fn, _, _ = step_mod.make_train_step(
+        model, mesh, opt, shape=InputShape("t", S, B, "train"),
+        method="ef21", remat=False)
+    comm, specs = init_mesh_comm_state(model, mesh, method="ef21")
+    for mir, spec in zip(
+            jax.tree_util.tree_leaves(comm["mirrors"]),
+            jax.tree_util.tree_leaves(specs["mirrors"],
+                                      is_leaf=lambda x: isinstance(x, P))):
+        assert mir.shape[0] == mesh.devices.size, mir.shape
+        assert tuple(spec)[0] == tuple(mesh.axis_names), spec
+    opt_state = opt.init(params)
+    for t in range(2):
+        params, opt_state, comm, metrics = fn(
+            params, opt_state, comm, batch, jax.random.fold_in(key, 20 + t))
+        assert np.isfinite(float(metrics["loss"]))
+        assert float(metrics["bits"]) > 0
+    assert int(comm["step"]) == 2
+
+    def model_varies(leaf):
+        rows = np.asarray(leaf).reshape(-1, 2, leaf.shape[-1])
+        return bool(np.any(rows[:, 0] != rows[:, 1]))
+    assert any(model_varies(m)
+               for m in jax.tree_util.tree_leaves(comm["mirrors"])), \
+        "no mirror varies across the model axis — per-device state lost"
+    print("PASS ef21_train_step")
+
+    # per-leaf policy: small tensors dense, matmuls mlmc_topk
+    fn, _, _ = step_mod.make_train_step(
+        model, mesh, opt, shape=InputShape("t", S, B, "train"),
+        method="mlmc_topk", remat=False,
+        policy={"size<=2048": "dense", "*": "mlmc_topk"})
+    _, _, metrics = fn(params, opt_state, batch, jax.random.PRNGKey(9))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["bits"]) > 0
+    try:
+        step_mod.make_train_step(
+            model, mesh, opt, shape=InputShape("t", S, B, "train"),
+            method="mlmc_topk", remat=False, policy={"*": "ef21"})
+    except ValueError as e:
+        assert "stateless" in str(e), e
+    else:
+        raise AssertionError("stateful policy assignment must be rejected")
+    print("PASS policy_train_step")
+
+
 def check_train_parity():
     """Sharded dense train loss == unsharded loss for a dense arch."""
     mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -379,7 +489,8 @@ if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     fns = {"collectives": check_collectives, "train": check_train_parity,
            "fsdp": check_fsdp, "decode": check_decode_parity,
-           "device_wire": check_device_wire, "stateful": check_stateful}
+           "device_wire": check_device_wire, "stateful": check_stateful,
+           "ef21_policy": check_ef21_policy}
     if which == "all":
         for f in fns.values():
             f()

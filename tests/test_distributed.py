@@ -55,6 +55,17 @@ def test_stateful_pipeline_on_mesh():
 
 
 @pytest.mark.slow
+def test_ef21_and_policy_on_mesh():
+    """Mesh EF21 (per-shard mirror + server replica threaded like the
+    adaptive ladder) and per-leaf `policy=` dispatch on `make_train_step`."""
+    out = _run("ef21_policy")
+    assert "PASS ef21_mesh_abstract" in out
+    assert "PASS ef21_mesh_device" in out
+    assert "PASS ef21_train_step" in out
+    assert "PASS policy_train_step" in out
+
+
+@pytest.mark.slow
 def test_sharded_train_parity():
     assert "PASS train_parity" in _run("train")
 

@@ -212,6 +212,99 @@ def test_codec_ids_append_only():
                 f"new codec {name!r} must take an id above {frozen_max}"
 
 
+#: frozen copy of `repro.comm.policy.POLICY_PRESETS` at the PR-8 snapshot.
+#: The table is append-only config surface: a run launched with a preset
+#: name must mean the same resolved policy forever — existing entries
+#: must never change; new presets take new names.
+FROZEN_POLICY_PRESETS = {
+    "dense_small_tensors": {"size<=2048": "dense", "*": "mlmc_topk"},
+    "dense_embed_norm": {"*embed*": "dense", "*norm*": "dense",
+                         "*": "mlmc_topk"},
+    "uniform_mlmc_topk": {"*": "mlmc_topk"},
+    "uniform_dense": {"*": "dense"},
+}
+
+#: deterministic policy-container fixture: a two-stream split of the
+#: golden gradient (dense head, qsgd tail) shipped as one RCBW container.
+#: The pinned hash is the exact fingerprint this policy sends in the tcp
+#: HELLO — if it drifts, old and new ranks refuse each other's handshake.
+GOLDEN_POLICY_SEGMENTS = (("dense", 0, 64), ("qsgd", 64, GOLDEN_DIM))
+GOLDEN_POLICY_HASH = "5249744e1ea53308"
+
+
+def golden_policy():
+    from repro.comm.policy import ResolvedPolicy, Segment
+
+    return ResolvedPolicy(GOLDEN_DIM, tuple(
+        Segment(f"{codec}@{start}", codec, start, stop)
+        for codec, start, stop in GOLDEN_POLICY_SEGMENTS))
+
+
+def encode_golden_policy_container() -> bytes:
+    """Deterministic RCBW multi-stream container: worker 0's per-segment
+    packets under the policy draw keys ``fold_in(key0, segment_index)``."""
+    from repro.comm.packets import pack_bucket_payload
+    from repro.comm.plan import policy_packed_aggregator
+
+    ag = policy_packed_aggregator(golden_policy(), GOLDEN_DIM,
+                                  codec_kw=dict(GOLDEN_CODEC_KW))
+    plan = ag.fn.plan
+    keys = jax.random.split(jax.random.PRNGKey(GOLDEN_KEY_SEED), 1)
+    packets = plan.encode_round(golden_grad()[None, :], keys)
+    return pack_bucket_payload([packets[b][0].to_bytes()
+                                for b in range(plan.num_buckets)])
+
+
+def test_policy_presets_append_only():
+    from repro.comm.policy import POLICY_PRESETS
+
+    for name, rules in FROZEN_POLICY_PRESETS.items():
+        assert POLICY_PRESETS.get(name) == rules, \
+            f"POLICY_PRESETS[{name!r}] changed meaning"
+    # and rule ORDER is part of the meaning (first match wins)
+    for name in FROZEN_POLICY_PRESETS:
+        assert list(POLICY_PRESETS[name]) == \
+            list(FROZEN_POLICY_PRESETS[name]), \
+            f"POLICY_PRESETS[{name!r}] rule order changed"
+
+
+def test_golden_policy_hash_pinned():
+    assert golden_policy().hash == GOLDEN_POLICY_HASH, (
+        "the policy fingerprint derivation changed — ranks running the "
+        "committed policy would now refuse old peers at the tcp HELLO. "
+        "If intentional, version the HELLO token and re-pin.")
+
+
+def test_golden_policy_container_bytes():
+    path = GOLDEN_DIR / "policy_container.bin"
+    assert path.exists(), \
+        f"missing golden fixture {path}; run tests/test_golden_packets.py --regen"
+    assert encode_golden_policy_container() == path.read_bytes(), (
+        "policy_container: RCBW multi-stream container differs from the "
+        "committed snapshot — the policy wire changed. If intentional, add "
+        "a new container magic next to RCBW and regenerate.")
+
+
+def test_golden_policy_container_roundtrips():
+    """The committed container splits into one self-describing `Packet`
+    per segment, each decoding to its segment's size — and the decoded
+    concatenation covers the golden gradient's full dimension."""
+    from repro.comm.packets import unpack_bucket_payload
+
+    raw = (GOLDEN_DIR / "policy_container.bin").read_bytes()
+    parts = unpack_bucket_payload(raw)
+    assert len(parts) == len(GOLDEN_POLICY_SEGMENTS)
+    total = 0
+    for part, (codec_name, start, stop) in zip(parts,
+                                               GOLDEN_POLICY_SEGMENTS):
+        pkt = Packet.from_bytes(part)
+        codec = make_codec(codec_name, stop - start, **GOLDEN_CODEC_KW)
+        est = codec.decode(pkt)
+        assert est.shape == (stop - start,)
+        total += stop - start
+    assert total == GOLDEN_DIM
+
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
@@ -265,6 +358,10 @@ def _regen():
     raw = encode_golden_state_row()
     (GOLDEN_DIR / "state_row_shift.bin").write_bytes(raw)
     print(f"wrote golden_packets/state_row_shift.bin ({len(raw)} bytes)")
+    raw = encode_golden_policy_container()
+    (GOLDEN_DIR / "policy_container.bin").write_bytes(raw)
+    print(f"wrote golden_packets/policy_container.bin ({len(raw)} bytes)")
+    print(f"golden policy hash: {golden_policy().hash}")
 
 
 if __name__ == "__main__":

@@ -157,17 +157,20 @@ def test_plan_shares_codec_across_equal_buckets():
     assert plan.codec(2) is not plan.codec(0)  # the 44-wide remainder
 
 
-def test_bucketed_rejects_stateful_families_and_multihost():
+def test_bucketed_rejects_stateful_families_and_streamed_multihost():
     with pytest.raises(ValueError, match="stateful"):
         bucketed_packed_aggregator("ef21", DIM, bucket_size=BUCKET)
+    # multihost construction is now supported (one RCBW container per rank
+    # over the tcp star), but the STREAMED tap path stays in-process: the
+    # streamer's key fan is per-local-worker, not per-rank
+    ag = bucketed_packed_aggregator("mlmc_topk", DIM, bucket_size=BUCKET,
+                                    transport=_FakeMultihost())
     with pytest.raises(ValueError, match="in-process"):
-        bucketed_packed_aggregator(
-            "mlmc_topk", DIM, bucket_size=BUCKET,
-            transport=_FakeMultihost())
+        ag.fn.step_streamed(None, _grads(), jax.random.PRNGKey(0))
 
 
 class _FakeMultihost:
-    """Quacks like a `TcpStarTransport` for the rejection check."""
+    """Quacks like a `TcpStarTransport` for the streamed-path rejection."""
     world = 3
 
     def broadcast_payload(self, data):

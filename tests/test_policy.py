@@ -1,0 +1,486 @@
+"""Per-leaf `CodecPolicy` battery: rules, resolution, and cross-wire parity.
+
+The policy stack's whole correctness story mirrors the bucket plan's ONE
+invariant, lifted to heterogeneous codecs: segment ``b`` of a flat
+gradient encodes bitwise identically to a standalone flat codec of the
+segment's size under the folded key ``fold_in(worker_key, b)``, on EVERY
+substrate.  So the abstract per-segment reference, the packed RCBW
+multi-stream container, the device wire's fixed-shape per-segment
+round-trip, and the tcp star must all produce the SAME direction bitwise
+— and a one-segment policy must be indistinguishable from not passing a
+policy at all.
+"""
+
+import socket
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.aggregate import _make_packed_codec
+from repro.comm.multihost import TcpStarTransport
+from repro.comm.plan import WirePlan, policy_packed_aggregator
+from repro.comm.policy import (
+    POLICY_PRESETS,
+    CodecPolicy,
+    PolicyRule,
+    ResolvedPolicy,
+    Segment,
+    as_resolved,
+    leaf_paths,
+    segment_codec_kw,
+)
+from repro.core.aggregators import filter_codec_kw, make_aggregator
+
+DIM = 300
+WORKERS = 3
+CODEC_KW = dict(k_fraction=0.1, s=8)
+
+#: a 3-leaf tree whose flat order ("a/embed", "a/w", "norm") exercises
+#: path globs, size rules, and adjacent-merge at once
+TREE = {"a": {"embed": jnp.zeros((64,)), "w": jnp.zeros((8, 16))},
+        "norm": jnp.zeros((4,))}
+
+#: heterogeneous segments over a flat DIM-vector (dense / qsgd / mlmc)
+HET = ResolvedPolicy(DIM, (Segment("dense@0", "dense", 0, 64),
+                           Segment("qsgd@64", "qsgd", 64, 192),
+                           Segment("mlmc_topk@192", "mlmc_topk", 192, DIM)))
+
+
+def _grads(dim: int = DIM, m: int = WORKERS) -> jax.Array:
+    g = jax.random.normal(jax.random.PRNGKey(3), (m, dim), jnp.float32)
+    return g * jnp.exp(-5.0 * jnp.arange(dim) / dim)
+
+
+def _sockets_available() -> bool:
+    try:
+        with socket.socket() as s:
+            s.bind(("127.0.0.1", 0))
+        return True
+    except OSError:               # pragma: no cover - sandboxed environments
+        return False
+
+
+needs_sockets = pytest.mark.skipif(not _sockets_available(),
+                                   reason="localhost sockets unavailable")
+
+
+# ---------------------------------------------------------------------------
+# rules, parsing, resolution
+# ---------------------------------------------------------------------------
+
+
+def test_leaf_paths_flat_order():
+    assert leaf_paths(TREE) == [("a/embed", 64), ("a/w", 128), ("norm", 4)]
+    assert leaf_paths(jnp.zeros((7,))) == [("flat", 7)]
+
+
+def test_parse_forms_agree():
+    """Preset name, spec string, dict, and rule list all parse to the
+    same resolution."""
+    want = CodecPolicy.parse({"*embed*": "dense", "*norm*": "dense",
+                              "*": "mlmc_topk"}).resolve(TREE)
+    for spec in ("dense_embed_norm",
+                 "*embed*=dense, *norm*=dense, *=mlmc_topk",
+                 [PolicyRule("*embed*", "dense"), PolicyRule("*norm*", "dense"),
+                  PolicyRule("*", "mlmc_topk")]):
+        assert CodecPolicy.parse(spec).resolve(TREE) == want
+    # a CodecPolicy passes through untouched
+    pol = CodecPolicy.parse("dense_embed_norm")
+    assert CodecPolicy.parse(pol) is pol
+
+
+def test_parse_rejects_malformed_rules():
+    with pytest.raises(ValueError, match="pattern=codec"):
+        CodecPolicy.parse("mlmc_topk")       # not a preset, no '='
+    with pytest.raises(ValueError, match="at least one rule"):
+        CodecPolicy.parse(",")
+
+
+def test_size_rules_and_first_match_wins():
+    pol = CodecPolicy.parse({"size<=64": "dense", "a/*": "qsgd",
+                             "*": "mlmc_topk"})
+    # a/embed (64) hits the size rule BEFORE the a/* glob; a/w (128)
+    # falls through to a/*; norm (4) hits the size rule
+    assert [c for _, c, _ in pol.leaf_specs(TREE)] == \
+        ["dense", "qsgd", "dense"]
+    for pattern, size, want in (("size<64", 64, False), ("size<64", 63, True),
+                                ("size>=128", 128, True), ("size>4", 4, False),
+                                ("size==4", 4, True)):
+        assert PolicyRule(pattern, "dense").matches("x", size) is want
+
+
+def test_no_match_raises_with_hint():
+    with pytest.raises(ValueError, match="catch-all"):
+        CodecPolicy.parse({"*embed*": "dense"}).resolve(TREE)
+
+
+def test_resolve_merges_adjacent_identical_assignments():
+    res = CodecPolicy.parse({"a/*": "dense", "*": "mlmc_topk"}).resolve(TREE)
+    assert [(s.codec, s.start, s.stop) for s in res.segments] == \
+        [("dense", 0, 192), ("mlmc_topk", 192, 196)]
+    # differing per-segment params block the merge
+    res = CodecPolicy.parse(
+        {"a/embed": ("qsgd", {"qsgd_levels": 8}), "a/w": "qsgd",
+         "*": "qsgd"}).resolve(TREE)
+    assert [(s.codec, s.size) for s in res.segments] == \
+        [("qsgd", 64), ("qsgd", 132)]
+    assert dict(res.segments[0].params) == {"qsgd_levels": 8}
+
+
+def test_resolved_policy_validates_tiling():
+    with pytest.raises(ValueError, match="tile"):
+        ResolvedPolicy(10, (Segment("a", "dense", 0, 4),
+                            Segment("b", "dense", 5, 10)))
+    with pytest.raises(ValueError, match="dim"):
+        ResolvedPolicy(10, (Segment("a", "dense", 0, 4),))
+
+
+def test_uniform_flag_and_as_resolved():
+    assert CodecPolicy.parse("uniform_dense").resolve_flat(DIM).is_uniform
+    assert not HET.is_uniform
+    assert HET.codecs == ("dense", "qsgd", "mlmc_topk")
+    assert as_resolved(None, DIM) is None
+    assert as_resolved(HET, DIM) is HET
+    with pytest.raises(ValueError, match="dim"):
+        as_resolved(HET, DIM + 1)
+    assert as_resolved("uniform_dense", 8).segments[0].codec == "dense"
+
+
+def test_hash_is_stable_and_discriminates():
+    assert HET.hash == ResolvedPolicy(DIM, HET.segments).hash
+    assert len(HET.hash) == 16
+    other = ResolvedPolicy(DIM, (Segment("dense@0", "dense", 0, DIM),))
+    assert HET.hash != other.hash
+    # params participate in the fingerprint
+    a = CodecPolicy.parse({"*": ("qsgd", {"qsgd_levels": 2})}).resolve(TREE)
+    b = CodecPolicy.parse({"*": ("qsgd", {"qsgd_levels": 8})}).resolve(TREE)
+    assert a.hash != b.hash
+
+
+def test_subdivide_composes_with_buckets():
+    sub = HET.subdivide(100)
+    assert [(s.codec, s.start, s.stop) for s in sub.segments] == \
+        [("dense", 0, 64), ("qsgd", 64, 164), ("qsgd", 164, 192),
+         ("mlmc_topk", 192, 292), ("mlmc_topk", 292, 300)]
+    assert sub.dim == DIM                    # still tiles exactly
+
+
+def test_segment_codec_kw_rescales_s():
+    seg = Segment("m", "mlmc_topk", 0, 30, params=(("k_fraction", 0.5),))
+    kw = segment_codec_kw(dict(s=30, k_fraction=0.1), seg, DIM)
+    assert kw["s"] == 3                      # 30 * 30/300
+    assert kw["k_fraction"] == 0.5           # rule params override
+    # s<=1 is left alone (not a dim-derived budget)
+    assert segment_codec_kw(dict(s=1), seg, DIM)["s"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the degenerate one-segment policy == no policy at all
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["abstract", "packed", "device"])
+def test_uniform_policy_is_bitwise_noop(wire):
+    grads, rng = _grads(), jax.random.PRNGKey(7)
+    plain = make_aggregator("mlmc_topk", DIM, **CODEC_KW, wire=wire)
+    pol = make_aggregator("mlmc_topk", DIM, **CODEC_KW, wire=wire,
+                          policy={"*": "mlmc_topk"})
+    a, b = plain(grads, rng, None), pol(grads, rng, None)
+    assert np.array_equal(np.asarray(a.direction), np.asarray(b.direction))
+    assert float(a.bits) == float(b.bits)
+    # the policy's codec supersedes `name`
+    named = make_aggregator("qsgd", DIM, **CODEC_KW, wire=wire,
+                            policy="uniform_mlmc_topk")
+    c = named(grads, rng, None)
+    assert np.array_equal(np.asarray(a.direction), np.asarray(c.direction))
+
+
+# ---------------------------------------------------------------------------
+# cross-wire parity: abstract == packed == device == tcp, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _run_policy(wire, policy=HET, transport=None):
+    ag = make_aggregator("mlmc_topk", DIM, **CODEC_KW, wire=wire,
+                         policy=policy, transport=transport)
+    return ag(_grads(), jax.random.PRNGKey(7), None)
+
+
+def test_heterogeneous_policy_cross_wire_bitwise():
+    outs = {w: _run_policy(w) for w in ("abstract", "packed")}
+    a = np.asarray(outs["abstract"].direction)
+    assert np.array_equal(a, np.asarray(outs["packed"].direction))
+    # the device wire joins the bitwise matrix for the exact codecs
+    # (mlmc_topk ships bf16 values on the device wire by default, so its
+    # segments are allclose-not-bitwise there)
+    exact = ResolvedPolicy(DIM, (Segment("dense@0", "dense", 0, 64),
+                                 Segment("qsgd@64", "qsgd", 64, 192),
+                                 Segment("rtn@192", "rtn", 192, DIM)))
+    exact_outs = {w: _run_policy(w, policy=exact)
+                  for w in ("abstract", "packed", "device")}
+    e = np.asarray(exact_outs["abstract"].direction)
+    for wire in ("packed", "device"):
+        assert np.array_equal(e, np.asarray(exact_outs[wire].direction)), wire
+    dev = np.asarray(_run_policy("device").direction)
+    np.testing.assert_allclose(a, dev, rtol=1e-2, atol=1e-3)
+    # bits are per-wire MEASURED quantities (packet headers / static
+    # operand sizes differ), but every wire books something positive
+    for out in (*outs.values(), *exact_outs.values()):
+        assert float(out.bits) > 0
+
+
+def test_policy_segments_match_standalone_flat_codecs_bitwise():
+    """THE invariant, packed realization: each segment's container bytes
+    == a standalone flat codec of the segment's size with the folded
+    key."""
+    grads = _grads()
+    rng = jax.random.PRNGKey(7)
+    keys = jax.random.split(rng, WORKERS)
+    ag = policy_packed_aggregator(HET, DIM, codec_kw=dict(CODEC_KW))
+    plan: WirePlan = ag.fn.plan
+    packets = plan.encode_round(grads, keys)
+    for b, seg in enumerate(HET.segments):
+        flat = _make_packed_codec(seg.codec, seg.size, None,
+                                  segment_codec_kw(dict(CODEC_KW), seg, DIM))
+        for w in range(WORKERS):
+            ref = flat.encode(grads[w, seg.start:seg.stop],
+                              jax.random.fold_in(keys[w], b)).packet
+            assert packets[b][w].to_bytes() == ref.to_bytes(), (seg.name, w)
+
+
+def test_policy_abstract_matches_per_segment_reference():
+    """The abstract wire against a hand-rolled per-segment mean with the
+    same kernels and folded keys — the reference the other wires chase."""
+    from repro.core.aggregators import _stateless_fn
+
+    grads = _grads()
+    rng = jax.random.PRNGKey(7)
+    keys = jax.random.split(rng, WORKERS)
+    parts, bits = [], 0.0
+    for b, seg in enumerate(HET.segments):
+        f = _stateless_fn(seg.codec, seg.size,
+                          **segment_codec_kw(dict(CODEC_KW), seg, DIM))
+        outs = [f(grads[w, seg.start:seg.stop],
+                  jax.random.fold_in(keys[w], b)) for w in range(WORKERS)]
+        parts.append(np.asarray(jnp.mean(jnp.stack([o[0] for o in outs]),
+                                         axis=0)))
+        bits += float(sum(o[1] for o in outs))
+    out = _run_policy("abstract")
+    assert np.array_equal(np.asarray(out.direction), np.concatenate(parts))
+    assert float(out.bits) == bits
+
+
+@needs_sockets
+def test_policy_over_tcp_matches_loopback_bitwise():
+    """The tcp realization ships ONE RCBW multi-stream container per rank
+    and reproduces the in-process direction and bits exactly."""
+    ref_ag = make_aggregator("mlmc_topk", DIM, **CODEC_KW, wire="packed",
+                             policy=HET)
+    ref = ref_ag(_grads(), jax.random.PRNGKey(7), None)
+    world = WORKERS
+    tps = _connect_world(world)
+    grads = _grads()
+    outs = {}
+
+    def run_rank(r):
+        ag = make_aggregator("mlmc_topk", DIM, **CODEC_KW, wire="packed",
+                             policy=HET, transport=tps[r])
+        outs[r] = ag(grads[r:r + 1], jax.random.PRNGKey(7), None)
+
+    threads = [threading.Thread(target=run_rank, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    run_rank(0)
+    for t in threads:
+        t.join()
+    for r in range(world):
+        assert np.array_equal(np.asarray(outs[r].direction),
+                              np.asarray(ref.direction)), f"rank {r}"
+        assert float(outs[r].bits) == float(ref.bits)
+    assert tps[0].stats.bytes_up == ref_ag.fn.transport.stats.bytes_up
+    for t in tps.values():
+        t.close()
+
+
+def _connect_world(world, timeout=15.0, policy_hash=None):
+    server = TcpStarTransport.listen(port=0, world=world, timeout=timeout,
+                                     policy_hash=policy_hash)
+    tps = {0: server}
+
+    def join(r):
+        tps[r] = TcpStarTransport.connect(
+            "127.0.0.1", server.port, rank=r, world=world, timeout=timeout,
+            policy_hash=policy_hash)
+
+    threads = [threading.Thread(target=join, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    server.accept_workers()
+    for t in threads:
+        t.join()
+    return tps
+
+
+# ---------------------------------------------------------------------------
+# wire accounting: measured bits reconcile with transport bytes
+# ---------------------------------------------------------------------------
+
+
+def test_segment_bits_sum_to_transport_frame_bytes():
+    """Per-stream accounting is EXACT: the segments' measured bits sum to
+    the aggregate's bits, and the transport's booked uplink bytes equal
+    the packets' serialized bytes plus the RCBW container overhead (8-byte
+    header + one u32 length prefix per stream, per worker) to the byte."""
+    grads = _grads()
+    rng = jax.random.PRNGKey(7)
+    ag = policy_packed_aggregator(HET, DIM, codec_kw=dict(CODEC_KW))
+    plan: WirePlan = ag.fn.plan
+    keys = jax.random.split(rng, WORKERS)
+    packets = plan.encode_round(grads, keys)
+    seg_bits = plan.segment_bits(packets)
+    assert sum(seg_bits) == plan.measured_bits(packets)
+    out = ag(grads, rng, None)
+    assert float(out.bits) == sum(seg_bits)
+    n_seg = len(HET.segments)
+    packet_bytes = sum(len(packets[b][w].to_bytes())
+                       for b in range(n_seg) for w in range(WORKERS))
+    overhead = (8 + 4 * n_seg) * WORKERS
+    assert ag.fn.transport.stats.bytes_up == packet_bytes + overhead
+
+
+def test_policy_records_per_segment_telemetry():
+    from repro.obs import trace as obs
+
+    tel = obs.install(obs.Telemetry(enabled=True))
+    try:
+        _run_policy("packed")
+    finally:
+        obs.install(None)
+    rows = {(r["labels"]["segment"], r["labels"]["codec"]): r["value"]
+            for r in tel.metrics.snapshot()
+            if r["name"] == "wire_segment_bits"}
+    assert set(rows) == {(s.name, s.codec) for s in HET.segments}
+    assert all(v > 0 for v in rows.values())
+
+
+# ---------------------------------------------------------------------------
+# construction-time guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_stateful_segments_rejected_on_every_wire():
+    # an explicit ResolvedPolicy: against a FLAT dim-vector, path/size
+    # rules always resolve uniform (one "flat" leaf), so rule dicts
+    # cannot express multi-segment policies at the aggregator level
+    bad = ResolvedPolicy(DIM, (Segment("ef21@0", "ef21", 0, 64),
+                               Segment("m@64", "mlmc_topk", 64, DIM)))
+    for wire in ("abstract", "packed", "device"):
+        with pytest.raises(ValueError,
+                           match="whole flat gradient|stateful"):
+            make_aggregator("mlmc_topk", DIM, **CODEC_KW, wire=wire,
+                            policy=bad)
+
+
+def test_codec_kwargs_typeerror_and_filter():
+    """Satellite regression: an explicitly passed codec kwarg nobody
+    consumes raises, `filter_codec_kw` pre-filters heterogeneous sets,
+    and policy codecs count as consumers."""
+    with pytest.raises(TypeError, match="qsgd_levels"):
+        make_aggregator("dense", DIM, qsgd_levels=8)
+    # a policy whose segments include qsgd legitimizes the same kwarg
+    make_aggregator("dense", DIM, **CODEC_KW, qsgd_levels=8, policy=HET)
+    kw = filter_codec_kw(dict(qsgd_levels=8, rtn_level=4, momentum_beta=None),
+                         "qsgd", "dense")
+    assert kw == {"qsgd_levels": 8}
+    # k_fraction / s stay lenient (every family accepts them)
+    assert filter_codec_kw(dict(k_fraction=0.1, s=4), "dense") == \
+        {"k_fraction": 0.1, "s": 4}
+
+
+def test_trainer_accepts_blanket_kwargs_with_policy():
+    """The Trainer passes its full knob set for ANY method/policy — the
+    filter, not the caller, drops what the selected codecs don't eat."""
+    from repro.optim import sgd
+    from repro.train import Trainer
+
+    params = {"w": jnp.zeros((48,)), "b": jnp.zeros(())}
+
+    def loss_fn(p, batch):
+        return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
+
+    for method, policy in (("dense", None),
+                           ("mlmc_topk", {"b": "dense", "*": "mlmc_topk"})):
+        tr = Trainer(loss_fn, params, num_workers=2, method=method,
+                     optimizer=sgd(0.1), k_fraction=0.25, wire="packed",
+                     policy=policy)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 48))
+        batch = {"x": x, "y": jnp.zeros((2, 4))}
+        hist = tr.fit(iter([batch, batch]), steps=2, seed=0)
+        assert np.isfinite(hist.loss).all()
+        if policy is not None:
+            assert len(tr.policy.segments) == 2
+
+
+# ---------------------------------------------------------------------------
+# jit hygiene: the abstract policy path traces once, no callbacks
+# ---------------------------------------------------------------------------
+
+
+def test_policy_abstract_traces_once():
+    ag = make_aggregator("mlmc_topk", DIM, **CODEC_KW, wire="abstract",
+                         policy=HET)
+    calls = {"n": 0}
+
+    def fn(grads, rng):
+        calls["n"] += 1
+        out = ag(grads, rng, None)
+        return out.direction, out.bits
+
+    jfn = jax.jit(fn)
+    for i in range(3):
+        d, b = jfn(_grads() + i, jax.random.PRNGKey(i))
+        jax.block_until_ready(d)
+    assert calls["n"] == 1, "policy abstract path must not retrace"
+
+
+# ---------------------------------------------------------------------------
+# HELLO handshake: policy fingerprints must agree at rendezvous
+# ---------------------------------------------------------------------------
+
+
+@needs_sockets
+def test_tcp_handshake_rejects_policy_mismatch():
+    server = TcpStarTransport.listen(port=0, world=2, timeout=15,
+                                     policy_hash=HET.hash)
+    errors = {}
+
+    def bad_then_good():
+        other = ResolvedPolicy(DIM, (Segment("dense@0", "dense", 0, DIM),))
+        try:
+            TcpStarTransport.connect("127.0.0.1", server.port, rank=1,
+                                     world=2, timeout=5,
+                                     policy_hash=other.hash)
+        except ConnectionError as e:
+            errors["bad"] = str(e)
+        try:
+            TcpStarTransport.connect("127.0.0.1", server.port, rank=1,
+                                     world=2, timeout=5)     # no policy
+        except ConnectionError as e:
+            errors["none"] = str(e)
+        errors["good"] = TcpStarTransport.connect(
+            "127.0.0.1", server.port, rank=1, world=2, timeout=10,
+            policy_hash=HET.hash)
+
+    t = threading.Thread(target=bad_then_good)
+    t.start()
+    server.accept_workers()
+    t.join()
+    assert "policy mismatch" in errors["bad"]
+    assert "policy mismatch" in errors["none"]
+    errors["good"].close()
+    server.close()
