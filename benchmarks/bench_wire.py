@@ -202,6 +202,13 @@ def main(smoke: bool = False) -> dict:
         entry = _trainer_entries(size_name, steps, smoke)
         dim = entry["trainer"]["mlmc_topk_packed"]["dim"]
         entry["codec_us"] = _codec_micro(2048 if smoke else dim)
+        for cname, row in entry["codec_us"].items():
+            # the per-direction default table (compiled.default_compiled)
+            # is set from these four columns — a record without them
+            # cannot back the next re-measurement
+            for col in ("encode_eager_us", "encode_compiled_us",
+                        "decode_eager_us", "decode_compiled_us"):
+                assert row.get(col), f"{cname}: {col} missing/zero"
         record["sizes"][size_name] = entry
         for label, r in entry["trainer"].items():
             print(f"bench_wire/{size_name}/{label},"

@@ -41,6 +41,33 @@ def main(tag="kernel_bench") -> dict:
     # the jnp baseline it replaces (sort-based selection)
     res["argsort_baseline"] = _time(
         lambda: jnp.argsort(-jnp.abs(v)))
+    # sort-free selection pipeline (repro.kernels.select) vs the global
+    # argsort it retires, swept across gradient scales: exact byte-radix
+    # histogram walk, coarse Pallas bucket walk, fixed-shape band
+    # extraction, and the u32 key-sort / top_k routes the CPU backend uses
+    from repro.kernels import select
+
+    for dexp in (16, 18, 20, 21):
+        ds = 1 << dexp
+        vs = jax.random.normal(jax.random.PRNGKey(7 + dexp), (ds,))
+        ks = max(1, int(0.02 * ds))
+        keys = jax.block_until_ready(select.magnitude_keys(vs))
+        walk = jax.jit(select.histogram_threshold)
+        res[f"select_histogram_walk_d2e{dexp}"] = _time(
+            lambda: walk(keys, jnp.int32(ks - 1)), iters=3)
+        bucket = jax.jit(lambda vv, r: select.bucket_walk_bounds(vv, r))
+        res[f"select_bucket_walk_d2e{dexp}"] = _time(
+            lambda: bucket(vs, jnp.int32(ks - 1)), iters=3)
+        band = jax.jit(lambda vv, r0, _ks=ks: select.rank_band_indices(
+            vv, r0, _ks, impl="sort"))
+        res[f"select_band_indices_d2e{dexp}"] = _time(
+            lambda: band(vs, jnp.int32(0)), iters=3)
+        res[f"select_key_sort_d2e{dexp}"] = _time(
+            lambda: jnp.sort(keys), iters=3)
+        res[f"select_top_k_d2e{dexp}"] = _time(
+            lambda: jax.lax.top_k(jnp.abs(vs), ks), iters=3)
+        res[f"select_argsort_baseline_d2e{dexp}"] = _time(
+            lambda: jnp.argsort(-jnp.abs(vs)), iters=3)
     # wire-codec bit-packing (repro.comm.pack_kernels): 2-bit ternary planes
     # and 12-bit index streams, the packed-wire encode/decode hot loops
     tern = jax.random.randint(jax.random.PRNGKey(1), (d,), 0, 3,

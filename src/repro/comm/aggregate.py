@@ -897,17 +897,27 @@ class MultihostPackedEF21:
 
 def _make_packed_codec(name: str, dim: int, compiled: bool | None,
                        codec_kw: dict):
-    """One packed-wire codec: the per-codec compiled default unless the
-    caller forces a pipeline (shared by uplink, downlink, and the
-    per-bucket `WirePlan` construction)."""
+    """One packed-wire codec: the per-(codec, direction) compiled defaults
+    unless the caller forces a pipeline (shared by uplink, downlink, and
+    the per-bucket `WirePlan` construction).  When the two directions'
+    defaults disagree (e.g. mlmc_topk: compiled encode, eager decode) the
+    result is a `repro.comm.compiled.HybridCodec`."""
     if compiled is None:
         from repro.comm.compiled import default_compiled
 
-        compiled = default_compiled(name)
-    if compiled:
+        enc_c = default_compiled(name, "encode")
+        dec_c = default_compiled(name, "decode")
+    else:
+        enc_c = dec_c = bool(compiled)
+    if enc_c and dec_c:
         from repro.comm.compiled import make_compiled_codec
 
         return make_compiled_codec(name, dim, **codec_kw)
+    if enc_c or dec_c:
+        from repro.comm.compiled import make_hybrid_codec
+
+        return make_hybrid_codec(name, dim, encode_compiled=enc_c,
+                                 **codec_kw)
     return make_codec(name, dim, **codec_kw)
 
 

@@ -63,7 +63,8 @@ from repro.core.bitwise import (
 )
 from repro.core.mlmc import mlmc_estimate
 from repro.core.rtn import RTNMultilevel
-from repro.core.topk import STopKMultilevel, magnitude_ranks, topk_mask
+from repro.core.topk import STopKMultilevel, topk_mask
+from repro.kernels import select
 from repro.core.types import Array, PRNGKey
 
 _EPS = 1e-30
@@ -643,9 +644,8 @@ class MLMCTopKCodec(_MLMCCodecBase):
         v = jnp.asarray(v, jnp.float32)
         est = self._estimate(v, rng, probs)
         level = int(est.level)
-        ranks = np.asarray(magnitude_ranks(v))
         s = self.compressor.s
-        mask = (ranks >= (level - 1) * s) & (ranks < level * s)
+        mask = np.asarray(select.band_mask(v, (level - 1) * s, level * s))
         idx = np.flatnonzero(mask)
         residual = np.asarray(est.residual)
         hdr = Header(self.name, self.dim, level=level,

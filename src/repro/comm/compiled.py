@@ -483,13 +483,19 @@ class CompiledSparse(CompiledCodec):
 class CompiledTopK(CompiledSparse):
     def _row_encode(self, v, key, probs):
         del key, probs
-        from repro.core.topk import topk_mask
+        from repro.kernels import select
 
         v = jnp.asarray(v, jnp.float32)
-        mask = topk_mask(v, self.k)
-        est = jnp.where(mask, v, 0.0)
-        idx, vals = self._sparse_payload(est, mask)
-        return ext_lane(prob=0.0, nnz=self.k), (idx, vals), est
+        if self.k >= self.dim:
+            idx = jnp.arange(self.dim, dtype=jnp.int32)
+        else:
+            # stable top_k indices, re-sorted ascending: the same bytes the
+            # eager flatnonzero(mask) emits, without the global argsort
+            idx = jnp.sort(select.topk_indices(v, self.k))
+        vals = v[idx]
+        est = jnp.zeros((self.dim,), jnp.float32).at[idx].set(vals)
+        return ext_lane(prob=0.0, nnz=self.k), (idx.astype(jnp.uint32),
+                                                vals), est
 
 
 class CompiledRandK(CompiledSparse):
@@ -705,12 +711,13 @@ class _CompiledMLMCBase(CompiledCodec):
 
 
 class CompiledMLMCTopK(_CompiledMLMCBase):
-    """Fused (s-)Top-k MLMC encode: ONE argsort feeds both the Lemma-3.4
-    residual-norm ladder (adaptive draws) and the shipped rank segment —
-    the eager path sorts twice (`residual_norms` + `magnitude_ranks`) and
-    scatters a rank vector besides.  Bitwise identical: sorted |v| equals
-    the gathered |v[order]| elementwise, and every downstream f32 op
-    replays in the eager order."""
+    """Fused (s-)Top-k MLMC encode, sort-free: ONE uint32 key sort (4-5x
+    cheaper than the float argsort it replaced) feeds both the Lemma-3.4
+    residual-norm ladder (the bitcast back is sort(|v|) descending,
+    bitwise) and the threshold band of the drawn rank segment; the segment
+    members come out of a masked s-sized ``lax.top_k``, never a global
+    rank vector.  Bitwise identical to the argsort path: every downstream
+    f32 op replays on the same values in the same order."""
 
     def __init__(self, eager):
         super().__init__(eager)
@@ -722,16 +729,18 @@ class CompiledMLMCTopK(_CompiledMLMCBase):
                      StreamPlan("values", 32, self.s, f32=True))
 
     def _row_encode(self, v, key, probs):
-        from repro.comm.device_wire import rank_segment
+        from repro.kernels import select
 
         comp, d, s, L = self.comp, self.dim, self.s, self.comp.num_levels
         v = jnp.asarray(v, jnp.float32)
-        order = jnp.argsort(-jnp.abs(v))
+        keys = select.magnitude_keys(v)
+        sorted_keys = None
         explicit = 0
         if self.adaptive:
-            # the one argsort feeds both the Lemma-3.4 ladder (|v|[order]
-            # equals sort(|v|) descending elementwise) and the segment
-            sorted_abs = jnp.abs(v)[order]
+            # the one u32 key sort feeds both the Lemma-3.4 ladder and the
+            # band thresholds of the drawn segment
+            sorted_keys = select.sort_magnitude_keys(keys)
+            sorted_abs = select.sorted_abs_desc(v, sorted_keys=sorted_keys)
             sq = jnp.pad(pin_rounding(sorted_abs * sorted_abs),
                          (0, L * s - d))
             deltas = jnp.sqrt(jnp.sum(sq.reshape(L, s), axis=-1))
@@ -748,10 +757,10 @@ class CompiledMLMCTopK(_CompiledMLMCBase):
         level = idx0 + 1
         p_l = jnp.maximum(probs[idx0], 1e-30)
 
-        _, seg, _ = rank_segment(v, idx0, s, pad_idx=d, order=order)
+        seg, in_use = select.rank_band_indices(v, idx0 * s, s, keys=keys,
+                                               sorted_keys=sorted_keys)
         nnz = jnp.clip(d - idx0 * s, 0, s)
-        idx = jnp.sort(seg)                     # pad sentinel d sorts last
-        in_use = jnp.arange(s) < nnz
+        idx = jnp.sort(jnp.where(in_use, seg, d))  # pad sentinel d sorts last
         vals = jnp.where(in_use, v[jnp.clip(idx, 0, d - 1)], 0.0)
         idx = jnp.where(in_use, idx, 0)
         est = jnp.zeros((d,), jnp.float32).at[
@@ -1119,20 +1128,44 @@ _BY_EAGER = {
 }
 
 
-#: Registry names whose COMPILED encode measured SLOWER than the eager
-#: codec (``BENCH_wire.json`` "codec_us"): the EF21 innovation encode is
-#: 224ms compiled vs 180ms eager at the small size and 1.08s vs 0.92s at
-#: the wide size (its deterministic top-k has no per-level jit work to
-#: amortize the staging round-trip).  `default_compiled` routes these to
-#: the eager variant when the caller leaves ``compiled=None``; the bytes
-#: are identical either way, so this is purely a latency default.  An
-#: explicit ``compiled=True/False`` always wins.
-COMPILED_DEFAULT_OFF = frozenset({"ef21", "ef21_sgdm"})
+#: Per-DIRECTION latency defaults (``BENCH_wire.json`` "codec_us",
+#: d=557,696, CPU).  Encode and decode regress independently, so the two
+#: directions carry separate tables and `_make_packed_codec` mixes
+#: pipelines per direction through `HybridCodec` when they disagree.  The
+#: bytes are identical either way, so these are purely latency defaults;
+#: an explicit ``compiled=True/False`` always wins.
+#:
+#: Encode: with the sort-free selection path the compiled encode now wins
+#: for every stochastic codec (mlmc_topk 51ms vs 146ms eager, mlmc_rtn
+#: 11ms vs 122ms).  The EF21 innovation encode stays eager: deterministic
+#: top-k has no per-level jit work to amortize the staging round-trip
+#: (8.7ms compiled vs 7.7ms eager).
+COMPILED_ENCODE_OFF = frozenset({"ef21", "ef21_sgdm"})
+
+#: Decode: the sparse-segment families pay the compiled path's host
+#: staging copy without enough scatter work to amortize it — mlmc_topk
+#: 1.39ms compiled vs 1.15ms eager; ef21 1.59ms vs 0.67ms.  The dense
+#: unpack codecs (qsgd 2.3ms vs 8.1ms, mlmc_rtn 3.0ms vs 8.8ms) keep the
+#: compiled decode.
+COMPILED_DECODE_OFF = frozenset({"ef21", "ef21_sgdm", "mlmc_topk",
+                                 "mlmc_topk_static", "mlmc_stopk"})
+
+#: Legacy whole-pipeline table: names eager in BOTH directions.
+COMPILED_DEFAULT_OFF = COMPILED_ENCODE_OFF & COMPILED_DECODE_OFF
 
 
-def default_compiled(name: str) -> bool:
-    """The measured-faster pipeline for a registry name: True = compiled
-    (every codec except `COMPILED_DEFAULT_OFF`)."""
+def default_compiled(name: str, direction: str | None = None) -> bool:
+    """The measured-faster pipeline for a registry name: True = compiled.
+
+    ``direction`` selects the per-direction table ("encode" / "decode");
+    ``None`` keeps the legacy whole-pipeline answer (False only when BOTH
+    directions default eager)."""
+    if direction == "encode":
+        return name not in COMPILED_ENCODE_OFF
+    if direction == "decode":
+        return name not in COMPILED_DECODE_OFF
+    if direction is not None:
+        raise ValueError(f"unknown direction {direction!r}")
     return name not in COMPILED_DEFAULT_OFF
 
 
@@ -1159,3 +1192,97 @@ def make_compiled_codec(name: str, dim: int, **kw):
     the process lifetime (an aggregator keeps its own reference, so
     eviction never invalidates a live wire)."""
     return _cached(name, dim, tuple(sorted(kw.items())))
+
+
+class HybridCodec:
+    """Per-direction pipeline mix behind one codec-shaped object: compiled
+    encode with eager decode (or the reverse), byte-identical bytes either
+    way.  `default_compiled` measures the two directions independently and
+    some codecs win on exactly one — the sort-free compiled mlmc_topk
+    encode is ~3x the eager one, but its staged decode pays a host buffer
+    copy the tiny eager segment scatter does not.
+
+    The encode half drives ``encode`` (and ``encode_batch`` when it has
+    one — its presence is what routes the aggregators' vmapped batch
+    path).  The decode half drives the SINGLE-packet ``decode`` — the op
+    the TCP per-frame drain and the downlink pay per rank.  The M-packet
+    ``decode_mean`` / ``decode_stack`` prefer a fused implementation from
+    EITHER half (measured: the fused unpack+scatter+mean over persistent
+    staging buffers beats M eager decodes even when one eager decode beats
+    one compiled decode — 3.1 ms vs 11.1 ms for mlmc_topk, M=4,
+    d=557,696) and fall back to the eager per-packet loop.
+    ``decode_device`` is exposed only when the decode half has it, so the
+    TCP drain path (`repro.comm.aggregate._drain_decoding`) sees the
+    truth.  Bit accounting and ``compressor`` delegate to the decode half
+    (both halves share the eager ledger)."""
+
+    def __init__(self, enc, dec):
+        if enc.name != dec.name or enc.dim != dec.dim:
+            raise ValueError("hybrid halves must wrap the same codec")
+        self.enc, self.dec = enc, dec
+        self.name, self.dim = enc.name, enc.dim
+        if hasattr(enc, "encode_batch"):
+            self.encode_batch = enc.encode_batch
+        if hasattr(dec, "decode_device"):
+            self.decode_device = dec.decode_device
+
+    def encode(self, v, rng, probs=None):
+        if probs is None:
+            return self.enc.encode(v, rng)
+        return self.enc.encode(v, rng, probs=probs)
+
+    def decode(self, packet):
+        return self.dec.decode(packet)
+
+    def _fused(self, op: str):
+        for half in (self.dec, self.enc):
+            if hasattr(half, op):
+                return getattr(half, op)
+        return None
+
+    def decode_mean(self, packets):
+        fused = self._fused("decode_mean")
+        if fused is not None:
+            return fused(packets)
+        return jnp.mean(self.decode_stack(packets), axis=0)
+
+    def decode_stack(self, packets):
+        fused = self._fused("decode_stack")
+        if fused is not None:
+            return fused(packets)
+        return jnp.stack([jnp.asarray(self.dec.decode(p))
+                          for p in packets])
+
+    def nominal_bits(self):
+        return self.dec.nominal_bits()
+
+    def header_bits(self, packet):
+        return self.dec.header_bits(packet)
+
+    def measured_bits(self, packet):
+        return self.dec.measured_bits(packet)
+
+    def reconcile_bounds(self, packet):
+        return self.dec.reconcile_bounds(packet)
+
+    @property
+    def compressor(self):
+        return getattr(self.dec, "compressor", None)
+
+
+@functools.lru_cache(maxsize=32)
+def _cached_hybrid(name: str, dim: int, encode_compiled: bool, kw: tuple):
+    comp = _cached(name, dim, kw)
+    eager = comp.eager
+    return HybridCodec(comp if encode_compiled else eager,
+                       eager if encode_compiled else comp)
+
+
+def make_hybrid_codec(name: str, dim: int, *, encode_compiled: bool = True,
+                      **kw):
+    """A cached `HybridCodec`: the compiled pipeline on one direction and
+    that same instance's underlying eager codec on the other (so jit
+    executables and the bit ledger are shared with `make_compiled_codec`
+    for the same (codec, dim, params))."""
+    return _cached_hybrid(name, dim, bool(encode_compiled),
+                          tuple(sorted(kw.items())))

@@ -50,7 +50,9 @@ from repro.comm.packets import (
     header_lane,
 )
 from repro.core import bits as bitcost
-from repro.core.bitwise import _BELOW_ONE, _fixed_scale, FixedPointMultilevel
+from repro.core.bitwise import (_BELOW_ONE, _fixed_scale,
+                                FixedPointMultilevel,
+                                FloatingPointMultilevel)
 from repro.core.topk import STopKMultilevel
 from repro.core.types import categorical
 from repro.kernels.pack import pack_planes, packed_words, unpack_planes
@@ -113,26 +115,24 @@ def topk_segment_words(d: int, s: int, value_bits: int = 16) -> int:
 
 
 def rank_segment(v: Array, idx0: Array, s: int, *, pad_idx: int,
-                 order: Array | None = None) -> tuple[Array, Array, Array]:
-    """ONE argsort -> the MLMC (s-)Top-k level segment.
+                 sorted_keys: Array | None = None) -> tuple[Array, Array]:
+    """Sort-free MLMC (s-)Top-k level segment (`kernels.select` pipeline).
 
-    Returns ``(order, seg_idx, valid)``: the full magnitude order (largest
-    |v| first — reusable for the residual-norm ladder and value gathers;
-    pass a precomputed ``order`` to share the argsort), the original
-    positions of magnitude ranks ``[idx0*s, (idx0+1)*s)`` (entries beyond
-    ``d`` filled with ``pad_idx``), and the in-range mask.  Shared by the
-    device wire (``pad_idx = d - 1``: the packed index must stay in range,
-    values are masked instead) and the compiled byte pipeline
-    (``pad_idx = d``: an out-of-range sentinel that sorts after every real
-    position)."""
-    d = v.shape[0]
-    L = -(-d // s)
-    if order is None:
-        order = jnp.argsort(-jnp.abs(v))
-    so = jnp.pad(order, (0, L * s - d), constant_values=pad_idx)
-    seg_idx = jax.lax.dynamic_slice(so, (idx0 * s,), (s,))
-    valid = jnp.arange(s) + idx0 * s < d
-    return order, seg_idx, valid
+    Returns ``(seg_idx, valid)``: the original positions of magnitude
+    ranks ``[idx0*s, (idx0+1)*s)`` in rank order (entries beyond ``d``
+    filled with ``pad_idx``), and the in-range mask.  Bitwise identical to
+    slicing a global ``argsort(-|v|)``, but extracted from the exact
+    threshold band with one masked s-sized ``lax.top_k``; pass
+    ``sorted_keys`` (from `select.sort_magnitude_keys`) to share the key
+    sort with a ladder computation.  ``pad_idx`` is ``d - 1`` on the
+    device wire (the packed index must stay in range, values are masked
+    instead) and ``d`` on the compiled byte pipeline (an out-of-range
+    sentinel that sorts after every real position)."""
+    from repro.kernels import select
+
+    seg_idx, valid = select.rank_band_indices(v, idx0 * s, s,
+                                              sorted_keys=sorted_keys)
+    return jnp.where(valid, seg_idx, pad_idx), valid
 
 
 def pack_topk_segment(seg_vals: Array, seg_idx: Array, d: int,
@@ -402,6 +402,71 @@ class MLMCFixedDeviceCodec(DeviceCodec):
             self._lane_slack(hdr)
 
 
+class MLMCFloatDeviceCodec(DeviceCodec):
+    """App. B floating point on the device wire: a packed sign+exponent
+    plane (11 bits/entry via `kernels.pack.pack_planes`) plus the 1-bit
+    level-l mantissa plane; scale-free (the exponent rides per entry).
+
+    Like `MLMCFixedDeviceCodec`, the fixed-shape wire cannot ship the
+    byte codec's variable-length dense top-level fallback, so the plane is
+    transmitted at EVERY level: the estimator is unbiased w.r.t. the
+    ``num_bits``-bit mantissa grid value of the gradient (the same
+    grid-unbiased deviation the fixed-point device codec documents)."""
+
+    _EXP_OFFSET = 150   # frexp exponents of f32 (incl. denormals) + 150 >= 0
+
+    def __init__(self, dim: int, num_bits: int = 23):
+        self.name, self.dim = "mlmc_float", dim
+        self.compressor = FloatingPointMultilevel(num_bits=num_bits)
+        self.words_len = packed_words(dim, 11) + packed_words(dim, 1)
+
+    def encode(self, v, rng):
+        v = jnp.asarray(v, jnp.float32)
+        probs = self.compressor.static_probs()
+        probs = probs / jnp.sum(probs)
+        idx = categorical(rng, probs)
+        level = idx + 1
+        p_l = jnp.maximum(probs[idx], 1e-30)
+        m, e = self.compressor._mantissa_exp(v)
+        sgn = jnp.sign(m)
+        ecode = (e + self._EXP_OFFSET).astype(jnp.uint32)
+        base_codes = (ecode << 2) | (sgn + 1.0).astype(jnp.uint32)
+        bit = jnp.mod(jnp.floor(jnp.ldexp(jnp.abs(m), level + 1)), 2.0)
+        # same op order the decode replays (and the byte codec uses)
+        base = jnp.ldexp(sgn * jnp.float32(0.5), e)
+        plane = jnp.ldexp(sgn * bit, e - (level + 1))
+        est = base + plane / p_l
+        words = jnp.concatenate([pack_planes(base_codes, 11),
+                                 pack_planes(bit.astype(jnp.uint32), 1)])
+        pkt = DevicePacket(words, header_lane(prob=p_l, level=level))
+        return pkt, est
+
+    def decode(self, packet):
+        n_base = packed_words(self.dim, 11)
+        base_codes = unpack_planes(packet.words[:n_base], 11, self.dim)
+        sgn = (base_codes & 3).astype(jnp.float32) - jnp.float32(1.0)
+        e = (base_codes >> 2).astype(jnp.int32) - self._EXP_OFFSET
+        bit = unpack_planes(packet.words[n_base:], 1,
+                            self.dim).astype(jnp.float32)
+        level = packet.lane[LANE_LEVEL].astype(jnp.int32)
+        base = jnp.ldexp(sgn * jnp.float32(0.5), e)
+        plane = jnp.ldexp(sgn * bit, e - (level + 1))
+        return base + plane / packet.lane[LANE_PROB]
+
+    def nominal_bits(self):
+        return bitcost.floating_point_mlmc_bits(self.dim,
+                                                self.compressor.num_levels)
+
+    def reconcile_bounds(self):
+        n = self.nominal_bits()   # 13d + log2(L): fp64 ledger (11-bit exp)
+        hdr = 32.0 + math.ceil(math.log2(self.compressor.num_levels))
+        # f32 exponents need 9 bits, not the ledger's 11 -> measured sits
+        # ~2 bits/entry below nominal, plus word padding on both planes
+        return n - 2.0 * self.dim - hdr, \
+            n + self._padding(self.dim, 11) + self._padding(self.dim, 1) + \
+            self._lane_slack(hdr)
+
+
 class MLMCTopKDeviceCodec(DeviceCodec):
     """(s-)Top-k MLMC: one magnitude-rank segment, positions packed at
     ceil(log2 d) bits and values in bf16 (2/word) by default.
@@ -432,11 +497,8 @@ class MLMCTopKDeviceCodec(DeviceCodec):
         est = mlmc_estimate(self.compressor, v, rng, probs=probs,
                             adaptive=self.adaptive and probs is None)
         idx0 = est.level - 1
-        L = self.compressor.num_levels
-        order, seg_idx, valid = rank_segment(v, idx0, s, pad_idx=d - 1)
-        sv = jnp.pad(v[order], (0, L * s - d))
-        seg_vals = jax.lax.dynamic_slice(sv, (idx0 * s,), (s,)) / est.prob
-        seg_vals = jnp.where(valid, seg_vals, 0.0)
+        seg_idx, valid = rank_segment(v, idx0, s, pad_idx=d - 1)
+        seg_vals = jnp.where(valid, v[seg_idx] / est.prob, 0.0)
         pkt = DevicePacket(
             pack_topk_segment(seg_vals, seg_idx, d, self.value_bits),
             header_lane(prob=est.prob, level=est.level))
@@ -477,11 +539,14 @@ class EF21TopKDeviceCodec(DeviceCodec):
 
     def encode(self, u, rng):
         del rng   # Top-k is deterministic
+        from repro.kernels import select
+
         u = jnp.asarray(u, jnp.float32)
-        order = jnp.argsort(-jnp.abs(u))[: self.k]
-        vals = u[order]
-        est = jnp.zeros((self.dim,), jnp.float32).at[order].set(vals)
-        words = pack_topk_segment(vals, order, self.dim, 32)
+        # stable top_k == the first k rows of the old global argsort
+        idx = select.topk_indices(u, self.k)
+        vals = u[idx]
+        est = jnp.zeros((self.dim,), jnp.float32).at[idx].set(vals)
+        words = pack_topk_segment(vals, idx, self.dim, 32)
         return DevicePacket(words, header_lane()), est
 
     def decode(self, packet):
@@ -509,8 +574,8 @@ def make_device_codec(name: str, dim: int, *, k_fraction: float = 0.01,
     """Build the device-wire codec matching ``make_aggregator(name, dim)``.
 
     Only families with a fixed-shape packed form are registered; the
-    variable-length codecs (topk/randk/natural/mlmc_float/mlmc_rtn/EF21)
-    stay on the host byte wire (``wire="packed"``)."""
+    variable-length codecs (topk/randk/natural/mlmc_rtn) stay on the host
+    byte wire (``wire="packed"``)."""
     k = max(1, int(round(k_fraction * dim)))
     if name == "dense":
         return DenseDeviceCodec(dim)
@@ -522,6 +587,8 @@ def make_device_codec(name: str, dim: int, *, k_fraction: float = 0.01,
         return SignSGDDeviceCodec(dim)
     if name == "mlmc_fixed":
         return MLMCFixedDeviceCodec(dim, fixed_levels)
+    if name == "mlmc_float":
+        return MLMCFloatDeviceCodec(dim)
     if name in ("mlmc_topk", "mlmc_topk_static", "mlmc_stopk",
                 "mlmc_adaptive_topk", "mlmc_adaptive_stopk"):
         from repro.core.aggregators import mlmc_topk_segment
@@ -538,9 +605,9 @@ def make_device_codec(name: str, dim: int, *, k_fraction: float = 0.01,
 
 
 DEVICE_WIRE_METHODS = ("dense", "qsgd", "rtn", "signsgd", "mlmc_fixed",
-                       "mlmc_topk", "mlmc_topk_static", "mlmc_stopk",
-                       "mlmc_adaptive_topk", "mlmc_adaptive_stopk",
-                       "ef21", "ef21_sgdm")
+                       "mlmc_float", "mlmc_topk", "mlmc_topk_static",
+                       "mlmc_stopk", "mlmc_adaptive_topk",
+                       "mlmc_adaptive_stopk", "ef21", "ef21_sgdm")
 
 
 def device_aggregator(name: str, dim: int, *, momentum_beta: float = 0.1,

@@ -377,11 +377,12 @@ def make_aggregator(
 
     ``compiled`` (packed wire only) selects the jit-compiled codec fast
     path (`repro.comm.compiled`) vs the original eager codecs — None
-    (default) picks the measured-faster pipeline per codec
-    (`repro.comm.compiled.default_compiled`: compiled for everything but
-    the EF21 family).  Byte-identical packets either way; the explicit
-    flag exists for verification and A-B wire benchmarks
-    (`benchmarks/bench_wire.py`).
+    (default) picks the measured-faster pipeline per codec and DIRECTION
+    (`repro.comm.compiled.default_compiled`: fully eager for the EF21
+    family, compiled encode + eager decode for the mlmc_topk family via
+    `HybridCodec`, fully compiled otherwise).  Byte-identical packets
+    either way; the explicit flag exists for verification and A-B wire
+    benchmarks (`benchmarks/bench_wire.py`).
 
     ``policy`` (any wire) is a per-leaf codec policy — a preset name, a
     ``pattern=codec`` spec string, a rule dict, or a `CodecPolicy` /

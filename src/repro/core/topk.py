@@ -22,20 +22,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import Array, Compressor, MultilevelCompressor, PRNGKey
+from repro.kernels import select as _select
 
 _INDEX_BITS = 32  # we account indices at 32 bits; `bits.py` also offers log2(d)
 
 
 def magnitude_ranks(v: Array) -> Array:
-    """Rank of each entry by descending |value| (rank 0 = largest)."""
-    order = jnp.argsort(-jnp.abs(v))            # positions sorted by magnitude
+    """Rank of each entry by descending |value| (rank 0 = largest).
+
+    Canonical order: descending uint32 keys of |v|, ties ascending index
+    (`kernels.select`) — identical to the historical ``argsort(-|v|)`` for
+    every non-denormal input, and deterministic where CPU float sort
+    comparators flushed denormals.  Materializes a full permutation; the
+    hot paths below select through `kernels.select` without it.
+    """
+    order = jnp.argsort(~_select.magnitude_keys(v))  # stable desc-key order
     ranks = jnp.zeros_like(order).at[order].set(jnp.arange(v.shape[0]))
     return ranks
 
 
 def topk_mask(v: Array, k: Array | int) -> Array:
-    """Boolean mask of the k largest-|.| entries (jit-safe in traced k)."""
-    return magnitude_ranks(v) < k
+    """Boolean mask of the k largest-|.| entries (jit-safe in traced k).
+
+    Sort-free: static k routes through the ``lax.top_k`` custom call,
+    traced k through the threshold band of `kernels.select.topk_mask`.
+    """
+    return _select.topk_mask(v, k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,18 +96,20 @@ class STopKMultilevel(MultilevelCompressor):
 
     def compress(self, v: Array, l: Array | int) -> Array:
         l = jnp.asarray(l, jnp.int32)
-        return jnp.where(magnitude_ranks(v) < l * self.s, v, 0.0)
+        return jnp.where(_select.topk_mask(v, l * self.s), v, 0.0)
 
     def residual(self, v: Array, l: Array | int) -> Array:
         l = jnp.asarray(l, jnp.int32)
-        ranks = magnitude_ranks(v)
-        seg = (ranks >= (l - 1) * self.s) & (ranks < l * self.s)
+        seg = _select.band_mask(v, (l - 1) * self.s, l * self.s)
         return jnp.where(seg, v, 0.0)
 
     def residual_norms(self, v: Array) -> Array:
-        """Delta_l = sqrt(sum of |v|^2 over magnitude ranks [(l-1)s, ls))."""
+        """Delta_l = sqrt(sum of |v|^2 over magnitude ranks [(l-1)s, ls)).
+
+        Sorts the uint32 magnitude keys (4-5x cheaper than a float sort;
+        the bitcast back is bitwise ``jnp.sort(|v|)[::-1]``)."""
         L = self.num_levels
-        sq = jnp.sort(jnp.abs(v))[::-1] ** 2
+        sq = _select.sorted_abs_desc(v) ** 2
         pad = L * self.s - self.d
         sq = jnp.pad(sq, (0, pad))
         return jnp.sqrt(jnp.sum(sq.reshape(L, self.s), axis=-1))

@@ -5,6 +5,7 @@ and the wire-codec bit-packing of `repro.comm` (sub-32-bit field streams).
 
 Validated on CPU via interpret=True against the `ref.py` oracles."""
 
+from repro.kernels import select
 from repro.kernels.pack import pack_bits, unpack_bits
 from repro.kernels.ops import (
     band_select,
@@ -17,5 +18,5 @@ from repro.kernels.ops import (
 )
 
 __all__ = ["band_select", "bitplane_residual", "exp_histogram", "pack_bits",
-           "rtn_quantize", "segment_sumsq", "ternary_bitplane",
+           "rtn_quantize", "segment_sumsq", "select", "ternary_bitplane",
            "topk_threshold", "unpack_bits"]

@@ -22,6 +22,17 @@ its MLMC residual into a collective over the data axes".  Core schemes:
   shard compresses locally and the compressed estimates are gathered and
   averaged (the gather keeps the abstract and device substrates bitwise
   comparable; see below).
+* ``mlmc_fixed_pershard`` — lifts constraint (a) of ``mlmc_fixed``: each
+  shard draws its OWN level and scale (the `MLMCFixedDeviceCodec` lane
+  carries both through the gather), so compression noise averages down in
+  M again — paid for with a gather instead of the int8 psum.
+
+Selection primitives compose across shards without value gathers:
+`global_topk_mask` psums the `repro.kernels.select` byte-radix bucket
+counts (4 x 1 KB) to select against GLOBAL magnitude ranks, with
+cross-shard threshold ties broken in shard-major canonical order from one
+gathered scalar per shard; ``ef21_topk_allreduce(selection="global")``
+spends its total s-slot budget on the globally largest innovations.
 
 Wire substrates (``wire=``):
 
@@ -56,6 +67,7 @@ from jax import lax
 
 from repro.core import bits as bitcost
 from repro.core.types import categorical
+from repro.kernels import select
 from repro.sharding.ctx import ShardCtx
 
 Array = jax.Array
@@ -76,24 +88,27 @@ def dense_allreduce(flat: Array, ctx: ShardCtx) -> tuple[Array, Array]:
     return mean, bits
 
 
-def _sorted_segments(flat: Array, s: int) -> tuple[Array, Array, int]:
-    """One argsort serving both the Lemma-3.4 ladder (segment norms of the
-    sorted vector) and the residual extraction (ranks [(l-1)s, ls))."""
+def _sorted_segments(flat: Array, s: int) -> tuple[Array, int]:
+    """One uint32 magnitude-key sort (`kernels.select` canonical order,
+    4-5x cheaper than the float argsort it replaced) serving both the
+    Lemma-3.4 ladder and the band thresholds of the residual extraction
+    (ranks [(l-1)s, ls)).  Returns the descending keys padded with zero
+    keys to L*s (rank past d) and L."""
     d = flat.shape[0]
     L = math.ceil(d / s)
-    pad = L * s - d
-    order = jnp.argsort(-jnp.abs(flat))
-    sv = jnp.pad(flat[order], (0, pad))
-    so = jnp.pad(order, (0, pad), constant_values=d - 1)
-    return sv, so, L
+    sk = select.sort_magnitude_keys(select.magnitude_keys(flat))
+    return jnp.pad(sk, (0, L * s - d)), L
 
 
-def _segment_ladder(sv: Array, L: int, s: int) -> Array:
-    """Residual-norm ladder Delta_l of the sorted/padded vector."""
-    return jnp.sqrt(jnp.sum(sv.reshape(L, s) ** 2, axis=-1))
+def _segment_ladder(skp: Array, L: int, s: int) -> Array:
+    """Residual-norm ladder Delta_l from the sorted/padded keys (the f32
+    bitcast is |v| sorted descending, bitwise; squares of the signed
+    rank-ordered values are the same bit patterns)."""
+    sa = jax.lax.bitcast_convert_type(skp, jnp.float32)
+    return jnp.sqrt(jnp.sum(sa.reshape(L, s) ** 2, axis=-1))
 
 
-def _gather_segment(flat: Array, ctx: ShardCtx, sv: Array, so: Array,
+def _gather_segment(flat: Array, ctx: ShardCtx, skp: Array,
                     idx0: Array, p_l: Array, *, s: int,
                     wire: str) -> tuple[Array, Array]:
     """Extract this shard's level-(idx0+1) residual segment, cross the data
@@ -101,10 +116,12 @@ def _gather_segment(flat: Array, ctx: ShardCtx, sv: Array, so: Array,
     and mean.  Shared by the stateless Alg.-3 path and the stateful EMA
     variant — the wire is identical, only the level distribution differs."""
     d = flat.shape[0]
-    seg_vals = lax.dynamic_slice(sv, (idx0 * s,), (s,)) / p_l
-    seg_idx = lax.dynamic_slice(so, (idx0 * s,), (s,))
-    # zero padded tail entries (they carry index d-1; value must be 0)
-    seg_vals = jnp.where(jnp.arange(s) + idx0 * s < d, seg_vals, 0.0)
+    seg_idx, valid = select.rank_band_indices(flat, idx0 * s, s,
+                                              sorted_keys=skp)
+    # padded tail entries carry index d-1 (the packed index must stay in
+    # range); their value must be 0
+    seg_idx = jnp.where(valid, seg_idx, d - 1)
+    seg_vals = jnp.where(valid, flat[seg_idx] / p_l, 0.0)
 
     from repro import perf
 
@@ -157,13 +174,13 @@ def mlmc_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
     d = flat.shape[0]
     s = min(s, d)
     rng = jax.random.fold_in(rng, ctx.data_index())  # independent levels
-    sv, so, L = _sorted_segments(flat, s)
+    skp, L = _sorted_segments(flat, s)
 
-    deltas = _segment_ladder(sv, L, s)                           # Lemma 3.4
+    deltas = _segment_ladder(skp, L, s)                          # Lemma 3.4
     probs = probs_from_ladder(deltas)
     idx0 = categorical(rng, probs)                                # 0-based l-1
     p_l = jnp.maximum(probs[idx0], 1e-30)
-    return _gather_segment(flat, ctx, sv, so, idx0, p_l, s=s, wire=wire)
+    return _gather_segment(flat, ctx, skp, idx0, p_l, s=s, wire=wire)
 
 
 def mlmc_adaptive_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
@@ -187,14 +204,14 @@ def mlmc_adaptive_topk_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
     d = flat.shape[0]
     s = min(s, d)
     rng = jax.random.fold_in(rng, ctx.data_index())  # independent levels
-    sv, so, L = _sorted_segments(flat, s)
+    skp, L = _sorted_segments(flat, s)
 
-    deltas = _segment_ladder(sv, L, s)
+    deltas = _segment_ladder(skp, L, s)
     new_ladder = ladder_ema_update(ladder.reshape(L), deltas, ema_rho, step)
     probs = probs_from_ladder(new_ladder)
     idx0 = categorical(rng, probs)
     p_l = jnp.maximum(probs[idx0], 1e-30)
-    mean, bits = _gather_segment(flat, ctx, sv, so, idx0, p_l, s=s, wire=wire)
+    mean, bits = _gather_segment(flat, ctx, skp, idx0, p_l, s=s, wire=wire)
     return mean, bits, new_ladder.reshape(ladder.shape)
 
 
@@ -281,8 +298,40 @@ def _codec_allreduce(flat: Array, ctx: ShardCtx, rng: Array, codec,
     return jnp.mean(ests, axis=0), bits
 
 
+def global_topk_mask(u: Array, k, ctx: ShardCtx) -> Array:
+    """EXACT membership mask of this shard's entries in the GLOBAL top-k
+    of the shard-major concatenation of ``u`` across the data axes —
+    selected from psum'd bucket counts, never gathering values.
+
+    `kernels.select.histogram_threshold` walks four 256-ary byte
+    histograms of the uint32 magnitude keys with each histogram psum'd
+    across shards (4 x 1 KB on the interconnect), yielding the exact
+    global rank-k threshold key.  Cross-shard ties at the threshold are
+    broken in canonical order — ascending global index, i.e. ascending
+    (data shard index, local index) — from one gathered scalar tie count
+    per shard.  With ``ctx`` unsharded this degenerates to the local
+    `topk_mask` bit for bit."""
+    keys = select.magnitude_keys(u)
+    k = jnp.asarray(k, jnp.int32)
+    t = select.histogram_threshold(keys, k - 1, reduce=ctx.psum_data)
+    gt = keys > t
+    eq = keys == t
+    n_gt = ctx.psum_data(jnp.sum(gt.astype(jnp.int32)))
+    n_eq = jnp.sum(eq.astype(jnp.int32))
+    tie_counts = ctx.gather_data_stack(n_eq).reshape(-1)     # (dp_total,)
+    ties_before = jnp.sum(jnp.where(
+        jnp.arange(tie_counts.shape[0]) < ctx.data_index(), tie_counts, 0))
+    take = jnp.clip(k - n_gt - ties_before, 0, n_eq)
+    occ = jnp.cumsum(eq.astype(jnp.int32)) - 1               # tie occurrence
+    return gt | (eq & (occ < take))
+
+
+EF21_SELECTIONS = ("shard", "global")
+
+
 def ef21_topk_allreduce(flat: Array, ctx: ShardCtx, mirror: Array,
-                        server: Array, *, s: int, wire: str = "abstract"
+                        server: Array, *, s: int, wire: str = "abstract",
+                        selection: str = "shard"
                         ) -> tuple[Array, Array, Array, Array]:
     """EF21 (Richtárik et al., 2021) as a mesh collective: each data shard
     keeps a dense mirror ``g_i`` of its own compressed history plus a
@@ -299,15 +348,34 @@ def ef21_topk_allreduce(flat: Array, ctx: ShardCtx, mirror: Array,
     the wire — so the EF21 contraction holds on the lossy ``"device"``
     substrate (bf16-packed values) just as on the raw f32 gather.
 
+    ``selection="global"`` selects the s globally-largest innovation
+    entries ACROSS all data shards (via `global_topk_mask`'s psum'd bucket
+    counts — no value gather) instead of s per shard: the wire form is
+    unchanged (each shard's s slots carry its members of the global set,
+    zero-padded), total traffic buys the best s entries anywhere in the
+    fleet, and the mirror still advances only by what this shard shipped.
+
     Returns ``(direction, bits, new_mirror, new_server)``."""
+    if selection not in EF21_SELECTIONS:
+        raise ValueError(f"unknown ef21 selection {selection!r} "
+                         f"(one of {EF21_SELECTIONS})")
     d = flat.shape[0]
     mirror_shape, server_shape = mirror.shape, server.shape
     mirror = mirror.reshape(d).astype(flat.dtype)
     server = server.reshape(d).astype(flat.dtype)
 
     u = flat - mirror
-    _, idx = lax.top_k(jnp.abs(u), s)
-    vals = u[idx]
+    if selection == "global":
+        member = global_topk_mask(u, s, ctx)
+        # members in rank order out of one masked s-sized top_k; empty
+        # slots point at d-1 with value 0 (the packed index stays in range)
+        _, idx = lax.top_k(jnp.where(member, jnp.abs(u), -1.0), s)
+        valid = jnp.arange(s) < jnp.sum(member.astype(jnp.int32))
+        idx = jnp.where(valid, idx, d - 1)
+        vals = jnp.where(valid, u[idx], 0.0)
+    else:
+        _, idx = lax.top_k(jnp.abs(u), s)
+        vals = u[idx]
 
     if wire == "device":
         from repro.comm.device_wire import (pack_topk_segment,
@@ -338,12 +406,12 @@ def ef21_topk_allreduce(flat: Array, ctx: ShardCtx, mirror: Array,
             new_server.reshape(server_shape))
 
 
-AGG_METHODS = ("dense", "mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd",
-               "mlmc_adaptive_topk", "ef21")
+AGG_METHODS = ("dense", "mlmc_topk", "mlmc_fixed", "mlmc_fixed_pershard",
+               "qsgd", "rtn", "signsgd", "mlmc_adaptive_topk", "ef21")
 
 #: methods with a `wire="device"` packed-collective branch
-DEVICE_METHODS = ("mlmc_topk", "mlmc_fixed", "qsgd", "rtn", "signsgd",
-                  "mlmc_adaptive_topk", "ef21")
+DEVICE_METHODS = ("mlmc_topk", "mlmc_fixed", "mlmc_fixed_pershard", "qsgd",
+                  "rtn", "signsgd", "mlmc_adaptive_topk", "ef21")
 
 #: methods whose mesh collective threads per-shard comm state (see
 #: `repro.train.step.init_mesh_comm_state` for the pytree layout)
@@ -379,6 +447,15 @@ def compressed_allreduce(flat: Array, ctx: ShardCtx, rng: Array,
         return mlmc_topk_allreduce(flat, ctx, rng, s=s, wire=wire)
     if method == "mlmc_fixed":
         return mlmc_fixedpoint_allreduce(flat, ctx, rng, wire=wire)
+    if method == "mlmc_fixed_pershard":
+        # lifts shared-level constraint (a) of the psum path: each shard
+        # draws its OWN level and scale (the `MLMCFixedDeviceCodec` lane
+        # carries both), so compression noise averages down in M again —
+        # paid for with a gather instead of the int8 psum
+        from repro.comm.device_wire import MLMCFixedDeviceCodec
+
+        codec = MLMCFixedDeviceCodec(flat.shape[0])
+        return _codec_allreduce(flat, ctx, rng, codec, wire)
     if method in ("qsgd", "rtn", "signsgd"):
         from repro.comm.device_wire import make_device_codec
 

@@ -66,8 +66,9 @@ class Trainer:
         repro.comm.device_wire; the whole step stays jitted like the
         abstract path).
       wire_compiled: packed wire only — None (default) picks the
-        measured-faster pipeline per codec
-        (`repro.comm.compiled.default_compiled`); True forces the
+        measured-faster pipeline per codec AND direction
+        (`repro.comm.compiled.default_compiled`; a compiled-encode /
+        eager-decode mix ships as a `HybridCodec`); True forces the
         jit-compiled fast path, False the eager codecs (byte-identical
         either way; A-B wire benchmarks).
       downlink: packed/device wires — registry name of a SECOND codec for

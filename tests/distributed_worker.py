@@ -485,12 +485,130 @@ def check_decode_parity():
     print("PASS decode_parity")
 
 
+def check_select_mesh():
+    """The sort-free selection primitives on the 8-device mesh:
+
+    * `global_topk_mask` (psum'd byte histograms + gathered tie counts)
+      matches the host reference — stable u32-key selection over the
+      shard-major concatenation — including cross-shard duplicate
+      magnitudes at the threshold;
+    * `ef21_topk_allreduce(selection="global")` spends the total budget on
+      the globally largest innovations and reproduces the host reference
+      direction exactly;
+    * `mlmc_fixed_pershard` lifts the shared-scale constraint: per-shard
+      lane scales differ, abstract == device bitwise, MC mean unbiased.
+    """
+    from repro.sharding.collectives import (ef21_topk_allreduce,
+                                            global_topk_mask)
+
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    ctx = ctx_for_mesh(mesh)
+    d, k = 512, 37
+    decay = jnp.exp(-0.02 * jnp.arange(d))
+    g = jax.random.normal(jax.random.PRNGKey(0), (2, 2, d)) * decay
+    # force cross-shard ties at the threshold: quantize magnitudes hard
+    g_tied = jnp.round(g * 4.0) / 4.0
+
+    def global_ref(gm, kk):
+        """Host reference: stable u32-key top-k over the shard-major
+        concatenation (M, d) -> per-shard membership masks."""
+        u = np.asarray(gm).reshape(-1, d)
+        keys = np.abs(u.reshape(-1)).astype(np.float32).view(np.uint32)
+        order = np.argsort(~keys, kind="stable")       # desc keys, asc idx
+        member = np.zeros(keys.shape[0], bool)
+        member[order[:kk]] = True
+        return member.reshape(-1, d)
+
+    def run_mask(gm, kk):
+        def body(gs, _):
+            return global_topk_mask(gs.reshape(-1), kk, ctx)[None, None]
+
+        fn = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P("pod", "data", None), P()),
+            out_specs=P("pod", "data", None), check_vma=False))
+        return np.asarray(fn(gm, jnp.zeros(()))).reshape(-1, d)
+
+    for label, gm in (("normal", g), ("tied", g_tied)):
+        got = run_mask(gm, k)
+        want = global_ref(gm, k)
+        np.testing.assert_array_equal(got, want, err_msg=label)
+        assert got.sum() == k, (label, got.sum())
+    print("PASS global_topk_mask")
+
+    s = 24
+
+    def run_ef21_global(gm):
+        def body(gs):
+            flat = gs.reshape(-1)
+            direction, bits, mir, srv = ef21_topk_allreduce(
+                flat, ctx, jnp.zeros_like(flat), jnp.zeros_like(flat),
+                s=s, selection="global")
+            return direction, mir[None, None]
+
+        fn = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P("pod", "data", None),),
+            out_specs=(P(), P("pod", "data", None)),
+            check_vma=False))
+        return fn(gm)
+
+    direction, mirrors = run_ef21_global(g)
+    # total budget = s across ALL shards (mirror zero => u = g)
+    member = global_ref(g, s)
+    u = np.asarray(g).reshape(-1, d)
+    want_dir = (u * member).sum(0) / member.shape[0]
+    np.testing.assert_allclose(np.asarray(direction), want_dir,
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(mirrors).reshape(-1, d),
+                               u * member, rtol=1e-6, atol=1e-7)
+    print("PASS ef21_global_selection")
+
+    def run_pershard(method, wire, key):
+        def body(gs, rng):
+            out, bits = compressed_allreduce(gs.reshape(-1), ctx, rng,
+                                             method, wire=wire)
+            return out, bits
+
+        fn = jax.jit(shard_map(
+            body, mesh=mesh,
+            in_specs=(P("pod", "data", None), P()),
+            out_specs=(P(), P()), check_vma=False))
+        return fn(g, key)
+
+    out_a, _ = run_pershard("mlmc_fixed_pershard", "abstract",
+                            jax.random.PRNGKey(3))
+    out_d, _ = run_pershard("mlmc_fixed_pershard", "device",
+                            jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_d))
+
+    # per-shard scales really differ (the constraint the method lifts)
+    from repro.comm.device_wire import MLMCFixedDeviceCodec
+
+    codec = MLMCFixedDeviceCodec(d)
+    rng = jax.random.PRNGKey(3)
+    scales = {
+        float(codec.encode(jnp.asarray(g[i, j]),
+                           jax.random.fold_in(rng, i * 2 + j))[0].lane[0])
+        for i in range(2) for j in range(2)}
+    assert len(scales) > 1, scales
+
+    target = np.asarray(g.mean((0, 1)))
+    outs = np.stack([
+        np.asarray(run_pershard("mlmc_fixed_pershard", "abstract", kk)[0])
+        for kk in jax.random.split(jax.random.PRNGKey(5), 60)])
+    rel = np.linalg.norm(outs.mean(0) - target) / np.linalg.norm(target)
+    assert rel < 0.3, rel
+    print(f"PASS mlmc_fixed_pershard rel={rel:.3f}")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     fns = {"collectives": check_collectives, "train": check_train_parity,
            "fsdp": check_fsdp, "decode": check_decode_parity,
            "device_wire": check_device_wire, "stateful": check_stateful,
-           "ef21_policy": check_ef21_policy}
+           "ef21_policy": check_ef21_policy,
+           "select_mesh": check_select_mesh}
     if which == "all":
         for f in fns.values():
             f()

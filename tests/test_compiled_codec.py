@@ -383,16 +383,32 @@ def test_no_retrace_tcp_loopback():
 
 
 def test_per_codec_compiled_default_table():
-    """``compiled=None`` routes each codec to its measured-faster pipeline
-    (BENCH_wire.json: the EF21 family's compiled encode is slower than
-    eager), and the explicit flag still overrides in both directions."""
+    """``compiled=None`` routes each (codec, direction) to its
+    measured-faster pipeline (BENCH_wire.json "codec_us"): the EF21 family
+    stays fully eager, the mlmc_topk family gets a `HybridCodec` (compiled
+    encode, eager decode), and the explicit flag still overrides in both
+    directions."""
     from repro.comm import packed_aggregator
     from repro.comm.aggregate import _is_compiled
-    from repro.comm.compiled import COMPILED_DEFAULT_OFF, default_compiled
+    from repro.comm.compiled import (
+        COMPILED_DECODE_OFF,
+        COMPILED_DEFAULT_OFF,
+        COMPILED_ENCODE_OFF,
+        CompiledCodec,
+        HybridCodec,
+        default_compiled,
+    )
     from repro.core.aggregators import ALL_AGGREGATORS, make_aggregator
 
+    assert COMPILED_ENCODE_OFF == {"ef21", "ef21_sgdm"}
+    assert COMPILED_DECODE_OFF == {"ef21", "ef21_sgdm", "mlmc_topk",
+                                   "mlmc_topk_static", "mlmc_stopk"}
     assert COMPILED_DEFAULT_OFF == {"ef21", "ef21_sgdm"}
     for name in ALL_AGGREGATORS:
+        assert default_compiled(name, "encode") == \
+            (name not in COMPILED_ENCODE_OFF)
+        assert default_compiled(name, "decode") == \
+            (name not in COMPILED_DECODE_OFF)
         assert default_compiled(name) == (name not in COMPILED_DEFAULT_OFF)
 
     def codec_of(agg):
@@ -405,12 +421,49 @@ def test_per_codec_compiled_default_table():
         assert _is_compiled(codec_of(agg)) == want, name
         forced = packed_aggregator(name, D, **CODEC_KW, compiled=not want)
         assert _is_compiled(codec_of(forced)) == (not want), name
+        # an explicit flag always yields a single-pipeline codec
+        assert not isinstance(codec_of(forced), HybridCodec), name
+
+    # the split defaults surface as a hybrid: compiled encode half, eager
+    # decode half, and NO decode_device (the TCP drain path must decode
+    # eagerly per arriving frame)
+    hyb = codec_of(packed_aggregator("mlmc_topk", D, **CODEC_KW))
+    assert isinstance(hyb, HybridCodec)
+    assert hasattr(hyb, "encode_batch")
+    assert isinstance(hyb.enc, CompiledCodec)
+    assert not isinstance(hyb.dec, CompiledCodec)
+    assert not hasattr(hyb, "decode_device")
+    # fully-on codecs stay plain compiled instances
+    assert not isinstance(
+        codec_of(packed_aggregator("qsgd", D, **CODEC_KW)), HybridCodec)
+
     # the table threads through make_aggregator (what Trainer uses)
     via_make = make_aggregator("ef21", D, **CODEC_KW, wire="packed")
     assert not _is_compiled(codec_of(via_make))
     via_make = make_aggregator("ef21", D, **CODEC_KW, wire="packed",
                                compiled=True)
     assert _is_compiled(codec_of(via_make))
+
+
+def test_hybrid_default_equals_forced_pipelines():
+    """The default (hybrid) mlmc_topk packed aggregator reproduces both
+    forced pipelines bit-for-bit: same direction, same measured bits."""
+    from repro.comm import packed_aggregator
+
+    V = jnp.stack([_grad(seed=61 + i) for i in range(M)])
+    for name in ("mlmc_topk", "mlmc_adaptive_topk", "ef21"):
+        default = packed_aggregator(name, D, **CODEC_KW)
+        eager = packed_aggregator(name, D, **CODEC_KW, compiled=False)
+        st_d, st_e = default.init(M, D), eager.init(M, D)
+        for t in range(2):
+            key = jax.random.fold_in(jax.random.PRNGKey(5), t)
+            od = default.step(st_d, V, key)
+            oe = eager.step(st_e, V, key)
+            st_d, st_e = od.state, oe.state
+            np.testing.assert_array_equal(np.asarray(od.direction),
+                                          np.asarray(oe.direction),
+                                          err_msg=f"{name} step {t}")
+            assert float(od.bits) == float(oe.bits), (name, t)
 
 
 def test_packed_aggregator_compiled_equals_eager():

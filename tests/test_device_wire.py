@@ -34,7 +34,8 @@ D = 257
 CODEC_KW = dict(k_fraction=0.05, s=4, qsgd_levels=2, rtn_level=4)
 #: families whose device wire replays the abstract f32 math bit-for-bit;
 #: mlmc_topk* ship bf16 values (2/word) and are asserted separately
-EXACT_METHODS = ("dense", "qsgd", "rtn", "signsgd", "mlmc_fixed")
+EXACT_METHODS = ("dense", "qsgd", "rtn", "signsgd", "mlmc_fixed",
+                 "mlmc_float")
 
 
 def _grad(d=D, seed=0):
@@ -224,9 +225,10 @@ def test_device_aggregator_traces_without_callbacks(name):
 
 def test_device_wire_unsupported_methods_raise():
     # ef21 / ef21_sgdm / mlmc_adaptive_topk got fixed-shape device codecs
-    # in the stateful-pipeline refactor and are tested above; the
-    # variable-length families still live on the host byte wire only
-    for name in ("topk", "randk", "natural", "mlmc_float", "mlmc_rtn",
+    # in the stateful-pipeline refactor, mlmc_float in the sort-free
+    # selection PR, and all are tested above; the variable-length
+    # families still live on the host byte wire only
+    for name in ("topk", "randk", "natural", "mlmc_rtn",
                  "mlmc_adaptive_rtn", "signsgd_ef", "fixed2"):
         with pytest.raises(ValueError):
             make_aggregator(name, 64, wire="device")

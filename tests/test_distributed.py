@@ -66,6 +66,19 @@ def test_ef21_and_policy_on_mesh():
 
 
 @pytest.mark.slow
+def test_select_primitives_on_mesh():
+    """Sort-free selection on the mesh: `global_topk_mask` (psum'd byte
+    histograms, cross-shard tie-break) == the host reference,
+    ``ef21_topk_allreduce(selection="global")`` reproduces the global-
+    budget direction, and `mlmc_fixed_pershard` holds abstract==device
+    parity with genuinely per-shard scales."""
+    out = _run("select_mesh")
+    assert "PASS global_topk_mask" in out
+    assert "PASS ef21_global_selection" in out
+    assert "PASS mlmc_fixed_pershard" in out
+
+
+@pytest.mark.slow
 def test_sharded_train_parity():
     assert "PASS train_parity" in _run("train")
 

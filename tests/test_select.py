@@ -1,0 +1,218 @@
+"""repro.kernels.select: the sort-free exact selection pipeline.
+
+The contract under test: every primitive reproduces the canonical order —
+descending uint32 bitcast of |v|, ties broken by ascending index — that
+the retired global ``argsort(-|v|)`` implied, bit for bit, on BOTH
+implementations ("sort" key-sort thresholds and the "histogram" byte-radix
+walk).  The reference is a numpy stable argsort over the u32 keys, which
+never flushes denormals (unlike the XLA CPU float comparator the legacy
+path leaned on — see the module docstring).
+
+`hypothesis` is not available in the container, so the adversarial inputs
+are a seeded parametrized pool: duplicate magnitudes, +/- pairs,
+denormals, all-zero vectors, odd dims, d=1, and every MLMC level.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src import test_util as jtu
+
+from repro.kernels import select
+
+jax.config.update("jax_platform_name", "cpu")
+
+IMPLS = ("sort", "histogram")
+
+
+def _make_case(case: str, d: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed + 97 * d)
+    v = rng.standard_normal(d).astype(np.float32)
+    v *= np.exp(-2.0 * rng.random(d)).astype(np.float32)
+    if case == "normal":
+        return v
+    if case == "dups":
+        # heavy magnitude ties (plus exact +/- pairs) at every scale
+        q = np.round(v * 4.0) / 4.0
+        q[:: 3] *= -1.0
+        return q.astype(np.float32)
+    if case == "denormal":
+        out = v.copy()
+        out[:: 4] = np.float32(1e-40) * rng.integers(0, 4, size=len(out[::4]))
+        out[1:: 4] = np.float32(-1e-41)
+        return out.astype(np.float32)
+    if case == "zeros":
+        return np.zeros(d, np.float32)
+    raise AssertionError(case)
+
+
+CASES = ("normal", "dups", "denormal", "zeros")
+DIMS = (1, 33, 257)
+
+
+def _ref_order(v: np.ndarray) -> np.ndarray:
+    """Canonical order: descending u32 keys of |v|, stable (asc. index)."""
+    keys = np.abs(np.asarray(v, np.float32)).view(np.uint32)
+    return np.argsort(~keys, kind="stable")
+
+
+def _ref_ranks(v: np.ndarray) -> np.ndarray:
+    order = _ref_order(v)
+    ranks = np.empty(len(order), np.int64)
+    ranks[order] = np.arange(len(order))
+    return ranks
+
+
+def _bounds(d: int):
+    s = max(1, d // 5)
+    return sorted({(0, 0), (0, 1), (0, d), (0, min(s, d)),
+                   (s, min(2 * s, d)), (max(d - s, 0), d), (d, d)})
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("d", DIMS)
+def test_band_mask_matches_reference(impl, case, d):
+    v = _make_case(case, d)
+    ranks = _ref_ranks(v)
+    jv = jnp.asarray(v)
+    banded = jax.jit(
+        lambda vv, r0, r1: select.band_mask(vv, r0, r1, impl=impl))
+    for r0, r1 in _bounds(d):
+        want = (ranks >= r0) & (ranks < r1)
+        got = np.asarray(select.band_mask(jv, r0, r1, impl=impl))
+        np.testing.assert_array_equal(got, want, err_msg=f"{r0}:{r1}")
+        # traced bounds take the same path
+        got_t = np.asarray(banded(jv, jnp.int32(r0), jnp.int32(r1)))
+        np.testing.assert_array_equal(got_t, want, err_msg=f"jit {r0}:{r1}")
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("d", DIMS)
+def test_topk_mask_static_and_traced(impl, case, d):
+    v = _make_case(case, d, seed=1)
+    ranks = _ref_ranks(v)
+    jv = jnp.asarray(v)
+    traced = jax.jit(lambda vv, kk: select.topk_mask(vv, kk, impl=impl))
+    for k in sorted({0, 1, d // 3, d - 1, d}):
+        want = ranks < k
+        np.testing.assert_array_equal(
+            np.asarray(select.topk_mask(jv, k, impl=impl)), want,
+            err_msg=f"static k={k}")
+        np.testing.assert_array_equal(
+            np.asarray(traced(jv, jnp.int32(k))), want,
+            err_msg=f"traced k={k}")
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("d", DIMS)
+def test_rank_band_indices_rank_order(impl, case, d):
+    v = _make_case(case, d, seed=2)
+    order = _ref_order(v)
+    jv = jnp.asarray(v)
+    s = max(1, d // 4)
+    for r0 in sorted({0, s, max(d - s // 2, 0), d}):
+        idx, valid = select.rank_band_indices(jv, r0, s, impl=impl)
+        idx, valid = np.asarray(idx), np.asarray(valid)
+        n = int(np.clip(d - r0, 0, s))
+        assert valid.sum() == n, (r0, valid)
+        np.testing.assert_array_equal(idx[:n], order[r0:r0 + n],
+                                      err_msg=f"r0={r0}")
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("d", DIMS)
+def test_histogram_threshold_matches_key_sort(case, d):
+    v = _make_case(case, d, seed=3)
+    keys = select.magnitude_keys(jnp.asarray(v))
+    sorted_keys = select.sort_magnitude_keys(keys)
+    walk = jax.jit(lambda kk, r: select.histogram_threshold(kk, r))
+    # in-range ranks only: callers (`band_mask`) clip to [0, d-1] first
+    for rank in sorted({0, min(1, d - 1), d // 2, d - 1}):
+        want = int(sorted_keys[rank])
+        assert int(walk(keys, jnp.int32(rank))) == want, rank
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("d", DIMS)
+def test_sorted_abs_desc_bitwise(case, d):
+    v = _make_case(case, d, seed=4)
+    got = np.asarray(select.sorted_abs_desc(jnp.asarray(v)))
+    want = np.sort(np.abs(v))[::-1]
+    np.testing.assert_array_equal(got.view(np.uint32),
+                                  want.view(np.uint32))
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("d", DIMS)
+def test_matches_legacy_float_argsort_without_denormals(impl, d):
+    """On denormal-free inputs (every golden fixture) the canonical order
+    IS the legacy stable ``argsort(-|v|)`` order."""
+    for case in ("normal", "dups", "zeros"):
+        v = _make_case(case, d, seed=5)
+        legacy = np.argsort(-np.abs(v), kind="stable")
+        for k in (1, max(1, d // 3), d):
+            want = np.zeros(d, bool)
+            want[legacy[:k]] = True
+            got = np.asarray(select.topk_mask(jnp.asarray(v), k, impl=impl))
+            np.testing.assert_array_equal(got, want,
+                                          err_msg=f"{case} k={k}")
+
+
+@pytest.mark.parametrize("case", ("normal", "dups"))
+def test_every_mlmc_level_band(case):
+    """The s-Top-k ladder: compress/residual at EVERY level equal the
+    reference rank bands (compress = ranks < l*s, residual = the
+    [(l-1)s, ls) band)."""
+    from repro.core.topk import STopKMultilevel
+
+    d, s = 37, 5
+    v = _make_case(case, d, seed=6)
+    ranks = _ref_ranks(v)
+    comp = STopKMultilevel(d=d, s=s)
+    for level in range(1, comp.num_levels + 1):
+        got_c = np.asarray(comp.compress(jnp.asarray(v), level))
+        np.testing.assert_array_equal(
+            got_c, np.where(ranks < level * s, v, 0.0),
+            err_msg=f"compress l={level}")
+        got_r = np.asarray(comp.residual(jnp.asarray(v), level))
+        np.testing.assert_array_equal(
+            got_r, np.where((ranks >= (level - 1) * s) & (ranks < level * s),
+                            v, 0.0),
+            err_msg=f"residual l={level}")
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_traced_bounds_do_not_retrace(impl):
+    """One lowering serves every rank: the pipeline is fixed-shape in the
+    traced bounds (the property that keeps the packed/device wires at
+    zero steady-state lowerings — see test_compiled_codec.py)."""
+    d, s = 64, 8
+    v = jnp.asarray(_make_case("normal", d, seed=7))
+    band = jax.jit(lambda vv, r0: select.rank_band_indices(
+        vv, r0, s, impl=impl))
+    band(v, jnp.int32(0))                              # warmup lowering
+    with jtu.count_jit_and_pmap_lowerings() as count:
+        for r0 in (0, s, 3 * s, d):
+            band(v, jnp.int32(r0))
+    assert count[0] == 0, count[0]
+
+
+def test_rank_band_indices_s_larger_than_d():
+    """s > d: the fixed (s,) shape pads with invalid slots, never aliases
+    real indices into the valid region."""
+    d, s = 5, 9
+    v = jnp.asarray(_make_case("dups", d, seed=8))
+    order = _ref_order(np.asarray(v))
+    for impl in IMPLS:
+        idx, valid = select.rank_band_indices(v, 0, s, impl=impl)
+        assert int(np.asarray(valid).sum()) == d
+        np.testing.assert_array_equal(np.asarray(idx)[:d], order)
+
+
+def test_impl_validation():
+    with pytest.raises(ValueError):
+        select.band_mask(jnp.ones((4,)), 0, 2, impl="radix")
