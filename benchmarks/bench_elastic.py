@@ -1,0 +1,175 @@
+"""Elastic deadline-aggregation benchmark — straggler cost vs deadline.
+
+The PR-10 elastic star lets rank 0 close each aggregation round
+``deadline_ms`` after it starts and serve whoever arrived, reweighted by
+inverse participation (Horvitz-Thompson) so the run-mean direction stays
+unbiased.  This benchmark runs a 4-rank threaded tcp world (real localhost
+sockets) with one injected straggler and sweeps straggler delay x deadline,
+reporting per entry:
+
+* ``rounds_per_s`` — measured on rank 0 (the deadline's whole point: a
+  straggler stops costing the world its delay);
+* ``direction_err`` — ||run-mean direction - full-world mean|| / ||mean||,
+  the unbiasedness price actually paid at this fault rate;
+* ``partial_rounds`` and ``participation_mean`` from the recorded masks.
+
+Emits ``BENCH_elastic.json`` at the REPO ROOT:
+
+    PYTHONPATH=src python -m benchmarks.bench_elastic            # full
+    PYTHONPATH=src python -m benchmarks.bench_elastic --smoke    # CI tier
+
+The smoke tier never clobbers a committed full record (same contract as
+``bench_wire`` / ``bench_downlink``).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import threading
+import time
+
+import numpy as np
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_elastic.json"
+
+WORLD = 4
+DIM = 1024
+STRAGGLER = 3            # the last rank drags every round by ``delay_s``
+#: ``None`` = synchronous semantics (a deadline no round ever hits)
+SYNC_DEADLINE_MS = 30000.0
+
+
+def _connect(world, deadline_ms):
+    from repro.comm.multihost import TcpStarTransport
+
+    server = TcpStarTransport.listen(port=0, world=world, timeout=30.0,
+                                     deadline_ms=deadline_ms)
+    tps = {0: server}
+
+    def join(r):
+        tps[r] = TcpStarTransport.connect(
+            "127.0.0.1", server.port, rank=r, world=world, timeout=30.0,
+            deadline_ms=deadline_ms)
+
+    threads = [threading.Thread(target=join, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    server.accept_workers()
+    for t in threads:
+        t.join()
+    return tps
+
+
+def _run_one(delay_s: float, deadline_ms: float | None, rounds: int) -> dict:
+    """One grid cell: dense aggregation of fixed per-rank gradients with
+    rank ``STRAGGLER`` sleeping ``delay_s`` before every uplink."""
+    import jax
+
+    from repro.comm import Fault, FaultSchedule, FaultyTransport, \
+        packed_aggregator
+
+    rng = np.random.default_rng(0)
+    grads = np.asarray(rng.normal(size=(WORLD, DIM)), np.float32)
+    gbar = grads.astype(np.float64).mean(axis=0)
+    # straggles every OTHER round: an always-late rank is simply censored
+    # (nothing to reweight), an intermittent one exercises the
+    # Horvitz-Thompson correction that keeps the run-mean unbiased
+    sched = FaultSchedule({STRAGGLER: [Fault(t, "delay", delay_s)
+                                       for t in range(0, rounds, 2)]}) \
+        if delay_s > 0 else FaultSchedule()
+
+    tps = _connect(WORLD, deadline_ms if deadline_ms is not None
+                   else SYNC_DEADLINE_MS)
+    aggs = {0: packed_aggregator("dense", DIM, transport=tps[0])}
+    for r in range(1, WORLD):
+        aggs[r] = packed_aggregator(
+            "dense", DIM, transport=FaultyTransport(tps[r], sched))
+    key = jax.random.PRNGKey(0)
+    fail = []
+
+    def worker(r):
+        try:
+            for t in range(rounds):
+                aggs[r](grads[r:r + 1], key, None)
+        except Exception as e:    # pragma: no cover - surfaced below
+            fail.append((r, repr(e)))
+
+    threads = [threading.Thread(target=worker, args=(r,))
+               for r in range(1, WORLD)]
+    for t in threads:
+        t.start()
+    dirs, masks = [], []
+    t0 = time.perf_counter()
+    for t in range(rounds):
+        out = aggs[0](grads[0:1], key, None)
+        dirs.append(np.asarray(out.direction, np.float64))
+        mask = np.zeros(WORLD, bool)
+        mask[tps[0].last_participation] = True
+        masks.append(mask)
+    wall = time.perf_counter() - t0
+    for t in threads:
+        t.join(timeout=120)
+    for t in tps.values():
+        t.close()
+    if fail:
+        raise RuntimeError(f"worker ranks failed: {fail}")
+    dirs, masks = np.stack(dirs), np.stack(masks)
+    err = float(np.linalg.norm(dirs.mean(axis=0) - gbar)
+                / np.linalg.norm(gbar))
+    return {
+        "rounds_per_s": round(rounds / max(wall, 1e-9), 2),
+        "direction_err": round(err, 6),
+        "partial_rounds": int((~masks.all(axis=1)).sum()),
+        "participation_mean": round(float(masks.sum(axis=1).mean()), 3),
+    }
+
+
+def main(smoke: bool = False) -> dict:
+    rounds = 15 if smoke else 60
+    # the deadline clock starts at the FIRST arrival, so the straggler
+    # only misses the cut when its delay exceeds the deadline
+    delays_ms = (0, 90) if smoke else (0, 90, 250)
+    deadlines_ms = (None, 50.0)
+    record = {"benchmark": "elastic", "smoke": smoke, "rounds": rounds,
+              "world": WORLD, "dim": DIM, "straggler_rank": STRAGGLER,
+              "grid": {}}
+    for delay in delays_ms:
+        for deadline in deadlines_ms:
+            label = f"delay{delay}ms/" \
+                    + ("sync" if deadline is None else f"dl{deadline:.0f}ms")
+            t0 = time.time()
+            r = _run_one(delay / 1000.0, deadline, rounds)
+            record["grid"][label] = r
+            print(f"bench_elastic/{label},"
+                  f"{1e6 / max(r['rounds_per_s'], 1e-9):.0f},"
+                  f"err={r['direction_err']:.4f};"
+                  f"partial={r['partial_rounds']};"
+                  f"part_mean={r['participation_mean']}"
+                  f" ({time.time() - t0:.1f}s)", flush=True)
+    # the headline: under a straggler the deadline arm serves rounds
+    # faster than the synchronous arm at a bounded direction error
+    slow = f"delay{delays_ms[-1]}ms"
+    record["speedup_at_max_delay"] = round(
+        record["grid"][f"{slow}/dl50ms"]["rounds_per_s"]
+        / max(record["grid"][f"{slow}/sync"]["rounds_per_s"], 1e-9), 3)
+    keep = False
+    if smoke and OUT_PATH.exists():
+        try:
+            # never clobber a committed FULL perf record with a smoke run
+            keep = not json.loads(OUT_PATH.read_text()).get("smoke", True)
+        except (json.JSONDecodeError, OSError):
+            pass
+    if keep:
+        print(f"# smoke run: kept existing full record {OUT_PATH}")
+    else:
+        OUT_PATH.write_text(json.dumps(record, indent=1) + "\n")
+        print(f"# wrote {OUT_PATH}")
+    return record
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -38,7 +38,12 @@ from repro.comm.compiled import (
     compile_codec,
     make_compiled_codec,
 )
-from repro.comm.multihost import TcpStarTransport, is_multihost_transport
+from repro.comm.elastic import BackoffSchedule, Membership, \
+    participation_weights
+from repro.comm.faultinject import Fault, FaultSchedule, FaultyTransport, \
+    InjectedFault
+from repro.comm.multihost import ServerShutdown, TcpStarTransport, \
+    TransportError, is_multihost_transport
 from repro.comm.device_wire import (
     DEVICE_WIRE_METHODS,
     DeviceCodec,
@@ -70,18 +75,21 @@ from repro.comm.transport import (
 )
 
 __all__ = [
+    "BackoffSchedule",
     "CodecPolicy", "CompiledCodec", "CostModel", "DEVICE_WIRE_METHODS",
-    "DeviceCodec", "DevicePacket", "EncodeResult", "Header",
-    "LoopbackTransport", "MultihostPackedAdaptive",
+    "DeviceCodec", "DevicePacket", "EncodeResult", "Fault",
+    "FaultSchedule", "FaultyTransport", "Header", "InjectedFault",
+    "LoopbackTransport", "Membership", "MultihostPackedAdaptive",
     "MultihostPackedAggregate", "MultihostPackedEF21",
     "POLICY_PRESETS", "PackedAdaptiveMLMC",
     "PackedAggregate", "PackedEF21", "Packet", "PolicyRule",
-    "ResolvedPolicy", "Segment",
+    "ResolvedPolicy", "Segment", "ServerShutdown",
     "SimulatedTransport", "Stream", "TcpStarTransport", "Transport",
+    "TransportError",
     "TransportStats", "WireCodec", "compile_codec", "device_aggregator",
     "header_lane", "is_multihost_transport", "make_codec",
     "make_compiled_codec", "make_device_codec",
     "make_topology", "make_transport", "pack_bits", "pack_planes",
-    "packed_aggregator", "simulated_step_time", "unpack_bits",
-    "unpack_planes",
+    "packed_aggregator", "participation_weights", "simulated_step_time",
+    "unpack_bits", "unpack_planes",
 ]

@@ -309,6 +309,62 @@ def unpack_encoded_direction(raw: bytes, dim: int) -> tuple[bytes, float]:
     return raw[_DIRE_HEADER_BYTES:], bits
 
 
+#: the elastic DIRECTION payload (deadline partial aggregation): RCD1's
+#: fields plus the world size and a per-rank participation mask byte each,
+#: so every rank books identical ``wire/partial_round`` telemetry from the
+#: same broadcast bytes.  Append-only next to RCD1/RCD2: receivers
+#: dispatch on the magic, old readers reject RCD3 loudly, never silently.
+_DIRP_MAGIC = b"RCD3"
+_DIRP_FMT = "<4sIdB"
+_DIRP_HEADER_BYTES = struct.calcsize(_DIRP_FMT)    # 17
+
+
+def pack_partial_direction(direction: np.ndarray, bits: float,
+                           mask: np.ndarray) -> bytes:
+    """Serialize one elastic-round direction: RCD3 header, one
+    participation byte per rank (1 = that rank's uplink made the
+    deadline), then the dim f32 direction."""
+    v = np.ascontiguousarray(np.asarray(direction), np.float32)
+    m = np.ascontiguousarray(np.asarray(mask, bool))
+    return (struct.pack(_DIRP_FMT, _DIRP_MAGIC, v.size, float(bits), m.size)
+            + m.astype(np.uint8).tobytes() + v.tobytes())
+
+
+def unpack_partial_direction(raw: bytes,
+                             dim: int) -> tuple[np.ndarray, float,
+                                                np.ndarray]:
+    """Inverse of `pack_partial_direction` -> (direction, bits, mask)."""
+    if len(raw) < _DIRP_HEADER_BYTES:
+        raise ValueError(f"truncated partial-direction blob: "
+                         f"{len(raw)} bytes")
+    magic, d, bits, world = struct.unpack_from(_DIRP_FMT, raw, 0)
+    if magic != _DIRP_MAGIC:
+        raise ValueError(f"bad partial-direction magic {magic!r}")
+    if d != dim or len(raw) != _DIRP_HEADER_BYTES + world + 4 * d:
+        raise ValueError(f"partial-direction blob for dim {d} / world "
+                         f"{world} / {len(raw)} bytes, expected dim {dim}")
+    mask = np.frombuffer(raw, np.uint8, world,
+                         _DIRP_HEADER_BYTES).astype(bool)
+    vec = np.frombuffer(raw, np.float32, d, _DIRP_HEADER_BYTES + world)
+    return vec, bits, mask
+
+
+def _record_partial_round(tel, tp, mask: np.ndarray) -> None:
+    """Book one elastic round's participation on THIS rank: an instant
+    event when the round was partial, plus the participation-count
+    histogram every round (server and workers read the same broadcast
+    mask, so the books agree bitwise across the world)."""
+    if not tel.enabled:
+        return
+    n = int(np.count_nonzero(mask))
+    round_ = int(getattr(tp, "last_round", -1))
+    if n < mask.size:
+        tel.instant("wire/partial_round", cat="wire", pid=tp.rank,
+                    round=round_, n_arrived=n, world=int(mask.size),
+                    participants=[int(r) for r in np.flatnonzero(mask)])
+    tel.observe("wire_participation", float(n), transport="tcp")
+
+
 #: fold_in tag deriving the downlink draw key from the per-step rng —
 #: distinct from the uplink's `jax.random.split` fan so the downlink
 #: codec's stochasticity (if any) never correlates with a worker's draw
@@ -450,6 +506,10 @@ def fold_comm_state_rows(state: CommState, rows: list[bytes]) -> CommState:
     not data to fold."""
     ladder, momentum = state.ladder_ema, state.momentum
     for raw in rows:
+        if not raw:
+            # an elastic gather leaves None for a rank that was dead at
+            # checkpoint time — its row simply keeps the restore default
+            continue
         r, lad, mom, shf = unpack_comm_state_row(raw)
         if shf.size:
             own = np.asarray(state.shift)
@@ -492,6 +552,26 @@ def _require_one_worker(worker_grads: Array):
             "to this rank's shard)")
 
 
+def _check_deadline(transport, deadline_ms, downlink=None):
+    """Validate a per-aggregator ``deadline_ms`` against the transport:
+    the round-tag protocol lives in the transport, so every rank must have
+    been CONSTRUCTED elastic (``deadline_ms=`` on `make_tcp_transport`) —
+    a per-aggregator deadline on a non-elastic transport would discard
+    untagged frames at random.  The DIANA downlink shift assumes every
+    rank applies every delta, so it never composes with deadlines."""
+    elastic = bool(getattr(transport, "elastic", False))
+    if deadline_ms is not None and not elastic:
+        raise ValueError(
+            "deadline_ms needs an elastic tcp transport — construct every "
+            "rank's transport with deadline_ms=... (make_transport('tcp', "
+            "..., deadline_ms=...)) so worker frames carry round tags")
+    if elastic and downlink is not None:
+        raise ValueError(
+            "downlink compression does not compose with elastic deadline "
+            "rounds: a rank that missed a round would desync its mirrored "
+            "DIANA shift")
+
+
 class MultihostPackedAggregate:
     """The socket-star realization of `PackedAggregate`: each OS process
     encodes ITS OWN worker's gradient, ships it to rank 0, and rank 0
@@ -505,11 +585,14 @@ class MultihostPackedAggregate:
     as raw f32 bit patterns."""
 
     def __init__(self, codec: WireCodec, transport,
-                 downlink: "Downlink | None" = None):
+                 downlink: "Downlink | None" = None,
+                 deadline_ms: float | None = None):
         _require_multihost(transport, "MultihostPackedAggregate")
+        _check_deadline(transport, deadline_ms, downlink)
         self.codec = codec
         self.transport = transport
         self.downlink = downlink
+        self.deadline_ms = deadline_ms
 
     def init(self, num_workers: int, dim: int) -> CommState:
         del num_workers
@@ -536,18 +619,20 @@ class MultihostPackedAggregate:
         direction, bits, shift = _serve_round(
             tp, self.codec, enc.packet.to_bytes(), downlink=dl,
             shift=state.shift if dl is not None else None,
-            key=dl.key(rng) if dl is not None else None)
+            key=dl.key(rng) if dl is not None else None,
+            deadline_ms=self.deadline_ms)
         if dl is not None:
             state = state._replace(step=state.step + 1, shift=shift)
         return AggregateOut(direction, state, jnp.asarray(bits, jnp.float32))
 
 
-def _drain_decoding(tp, codec, local_payload: bytes):
+def _drain_decoding(tp, codec, local_payload: bytes, deadline_ms=None):
     """Server-side drain with AS-ARRIVAL decode: each uplink is parsed and
     its jitted decode DISPATCHED the moment its frame completes (jax
     dispatch is asynchronous), so unpack/scatter work overlaps the network
     wait for the remaining ranks instead of starting after the full drain.
-    Returns (packets, decoded_rows|None) in rank order."""
+    Returns (packets, decoded_rows|None) in rank order; an elastic
+    deadline round leaves ``None`` in the slots that missed it."""
     world = tp.world
     packets: list = [None] * world
     rows: list = [None] * world
@@ -559,7 +644,11 @@ def _drain_decoding(tp, codec, local_payload: bytes):
         if compiled:
             rows[r] = codec.decode_device(pkt)
 
-    tp.exchange([local_payload], on_payload=on_payload)
+    if deadline_ms is not None:
+        tp.exchange([local_payload], on_payload=on_payload,
+                    deadline_ms=deadline_ms)
+    else:
+        tp.exchange([local_payload], on_payload=on_payload)
     return packets, (rows if compiled else None)
 
 
@@ -588,8 +677,8 @@ def _drain_containers(tp, plan, local_payload: bytes):
 
 
 def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
-                 shift=None, key=None,
-                 plan=None) -> tuple[Array, float, Array | None]:
+                 shift=None, key=None, plan=None,
+                 deadline_ms=None) -> tuple[Array, float, Array | None]:
     """One multihost aggregation round: ship this rank's payload, decode +
     mean on rank 0, broadcast the direction.  Returns ``(direction, bits,
     new_shift)`` — bits (uplink + downlink where compressed) identical on
@@ -603,8 +692,23 @@ def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
     frame, and every rank — server included — applies the DECODED delta
     against its mirrored shift, so the post-round direction and shift are
     identical (and bitwise equal to the loopback aggregators, which run
-    the same round trip in-process)."""
+    the same round trip in-process).
+
+    On an elastic transport the round may close at the deadline with only
+    a subset of uplinks.  Rank 0 then computes the Horvitz-Thompson
+    estimate — each arrived row weighted by its rank's inverse empirical
+    participation frequency, summed, divided by the FULL world (see
+    `repro.comm.elastic`) — and ships it with the participation mask on an
+    RCD3 blob so every rank books identical ``wire/partial_round``
+    telemetry.  When all weights are exactly 1 (every zero-fault round)
+    the plain ``mean`` runs instead, bit-for-bit the loopback path."""
     tel = obs.active()
+    elastic = bool(getattr(tp, "elastic", False))
+    if elastic and (downlink is not None or plan is not None):
+        raise ValueError(
+            "elastic deadline rounds compose only with the plain direction "
+            "broadcast: the DIANA downlink shift and the bucketed/policy "
+            "containers both assume every rank contributes every round")
     if plan is not None:
         dim, name, impl = plan.dim, plan.name, "bucketed"
     else:
@@ -621,19 +725,41 @@ def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
                                    impl=impl, world=tp.world)
                 plan.record_segments(tel, arrived)
         else:
-            packets, rows = _drain_decoding(tp, codec, local_payload)
+            packets, rows = _drain_decoding(tp, codec, local_payload,
+                                            deadline_ms=deadline_ms)
+            arrived = [r for r in range(tp.world) if packets[r] is not None]
             if rows is not None:
-                direction = jnp.mean(jnp.stack(rows), axis=0)
+                stacked = jnp.stack([rows[r] for r in arrived])
             else:
-                direction = jnp.mean(jnp.stack(
-                    [jnp.asarray(codec.decode(p)) for p in packets]), axis=0)
+                stacked = jnp.stack([jnp.asarray(codec.decode(packets[r]))
+                                     for r in arrived])
+            weights = None
+            if elastic:
+                weights = tp.membership.weights(arrived)
+            if weights is None or (len(arrived) == tp.world
+                                   and np.all(weights == 1.0)):
+                direction = jnp.mean(stacked, axis=0)
+            else:
+                w = jnp.asarray(weights, stacked.dtype)
+                direction = jnp.sum(stacked * w[:, None], axis=0) / tp.world
             if tel.enabled:
                 tel.trace.complete("comm/serve_round", t0, pid=0, codec=name,
-                                   impl=impl, world=tp.world)
-                _record_mlmc_draws(tel, codec, packets)
-            bits = float(sum(codec.measured_bits(p) for p in packets))
+                                   impl=impl, world=tp.world,
+                                   n_arrived=len(arrived))
+                _record_mlmc_draws(tel, codec,
+                                   [p for p in packets if p is not None])
+            bits = float(sum(codec.measured_bits(packets[r])
+                             for r in arrived))
         if downlink is None:
-            tp.broadcast_payload(pack_direction(np.asarray(direction), bits))
+            if elastic:
+                mask = np.zeros(tp.world, bool)
+                mask[tp.last_participation] = True
+                _record_partial_round(tel, tp, mask)
+                tp.broadcast_payload(pack_partial_direction(
+                    np.asarray(direction), bits, mask))
+            else:
+                tp.broadcast_payload(
+                    pack_direction(np.asarray(direction), bits))
             return direction, bits, None
         t0 = time.perf_counter() if tel.enabled else 0.0
         pkt, delta_hat, dbits = downlink.encode(direction, shift, key)
@@ -648,6 +774,10 @@ def _serve_round(tp, codec, local_payload: bytes, *, downlink=None,
         return direction, bits + dbits, new_shift
     tp.exchange([local_payload])
     raw = tp.broadcast_payload(None)
+    if raw[:4] == _DIRP_MAGIC:
+        vec, bits, mask = unpack_partial_direction(raw, dim)
+        _record_partial_round(tel, tp, mask)
+        return jnp.asarray(vec), bits, None
     if downlink is None:
         vec, bits = unpack_direction(raw, dim)
         return jnp.asarray(vec), bits, None
@@ -679,13 +809,16 @@ class MultihostPackedAdaptive:
     3.2), only the EMA warm-start."""
 
     def __init__(self, codec, compressor, rho: float, transport,
-                 downlink: "Downlink | None" = None):
+                 downlink: "Downlink | None" = None,
+                 deadline_ms: float | None = None):
         _require_multihost(transport, "MultihostPackedAdaptive")
+        _check_deadline(transport, deadline_ms, downlink)
         self.codec = codec
         self.compressor = compressor
         self.rho = rho
         self.transport = transport
         self.downlink = downlink
+        self.deadline_ms = deadline_ms
 
     def init(self, num_workers: int, dim: int) -> CommState:
         return adaptive_comm_state(
@@ -723,7 +856,8 @@ class MultihostPackedAdaptive:
         direction, bits, shift = _serve_round(
             tp, self.codec, enc.packet.to_bytes(), downlink=dl,
             shift=state.shift if dl is not None else None,
-            key=dl.key(rng) if dl is not None else None)
+            key=dl.key(rng) if dl is not None else None,
+            deadline_ms=self.deadline_ms)
         new_state = state._replace(step=state.step + 1,
                                    ladder_ema=state.ladder_ema.at[r].set(row))
         if dl is not None:
@@ -827,6 +961,11 @@ class MultihostPackedEF21:
 
     def __init__(self, codec: WireCodec, beta: float, transport):
         _require_multihost(transport, "MultihostPackedEF21")
+        if bool(getattr(transport, "elastic", False)):
+            raise ValueError(
+                "the EF21 family does not compose with an elastic "
+                "(deadline_ms) transport: the server mirror g must fold "
+                "EVERY rank's innovation every round")
         self.codec = codec
         self.beta = beta
         self.transport = transport
@@ -929,7 +1068,8 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
                       downlink: str | None = None,
                       downlink_alpha: float = 0.5,
                       bucket_size: int | None = None,
-                      policy=None):
+                      policy=None,
+                      deadline_ms: float | None = None):
     """Build the packed-wire `Aggregator` for a registry name (the
     ``wire="packed"`` branch of `repro.core.aggregators.make_aggregator`).
 
@@ -957,6 +1097,21 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
 
     codec_kw = dict(k_fraction=k_fraction, s=s, rtn_level=rtn_level,
                     qsgd_levels=qsgd_levels, fixed_levels=fixed_levels)
+    elastic = bool(getattr(transport, "elastic", False))
+    if elastic or deadline_ms is not None:
+        _check_deadline(transport, deadline_ms, downlink)
+        if policy is not None or bucket_size is not None:
+            raise ValueError(
+                "elastic deadline rounds do not compose with the "
+                "bucketed/policy RCBW containers: a partial bucket round "
+                "would leave the per-segment streams desynced across "
+                "ranks")
+        if name in ("ef21", "ef21_sgdm", "signsgd_ef"):
+            raise ValueError(
+                "the EF21 family does not compose with elastic deadline "
+                "rounds: the server mirror g must fold EVERY rank's "
+                "innovation every round, so a missed uplink desyncs the "
+                "world")
     dl = None
     if downlink is not None:
         dl = Downlink(_make_packed_codec(downlink, dim, compiled, codec_kw),
@@ -987,11 +1142,17 @@ def packed_aggregator(name: str, dim: int, *, transport: Transport | None = None
         return Aggregator(name, ef, init=ef.init, stateful=True)
     if name in ("mlmc_adaptive_topk", "mlmc_adaptive_stopk",
                 "mlmc_adaptive_rtn"):
-        cls = MultihostPackedAdaptive if multihost else PackedAdaptiveMLMC
-        ad = cls(codec, codec.compressor, ema_rho, transport, downlink=dl)
+        if multihost:
+            ad = MultihostPackedAdaptive(codec, codec.compressor, ema_rho,
+                                         transport, downlink=dl,
+                                         deadline_ms=deadline_ms)
+        else:
+            ad = PackedAdaptiveMLMC(codec, codec.compressor, ema_rho,
+                                    transport, downlink=dl)
         return Aggregator(name, ad, init=ad.init, stateful=True)
     if multihost:
-        ag = MultihostPackedAggregate(codec, transport, downlink=dl)
+        ag = MultihostPackedAggregate(codec, transport, downlink=dl,
+                                      deadline_ms=deadline_ms)
     else:
         ag = PackedAggregate(codec, transport, downlink=dl)
     if dl is not None:

@@ -1,0 +1,208 @@
+"""Elastic membership for the multihost tcp star.
+
+The star (`repro.comm.multihost.TcpStarTransport`) was built for a fixed,
+healthy world: every rank arrives at rendezvous, answers every round, and
+survives the whole run.  This module is the state rank 0 keeps when that
+assumption is dropped (``deadline_ms`` on the transport turns it on):
+
+* `Membership` — per-rank lifecycle (active / left, join and leave rounds,
+  stored `CommState` STATE rows for mid-run REJOIN) plus the per-rank
+  participation counts that make deadline partial aggregation *unbiased*.
+* `BackoffSchedule` — the seeded, capped exponential backoff a worker walks
+  while trying to reconnect (deterministic per seed, so chaos tests can
+  assert the exact delays).
+
+Unbiasedness (the MLMC connection): a deadline round aggregates only the
+uplinks that arrived in time.  The naive mean over arrivals is biased
+whenever participation is asymmetric — rank 0 never misses its own
+deadline, so the aggregate drifts toward the fast ranks' data.  Instead the
+server computes a Horvitz-Thompson estimate: each arrived row is weighted
+by the inverse of that rank's *empirical participation frequency*
+``p_r = participated_r / rounds_r`` (counted since the rank last joined,
+current round included), and the weighted sum is divided by the full world
+size::
+
+    direction = (1 / world) * sum_{r in arrived} row_r / p_r
+
+Taking expectations over which ranks arrive, ``E[direction] =
+(1/world) * sum_r p_r * E[row_r] / p_r`` — the full-world mean, exactly the
+same two-level trick the paper's MLMC estimator uses to cancel compression
+bias.  On a full round every ``p_r`` is 1 and the server falls back to the
+bitwise-identical plain ``mean``, so a zero-fault elastic run stays
+bit-for-bit equal to the loopback transport.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+
+import numpy as np
+
+from repro.obs import trace as obs
+
+ACTIVE = "active"
+LEFT = "left"
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffSchedule:
+    """Seeded capped exponential backoff for worker reconnects.
+
+    ``delays()`` is deterministic per seed: attempt ``i`` waits
+    ``min(cap_s, base_s * 2**i)`` scaled by a jitter factor drawn from
+    ``random.Random(seed)`` in ``[1 - jitter, 1]``.  `TcpStarTransport.rejoin`
+    makes one immediate attempt, then one per delay (``retries + 1`` total).
+    """
+
+    base_s: float = 0.05
+    cap_s: float = 2.0
+    retries: int = 8
+    seed: int = 0
+    jitter: float = 0.5
+
+    def delays(self) -> list[float]:
+        rnd = random.Random(self.seed)
+        out = []
+        for i in range(self.retries):
+            full = min(self.cap_s, self.base_s * (2.0 ** i))
+            out.append(full * (1.0 - self.jitter * rnd.random()))
+        return out
+
+
+def participation_weights(counts, seen) -> np.ndarray:
+    """Horvitz-Thompson weights ``seen / counts`` (inverse empirical
+    participation frequency) as float64.  ``counts[i]`` is how many of the
+    ``seen[i]`` deadline rounds rank i's uplink arrived in; every entry must
+    have participated at least once (callers weight *arrived* rows only)."""
+    counts = np.asarray(counts, np.float64)
+    seen = np.asarray(seen, np.float64)
+    if counts.shape != seen.shape:
+        raise ValueError(f"counts shape {counts.shape} != seen {seen.shape}")
+    if np.any(counts <= 0):
+        raise ValueError("every weighted rank needs >= 1 participation "
+                         f"(counts {counts.tolist()})")
+    return seen / counts
+
+
+@dataclasses.dataclass
+class Member:
+    """One rank's lifecycle entry on the server."""
+
+    rank: int
+    state: str = ACTIVE
+    joined_round: int = -1       # round in flight when the rank (re)joined
+    left_round: int | None = None
+    left_reason: str = ""
+    rejoins: int = 0
+    #: deadline rounds this rank was active for / arrived in, counted since
+    #: its last (re)join — the empirical participation frequency behind the
+    #: Horvitz-Thompson weights resets when a rank re-enters the world
+    rounds_seen: int = 0
+    rounds_participated: int = 0
+
+
+class Membership:
+    """Rank 0's view of who is in the world (elastic tcp star).
+
+    Tracks per-rank lifecycle, stores the last STATE row each rank shipped
+    (served back on REJOIN so the worker restores its `CommState`
+    bitwise), counts participation for the Horvitz-Thompson deadline
+    weights, and books ``wire/member_join`` / ``wire/member_leave``
+    telemetry on every transition."""
+
+    def __init__(self, world: int):
+        self.world = world
+        self.members = {r: Member(r, joined_round=-1) for r in range(world)}
+        self.rows: dict[int, bytes] = {}
+        #: deadline rounds recorded so far (`record_round` calls)
+        self.rounds = 0
+
+    # ---- lifecycle ---------------------------------------------------------
+
+    def is_active(self, rank: int) -> bool:
+        return self.members[rank].state == ACTIVE
+
+    def active_ranks(self) -> list[int]:
+        return [r for r, m in sorted(self.members.items())
+                if m.state == ACTIVE]
+
+    def mark_left(self, rank: int, round_: int, reason: str = "") -> None:
+        m = self.members[rank]
+        if m.state == LEFT:
+            return
+        m.state = LEFT
+        m.left_round = round_
+        m.left_reason = reason
+        tel = obs.active()
+        if tel.enabled:
+            tel.instant("wire/member_leave", cat="wire", pid=0,
+                        rank=rank, round=round_, reason=reason)
+
+    def mark_joined(self, rank: int, round_: int, *,
+                    rejoin: bool = False) -> None:
+        m = self.members[rank]
+        m.state = ACTIVE
+        m.joined_round = round_
+        m.left_round = None
+        m.left_reason = ""
+        if rejoin:
+            m.rejoins += 1
+            # the participation frequency describes the CURRENT incarnation
+            m.rounds_seen = 0
+            m.rounds_participated = 0
+        tel = obs.active()
+        if tel.enabled:
+            tel.instant("wire/member_join", cat="wire", pid=0,
+                        rank=rank, round=round_, rejoin=bool(rejoin),
+                        rejoins=m.rejoins)
+
+    # ---- deadline accounting ----------------------------------------------
+
+    def record_round(self, participants, round_: int) -> None:
+        """Book one served deadline round: every active rank (except one
+        that joined DURING this round and could not have sent yet) saw it;
+        ``participants`` arrived in time."""
+        self.rounds += 1
+        arrived = set(participants)
+        for r, m in self.members.items():
+            if m.state != ACTIVE or m.joined_round >= round_ >= 0:
+                continue
+            m.rounds_seen += 1
+            if r in arrived:
+                m.rounds_participated += 1
+
+    def weights(self, participants) -> np.ndarray:
+        """Horvitz-Thompson weight per *arrived* rank (see module doc)."""
+        return participation_weights(
+            [self.members[r].rounds_participated for r in participants],
+            [self.members[r].rounds_seen for r in participants])
+
+    # ---- CommState rows ----------------------------------------------------
+
+    def store_row(self, rank: int, row: bytes) -> None:
+        self.rows[rank] = row
+
+    def row(self, rank: int) -> bytes | None:
+        return self.rows.get(rank)
+
+    # ---- introspection -----------------------------------------------------
+
+    def summary(self) -> dict:
+        """Picklable snapshot for tests / benches / logs."""
+        return {
+            "world": self.world,
+            "rounds": self.rounds,
+            "members": {
+                r: {
+                    "state": m.state,
+                    "joined_round": m.joined_round,
+                    "left_round": m.left_round,
+                    "left_reason": m.left_reason,
+                    "rejoins": m.rejoins,
+                    "rounds_seen": m.rounds_seen,
+                    "rounds_participated": m.rounds_participated,
+                }
+                for r, m in sorted(self.members.items())
+            },
+        }

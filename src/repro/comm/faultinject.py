@@ -1,0 +1,175 @@
+"""Deterministic fault injection for the multihost tcp star.
+
+Chaos testing needs faults that are *reproducible*: a seeded schedule says
+exactly which rank misbehaves at which round and how, so a failing run
+replays bit-for-bit.  `FaultyTransport` wraps one WORKER rank's
+`TcpStarTransport` and applies the schedule at each `exchange` call:
+
+* ``delay``  — sleep ``seconds`` before sending the uplink (a straggler; a
+  deadline server serves the round without it and discards the late,
+  round-tagged frame on sight).
+* ``drop``   — skip this round's uplink entirely (`skip_round` advances the
+  round tag without sending; TCP never loses frames on its own, so a
+  "dropped" frame is one that was never sent).
+* ``torn``   — write a frame header promising more bytes than follow, then
+  hard-close the socket (a peer dying mid-write).
+* ``kill``   — hard-close the socket with ``SO_LINGER(1, 0)`` so the peer
+  sees an RST, not a tidy FIN (a machine vanishing).  ``torn``/``kill``
+  raise `InjectedFault` in the wrapped rank, which then typically walks
+  `TcpStarTransport.rejoin`.
+
+Rank 0 is the aggregation point and stays fault-free — the star has no
+server failover; that is what the ROADMAP's decentralized follow-ups are
+for.  Everything else delegates to the inner transport untouched, so the
+wrapper composes with `is_multihost_transport`, the packed aggregators,
+and per-link `TransportStats`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import socket
+import struct
+import time
+from typing import Iterable, Sequence
+
+KINDS = ("delay", "drop", "torn", "kill")
+
+
+class InjectedFault(RuntimeError):
+    """Raised in the wrapped rank when a torn/kill fault fires."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled misbehavior: ``kind`` at ``round`` (``seconds`` is the
+    delay length; ignored for the other kinds)."""
+
+    round: int
+    kind: str
+    seconds: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+        if self.round < 0:
+            raise ValueError(f"fault round must be >= 0, got {self.round}")
+
+
+class FaultSchedule:
+    """Per-rank fault timetable, keyed ``(rank, round)``.
+
+    Build explicitly (``{rank: [Fault(...), ...]}``) or via `seeded`, which
+    draws i.i.d. per-(rank, round) delays/drops from ``random.Random(seed)``
+    — same seed, same faults, every run."""
+
+    def __init__(self, by_rank: dict[int, Sequence[Fault]] | None = None):
+        self._faults: dict[tuple[int, int], list[Fault]] = {}
+        for rank, faults in (by_rank or {}).items():
+            for f in faults:
+                self._faults.setdefault((rank, f.round), []).append(f)
+
+    def at(self, rank: int, round_: int) -> tuple[Fault, ...]:
+        return tuple(self._faults.get((rank, round_), ()))
+
+    def add(self, rank: int, fault: Fault) -> None:
+        self._faults.setdefault((rank, fault.round), []).append(fault)
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._faults.values())
+
+    @classmethod
+    def seeded(cls, seed: int, *, world: int, rounds: int,
+               p_delay: float = 0.0, p_drop: float = 0.0,
+               delay_s: float = 0.02,
+               kills: Iterable[tuple[int, int]] = ()) -> "FaultSchedule":
+        """Bernoulli delays/drops for every worker rank and round (rank 0
+        is never faulted), plus explicit ``kills`` as (rank, round) pairs.
+        A drop takes precedence over a delay drawn for the same slot."""
+        import random
+        rnd = random.Random(seed)
+        sched = cls()
+        for rank in range(1, world):
+            for t in range(rounds):
+                # draw both every slot so the stream stays aligned across
+                # parameter choices with the same seed
+                u_drop, u_delay = rnd.random(), rnd.random()
+                if u_drop < p_drop:
+                    sched.add(rank, Fault(t, "drop"))
+                elif u_delay < p_delay:
+                    sched.add(rank, Fault(t, "delay", delay_s))
+        for rank, t in kills:
+            sched.add(rank, Fault(t, "kill"))
+        return sched
+
+
+class FaultyTransport:
+    """Wrap one worker's `TcpStarTransport`, applying ``schedule`` at each
+    `exchange`.  Every other attribute (broadcast, allreduce, stats, rank,
+    world, ...) delegates to the inner transport."""
+
+    def __init__(self, inner, schedule: FaultSchedule):
+        if getattr(inner, "rank", 0) == 0:
+            raise ValueError("FaultyTransport wraps worker ranks; rank 0 is "
+                             "the fault-free aggregation point")
+        self._inner = inner
+        self._schedule = schedule
+        self._next_round = 0
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def exchange(self, payloads, on_payload=None, deadline_ms=None):
+        round_ = self._next_round
+        self._next_round += 1
+        for f in self._schedule.at(self._inner.rank, round_):
+            if f.kind == "delay":
+                time.sleep(f.seconds)
+            elif f.kind == "drop":
+                self._inner.skip_round()
+                return []
+            elif f.kind == "torn":
+                self._tear()
+                raise InjectedFault(
+                    f"rank {self._inner.rank} torn frame at round {round_}")
+            else:   # kill
+                self._kill()
+                raise InjectedFault(
+                    f"rank {self._inner.rank} killed at round {round_}")
+        return self._inner.exchange(payloads, on_payload=on_payload,
+                                    deadline_ms=deadline_ms)
+
+    def _kill(self) -> None:
+        """RST the uplink (SO_LINGER 0): the server sees an abrupt reset,
+        never a clean FIN/LEAVE."""
+        sock = self._inner._sock
+        if sock is None:
+            return
+        try:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                            struct.pack("ii", 1, 0))
+        except OSError:
+            pass
+        try:
+            sock.close()
+        except OSError:
+            pass
+        self._inner._sock = None
+
+    def _tear(self) -> None:
+        """Write a frame header that promises more payload than follows,
+        then die — the server's reassembly buffer must survive it."""
+        from repro.comm import multihost as mh
+        sock = self._inner._sock
+        if sock is not None:
+            try:
+                sock.sendall(struct.pack(
+                    mh._FRAME_FMT, mh.FRAME_MAGIC, mh.PAYLOAD,
+                    self._inner.rank, self._inner.world, 4096) + b"\x00" * 64)
+            except OSError:
+                pass
+        self._kill()
+
+    def close(self) -> None:
+        self._inner.close()

@@ -27,6 +27,29 @@ Frame protocol (all little-endian, append-only like the packet header):
   (`repro.comm.aggregate.pack_comm_state_row`), gathered by
   `gather_state` at checkpoint time so a rank-0 checkpoint captures
   every rank's EMA ladder / momentum / downlink-shift rows.
+* ``PING``/``PONG``  heartbeats.  The server pings every link while its
+  reactor waits; a worker answers PONG and resets its read deadline, so a
+  long server compute (first-round jit) never looks like a dead peer —
+  and a genuinely dead rank 0 turns a forever-block into a descriptive
+  `TransportError` after ``read_timeout_s``.
+* ``LEAVE``     worker -> server on clean close (an elastic server marks
+  the rank left instead of dying on a bare reset).
+* ``REJOIN``    worker -> server mid-run (elastic mode): same payload as
+  HELLO; the server validates it, replies WELCOME (carrying the round in
+  flight), a STATE frame with the rank's last stored `CommState` row, and
+  a DIRECTION frame with the current-params snapshot from
+  ``snapshot_provider`` — then the rank is a full member again.
+
+Elastic mode (``deadline_ms`` not None) relaxes the fixed-healthy-world
+assumption end to end: `exchange` on rank 0 closes each round
+``deadline_ms`` after it starts and serves whoever arrived (the partial
+round is reweighted unbiasedly in `repro.comm.aggregate` — see
+`repro.comm.elastic`); dead links mark the rank left instead of raising;
+the listener keeps accepting REJOINs mid-run; and every worker
+PAYLOAD/SCALAR body rides a `repro.comm.packets.pack_seq_payload` round
+tag so a straggler's late frame is discarded on sight, never mistaken for
+the current round.  With ``deadline_ms=None`` the transport behaves
+exactly as before (fixed world, any dead link raises).
 
 Stats semantics (cross-transport comparability is the point):
 
@@ -60,6 +83,8 @@ import socket
 import struct
 import time
 
+from repro.comm.elastic import BackoffSchedule, Membership
+from repro.comm.packets import pack_seq_payload, unpack_seq_payload
 from repro.comm.transport import TransportStats
 from repro.obs import trace as obs
 
@@ -72,6 +97,26 @@ HELLO, WELCOME, GOODBYE, PAYLOAD, DIRECTION = 1, 2, 3, 4, 5
 SCALAR, SCALAR_MEAN = 6, 7     # loss-telemetry allreduce (8-byte f64)
 STATE = 8                      # checkpoint gather of client CommState rows
 DIRECTION_ENC = 9              # compressed (DIANA-shift) direction blob
+PING, PONG = 10, 11            # heartbeats (server pings, worker answers)
+LEAVE = 12                     # worker -> server: clean departure
+REJOIN = 13                    # worker -> server: mid-run re-entry (elastic)
+
+#: server heartbeat period and the worker read deadline derived from it:
+#: a worker treats rank 0 as dead after this many silent heartbeat periods
+#: (generous — a slow first-round jit on the server must never trip it,
+#: and the server only pings while its reactor is actually waiting)
+_DEFAULT_HEARTBEAT_S = 5.0
+_READ_TIMEOUT_BEATS = 36
+
+
+class TransportError(ConnectionError):
+    """A peer died, timed out, or desynced mid-run.  Subclasses
+    `ConnectionError` so pre-elastic callers keep working."""
+
+
+class ServerShutdown(TransportError):
+    """Rank 0 closed the star cleanly (GOODBYE "shutdown") — a normal end
+    of run, not a fault.  Workers catch this to exit gracefully."""
 
 #: a real worker HELLOs immediately after connecting; give a stray peer
 #: (port scanner, health check) at most this long before refusing it
@@ -218,7 +263,10 @@ class TcpStarTransport:
     the direction blob down every link.
     """
 
-    def __init__(self, rank: int, world: int):
+    def __init__(self, rank: int, world: int, *,
+                 heartbeat_s: float | None = None,
+                 read_timeout_s: float | None = None,
+                 deadline_ms: float | None = None):
         self.rank = rank
         self.world = world
         self.stats = TransportStats()
@@ -237,22 +285,56 @@ class TcpStarTransport:
         # feeding the straggler timeline in `repro.obs`
         self._round_t0 = 0.0
         self._round_lags: list[float] = []
+        # ---- elastic layer ----
+        self.heartbeat_s = (_DEFAULT_HEARTBEAT_S if heartbeat_s is None
+                            else float(heartbeat_s))
+        self.read_timeout_s = (
+            _READ_TIMEOUT_BEATS * self.heartbeat_s
+            if read_timeout_s is None else float(read_timeout_s))
+        self.deadline_ms = deadline_ms
+        #: server-side membership/participation ledger (None on workers)
+        self.membership: Membership | None = (
+            Membership(world) if rank == 0 else None)
+        #: rank 0 hook: ``() -> bytes`` serving the current flat params to a
+        #: REJOINing rank (its own copy is stale by however many rounds it
+        #: missed); the trainer installs it
+        self.snapshot_provider = None
+        #: ranks whose uplink made the last served round (server; elastic
+        #: deadline rounds may close without the slow ones)
+        self.last_participation: list[int] = list(range(world))
+        self._round = -1          # server: index of the round in flight
+        self._seq = 0             # worker: round tag for the next uplink
+        #: highest round already SERVED per uplink frame type — an elastic
+        #: server discards any later copy of those rounds on sight (a
+        #: straggler's late frame, or a non-participant's unread scalar)
+        self._served = {PAYLOAD: -1, SCALAR: -1}
+        self._last_ping = time.perf_counter()
+        self.joined_round: int | None = None   # set on a REJOINed worker
+
+    @property
+    def elastic(self) -> bool:
+        """True when this transport runs the deadline/membership layer."""
+        return self.deadline_ms is not None
 
     # ---- construction ------------------------------------------------------
 
     @classmethod
     def listen(cls, host: str = "127.0.0.1", port: int = 0, *, world: int,
-               timeout: float = 60.0,
-               policy_hash: str | None = None) -> "TcpStarTransport":
+               timeout: float = 60.0, policy_hash: str | None = None,
+               heartbeat_s: float | None = None,
+               read_timeout_s: float | None = None,
+               deadline_ms: float | None = None) -> "TcpStarTransport":
         """Rank 0, step 1: bind ``host:port`` (0 = ephemeral; the kernel's
         choice lands in ``.port``) without blocking.  Call
         `accept_workers` to run the rendezvous.  ``policy_hash`` is this
         rank's codec-policy fingerprint — workers whose HELLO carries a
         different one are refused (fail fast at rendezvous, not desync
-        mid-run)."""
+        mid-run).  ``deadline_ms`` turns on elastic mode (see module doc);
+        pass the same value on every rank."""
         if not 2 <= world <= MAX_WORLD:
             raise ValueError(f"world must be in [2, {MAX_WORLD}], got {world}")
-        t = cls(0, world)
+        t = cls(0, world, heartbeat_s=heartbeat_s,
+                read_timeout_s=read_timeout_s, deadline_ms=deadline_ms)
         t._policy_hash = (policy_hash or "").encode()
         t._listener = socket.create_server((host, port))
         t.port = t._listener.getsockname()[1]
@@ -318,18 +400,24 @@ class TcpStarTransport:
 
     @classmethod
     def serve(cls, host: str = "127.0.0.1", port: int = 0, *, world: int,
-              timeout: float = 60.0,
-              policy_hash: str | None = None) -> "TcpStarTransport":
+              timeout: float = 60.0, policy_hash: str | None = None,
+              heartbeat_s: float | None = None,
+              read_timeout_s: float | None = None,
+              deadline_ms: float | None = None) -> "TcpStarTransport":
         """Rank 0: `listen` + `accept_workers` in one blocking call (the
         ``make_transport("tcp", rank=0, ...)`` path, where the port is
         fixed up front and every worker retries until it is up)."""
         return cls.listen(host, port, world=world, timeout=timeout,
-                          policy_hash=policy_hash).accept_workers()
+                          policy_hash=policy_hash, heartbeat_s=heartbeat_s,
+                          read_timeout_s=read_timeout_s,
+                          deadline_ms=deadline_ms).accept_workers()
 
     @classmethod
     def connect(cls, host: str, port: int, *, rank: int, world: int,
-                timeout: float = 60.0,
-                policy_hash: str | None = None) -> "TcpStarTransport":
+                timeout: float = 60.0, policy_hash: str | None = None,
+                heartbeat_s: float | None = None,
+                read_timeout_s: float | None = None,
+                deadline_ms: float | None = None) -> "TcpStarTransport":
         """Ranks 1..W-1: dial the coordinator (retrying until ``timeout`` so
         workers may start before the server) and handshake.
         ``policy_hash`` rides the HELLO payload behind a ``|`` separator;
@@ -362,10 +450,109 @@ class TcpStarTransport:
             sock.close()
             raise ConnectionError(f"server runs world={w}, we expect {world}")
         _steady_state(sock)
-        t = cls(rank, world)
+        t = cls(rank, world, heartbeat_s=heartbeat_s,
+                read_timeout_s=read_timeout_s, deadline_ms=deadline_ms)
         t._policy_hash = (policy_hash or "").encode()
         t._sock = sock
         return t
+
+    @classmethod
+    def rejoin(cls, host: str, port: int, *, rank: int, world: int,
+               deadline_ms: float, timeout: float = 60.0,
+               policy_hash: str | None = None,
+               backoff: BackoffSchedule | None = None,
+               heartbeat_s: float | None = None,
+               read_timeout_s: float | None = None,
+               ) -> tuple["TcpStarTransport", bytes, bytes]:
+        """Re-enter a RUNNING elastic world after this rank died mid-run.
+
+        Walks ``backoff`` (seeded capped exponential; one immediate attempt
+        plus one per delay) until the server's listener accepts the REJOIN
+        — early attempts are typically refused with "rank N is still
+        connected" until the server notices the old link is dead, which is
+        exactly what the backoff is for.
+
+        Returns ``(transport, state_row, params_snapshot)``: the rank's
+        last gathered `CommState` row (b"" if none was ever gathered) to
+        feed `repro.comm.aggregate.fold_comm_state_rows`, and the server's
+        current flat params (b"" when rank 0 installed no
+        ``snapshot_provider``).  The transport's ``joined_round`` is the
+        round that was in flight when the server accepted us; our first
+        uplink is tagged ``joined_round + 1``, and the caller must consume
+        the in-flight round's downlink (``broadcast_payload(None)``) before
+        entering its normal round loop."""
+        if backoff is None:
+            backoff = BackoffSchedule()
+        last_err: Exception | None = None
+        for delay in [0.0, *backoff.delays()]:
+            if delay > 0:
+                time.sleep(delay)
+            try:
+                return cls._rejoin_once(
+                    host, port, rank=rank, world=world,
+                    deadline_ms=deadline_ms, timeout=timeout,
+                    policy_hash=policy_hash, heartbeat_s=heartbeat_s,
+                    read_timeout_s=read_timeout_s)
+            except (ConnectionError, TimeoutError, OSError) as e:
+                last_err = e
+        raise TransportError(
+            f"rank {rank} could not rejoin {host}:{port} after "
+            f"{backoff.retries + 1} attempts: {last_err}") from last_err
+
+    @classmethod
+    def _rejoin_once(cls, host: str, port: int, *, rank: int, world: int,
+                     deadline_ms: float, timeout: float,
+                     policy_hash: str | None,
+                     heartbeat_s: float | None,
+                     read_timeout_s: float | None,
+                     ) -> tuple["TcpStarTransport", bytes, bytes]:
+        if not 1 <= rank < world:
+            raise ValueError(f"worker rank must be in [1, {world}), got {rank}")
+        sock = socket.create_connection((host, port), timeout=1.0)
+        try:
+            sock.settimeout(timeout)
+            token = HELLO_TOKEN + (b"|" + policy_hash.encode()
+                                   if policy_hash else b"")
+            send_frame(sock, REJOIN, rank, world, token)
+
+            def read(*want: int) -> bytes:
+                # the server's heartbeat tick may interleave PINGs with the
+                # handshake frames once our conn is registered
+                while True:
+                    ftype, _, w, data = recv_frame(sock)
+                    if ftype == PING:
+                        with contextlib.suppress(OSError):
+                            send_frame(sock, PONG, rank, world)
+                        continue
+                    if ftype == GOODBYE:
+                        raise ConnectionError(
+                            f"server refused the rejoin: "
+                            f"{data.decode(errors='replace')}")
+                    if ftype not in want:
+                        raise ConnectionError(
+                            f"rejoin handshake expected frame type {want}, "
+                            f"got {ftype}")
+                    if w != world:
+                        raise ConnectionError(
+                            f"server runs world={w}, we expect {world}")
+                    return data
+
+            welcome = read(WELCOME)
+            joined_round = struct.unpack("<I", welcome[:4])[0] \
+                if len(welcome) >= 4 else 0
+            row = read(STATE)
+            snapshot = read(DIRECTION)
+        except Exception:
+            sock.close()
+            raise
+        _steady_state(sock)
+        t = cls(rank, world, heartbeat_s=heartbeat_s,
+                read_timeout_s=read_timeout_s, deadline_ms=deadline_ms)
+        t._policy_hash = (policy_hash or "").encode()
+        t._sock = sock
+        t._seq = joined_round + 1
+        t.joined_round = joined_round
+        return t, row, snapshot
 
     # ---- Transport seam ----------------------------------------------------
 
@@ -373,32 +560,77 @@ class TcpStarTransport:
     def is_server(self) -> bool:
         return self.rank == 0
 
-    def _buffered_frame_from(self, r: int,
-                             expect: int) -> tuple[int, int, int, bytes]:
-        """Server: pop the next complete frame from rank ``r``'s buffer,
-        blocking on its socket only when the buffer is empty."""
-        buf = self._bufs[r]
-        frame = buf.next_frame()
-        while frame is None:
-            data = self._conns[r].recv(1 << 16)
-            if not data:
-                raise ConnectionError(f"rank {r} closed its uplink")
-            buf.feed(data)
-            frame = buf.next_frame()
-        ftype, sender, _, payload = frame
-        if ftype != expect:
-            if ftype == GOODBYE:
-                raise ConnectionError(
-                    f"peer said goodbye: {payload.decode(errors='replace')}")
-            raise ConnectionError(f"expected frame type {expect}, got "
-                                  f"{ftype} from rank {r}")
-        if sender != r:
-            raise ConnectionError(
-                f"link for rank {r} delivered a frame from rank {sender}")
-        return frame
+    def _filter_control(self, r: int, frame) -> tuple | None:
+        """Classify one popped frame from rank ``r``.  Returns None when the
+        frame was consumed here (a PONG heartbeat answer, or an elastic
+        frame tagged with an already-served round — a straggler's late
+        uplink); otherwise ``(ftype, sender, data, seq)`` with any RCSQ
+        round tag stripped (``seq`` is -1 when the frame carries none).
+        Raises `TransportError` on LEAVE (the caller decides whether that
+        is fatal) and on a round tag from the future (seq desync)."""
+        ftype, sender, _, data = frame
+        if ftype == PONG:
+            return None
+        if ftype == LEAVE:
+            reason = data.decode(errors="replace") if data else ""
+            raise TransportError(
+                f"rank {r} left the world (LEAVE"
+                + (f": {reason}" if reason else "") + ")")
+        seq = -1
+        if self.elastic and ftype in (PAYLOAD, SCALAR):
+            seq, data = unpack_seq_payload(data)
+            if seq <= self._served[ftype]:
+                return None
+            ceiling = self._round if ftype == PAYLOAD else \
+                self._served[ftype] + 1
+            if seq > max(ceiling, self._round):
+                raise TransportError(
+                    f"rank {r} sent a round-{seq} frame during round "
+                    f"{self._round} — round-tag desync")
+        return ftype, sender, data, seq
 
-    def exchange(self, payloads: list[bytes],
-                 on_payload=None) -> list[bytes]:
+    def _buffered_frame_from(self, r: int,
+                             expect: int) -> tuple[int, int, bytes, int]:
+        """Server: pop the next meaningful frame from rank ``r``'s buffer,
+        blocking on its socket only when the buffer is empty (heartbeat
+        answers and stale elastic frames are consumed silently).  Returns
+        ``(type, sender, payload, seq)``."""
+        buf = self._bufs[r]
+        conn = self._conns[r]
+        while True:
+            frame = buf.next_frame()
+            while frame is None:
+                if self.elastic:
+                    conn.settimeout(self.read_timeout_s)
+                try:
+                    data = conn.recv(1 << 16)
+                except (socket.timeout, TimeoutError) as e:
+                    raise TransportError(
+                        f"rank {r} sent nothing for {self.read_timeout_s:.1f}s"
+                        f" while rank 0 waited for frame type {expect} "
+                        f"(round {self._round})") from e
+                if not data:
+                    raise TransportError(f"rank {r} closed its uplink")
+                buf.feed(data)
+                frame = buf.next_frame()
+            got = self._filter_control(r, frame)
+            if got is None:
+                continue
+            ftype, sender, payload, seq = got
+            if ftype != expect:
+                if ftype == GOODBYE:
+                    raise TransportError(
+                        f"peer said goodbye: "
+                        f"{payload.decode(errors='replace')}")
+                raise TransportError(f"expected frame type {expect}, got "
+                                     f"{ftype} from rank {r}")
+            if sender != r:
+                raise TransportError(
+                    f"link for rank {r} delivered a frame from rank {sender}")
+            return ftype, sender, payload, seq
+
+    def exchange(self, payloads: list[bytes], on_payload=None,
+                 deadline_ms: float | None = None) -> list[bytes]:
         """Ship THIS rank's payload.  Rank 0 returns all ``world`` payloads
         in rank order; workers return ``[]`` (the aggregate comes back via
         `broadcast_payload`).
@@ -413,7 +645,14 @@ class TcpStarTransport:
         each rank's frame COMPLETES (rank 0's own payload first), while the
         reactor is still waiting on the remaining uplinks — the aggregation
         layer uses it to parse, stage, and dispatch the decode of each
-        packet during network wait instead of after the full drain."""
+        packet during network wait instead of after the full drain.
+
+        Elastic mode: ``deadline_ms`` (per-call override of the
+        transport-level default) closes the round that many ms after it
+        starts; ranks that missed it stay ``None`` in the returned list and
+        land in ``last_participation``, a dead link marks the rank left
+        instead of raising, and the listener accepts REJOINs while the
+        reactor waits."""
         if len(payloads) != 1:
             raise ValueError(
                 "multihost exchange ships exactly one payload per rank per "
@@ -423,50 +662,30 @@ class TcpStarTransport:
         local = payloads[0]
         tel = obs.active()
         if self.is_server:
-            out: list[bytes | None] = [local] + [None] * (self.world - 1)
-            self.last_arrival_order = []
-            self._round_t0 = t0
-            self._round_lags = []
-            if on_payload is not None:
-                on_payload(0, local)
-            pending = set(self._conns)
-            # frames already sitting in the buffers (pipelined last round)
-            for r in sorted(pending):
-                frame = self._bufs[r].next_frame()
-                if frame is not None:
-                    self._finish_payload(out, r, frame, on_payload)
-                    pending.discard(r)
-            with selectors.DefaultSelector() as sel:
-                for r in pending:
-                    sel.register(self._conns[r], selectors.EVENT_READ, r)
-                while pending:
-                    for key, _ in sel.select():
-                        r = key.data
-                        data = key.fileobj.recv(1 << 16)
-                        if not data:
-                            raise ConnectionError(
-                                f"rank {r} closed its uplink mid-round")
-                        self._bufs[r].feed(data)
-                        frame = self._bufs[r].next_frame()
-                        if frame is not None:
-                            self._finish_payload(out, r, frame, on_payload)
-                            pending.discard(r)
-                            sel.unregister(key.fileobj)
-            self.stats.bytes_up += sum(len(p) for p in out)
-            self.stats.wall_time_s += time.perf_counter() - t0
-            if tel.enabled:
-                # fan-in straggler skew: first to last uplink completion
-                lags = self._round_lags
-                tel.trace.complete(
-                    "wire/exchange", t0, cat="wire", pid=0,
-                    nbytes=sum(len(p) for p in out),
-                    arrival_order=list(self.last_arrival_order),
-                    fanin_skew_s=(max(lags) - min(lags)) if lags else 0.0)
-                if lags:
-                    tel.observe("wire_fanin_skew_s", max(lags) - min(lags),
-                                transport="tcp")
-            return out
-        sent = send_frame(self._sock, PAYLOAD, self.rank, self.world, local)
+            if deadline_ms is None:
+                deadline_ms = self.deadline_ms
+            elif not self.elastic:
+                raise ValueError(
+                    "a per-round deadline_ms needs an elastic transport "
+                    "(construct every rank with deadline_ms=... so worker "
+                    "frames carry round tags)")
+            self._round += 1
+            return self._serve_exchange(local, on_payload, deadline_ms,
+                                        t0, tel)
+        seq = self._seq
+        self._seq += 1
+        wire = pack_seq_payload(seq, local) if self.elastic else local
+        if self._sock is None:
+            raise TransportError(
+                f"rank {self.rank} has no link to rank 0 (transport closed) "
+                f"— cannot ship round {seq}")
+        try:
+            sent = send_frame(self._sock, PAYLOAD, self.rank, self.world,
+                              wire)
+        except OSError as e:
+            raise TransportError(
+                f"rank {self.rank} could not ship its round-{seq} payload "
+                f"to rank 0: {e}") from e
         self.stats.bytes_up += len(local)
         self.stats.wire_bytes += sent
         self.stats.wall_time_s += time.perf_counter() - t0
@@ -477,18 +696,120 @@ class TcpStarTransport:
                       link=f"rank{self.rank}")
         return []
 
-    def _finish_payload(self, out: list, r: int, frame,
+    def _serve_exchange(self, local: bytes, on_payload,
+                        deadline_ms: float | None, t0: float,
+                        tel) -> list[bytes]:
+        out: list[bytes | None] = [local] + [None] * (self.world - 1)
+        self.last_arrival_order = []
+        self._round_t0 = t0
+        self._round_lags = []
+        if on_payload is not None:
+            on_payload(0, local)
+        self._poll_rejoin()    # a rejoiner queued since last round
+        pending = set(self._conns)
+        # frames already sitting in the buffers (pipelined last round)
+        for r in sorted(pending):
+            try:
+                if self._pop_buffered_payload(out, r, on_payload):
+                    pending.discard(r)
+            except ConnectionError as e:
+                if not self.elastic:
+                    raise
+                self._drop_link(r, str(e))
+                pending.discard(r)
+        deadline = None if deadline_ms is None \
+            else t0 + float(deadline_ms) / 1000.0
+        with selectors.DefaultSelector() as sel:
+            if self.elastic and self._listener is not None:
+                sel.register(self._listener, selectors.EVENT_READ, -1)
+            for r in pending:
+                sel.register(self._conns[r], selectors.EVENT_READ, r)
+            while pending:
+                timeout = self.heartbeat_s
+                if deadline is not None:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        break
+                    timeout = min(timeout, remaining)
+                events = sel.select(timeout)
+                self._maybe_ping()
+                for key, _ in events:
+                    if key.data == -1:
+                        self._poll_rejoin()
+                        continue
+                    r = key.data
+                    try:
+                        data = key.fileobj.recv(1 << 16)
+                        if not data:
+                            raise TransportError(
+                                f"rank {r} closed its uplink mid-round")
+                        self._bufs[r].feed(data)
+                        done = self._pop_buffered_payload(out, r, on_payload)
+                    except ConnectionError as e:
+                        if not self.elastic:
+                            raise
+                        self._drop_link(r, str(e))
+                        pending.discard(r)
+                        with contextlib.suppress(KeyError, ValueError):
+                            sel.unregister(key.fileobj)
+                        continue
+                    if done:
+                        pending.discard(r)
+                        sel.unregister(key.fileobj)
+        # pending ranks missed the deadline: they stay connected, their
+        # late round-tagged frames are discarded on sight
+        arrived = [r for r in range(self.world) if out[r] is not None]
+        self.last_participation = arrived
+        if self.elastic:
+            self._served[PAYLOAD] = self._round
+            self.membership.record_round(arrived, self._round)
+        self.stats.bytes_up += sum(len(p) for p in out if p is not None)
+        self.stats.wall_time_s += time.perf_counter() - t0
+        if tel.enabled:
+            # fan-in straggler skew: first to last uplink completion
+            lags = self._round_lags
+            tel.trace.complete(
+                "wire/exchange", t0, cat="wire", pid=0,
+                nbytes=sum(len(p) for p in out if p is not None),
+                arrival_order=list(self.last_arrival_order),
+                n_arrived=len(arrived),
+                fanin_skew_s=(max(lags) - min(lags)) if lags else 0.0)
+            if lags:
+                tel.observe("wire_fanin_skew_s", max(lags) - min(lags),
+                            transport="tcp")
+        return out
+
+    def _pop_buffered_payload(self, out: list, r: int, on_payload) -> bool:
+        """Pop frames from rank ``r``'s buffer until its round payload
+        completes (True) or the buffer runs dry (False)."""
+        buf = self._bufs.get(r)
+        while buf is not None:
+            frame = buf.next_frame()
+            if frame is None:
+                return False
+            got = self._filter_control(r, frame)
+            if got is None:
+                continue
+            ftype, sender, data, seq = got
+            if ftype != PAYLOAD:
+                if ftype == GOODBYE:
+                    raise TransportError(
+                        f"peer said goodbye: {data.decode(errors='replace')}")
+                raise TransportError(f"expected frame type {PAYLOAD}, got "
+                                     f"{ftype} from rank {r}")
+            if sender != r:
+                raise TransportError(
+                    f"link for rank {r} delivered a frame from rank {sender}")
+            if seq not in (-1, self._round):
+                raise TransportError(
+                    f"rank {r} shipped a round-{seq} payload during round "
+                    f"{self._round} — round-tag desync")
+            self._finish_payload(out, r, data, on_payload)
+            return True
+        return False
+
+    def _finish_payload(self, out: list, r: int, data: bytes,
                         on_payload=None) -> None:
-        ftype, sender, _, data = frame
-        if ftype != PAYLOAD:
-            if ftype == GOODBYE:
-                raise ConnectionError(
-                    f"peer said goodbye: {data.decode(errors='replace')}")
-            raise ConnectionError(f"expected frame type {PAYLOAD}, got "
-                                  f"{ftype} from rank {r}")
-        if sender != r:
-            raise ConnectionError(
-                f"link for rank {r} delivered a frame from rank {sender}")
         out[r] = data
         self.last_arrival_order.append(r)
         self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
@@ -507,6 +828,158 @@ class TcpStarTransport:
         if on_payload is not None:
             on_payload(r, data)
 
+    # ---- elastic plumbing --------------------------------------------------
+
+    @property
+    def last_round(self) -> int:
+        """Index of the round most recently entered (server: the round in
+        flight; worker: the round of its last uplink)."""
+        return self._round if self.is_server else self._seq - 1
+
+    def skip_round(self) -> None:
+        """Worker: advance the round tag WITHOUT sending this round's
+        uplink (the fault harness's "drop" — the server serves the round
+        from whoever arrived; this rank still receives the broadcast)."""
+        if self.is_server:
+            raise ValueError("skip_round is a worker-side operation")
+        if not self.elastic:
+            raise ValueError("skip_round needs an elastic (deadline_ms) "
+                             "transport — a fixed world would deadlock")
+        self._seq += 1
+        self.stats.rounds += 1
+
+    def _maybe_ping(self) -> None:
+        """Server: heartbeat every link at most once per ``heartbeat_s``
+        (called while the reactor waits).  Send failures are left for the
+        read path to surface — a ping is advisory, not a probe."""
+        now = time.perf_counter()
+        if now - self._last_ping < self.heartbeat_s:
+            return
+        self._last_ping = now
+        for conn in list(self._conns.values()):
+            with contextlib.suppress(OSError):
+                send_frame(conn, PING, 0, self.world)
+
+    def _drop_link(self, r: int, reason: str) -> None:
+        """Server, elastic mode: rank ``r``'s link is gone — close it and
+        mark the rank left (it may REJOIN later)."""
+        conn = self._conns.pop(r, None)
+        self._bufs.pop(r, None)
+        if conn is not None:
+            with contextlib.suppress(OSError):
+                conn.close()
+        if self.membership is not None:
+            self.membership.mark_left(r, self._round, reason)
+
+    def _poll_rejoin(self) -> None:
+        """Server, elastic mode: accept at most one queued REJOIN without
+        blocking (called from the reactor when the listener is readable,
+        and once per round so fully-pipelined uplinks never starve a
+        waiting rejoiner)."""
+        if not self.elastic or self._listener is None:
+            return
+        self._listener.settimeout(0.0)
+        try:
+            conn, _ = self._listener.accept()
+        except (BlockingIOError, OSError):
+            return
+        self._handshake_rejoin(conn)
+
+    def _handshake_rejoin(self, conn: socket.socket) -> None:
+        conn.settimeout(_HELLO_GRACE_S)
+        try:
+            ftype, rank, w, token = recv_frame(conn)
+        except (ConnectionError, socket.timeout, TimeoutError, OSError):
+            conn.close()
+            return
+        tok, _, peer_policy = token.partition(b"|")
+        reason = None
+        if ftype == HELLO:
+            reason = ("rendezvous is over: use a REJOIN frame to re-enter "
+                      "a running world")
+        elif ftype != REJOIN:
+            reason = f"expected REJOIN, got frame type {ftype}"
+        elif tok != HELLO_TOKEN:
+            reason = f"protocol token mismatch (server {HELLO_TOKEN!r})"
+        elif peer_policy != self._policy_hash:
+            reason = ("policy mismatch: server "
+                      f"{self._policy_hash.decode() or '<none>'}, worker "
+                      f"{peer_policy.decode(errors='replace') or '<none>'}")
+        elif w != self.world:
+            reason = f"world mismatch: server {self.world}, worker {w}"
+        elif not 1 <= rank < self.world:
+            reason = f"rank {rank} out of range [1, {self.world})"
+        elif rank in self._conns:
+            reason = f"rank {rank} is still connected"
+        if reason is not None:
+            with contextlib.suppress(OSError):
+                send_frame(conn, GOODBYE, 0, self.world, reason.encode())
+            conn.close()
+            return
+        row = (self.membership.row(rank) if self.membership else None) or b""
+        snapshot = b""
+        if self.snapshot_provider is not None:
+            snapshot = self.snapshot_provider() or b""
+        try:
+            send_frame(conn, WELCOME, 0, self.world,
+                       struct.pack("<I", max(self._round, 0)))
+            send_frame(conn, STATE, 0, self.world, row)
+            send_frame(conn, DIRECTION, 0, self.world, snapshot)
+        except OSError:
+            conn.close()
+            return
+        _steady_state(conn)
+        self._conns[rank] = conn
+        self._bufs[rank] = _FrameBuffer()
+        if self.membership is not None:
+            self.membership.mark_joined(rank, self._round, rejoin=True)
+
+    def _recv_steady(self, waiting_for: str,
+                     expect=None) -> tuple[int, int, int, bytes]:
+        """Worker: receive one meaningful frame under the heartbeat-derived
+        read deadline.  PINGs are answered (and reset the deadline), a
+        GOODBYE("shutdown") raises `ServerShutdown`, silence past
+        ``read_timeout_s`` or a broken link raises a `TransportError`
+        naming the peer and round instead of blocking forever."""
+        sock = self._sock
+        round_ = self._seq - 1
+        where = (f"rank {self.rank} waited for {waiting_for} "
+                 f"(round {round_})")
+        if sock is None:
+            raise TransportError(f"no link to rank 0 while {where} "
+                                 "(transport closed)")
+        deadline = time.monotonic() + self.read_timeout_s
+        while True:
+            sock.settimeout(max(0.001, deadline - time.monotonic()))
+            try:
+                ftype, sender, w, payload = recv_frame(sock)
+            except (socket.timeout, TimeoutError) as e:
+                raise TransportError(
+                    f"rank 0 sent nothing for {self.read_timeout_s:.1f}s "
+                    f"while {where} — treating the server as dead") from e
+            except TransportError:
+                raise
+            except (ConnectionError, OSError) as e:
+                raise TransportError(
+                    f"link to rank 0 broke while {where}: {e}") from e
+            if ftype == PING:
+                with contextlib.suppress(OSError):
+                    send_frame(sock, PONG, self.rank, self.world)
+                deadline = time.monotonic() + self.read_timeout_s
+                continue
+            if ftype == GOODBYE:
+                reason = payload.decode(errors="replace")
+                if reason == "shutdown":
+                    raise ServerShutdown(
+                        f"rank 0 closed the star (clean shutdown) while "
+                        f"{where}")
+                raise TransportError(f"peer said goodbye: {reason}")
+            if expect is not None and ftype != expect:
+                raise TransportError(
+                    f"expected frame type {expect}, got {ftype} while "
+                    f"{where}")
+            return ftype, sender, w, payload
+
     def broadcast_payload(self, data: bytes | None, *,
                           encoded: bool = False) -> bytes:
         """Rank 0 passes the direction blob and sends it down every link;
@@ -519,16 +992,32 @@ class TcpStarTransport:
         ``bytes_down`` books only the ``world - 1`` REAL socket sends
         (frame headers included) on rank 0 — its own in-process loopback
         copy never crosses a wire; a worker books its received payload.
-        ``wire_bytes`` counts socket bytes on this process as always."""
+        ``wire_bytes`` counts socket bytes on this process as always.
+
+        Elastic mode RCSQ-wraps the blob with the round it serves, and a
+        receiving worker RESYNCS its own round tag (``_seq = round + 1``).
+        This is the protocol's self-healing half: a worker that missed
+        rounds (slow compile, long GC pause, rejoin) would otherwise fall
+        permanently behind the server's round counter and have every
+        later uplink discarded as stale."""
         t0 = time.perf_counter()
         tel = obs.active()
         ftype = DIRECTION_ENC if encoded else DIRECTION
         if self.is_server:
             if data is None:
                 raise ValueError("rank 0 must provide the broadcast payload")
+            wire = pack_seq_payload(max(self._round, 0), data) \
+                if self.elastic else data
             sent = 0
             for r in sorted(self._conns):
-                sent += send_frame(self._conns[r], ftype, 0, self.world, data)
+                try:
+                    sent += send_frame(self._conns[r], ftype, 0, self.world,
+                                       wire)
+                except OSError as e:
+                    if not self.elastic:
+                        raise
+                    self._drop_link(r, f"downlink send failed in round "
+                                       f"{self._round}: {e}")
             self.stats.wire_bytes += sent
             self.stats.bytes_down += sent
             self.stats.wall_time_s += time.perf_counter() - t0
@@ -538,13 +1027,13 @@ class TcpStarTransport:
                 tel.count("wire_bytes_down", sent, transport="tcp",
                           link="all")
             return data
-        got, _, _, data = recv_frame(self._sock)
+        got, _, _, data = self._recv_steady("the direction broadcast")
         if got not in (DIRECTION, DIRECTION_ENC):
-            if got == GOODBYE:
-                raise ConnectionError(
-                    f"peer said goodbye: {data.decode(errors='replace')}")
-            raise ConnectionError(f"expected a direction frame "
-                                  f"({DIRECTION}/{DIRECTION_ENC}), got {got}")
+            raise TransportError(f"expected a direction frame "
+                                 f"({DIRECTION}/{DIRECTION_ENC}), got {got}")
+        if self.elastic:
+            round_, data = unpack_seq_payload(data)
+            self._seq = round_ + 1     # resync: see docstring
         self.stats.bytes_down += len(data)
         self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
         self.stats.wall_time_s += time.perf_counter() - t0
@@ -565,26 +1054,68 @@ class TcpStarTransport:
         """Mean of one float across all ranks (loss telemetry: every rank
         reports the same global number, like the in-process trainer).  The
         24-byte frames are booked in ``wire_bytes``/``wall_time_s`` only —
-        they are telemetry, not gradient payload."""
+        they are telemetry, not gradient payload.
+
+        Elastic mode: the server waits only for the ranks whose uplink made
+        the last round (``last_participation``) and means over them; ranks
+        that missed the deadline still RECEIVE the mean (theirs is the
+        participants' mean — the best global number that exists)."""
         t0 = time.perf_counter()
         if self.is_server:
-            total = float(value)
-            for r in sorted(self._conns):
+            round_ = self._round
+            total, n = float(value), 1
+            sources = sorted(set(self.last_participation)
+                             & set(self._conns)) if self.elastic \
+                else sorted(self._conns)
+            for r in sources:
                 # through the shared buffers: a worker may have pipelined
                 # this SCALAR right behind its PAYLOAD frame
-                _, _, _, data = self._buffered_frame_from(r, SCALAR)
+                try:
+                    _, _, data, seq = self._buffered_frame_from(r, SCALAR)
+                except ConnectionError as e:
+                    if not self.elastic:
+                        raise
+                    self._drop_link(
+                        r, f"lost during the round-{round_} loss "
+                           f"allreduce: {e}")
+                    continue
+                if seq not in (-1, round_):
+                    raise TransportError(
+                        f"rank {r} sent a round-{seq} loss during round "
+                        f"{round_} — round-tag desync")
                 total += struct.unpack("<d", data)[0]
-                self.stats.wire_bytes += FRAME_HEADER_BYTES + 8
-            mean = total / self.world
+                n += 1
+                self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
+            if self.elastic:
+                self._served[SCALAR] = round_
+            mean = total / (n if self.elastic else self.world)
             out = struct.pack("<d", mean)
             for r in sorted(self._conns):
-                self.stats.wire_bytes += send_frame(
-                    self._conns[r], SCALAR_MEAN, 0, self.world, out)
+                try:
+                    self.stats.wire_bytes += send_frame(
+                        self._conns[r], SCALAR_MEAN, 0, self.world, out)
+                except OSError as e:
+                    if not self.elastic:
+                        raise
+                    self._drop_link(r, f"loss-mean send failed in round "
+                                       f"{round_}: {e}")
         else:
-            self.stats.wire_bytes += send_frame(
-                self._sock, SCALAR, self.rank, self.world,
-                struct.pack("<d", float(value)))
-            _, _, _, data = recv_frame(self._sock, expect=SCALAR_MEAN)
+            body = struct.pack("<d", float(value))
+            if self.elastic:
+                body = pack_seq_payload(self._seq - 1, body)
+            if self._sock is None:
+                raise TransportError(
+                    f"rank {self.rank} has no link to rank 0 (transport "
+                    "closed) — cannot allreduce")
+            try:
+                self.stats.wire_bytes += send_frame(
+                    self._sock, SCALAR, self.rank, self.world, body)
+            except OSError as e:
+                raise TransportError(
+                    f"rank {self.rank} could not ship its loss to rank 0: "
+                    f"{e}") from e
+            _, _, _, data = self._recv_steady("the loss mean",
+                                              expect=SCALAR_MEAN)
             self.stats.wire_bytes += FRAME_HEADER_BYTES + 8
             mean = struct.unpack("<d", data)[0]
         self.stats.wall_time_s += time.perf_counter() - t0
@@ -597,16 +1128,37 @@ class TcpStarTransport:
         training rounds over the same buffered links as the SCALAR frames
         (a worker may have pipelined frames ahead of it), so it needs no
         barrier of its own.  Booked in ``wire_bytes`` only — checkpoint
-        plumbing, not gradient payload."""
+        plumbing, not gradient payload.
+
+        The server also stores each rank's row in `Membership`, so a rank
+        that later dies REJOINs with its `CommState` restored bitwise from
+        the last gather.  In elastic mode a dead rank's slot comes back
+        ``None`` (`fold_comm_state_rows` skips it)."""
         t0 = time.perf_counter()
         if self.is_server:
             out: list[bytes | None] = [payload] + [None] * (self.world - 1)
+            if self.membership is not None:
+                self.membership.store_row(0, payload)
             for r in sorted(self._conns):
-                _, _, _, data = self._buffered_frame_from(r, STATE)
+                try:
+                    _, _, data, _ = self._buffered_frame_from(r, STATE)
+                except ConnectionError as e:
+                    if not self.elastic:
+                        raise
+                    self._drop_link(
+                        r, f"lost during the round-{self._round} state "
+                           f"gather: {e}")
+                    continue
                 out[r] = data
+                if self.membership is not None and data:
+                    self.membership.store_row(r, data)
                 self.stats.wire_bytes += FRAME_HEADER_BYTES + len(data)
             self.stats.wall_time_s += time.perf_counter() - t0
             return out
+        if self._sock is None:
+            raise TransportError(
+                f"rank {self.rank} has no link to rank 0 (transport "
+                "closed) — cannot gather state")
         self.stats.wire_bytes += send_frame(
             self._sock, STATE, self.rank, self.world, payload)
         self.stats.wall_time_s += time.perf_counter() - t0
@@ -615,11 +1167,20 @@ class TcpStarTransport:
     # ---- lifecycle ---------------------------------------------------------
 
     def close(self) -> None:
+        """Tear down the star.  Rank 0 tells every worker GOODBYE
+        ("shutdown") first, so a worker blocked on a recv surfaces a clean
+        `ServerShutdown` instead of a bare reset; a worker announces LEAVE
+        so an elastic server marks it left instead of dying on EOF."""
         for conn in self._conns.values():
+            with contextlib.suppress(OSError):
+                send_frame(conn, GOODBYE, 0, self.world, b"shutdown")
             with contextlib.suppress(OSError):
                 conn.close()
         self._conns.clear()
         self._bufs.clear()
+        if self._sock is not None and not self.is_server:
+            with contextlib.suppress(OSError):
+                send_frame(self._sock, LEAVE, self.rank, self.world, b"done")
         for s in (self._sock, self._listener):
             if s is not None:
                 with contextlib.suppress(OSError):
@@ -636,11 +1197,17 @@ class TcpStarTransport:
 def make_tcp_transport(*, rank: int, world: int,
                        coordinator: str = "127.0.0.1:37737",
                        timeout: float = 60.0,
-                       policy_hash: str | None = None) -> TcpStarTransport:
+                       policy_hash: str | None = None,
+                       heartbeat_s: float | None = None,
+                       read_timeout_s: float | None = None,
+                       deadline_ms: float | None = None) -> TcpStarTransport:
     """The ``make_transport("tcp", ...)`` branch: rank 0 serves at
     ``coordinator``, every other rank dials it.  ``policy_hash`` (the
     rank's `ResolvedPolicy.hash`) rides the HELLO handshake so policy
-    mismatches fail at rendezvous."""
+    mismatches fail at rendezvous.  ``deadline_ms`` turns on elastic mode
+    (partial deadline rounds, REJOIN, fault tolerance — see the module
+    doc); pass the same value on EVERY rank so worker frames carry the
+    round tags the server's staleness filter needs."""
     host, port = parse_coordinator(coordinator)
     if rank == 0:
         if port == 0:
@@ -648,6 +1215,12 @@ def make_tcp_transport(*, rank: int, world: int,
                              "pick a concrete port every rank can dial "
                              "(repro.launch.multihost does this for you)")
         return TcpStarTransport.serve(host, port, world=world, timeout=timeout,
-                                      policy_hash=policy_hash)
+                                      policy_hash=policy_hash,
+                                      heartbeat_s=heartbeat_s,
+                                      read_timeout_s=read_timeout_s,
+                                      deadline_ms=deadline_ms)
     return TcpStarTransport.connect(host, port, rank=rank, world=world,
-                                    timeout=timeout, policy_hash=policy_hash)
+                                    timeout=timeout, policy_hash=policy_hash,
+                                    heartbeat_s=heartbeat_s,
+                                    read_timeout_s=read_timeout_s,
+                                    deadline_ms=deadline_ms)

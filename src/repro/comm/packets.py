@@ -235,6 +235,40 @@ def unpack_bucket_payload(raw: bytes) -> list[bytes]:
 
 
 # ---------------------------------------------------------------------------
+# round-tagged uplink container (RCSQ)
+# ---------------------------------------------------------------------------
+#
+# The elastic tcp star (`repro.comm.multihost` with ``deadline_ms``) wraps
+# every worker PAYLOAD/SCALAR body in this 8-byte container so rank 0 can
+# tell a live round's frame from a straggler's late one: a deadline round
+# closes without the slow uplinks, and whenever those bytes eventually land
+# (or never do — a dropped send leaves no frame at all) the server discards
+# anything tagged with an already-served round on sight instead of
+# mistaking it for the current round's contribution.
+
+SEQ_MAGIC = b"RCSQ"
+_SEQ_FMT = "<4sI"
+SEQ_HEADER_BYTES = struct.calcsize(_SEQ_FMT)    # 8
+
+
+def pack_seq_payload(seq: int, inner: bytes) -> bytes:
+    """Tag one uplink body with its round index."""
+    if seq < 0:
+        raise ValueError(f"round tag must be >= 0, got {seq}")
+    return struct.pack(_SEQ_FMT, SEQ_MAGIC, seq) + inner
+
+
+def unpack_seq_payload(raw: bytes) -> tuple[int, bytes]:
+    """Inverse of `pack_seq_payload` -> (round, inner bytes)."""
+    if len(raw) < SEQ_HEADER_BYTES:
+        raise ValueError(f"truncated round-tagged payload: {len(raw)} bytes")
+    magic, seq = struct.unpack_from(_SEQ_FMT, raw, 0)
+    if magic != SEQ_MAGIC:
+        raise ValueError(f"bad round-tag magic {magic!r}")
+    return seq, raw[SEQ_HEADER_BYTES:]
+
+
+# ---------------------------------------------------------------------------
 # device header lane
 # ---------------------------------------------------------------------------
 #

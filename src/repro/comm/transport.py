@@ -134,7 +134,8 @@ def _reject_unused(name: str, kw: dict) -> None:
             f"make_transport({name!r}) got unsupported keyword arguments "
             f"{sorted(kw)}; only 'hierarchical' takes topology kwargs "
             "(pod_size, cross_pod_slowdown) and 'tcp' takes "
-            "rank/world/coordinator/timeout")
+            "rank/world/coordinator/timeout/policy_hash plus the elastic "
+            "knobs (deadline_ms, heartbeat_s, read_timeout_s)")
 
 
 def make_transport(name: str = "loopback", *,

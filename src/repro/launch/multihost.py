@@ -138,11 +138,18 @@ def main() -> None:
                     help="number of ranks (= workers) to spawn")
     ap.add_argument("--coordinator", default="",
                     help="host:port override (default: a free local port)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="elastic mode: forward this aggregation deadline "
+                         "to every rank (rank 0 averages whoever arrived "
+                         "within the window; 0 = classic synchronous star)")
     ap.add_argument("train_args", nargs="*",
                     help="arguments after -- are forwarded to every "
                          "repro.launch.train rank")
     args = ap.parse_args()
-    rc = launch_world(args.world, args.train_args,
+    train_args = list(args.train_args)
+    if args.deadline_ms:
+        train_args += ["--deadline-ms", str(args.deadline_ms)]
+    rc = launch_world(args.world, train_args,
                       coordinator=args.coordinator or None)
     if rc:
         raise SystemExit(rc)

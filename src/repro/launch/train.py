@@ -69,6 +69,14 @@ def main() -> None:
                     help="tcp: host:port of rank 0's rendezvous socket")
     ap.add_argument("--rendezvous-timeout", type=float, default=60.0,
                     help="tcp: seconds to wait for all ranks to join")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="tcp: elastic mode — rank 0 closes each "
+                         "aggregation round this many ms after the first "
+                         "uplink frame lands, averaging whoever arrived "
+                         "(inverse-participation reweighted so the mean "
+                         "stays unbiased), tolerating dead ranks and "
+                         "accepting mid-run REJOINs.  0 = classic "
+                         "synchronous star (wait for everyone)")
     ap.add_argument("--downlink", default="",
                     help="compress the server->worker direction with this "
                          "registry codec (DIANA shift; packed + device "
@@ -158,7 +166,8 @@ def main() -> None:
                     "tcp", rank=rank, world=args.workers,
                     coordinator=args.coordinator,
                     timeout=args.rendezvous_timeout,
-                    policy_hash=policy.hash if policy else None)
+                    policy_hash=policy.hash if policy else None,
+                    deadline_ms=args.deadline_ms or None)
             else:
                 transport = make_transport(args.transport)
         elif args.transport != "loopback":
@@ -186,7 +195,20 @@ def main() -> None:
         print(f"sim: {cfg.name} M={args.workers} method={args.method} "
               f"wire={args.wire}{who}{pol} dim={trainer.dim:,}")
         t0 = time.time()
-        hist = trainer.fit(data, steps=args.steps, log_every=10)
+        try:
+            hist = trainer.fit(data, steps=args.steps, log_every=10)
+        except Exception as exc:
+            from repro.comm import ServerShutdown
+
+            if not isinstance(exc, ServerShutdown):
+                raise
+            # elastic star: rank 0 said GOODBYE("shutdown") — a clean
+            # end-of-run, not a network fault
+            print(f"rank {rank}: server shut down cleanly after "
+                  f"{transport.stats.rounds} rounds; exiting")
+            if hasattr(transport, "close"):
+                transport.close()
+            return
         print(f"done in {time.time()-t0:.1f}s; final loss "
               f"{hist.loss[-1]:.4f}; total {hist.bits[-1]/1e9:.3f} Gbits")
         if transport is not None:

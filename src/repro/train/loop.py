@@ -152,6 +152,14 @@ class Trainer:
                 f"num_workers={self.m}; pass the GLOBAL worker count (every "
                 "rank sees the same (M, b, ...) batch stream and computes "
                 "its own shard)")
+        if self.rank == 0 and getattr(self.transport, "elastic", False):
+            # elastic star: a mid-run REJOINer's own params are stale by
+            # however many rounds it missed — serve it the live flat
+            # params during the rejoin handshake (DIRECTION frame)
+            import numpy as np
+
+            self.transport.snapshot_provider = lambda: np.asarray(
+                self.flat_params, np.float32).tobytes()
         if wire == "packed" and bucket_size is not None and self.rank is None:
             # in-process bucketed wire: backward-overlap streaming taps
             self._step = self._build_bucketed_step()

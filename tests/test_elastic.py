@@ -1,0 +1,850 @@
+"""Elastic fault-tolerant tcp star: chaos battery.
+
+Fast tier: the deterministic fault-injection harness itself (seeded
+schedules, backoff), membership/Horvitz-Thompson unit math, and the
+thread-based socket star under injected faults — read deadlines, clean
+shutdown, deadline partial rounds with late-frame discard, torn frames,
+kill + mid-run REJOIN, and a seeded unbiasedness run over real sockets.
+
+Slow tier: 4 spawned OS processes training a stateful aggregator under a
+deadline; one rank is hard-killed mid-run (RST), the world keeps serving
+partial rounds, and the rank REJOINs with its gathered `CommState` row
+restored bitwise.
+"""
+
+import pickle
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.comm.elastic import (
+    ACTIVE,
+    LEFT,
+    BackoffSchedule,
+    Membership,
+    participation_weights,
+)
+from repro.comm.faultinject import (
+    Fault,
+    FaultSchedule,
+    FaultyTransport,
+    InjectedFault,
+)
+from repro.comm.multihost import (
+    ServerShutdown,
+    TcpStarTransport,
+    TransportError,
+    pick_free_port,
+)
+
+
+def _sockets_available() -> bool:
+    try:
+        with socket.socket() as s:
+            s.bind(("127.0.0.1", 0))
+        return True
+    except OSError:               # pragma: no cover - sandboxed environments
+        return False
+
+
+needs_sockets = pytest.mark.skipif(not _sockets_available(),
+                                   reason="localhost sockets unavailable")
+
+
+def _connect_elastic(world, *, deadline_ms=500.0, heartbeat_s=None,
+                     read_timeout_s=None, timeout=15.0):
+    """Threaded rendezvous of an ELASTIC world; returns {rank: transport}."""
+    server = TcpStarTransport.listen(
+        port=0, world=world, timeout=timeout, deadline_ms=deadline_ms,
+        heartbeat_s=heartbeat_s, read_timeout_s=read_timeout_s)
+    tps = {0: server}
+
+    def join(r):
+        tps[r] = TcpStarTransport.connect(
+            "127.0.0.1", server.port, rank=r, world=world, timeout=timeout,
+            deadline_ms=deadline_ms, heartbeat_s=heartbeat_s,
+            read_timeout_s=read_timeout_s)
+
+    threads = [threading.Thread(target=join, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    server.accept_workers()
+    for t in threads:
+        t.join()
+    return tps
+
+
+def _close_all(tps):
+    for t in tps.values():
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# deterministic harness units (no sockets)
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_schedule_deterministic():
+    a = BackoffSchedule(base_s=0.05, cap_s=0.4, retries=6, seed=3)
+    b = BackoffSchedule(base_s=0.05, cap_s=0.4, retries=6, seed=3)
+    assert a.delays() == b.delays(), "same seed must replay the same delays"
+    assert a.delays() == a.delays(), "delays() must be a pure function"
+    assert a.delays() != BackoffSchedule(base_s=0.05, cap_s=0.4, retries=6,
+                                         seed=4).delays()
+    delays = a.delays()
+    assert len(delays) == 6
+    for i, d in enumerate(delays):
+        full = min(0.4, 0.05 * 2 ** i)
+        assert 0.5 * full <= d <= full, f"attempt {i}: {d} outside jitter band"
+    # jitter=0 is the exact exponential ramp, capped
+    assert BackoffSchedule(base_s=0.1, cap_s=0.4, retries=4, jitter=0.0
+                           ).delays() == [0.1, 0.2, 0.4, 0.4]
+
+
+def test_fault_schedule_seeded_deterministic():
+    kw = dict(world=4, rounds=50, p_delay=0.2, p_drop=0.3, delay_s=0.01,
+              kills=[(2, 7)])
+    a = FaultSchedule.seeded(11, **kw)
+    b = FaultSchedule.seeded(11, **kw)
+    assert len(a) == len(b) > 0
+    for rank in range(4):
+        for t in range(50):
+            assert [(f.kind, f.seconds) for f in a.at(rank, t)] \
+                == [(f.kind, f.seconds) for f in b.at(rank, t)]
+    assert len(a) != len(FaultSchedule.seeded(12, **kw)) or any(
+        a.at(r, t) != FaultSchedule.seeded(12, **kw).at(r, t)
+        for r in range(4) for t in range(50))
+    # rank 0 is the aggregation point: never faulted
+    assert all(not a.at(0, t) for t in range(50))
+    assert [f.kind for f in a.at(2, 7)][-1] == "kill"
+    # a drop and a delay never share a slot (drop precedence)
+    for rank in range(1, 4):
+        for t in range(50):
+            kinds = [f.kind for f in a.at(rank, t) if f.kind != "kill"]
+            assert len(kinds) <= 1
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="fault kind"):
+        Fault(0, "explode")
+    with pytest.raises(ValueError, match="round must be >= 0"):
+        Fault(-1, "drop")
+
+    class _Rank0:
+        rank = 0
+    with pytest.raises(ValueError, match="rank 0"):
+        FaultyTransport(_Rank0(), FaultSchedule())
+
+
+def test_participation_weights():
+    w = participation_weights([2, 4, 1], [4, 4, 4])
+    assert w.tolist() == [2.0, 1.0, 4.0]
+    with pytest.raises(ValueError, match="shape"):
+        participation_weights([1, 2], [1, 2, 3])
+    with pytest.raises(ValueError, match=">= 1 participation"):
+        participation_weights([1, 0], [2, 2])
+
+
+def test_membership_lifecycle_and_weights():
+    mem = Membership(3)
+    assert mem.active_ranks() == [0, 1, 2]
+    # 4 rounds: rank 2 misses rounds 1 and 3
+    for t, arrived in enumerate([[0, 1, 2], [0, 1], [0, 1, 2], [0, 1]]):
+        mem.record_round(arrived, t)
+    assert mem.rounds == 4
+    np.testing.assert_allclose(mem.weights([0, 1, 2]), [1.0, 1.0, 2.0])
+    mem.mark_left(2, 4, "rst")
+    assert not mem.is_active(2) and mem.active_ranks() == [0, 1]
+    first = mem.members[2].left_reason
+    mem.mark_left(2, 9, "later")          # idempotent: first reason sticks
+    assert mem.members[2].left_reason == first
+    assert mem.members[2].left_round == 4
+    # a round recorded while rank 2 is out touches only the active ranks
+    mem.record_round([0, 1], 5)
+    assert mem.members[2].rounds_seen == 4
+    # rejoin resets the participation frequency to the new incarnation,
+    # and the join round itself is never counted against the rejoiner
+    mem.mark_joined(2, 6, rejoin=True)
+    assert mem.is_active(2) and mem.members[2].rejoins == 1
+    assert (mem.members[2].rounds_seen, mem.members[2].rounds_participated) \
+        == (0, 0)
+    mem.record_round([0, 1], 6)
+    assert mem.members[2].rounds_seen == 0
+    mem.record_round([0, 1, 2], 7)
+    np.testing.assert_allclose(mem.weights([2]), [1.0])
+    # rows: REJOIN serves the last gathered CommState row bitwise
+    mem.store_row(2, b"row-two")
+    assert mem.row(2) == b"row-two" and mem.row(1) is None
+    s = pickle.loads(pickle.dumps(mem.summary()))
+    assert s["members"][2]["rejoins"] == 1
+    assert s["members"][1]["state"] == ACTIVE
+    assert LEFT not in {m["state"] for m in s["members"].values()}
+
+
+# ---------------------------------------------------------------------------
+# socket star under faults (fast tier, threads)
+# ---------------------------------------------------------------------------
+
+
+@needs_sockets
+def test_worker_read_deadline_names_peer_and_round():
+    """A worker whose server goes silent must surface a descriptive
+    TransportError after the heartbeat-derived read deadline — never hang
+    forever on a dead rank 0."""
+    tps = _connect_elastic(2, heartbeat_s=0.1, read_timeout_s=0.4)
+    try:
+        tps[1].exchange([b"round0"])
+        with pytest.raises(TransportError) as ei:
+            tps[1].broadcast_payload(None)      # rank 0 never broadcasts
+        msg = str(ei.value)
+        assert "rank 0" in msg and "round 0" in msg
+        assert "direction broadcast" in msg
+    finally:
+        _close_all(tps)
+
+
+@needs_sockets
+def test_heartbeat_keeps_slow_round_alive():
+    """While rank 0's reactor waits on a straggler it PINGs every link, so
+    a fast worker with a short read deadline does NOT give up on a round
+    that is merely slow."""
+    tps = _connect_elastic(3, deadline_ms=5000.0, heartbeat_s=0.05,
+                           read_timeout_s=0.25)
+    got = {}
+
+    def server():
+        out = tps[0].exchange([b"s"])
+        got[0] = out
+        tps[0].broadcast_payload(b"the-direction")
+
+    def fast():
+        tps[1].exchange([b"fast"])
+        got[1] = tps[1].broadcast_payload(None)
+
+    def slow():
+        time.sleep(0.8)           # >> rank 1's read_timeout_s
+        tps[2].exchange([b"slow"])
+        got[2] = tps[2].broadcast_payload(None)
+
+    try:
+        threads = [threading.Thread(target=f) for f in (fast, slow, server)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+        assert got[0] == [b"s", b"fast", b"slow"]
+        assert got[1] == got[2] == b"the-direction"
+    finally:
+        _close_all(tps)
+
+
+@needs_sockets
+def test_server_close_surfaces_clean_shutdown():
+    """Rank 0's close() says GOODBYE("shutdown") down every link; a worker
+    blocked on the next broadcast gets `ServerShutdown`, not a reset."""
+    tps = _connect_elastic(2, heartbeat_s=0.1, read_timeout_s=5.0)
+    try:
+        tps[0].close()
+        with pytest.raises(ServerShutdown, match="clean shutdown"):
+            tps[1].broadcast_payload(None)
+    finally:
+        _close_all(tps)
+
+
+@needs_sockets
+def test_worker_leave_marks_member_left():
+    """A worker's clean close() ships LEAVE; the elastic server drops the
+    link, marks the rank left, and keeps serving partial rounds."""
+    tps = _connect_elastic(3, deadline_ms=200.0, heartbeat_s=0.1)
+    try:
+        tps[2].close()
+        out = {}
+
+        def w1():
+            tps[1].exchange([b"one"])
+            out[1] = tps[1].broadcast_payload(None)
+
+        t = threading.Thread(target=w1)
+        t.start()
+        got = tps[0].exchange([b"zero"])
+        tps[0].broadcast_payload(b"dir")
+        t.join(timeout=30)
+        assert got == [b"zero", b"one", None]
+        assert tps[0].last_participation == [0, 1]
+        m = tps[0].membership.members[2]
+        assert m.state == LEFT and "LEAVE" in m.left_reason
+        assert out[1] == b"dir"
+    finally:
+        _close_all(tps)
+
+
+@needs_sockets
+def test_deadline_partial_round_discards_late_frame():
+    """A straggler misses the deadline: the round closes without it, its
+    LATE round-tagged frame is discarded on sight next round (never
+    aggregated into the wrong round), and its fresh uplink lands."""
+    tps = _connect_elastic(3, deadline_ms=300.0, heartbeat_s=0.1)
+    try:
+        results = {}
+
+        def w1():
+            tps[1].exchange([b"r1-0"])
+            results["b0", 1] = tps[1].broadcast_payload(None)
+            tps[1].exchange([b"r1-1"])
+            results["b1", 1] = tps[1].broadcast_payload(None)
+
+        def w2():
+            time.sleep(0.8)                  # misses round 0's deadline
+            tps[2].exchange([b"r2-0"])       # LATE: tagged round 0
+            results["b0", 2] = tps[2].broadcast_payload(None)
+            tps[2].exchange([b"r2-1"])
+            results["b1", 2] = tps[2].broadcast_payload(None)
+
+        threads = [threading.Thread(target=f) for f in (w1, w2)]
+        for t in threads:
+            t.start()
+        out0 = tps[0].exchange([b"r0-0"])
+        assert out0 == [b"r0-0", b"r1-0", None]
+        assert tps[0].last_participation == [0, 1]
+        tps[0].broadcast_payload(b"dir0")
+        # round 1, per-call deadline override: rank 2's late round-0 frame
+        # is discarded on sight and its fresh (resynced) uplink lands
+        out1 = tps[0].exchange([b"r0-1"], deadline_ms=5000.0)
+        assert out1 == [b"r0-1", b"r1-1", b"r2-1"]
+        assert tps[0].last_participation == [0, 1, 2]
+        tps[0].broadcast_payload(b"dir1")
+        for t in threads:
+            t.join(timeout=30)
+        assert results["b0", 1] == results["b0", 2] == b"dir0"
+        assert results["b1", 1] == results["b1", 2] == b"dir1"
+        mem = tps[0].membership.members
+        assert mem[2].rounds_seen == 2 and mem[2].rounds_participated == 1
+        assert mem[1].rounds_participated == 2
+    finally:
+        _close_all(tps)
+
+
+@needs_sockets
+def test_injected_drop_skips_round_and_stays_aligned():
+    """The harness's "drop": skip_round advances the round tag without
+    sending, so the next uplink still lands in the RIGHT round."""
+    tps = _connect_elastic(3, deadline_ms=250.0, heartbeat_s=0.1)
+    faulty = FaultyTransport(
+        tps[2], FaultSchedule({2: [Fault(0, "drop")]}))
+    try:
+        done = {}
+
+        def w1():
+            for t in range(2):
+                tps[1].exchange([b"one%d" % t])
+                done["w1", t] = tps[1].broadcast_payload(None)
+
+        def w2():
+            for t in range(2):
+                assert faulty.exchange([b"two%d" % t]) == []
+                done["w2", t] = faulty.broadcast_payload(None)
+
+        threads = [threading.Thread(target=f) for f in (w1, w2)]
+        for t in threads:
+            t.start()
+        assert tps[0].exchange([b"zero0"]) == [b"zero0", b"one0", None]
+        tps[0].broadcast_payload(b"d0")
+        assert tps[0].exchange([b"zero1"]) == [b"zero1", b"one1", b"two1"]
+        tps[0].broadcast_payload(b"d1")
+        for t in threads:
+            t.join(timeout=30)
+        assert done["w2", 0] == b"d0" and done["w2", 1] == b"d1"
+        # the dropped rank still BOOKED the round (stats stay per-round)
+        assert faulty.stats.rounds == 2
+    finally:
+        _close_all(tps)
+
+
+def test_skip_round_guards():
+    t = TcpStarTransport(1, 2)                     # not elastic
+    with pytest.raises(ValueError, match="elastic"):
+        t.skip_round()
+    s = TcpStarTransport(0, 2, deadline_ms=100.0)
+    with pytest.raises(ValueError, match="worker-side"):
+        s.skip_round()
+
+
+@needs_sockets
+def test_torn_frame_drops_rank_and_round_completes():
+    """A rank dying mid-write (header promising more bytes than follow,
+    then RST) must not poison the reactor: the server drops the link,
+    serves the round partial, and marks the rank left."""
+    tps = _connect_elastic(3, deadline_ms=400.0, heartbeat_s=0.1)
+    faulty = FaultyTransport(tps[2], FaultSchedule({2: [Fault(0, "torn")]}))
+    try:
+        def w1():
+            tps[1].exchange([b"one"])
+            tps[1].broadcast_payload(None)
+
+        def w2():
+            with pytest.raises(InjectedFault, match="torn"):
+                faulty.exchange([b"two"])
+
+        threads = [threading.Thread(target=f) for f in (w1, w2)]
+        for t in threads:
+            t.start()
+        out = tps[0].exchange([b"zero"])
+        tps[0].broadcast_payload(b"dir")
+        for t in threads:
+            t.join(timeout=30)
+        assert out == [b"zero", b"one", None]
+        assert tps[0].membership.members[2].state == LEFT
+    finally:
+        _close_all(tps)
+
+
+@needs_sockets
+def test_kill_then_rejoin_restores_row_and_snapshot():
+    """The full elastic arc over real sockets: gather a CommState row, RST
+    rank 2 mid-run, keep serving partial rounds, then REJOIN under seeded
+    backoff — the returned row is bitwise the gathered one, the params
+    snapshot comes from rank 0's provider, and the rank participates
+    again (with its join round never counted against it)."""
+    tps = _connect_elastic(3, deadline_ms=250.0, heartbeat_s=0.1)
+    tps[0].snapshot_provider = lambda: b"PARAMS"
+    faulty = FaultyTransport(tps[2], FaultSchedule({2: [Fault(1, "kill")]}))
+    rounds = 6
+    fail = []
+
+    def w1():
+        try:
+            tps[1].gather_state(b"ROW1")
+            t = 0
+            while True:
+                tps[1].exchange([b"one%d" % t])
+                tps[1].broadcast_payload(None)
+                t += 1
+        except (ServerShutdown, TransportError):
+            pass
+        except Exception as e:    # pragma: no cover - surfaced via fail
+            fail.append(("w1", repr(e)))
+
+    def w2():
+        try:
+            faulty.gather_state(b"ROW2")
+            faulty.exchange([b"two0"])
+            faulty.broadcast_payload(None)
+            with pytest.raises(InjectedFault, match="killed"):
+                faulty.exchange([b"two1"])
+            tp, row, snap = TcpStarTransport.rejoin(
+                "127.0.0.1", tps[0].port, rank=2, world=3,
+                deadline_ms=250.0, heartbeat_s=0.1,
+                backoff=BackoffSchedule(base_s=0.05, cap_s=0.5,
+                                        retries=12, seed=7))
+            sent = 0
+            try:
+                assert row == b"ROW2", row
+                assert snap == b"PARAMS", snap
+                # consume the in-flight round's downlink, then rejoin the
+                # round loop until the server closes the star
+                tp.broadcast_payload(None)
+                while True:
+                    tp.exchange([b"back%d" % sent])
+                    sent += 1
+                    tp.broadcast_payload(None)
+            except (ServerShutdown, TransportError):
+                assert sent >= 1, "rejoiner never shipped an uplink"
+            finally:
+                tp.close()
+        except Exception as e:    # pragma: no cover - surfaced via fail
+            fail.append(("w2", repr(e)))
+
+    threads = [threading.Thread(target=f) for f in (w1, w2)]
+    for t in threads:
+        t.start()
+    try:
+        rows = tps[0].gather_state(b"ROW0")
+        assert rows == [b"ROW0", b"ROW1", b"ROW2"]
+        partial, served = 0, 0
+        while True:
+            out = tps[0].exchange([b"zero%d" % served])
+            assert out[1] is not None, f"rank 1 missed round {served}"
+            partial += out[2] is None
+            tps[0].broadcast_payload(b"dir%d" % served)
+            served += 1
+            m2 = tps[0].membership.members[2]
+            if served >= rounds and m2.rejoins == 1 \
+                    and m2.rounds_participated >= 1:
+                break
+            assert served < 80, "rank 2 never made it back into the world"
+    finally:
+        tps[0].close()
+        for t in threads:
+            t.join(timeout=60)
+    assert not fail, fail
+    assert partial >= 1, "the kill must cost at least one partial round"
+    mem = tps[0].membership.members[2]
+    assert mem.state == ACTIVE and mem.rejoins == 1
+    assert mem.rounds_participated >= 1
+    summary = tps[0].membership.summary()
+    assert summary["members"][2]["rejoins"] == 1
+    _close_all(tps)
+
+
+@needs_sockets
+def test_rejoin_refused_while_old_link_alive_then_backoff_wins():
+    """An impostor REJOIN for a rank whose link is healthy is refused;
+    the refusal text reaches the caller once the backoff is exhausted."""
+    tps = _connect_elastic(2, deadline_ms=200.0, heartbeat_s=0.1)
+    try:
+        err = {}
+
+        def impostor():
+            try:
+                TcpStarTransport.rejoin(
+                    "127.0.0.1", tps[0].port, rank=1, world=2,
+                    deadline_ms=200.0,
+                    backoff=BackoffSchedule(base_s=0.01, cap_s=0.02,
+                                            retries=2, seed=0))
+            except TransportError as e:
+                err["msg"] = str(e)
+
+        def w1():
+            tps[1].exchange([b"one"])
+            tps[1].broadcast_payload(None)
+
+        threads = [threading.Thread(target=f) for f in (impostor, w1)]
+        for t in threads:
+            t.start()
+        # serve a few rounds so the listener polls while rank 1 is healthy
+        for t in range(3):
+            tps[0].exchange([b"zero"], deadline_ms=150.0)
+            if t == 0:
+                tps[0].broadcast_payload(b"d")
+        for t in threads:
+            t.join(timeout=30)
+        assert "still connected" in err["msg"]
+        assert tps[0].membership.members[1].state == ACTIVE
+    finally:
+        _close_all(tps)
+
+
+def test_elastic_validation_errors():
+    """deadline_ms composes only with elastic transports, and the elastic
+    star composes only with the plain-direction aggregators."""
+    from repro.comm import make_transport, packed_aggregator
+    from repro.comm.transport import LoopbackTransport
+
+    with pytest.raises(ValueError, match="elastic"):
+        packed_aggregator("mlmc_topk", 32, transport=LoopbackTransport(),
+                          k_fraction=0.25, deadline_ms=100.0)
+    plain = TcpStarTransport(0, 2)
+    with pytest.raises(ValueError, match="per-round deadline_ms"):
+        plain.exchange([b"x"], deadline_ms=50.0)
+    el = TcpStarTransport(0, 2, deadline_ms=100.0)
+    with pytest.raises(ValueError, match="downlink"):
+        packed_aggregator("mlmc_topk", 32, transport=el, k_fraction=0.25,
+                          downlink="topk")
+    with pytest.raises(ValueError, match="elastic"):
+        packed_aggregator("mlmc_topk", 32, transport=el, k_fraction=0.25,
+                          bucket_size=16)
+    with pytest.raises(ValueError, match="elastic"):
+        packed_aggregator("ef21", 32, transport=el, k_fraction=0.25)
+    # the sim transports reject the elastic knobs outright
+    with pytest.raises(TypeError, match="deadline_ms"):
+        make_transport("loopback", deadline_ms=100.0)
+
+
+# ---------------------------------------------------------------------------
+# statistics: Horvitz-Thompson reweighting over real sockets
+# ---------------------------------------------------------------------------
+
+
+def _run_elastic_rounds(tps, schedule, grads, rounds):
+    """Drive `MultihostPackedAggregate` (dense codec) for ``rounds`` over
+    an elastic world with ``schedule`` injected on the workers.  Returns
+    (per-round directions from rank 0, per-round participation masks)."""
+    import jax
+
+    from repro.comm import packed_aggregator
+
+    world = len(tps)
+    dirs, masks = [], []
+    aggs = {0: packed_aggregator("dense", grads.shape[1], transport=tps[0])}
+    for r in range(1, world):
+        aggs[r] = packed_aggregator(
+            "dense", grads.shape[1],
+            transport=FaultyTransport(tps[r], schedule))
+    rng = jax.random.PRNGKey(0)
+    fail = []
+
+    def worker(r):
+        try:
+            for t in range(rounds):
+                aggs[r](grads[r:r + 1], rng, None)
+        except Exception as e:    # pragma: no cover - surfaced below
+            fail.append((r, repr(e)))
+
+    threads = [threading.Thread(target=worker, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    for t in range(rounds):
+        out = aggs[0](grads[0:1], rng, None)
+        dirs.append(np.asarray(out.direction, np.float64))
+        mask = np.zeros(world, bool)
+        mask[tps[0].last_participation] = True
+        masks.append(mask)
+    for t in threads:
+        t.join(timeout=120)
+    assert not fail, fail
+    return np.stack(dirs), np.stack(masks)
+
+
+@needs_sockets
+def test_deadline_reweighting_is_unbiased():
+    """The acceptance statistic: under seeded Bernoulli drops the run-mean
+    of the Horvitz-Thompson partial directions converges to the FULL-world
+    mean gradient, and beats the naive mean-over-arrivals (recomputed from
+    the recorded masks), which drifts toward the always-present ranks."""
+    world, d, rounds = 4, 32, 80
+    rng = np.random.default_rng(5)
+    grads = np.asarray(rng.normal(size=(world, d)) +
+                       4.0 * np.arange(world)[:, None], np.float32)
+    gbar = grads.astype(np.float64).mean(axis=0)
+    sched = FaultSchedule.seeded(21, world=world, rounds=rounds, p_drop=0.35)
+    tps = _connect_elastic(world, deadline_ms=60.0, heartbeat_s=0.5)
+    try:
+        dirs, masks = _run_elastic_rounds(tps, sched, grads, rounds)
+    finally:
+        _close_all(tps)
+    assert masks.all(axis=1).sum() < rounds, "the schedule must drop rounds"
+    assert (~masks[:, 0]).sum() == 0, "rank 0 never misses its own deadline"
+    ht_err = np.linalg.norm(dirs.mean(axis=0) - gbar)
+    naive = np.stack([grads[m].astype(np.float64).mean(axis=0)
+                      for m in masks]).mean(axis=0)
+    naive_err = np.linalg.norm(naive - gbar)
+    scale = np.linalg.norm(gbar)
+    assert ht_err < 0.20 * scale, (ht_err, scale)
+    assert ht_err < 0.5 * naive_err, \
+        f"HT ({ht_err:.3f}) must beat the naive mean ({naive_err:.3f})"
+
+
+@needs_sockets
+def test_zero_fault_elastic_matches_loopback_bitwise():
+    """A fault-free elastic run IS the synchronous run: with every rank
+    inside the deadline all HT weights are exactly 1, the exact-mean path
+    serves every round, and the trained params equal loopback bitwise."""
+    import jax.numpy as jnp
+
+    from repro.optim import sgd
+    from repro.train import Trainer
+
+    d, world, steps = 48, 3, 4
+
+    def trainer(transport):
+        params = {"w": jnp.zeros((d,)), "b": jnp.zeros(())}
+
+        def loss_fn(p, batch):
+            return jnp.mean((batch["x"] @ p["w"] + p["b"] - batch["y"]) ** 2)
+
+        return Trainer(loss_fn, params, num_workers=world,
+                       method="mlmc_topk", optimizer=sgd(0.1),
+                       k_fraction=0.25, wire="packed", transport=transport)
+
+    def batches():
+        import jax
+
+        key = jax.random.PRNGKey(7)
+        wkey, key = jax.random.split(key)
+        w_true = jax.random.normal(wkey, (d,))
+        while True:
+            key, kx = jax.random.split(key)
+            x = jax.random.normal(kx, (world, 4, d))
+            yield {"x": x, "y": x @ w_true}
+
+    ref = trainer(None)
+    ref.fit(batches(), steps=steps, seed=11)
+    want = np.asarray(ref.flat_params).tobytes()
+
+    tps = _connect_elastic(world, deadline_ms=30000.0)
+    results = {}
+
+    def run_rank(r):
+        tr = trainer(tps[r])
+        tr.fit(batches(), steps=steps, seed=11)
+        results[r] = np.asarray(tr.flat_params).tobytes()
+
+    threads = [threading.Thread(target=run_rank, args=(r,))
+               for r in range(1, world)]
+    for t in threads:
+        t.start()
+    run_rank(0)
+    for t in threads:
+        t.join(timeout=120)
+    _close_all(tps)
+    for r in range(world):
+        assert results[r] == want, f"rank {r} diverged from loopback"
+    mem = tps[0].membership
+    assert all(m.rounds_participated == m.rounds_seen
+               for m in mem.members.values())
+
+
+# ---------------------------------------------------------------------------
+# the real thing: spawned OS processes (slow tier)
+# ---------------------------------------------------------------------------
+
+_SPAWN = dict(world=4, d=48, rounds=14, deadline_ms=400.0, heartbeat_s=0.5,
+              kill_round=5, gather_round=3, seed=3)
+
+
+def _spawn_grads(rank):
+    rng = np.random.default_rng(_SPAWN["seed"] + rank)
+    return np.asarray(rng.normal(size=(1, _SPAWN["d"])), np.float32)
+
+
+def _spawn_server_main(port, q):
+    try:
+        import jax
+
+        from repro.comm import packed_aggregator
+        from repro.comm.aggregate import pack_comm_state_row
+        from repro.comm.multihost import TcpStarTransport
+
+        s = _SPAWN
+        tp = TcpStarTransport.serve(
+            port=port, world=s["world"], timeout=120.0,
+            deadline_ms=s["deadline_ms"], heartbeat_s=s["heartbeat_s"])
+        tp.snapshot_provider = lambda: b"SNAP"
+        agg = packed_aggregator("mlmc_adaptive_topk", s["d"], transport=tp,
+                                k_fraction=0.25)
+        state = agg.init(s["world"], s["d"])
+        grads = _spawn_grads(0)
+        partial = 0
+        for t in range(s["rounds"]):
+            if t == s["gather_round"]:
+                rows = tp.gather_state(pack_comm_state_row(state, 0))
+            out = agg(grads, jax.random.PRNGKey(t), state)
+            state = out.state
+            partial += len(tp.last_participation) < s["world"]
+        summary = tp.membership.summary()
+        tp.close()
+        q.put(("server", None, dict(partial=partial, summary=summary,
+                                    row_lens=[len(r or b"") for r in rows])))
+    except Exception as e:        # pragma: no cover - surfaced by the parent
+        q.put(("server", repr(e), None))
+
+
+def _spawn_worker_main(rank, port, q):
+    try:
+        import jax
+
+        from repro.comm import packed_aggregator
+        from repro.comm.aggregate import (fold_comm_state_rows,
+                                          pack_comm_state_row)
+        from repro.comm.elastic import BackoffSchedule
+        from repro.comm.faultinject import (Fault, FaultSchedule,
+                                            FaultyTransport, InjectedFault)
+        from repro.comm.multihost import (ServerShutdown, TcpStarTransport,
+                                          TransportError)
+
+        s = _SPAWN
+        tp = TcpStarTransport.connect(
+            "127.0.0.1", port, rank=rank, world=s["world"], timeout=120.0,
+            deadline_ms=s["deadline_ms"], heartbeat_s=s["heartbeat_s"])
+        sched = FaultSchedule()
+        if rank == 3:
+            sched.add(3, Fault(s["kill_round"], "kill"))
+        wrapped = FaultyTransport(tp, sched)
+        agg = packed_aggregator("mlmc_adaptive_topk", s["d"],
+                                transport=wrapped, k_fraction=0.25)
+        state = agg.init(s["world"], s["d"])
+        grads = _spawn_grads(rank)
+        my_row = None
+        report = dict(rounds=0, rejoined=False, row_ok=None, snap=None,
+                      post_rejoin_rounds=0)
+        t = 0
+        try:
+            while True:
+                if t == s["gather_round"]:
+                    my_row = pack_comm_state_row(state, rank)
+                    wrapped.gather_state(my_row)
+                try:
+                    out = agg(grads, jax.random.PRNGKey(t), state)
+                except InjectedFault:
+                    # hard-killed (RST): walk the seeded backoff back in
+                    tp2, row, snap = TcpStarTransport.rejoin(
+                        "127.0.0.1", port, rank=rank, world=s["world"],
+                        deadline_ms=s["deadline_ms"],
+                        heartbeat_s=s["heartbeat_s"],
+                        backoff=BackoffSchedule(base_s=0.1, cap_s=1.0,
+                                                retries=12, seed=rank))
+                    report["rejoined"] = True
+                    report["row_ok"] = row == my_row
+                    report["snap"] = snap
+                    # the served row restores this rank's CommState bitwise
+                    state = fold_comm_state_rows(
+                        agg.init(s["world"], s["d"]), [row])
+                    wrapped = tp2
+                    agg = packed_aggregator(
+                        "mlmc_adaptive_topk", s["d"], transport=tp2,
+                        k_fraction=0.25)
+                    tp2.broadcast_payload(None)   # in-flight round's downlink
+                    t = tp2.joined_round + 1
+                    continue
+                state = out.state
+                report["rounds"] += 1
+                if report["rejoined"]:
+                    report["post_rejoin_rounds"] += 1
+                t += 1
+        except (ServerShutdown, TransportError):
+            pass
+        q.put((rank, None, report))
+    except Exception as e:        # pragma: no cover - surfaced by the parent
+        q.put((rank, repr(e), None))
+
+
+@pytest.mark.slow
+@needs_sockets
+def test_spawned_kill_rejoin_trains_through_partial_rounds():
+    """The acceptance run: 4 OS processes aggregate a stateful method under
+    a deadline; rank 3 is RST-killed mid-run, the world keeps serving
+    partial rounds, and rank 3 REJOINs — its gathered CommState row comes
+    back bitwise, rank 0's snapshot arrives, and it participates again."""
+    import multiprocessing as mp
+
+    ctx = mp.get_context("spawn")
+    port = pick_free_port()
+    q = ctx.Queue()
+    procs = [ctx.Process(target=_spawn_server_main, args=(port, q))]
+    procs += [ctx.Process(target=_spawn_worker_main, args=(r, port, q))
+              for r in range(1, _SPAWN["world"])]
+    for p in procs:
+        p.start()
+    try:
+        results = {}
+        for _ in range(len(procs)):
+            who, err, payload = q.get(timeout=300)
+            assert err is None, f"{who} failed: {err}"
+            results[who] = payload
+        for p in procs:
+            p.join(timeout=60)
+    finally:
+        for p in procs:
+            if p.is_alive():      # pragma: no cover - cleanup on failure
+                p.terminate()
+
+    srv = results["server"]
+    assert srv["partial"] >= 1, "the kill must cost at least one partial round"
+    assert len(srv["row_lens"]) == _SPAWN["world"]
+    assert all(n > 0 for n in srv["row_lens"]), \
+        "every rank's CommState row must land in the gather"
+    m3 = srv["summary"]["members"][3]
+    assert m3["rejoins"] == 1 and m3["state"] == ACTIVE
+    assert m3["rounds_participated"] >= 1
+    for r in (1, 2):
+        assert not results[r]["rejoined"]
+        assert results[r]["rounds"] >= _SPAWN["rounds"] - 1
+    r3 = results[3]
+    assert r3["rejoined"] and r3["row_ok"] is True
+    assert r3["snap"] == b"SNAP"
+    assert r3["post_rejoin_rounds"] >= 1, "rank 3 never aggregated again"

@@ -94,10 +94,12 @@ def test_golden_packet_still_decodes(name):
 FROZEN_FRAME_TYPES = {
     "HELLO": 1, "WELCOME": 2, "GOODBYE": 3, "PAYLOAD": 4, "DIRECTION": 5,
     "SCALAR": 6, "SCALAR_MEAN": 7, "STATE": 8, "DIRECTION_ENC": 9,
+    "PING": 10, "PONG": 11, "LEAVE": 12, "REJOIN": 13,
 }
 FROZEN_WIRE_MAGICS = {
     "direction_enc": b"RCD2", "state_row_v1": b"RCS1", "state_row_v2": b"RCS2",
     "bucket_container": b"RCBW",
+    "partial_direction": b"RCD3", "seq_container": b"RCSQ",
 }
 
 #: deterministic downlink-fixture inputs (immutable: part of the snapshot)
@@ -184,7 +186,7 @@ def test_golden_state_row_roundtrips():
 def test_frame_types_and_magics_append_only():
     """tcp frame-type numbers and 4-byte blob magics are frozen: peers on
     the old protocol must keep parsing every committed frame forever."""
-    from repro.comm import aggregate, multihost, plan
+    from repro.comm import aggregate, multihost, packets, plan
 
     for name, num in FROZEN_FRAME_TYPES.items():
         assert getattr(multihost, name) == num, \
@@ -193,6 +195,8 @@ def test_frame_types_and_magics_append_only():
     assert aggregate._STATE_MAGIC == FROZEN_WIRE_MAGICS["state_row_v1"]
     assert aggregate._STATE2_MAGIC == FROZEN_WIRE_MAGICS["state_row_v2"]
     assert plan._BUCKETS_MAGIC == FROZEN_WIRE_MAGICS["bucket_container"]
+    assert aggregate._DIRP_MAGIC == FROZEN_WIRE_MAGICS["partial_direction"]
+    assert packets.SEQ_MAGIC == FROZEN_WIRE_MAGICS["seq_container"]
     magics = list(FROZEN_WIRE_MAGICS.values())
     assert len(magics) == len(set(magics)), "duplicate wire magics"
 

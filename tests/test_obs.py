@@ -322,6 +322,54 @@ def test_downlink_and_bucket_spans_recorded_and_valid():
     assert all(e["args"]["codec"] == "mlmc_topk" for e in buckets)
 
 
+def test_elastic_membership_events_recorded_and_valid(tmp_path):
+    """PR 10's elastic-star events — ``wire/member_join`` /
+    ``wire/member_leave`` from `Membership` transitions and
+    ``wire/partial_round`` + the participation histogram from a deadline
+    round — must come out of the real book-keeping code paths with their
+    documented args, validate against the checked-in schema, and survive
+    the Perfetto conversion."""
+    from repro.comm.aggregate import _record_partial_round
+    from repro.comm.elastic import Membership
+
+    tel = obs.install(Telemetry(sample_every=1))
+    mem = Membership(3)
+    mem.mark_left(2, 4, "recv failed: peer reset")
+    mem.mark_left(2, 5, "late")          # idempotent: no second event
+    mem.mark_joined(2, 7, rejoin=True)
+
+    class _Tp:
+        rank = 0
+        last_round = 7
+    mask = np.array([1, 1, 0], np.uint8)
+    _record_partial_round(tel, _Tp(), mask)
+    _record_partial_round(tel, _Tp(), np.ones(3, np.uint8))  # full: no event
+
+    events = export.telemetry_events(tel)
+    assert export.validate_events(events) == []
+    by_name = {}
+    for ev in events:
+        by_name.setdefault(ev["name"], []).append(ev)
+    (leave,) = by_name["wire/member_leave"]
+    assert leave["ph"] == "i" and leave["args"] == {
+        "rank": 2, "round": 4, "reason": "recv failed: peer reset"}
+    (join,) = by_name["wire/member_join"]
+    assert join["args"] == {"rank": 2, "round": 7, "rejoin": True,
+                            "rejoins": 1}
+    (partial,) = by_name["wire/partial_round"]
+    assert partial["args"] == {"round": 7, "n_arrived": 2, "world": 3,
+                               "participants": [0, 1]}
+    h = tel.metrics.histogram("wire_participation", transport="tcp")
+    assert h.n == 2 and h.total == 5.0      # one 2-of-3 + one 3-of-3 round
+
+    # round-trips: JSONL back in validates, Perfetto wraps every event
+    p = tmp_path / "elastic.jsonl"
+    export.write_jsonl(p, events)
+    assert export.validate_events(export.read_jsonl(p)) == []
+    n = export.write_chrome_trace(tmp_path / "elastic.json", events)
+    assert n >= len(events)
+
+
 def test_export_cli_merges_validates_and_converts(tmp_path):
     tels = []
     for rank in (0, 1):
